@@ -1,0 +1,84 @@
+"""Full HAR comparison scenario: EnFed vs CFL vs DFL(mesh/ring) vs
+cloud-only, on both paper datasets (calories->MLP, HARSense->LSTM).
+
+This is the experiment behind Tables IV/V/VII of the paper, at example
+scale (the full benchmark lives in benchmarks/).
+
+  PYTHONPATH=src python examples/har_federated.py [--dataset har|calories]
+"""
+
+import argparse
+
+import numpy as np
+
+from repro.core import (CFLLearner, DFLLearner, EnFedConfig, EnFedSession,
+                        SupervisedTask, cloud_only_baseline, make_fleet)
+from repro.data import (CaloriesDatasetConfig, HARDatasetConfig,
+                        dirichlet_partition, make_calories_tabular,
+                        make_har_windows)
+from repro.models import (LSTMClassifier, LSTMClassifierConfig, MLPClassifier,
+                          MLPClassifierConfig)
+
+
+def build(dataset: str):
+    if dataset == "har":
+        x, y, _ = make_har_windows(HARDatasetConfig(num_samples=3000, seq_len=32))
+        task = SupervisedTask(LSTMClassifier(LSTMClassifierConfig(6, 32, 64, 6)), lr=3e-3)
+    else:
+        x, y = make_calories_tabular(CaloriesDatasetConfig(num_samples=3000))
+        task = SupervisedTask(MLPClassifier(MLPClassifierConfig(8, (64, 32), 5)), lr=3e-3)
+    parts = dirichlet_partition(y, num_clients=6, alpha=1.0, seed=0)
+    shards = [(x[p], y[p]) for p in parts]
+    own_x, own_y = shards[0]
+    n = int(len(own_x) * 0.8)
+    return task, shards, (own_x[:n], own_y[:n]), (own_x[n:], own_y[n:]), (x, y)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", choices=("har", "calories"), default="har")
+    ap.add_argument("--target", type=float, default=0.95)
+    ap.add_argument("--epochs", type=int, default=8)
+    args = ap.parse_args()
+
+    task, shards, own_train, own_test, pooled = build(args.dataset)
+
+    # --- EnFed ---------------------------------------------------------
+    fleet = make_fleet(5, seed=1, p_has_model=1.0)
+    states = {}
+    for i, dev in enumerate(fleet):
+        dev.reservation_price = 0.4
+        p = task.init(seed=10 + i)
+        p, _ = task.fit(p, shards[i + 1], epochs=args.epochs, batch_size=32, seed=i)
+        states[dev.device_id] = {"params": p, "data": shards[i + 1]}
+    enfed = EnFedSession(task, own_train, own_test, fleet, states,
+                         EnFedConfig(desired_accuracy=args.target, epochs=args.epochs,
+                                     max_rounds=10)).run()
+
+    # --- baselines -----------------------------------------------------
+    client_data = [own_train] + shards[1:6]
+    cfl = CFLLearner(task, client_data, own_test).run(
+        target_accuracy=args.target, max_rounds=10, epochs=args.epochs, batch_size=32)
+    dfl_mesh = DFLLearner(task, client_data, own_test, "mesh").run(
+        target_accuracy=args.target, max_rounds=10, epochs=args.epochs, batch_size=32)
+    dfl_ring = DFLLearner(task, client_data, own_test, "ring").run(
+        target_accuracy=args.target, max_rounds=10, epochs=args.epochs, batch_size=32)
+    cloud_acc, cloud_resp, _ = cloud_only_baseline(
+        task, pooled, own_test, epochs=args.epochs, batch_size=32)
+
+    print(f"\n=== {args.dataset} ===")
+    print(f"{'system':<10} {'acc':>6} {'rounds':>6} {'T_train(s)':>11} {'E(J)':>9}")
+    print(f"{'EnFed':<10} {enfed.accuracy:6.3f} {enfed.rounds:6d} "
+          f"{enfed.report.t_train:11.2f} {enfed.report.e_tot:9.2f}")
+    print(f"{'CFL':<10} {cfl.accuracy:6.3f} {cfl.rounds:6d} "
+          f"{cfl.report.t_train:11.2f} {cfl.report.e_tot:9.2f}")
+    print(f"{'DFL-mesh':<10} {dfl_mesh.accuracy:6.3f} {dfl_mesh.rounds:6d} "
+          f"{dfl_mesh.report.t_train:11.2f} {dfl_mesh.report.e_tot:9.2f}")
+    print(f"{'DFL-ring':<10} {dfl_ring.accuracy:6.3f} {dfl_ring.rounds:6d} "
+          f"{dfl_ring.report.t_train:11.2f} {dfl_ring.report.e_tot:9.2f}")
+    print(f"{'cloud':<10} {cloud_acc:6.3f} {'-':>6} {cloud_resp:11.2f} {'-':>9}  (response time)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,26 @@
+"""Serve a small model with batched requests (prefill + decode loop).
+
+  PYTHONPATH=src python examples/serve_batched.py --arch deepseek-v3-671b
+(the smoke preset keeps it CPU-sized; --mla-absorbed exercises the
+weight-absorbed MLA decode path from §Perf)
+"""
+
+import argparse
+
+from repro.launch import serve as serve_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek-v3-671b")
+    ap.add_argument("--mla-absorbed", action="store_true")
+    args = ap.parse_args()
+    argv = ["--arch", args.arch, "--preset", "smoke",
+            "--batch", "2", "--prompt-len", "16", "--gen", "12"]
+    if args.mla_absorbed:
+        argv.append("--mla-absorbed")
+    return serve_mod.main(argv)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,61 @@
+"""Pytree checkpointing to .npz (no orbax in this environment).
+
+Layout: ``<dir>/step_<N>.npz`` holding flattened leaves keyed by their
+tree path, plus a ``__treedef__`` marker reconstructed from a template
+pytree on restore (restore requires a structural template, which the
+training loop always has: its freshly-initialized state).
+"""
+
+from __future__ import annotations
+
+import os
+import re
+from typing import Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save_checkpoint(directory: str, step: int, state) -> str:
+    os.makedirs(directory, exist_ok=True)
+    path = os.path.join(directory, f"step_{step:08d}.npz")
+    tmp = path + ".tmp"
+    np.savez(tmp, **_flatten_with_paths(state))
+    os.replace(tmp + ".npz" if os.path.exists(tmp + ".npz") else tmp, path)
+    return path
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(directory)
+             if (m := re.match(r"step_(\d+)\.npz$", f))]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, template, step: Optional[int] = None):
+    """Restore into the structure of ``template``. Returns (state, step)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    path = os.path.join(directory, f"step_{step:08d}.npz")
+    data = np.load(path)
+    flat_paths = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for p, leaf in flat_paths[0]:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in p)
+        arr = data[key]
+        if tuple(arr.shape) != tuple(np.shape(leaf)):
+            raise ValueError(f"shape mismatch for {key}: ckpt {arr.shape} vs template {np.shape(leaf)}")
+        leaves.append(arr.astype(np.asarray(leaf).dtype))
+    return jax.tree_util.tree_unflatten(flat_paths[1], leaves), step

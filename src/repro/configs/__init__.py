@@ -1,0 +1,68 @@
+"""Architecture registry: ``--arch <id>`` -> ModelConfig.
+
+Ten assigned architectures (each cites its source in its module) plus
+the EnFed paper's own HAR classifiers.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.models.config import ModelConfig
+from repro.models.classifiers import LSTMClassifierConfig, MLPClassifierConfig
+
+from repro.configs.recurrentgemma_2b import CONFIG as RECURRENTGEMMA_2B
+from repro.configs.h2o_danube_1_8b import CONFIG as H2O_DANUBE_1_8B
+from repro.configs.internlm2_20b import CONFIG as INTERNLM2_20B
+from repro.configs.qwen2_5_3b import CONFIG as QWEN2_5_3B
+from repro.configs.xlstm_125m import CONFIG as XLSTM_125M
+from repro.configs.minitron_8b import CONFIG as MINITRON_8B
+from repro.configs.seamless_m4t_large_v2 import CONFIG as SEAMLESS_M4T_LARGE_V2
+from repro.configs.llava_next_mistral_7b import CONFIG as LLAVA_NEXT_MISTRAL_7B
+from repro.configs.deepseek_v3_671b import CONFIG as DEEPSEEK_V3_671B
+from repro.configs.granite_moe_1b_a400m import CONFIG as GRANITE_MOE_1B_A400M
+
+ARCHS: Dict[str, ModelConfig] = {
+    c.name: c for c in [
+        RECURRENTGEMMA_2B,
+        H2O_DANUBE_1_8B,
+        INTERNLM2_20B,
+        QWEN2_5_3B,
+        XLSTM_125M,
+        MINITRON_8B,
+        SEAMLESS_M4T_LARGE_V2,
+        LLAVA_NEXT_MISTRAL_7B,
+        DEEPSEEK_V3_671B,
+        GRANITE_MOE_1B_A400M,
+    ]
+}
+
+# the EnFed paper's own models (Table III)
+PAPER_LSTM = LSTMClassifierConfig(input_dim=6, seq_len=64, hidden=64, num_classes=6)
+PAPER_MLP = MLPClassifierConfig(input_dim=8, hidden=(64, 32), num_classes=5)
+
+# input shapes assigned to this paper
+INPUT_SHAPES = {
+    "train_4k": {"seq_len": 4096, "global_batch": 256, "kind": "train"},
+    "prefill_32k": {"seq_len": 32_768, "global_batch": 32, "kind": "prefill"},
+    "decode_32k": {"seq_len": 32_768, "global_batch": 128, "kind": "decode"},
+    "long_500k": {"seq_len": 524_288, "global_batch": 1, "kind": "decode"},
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def list_archs():
+    return sorted(ARCHS)
+
+
+def shape_supported(cfg: ModelConfig, shape_name: str) -> bool:
+    """long_500k only runs for sub-quadratic-decode architectures
+    (DESIGN.md §Arch-applicability); everything else runs all shapes."""
+    if shape_name == "long_500k":
+        return cfg.supports_long_decode
+    return True

@@ -1,0 +1,34 @@
+"""DeepSeek-V3-671B [arXiv:2412.19437] — MoE with multi-head latent
+attention (MLA), 1 shared + 256 routed experts (top-8), and a
+multi-token-prediction (MTP) head.
+
+Assigned spec: 61L, d_model=7168, 128H, MLA (q_lora 1536, kv_lora 512,
+qk nope/rope 128/64, v 128), expert d_ff=2048, vocab=129280.
+Full MLA attention => long_500k skipped.  fsdp=True: 671B params cannot
+hold Adam state at 512 chips without ZeRO-3 over the data axis (and the
+dry-run memory analysis documents that even then v5e-512 is short for
+training — see EXPERIMENTS.md §Dry-run); EnFed federates this config
+over the pod axis (cross-silo regime).
+"""
+
+from repro.models.config import ModelConfig, MoEConfig, MLAConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v3-671b",
+    family="moe",
+    citation="arXiv:2412.19437",
+    num_layers=61,
+    d_model=7168,
+    num_heads=128,
+    num_kv_heads=128,
+    d_ff=2048,
+    vocab_size=129_280,
+    block_pattern=("mla",),
+    mla=MLAConfig(q_lora_rank=1536, kv_lora_rank=512,
+                  qk_nope_head_dim=128, qk_rope_head_dim=64, v_head_dim=128),
+    moe=MoEConfig(num_experts=256, num_experts_per_tok=8,
+                  num_shared_experts=1, d_ff_expert=2048),
+    mtp_depth=1,
+    dtype="bfloat16",
+    fsdp=True,
+)

@@ -1,0 +1,27 @@
+"""Granite-3.0-1B-A400M [hf:ibm-granite/granite-3.0-1b-a400m-base] —
+small MoE: 32 experts, top-8 routing, ~400M active params.
+
+Assigned spec: 24L, d_model=1024, 16H (GQA kv=8), expert d_ff=512,
+vocab=49155.  Full attention => long_500k skipped.
+vocab 49155 is deliberately not divisible by the 16-way model axis —
+the sharding rules fall back to the d_model axis for the embedding
+(exercised in tests).
+"""
+
+from repro.models.config import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="granite-moe-1b-a400m",
+    family="moe",
+    citation="hf:ibm-granite/granite-3.0-1b-a400m-base",
+    num_layers=24,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=8,
+    d_ff=512,
+    vocab_size=49_155,
+    block_pattern=("attn",),
+    moe=MoEConfig(num_experts=32, num_experts_per_tok=8,
+                  num_shared_experts=0, d_ff_expert=512),
+    dtype="bfloat16",
+)

@@ -1,0 +1,25 @@
+"""H2O-Danube-1.8B [arXiv:2401.16818] — llama/mistral-mix dense decoder
+with sliding-window attention.
+
+Assigned spec: 24L, d_model=2560, 32H (GQA kv=8, head_dim 80),
+d_ff=6912, vocab=32000, SWA window 4096 (mistral-style).
+Windowed KV decode state => long_500k runs.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="h2o-danube-1.8b",
+    family="dense",
+    citation="arXiv:2401.16818",
+    num_layers=24,
+    d_model=2560,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=6912,
+    vocab_size=32_000,
+    block_pattern=("swa",),
+    sliding_window=4096,
+    rope_theta=10000.0,
+    dtype="bfloat16",
+)

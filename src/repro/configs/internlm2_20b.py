@@ -1,0 +1,27 @@
+"""InternLM2-20B [arXiv:2403.17297] — dense GQA decoder.
+
+Assigned spec: 48L, d_model=6144, 48H (GQA kv=8, head_dim 128),
+d_ff=16384, vocab=92544.  Largest dense model in the pool: the FL
+aggregation-volume stress test.  Full attention => long_500k skipped
+(noted in DESIGN.md).  fsdp=True: 20B params + Adam state exceed
+16 GB/chip under tensor-parallel alone, so ZeRO-3 over the data axis is
+required; EnFed federates this config over the pod axis.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internlm2-20b",
+    family="dense",
+    citation="arXiv:2403.17297",
+    num_layers=48,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    d_ff=16384,
+    vocab_size=92_544,
+    block_pattern=("attn",),
+    rope_theta=1_000_000.0,
+    dtype="bfloat16",
+    fsdp=True,
+)

@@ -1,0 +1,28 @@
+"""LLaVA-NeXT (v1.6) Mistral-7B [hf:llava-hf/llava-v1.6-mistral-7b-hf] —
+VLM: Mistral-7B language backbone consuming anyres-tiled image patches.
+
+Assigned spec: 32L, d_model=4096, 32H (GQA kv=8, head_dim 128),
+d_ff=14336, vocab=32000.  The vision tower (CLIP-ViT) + projector are
+STUBBED per the carve-out: input_specs() provides precomputed patch
+embeddings; anyres tiling = base 576 tokens + 4 tiles x 576 = 2880
+prefix tokens per image.  Full attention => long_500k skipped.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llava-next-mistral-7b",
+    family="vlm",
+    citation="hf:llava-hf/llava-v1.6-mistral-7b-hf",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=14336,
+    vocab_size=32_000,
+    block_pattern=("attn",),
+    frontend="vision",
+    num_prefix_tokens=2880,
+    rope_theta=1_000_000.0,
+    dtype="bfloat16",
+)

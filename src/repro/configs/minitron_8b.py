@@ -1,0 +1,23 @@
+"""Minitron-8B [arXiv:2407.14679] — Nemotron-4 15B pruned to 8B
+(width-pruned d_ff, depth kept), dense GQA decoder.
+
+Assigned spec: 32L, d_model=4096, 32H (GQA kv=8, head_dim 128),
+d_ff=16384, vocab=256000.  Full attention => long_500k skipped.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minitron-8b",
+    family="dense",
+    citation="arXiv:2407.14679",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=16384,
+    vocab_size=256_000,
+    block_pattern=("attn",),
+    rope_theta=10000.0,
+    dtype="bfloat16",
+)

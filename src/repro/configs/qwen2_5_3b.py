@@ -1,0 +1,24 @@
+"""Qwen2.5-3B [hf:Qwen/Qwen2.5-0.5B family card] — dense GQA decoder
+with QKV bias (the Qwen signature).
+
+Assigned spec: 36L, d_model=2048, 16H (GQA kv=2, head_dim 128),
+d_ff=11008, vocab=151936.  Full attention => long_500k skipped.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2.5-3b",
+    family="dense",
+    citation="hf:Qwen/Qwen2.5-0.5B",
+    num_layers=36,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=2,
+    d_ff=11008,
+    vocab_size=151_936,
+    block_pattern=("attn",),
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    dtype="bfloat16",
+)

@@ -1,0 +1,30 @@
+"""RecurrentGemma-2B [arXiv:2402.19427] — Griffin hybrid: RG-LRU linear
+recurrence blocks interleaved with local (windowed) attention at 2:1.
+
+Assigned spec: 26L, d_model=2560, 10H (MQA kv=1, head_dim 256),
+d_ff=7680, vocab=256000, local window 2048, logit softcap 30.
+26 layers = 8 x (rec, rec, local) + (rec, rec) tail.
+Sub-quadratic decode state (RG-LRU state + windowed KV) => long_500k runs.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-2b",
+    family="hybrid",
+    citation="arXiv:2402.19427",
+    num_layers=26,
+    d_model=2560,
+    num_heads=10,
+    num_kv_heads=1,
+    head_dim=256,
+    d_ff=7680,
+    vocab_size=256_000,
+    block_pattern=("rglru", "rglru", "local"),
+    local_window=2048,
+    rnn_width=2560,
+    conv_width=4,
+    logit_softcap=30.0,
+    tie_embeddings=True,
+    dtype="bfloat16",
+)

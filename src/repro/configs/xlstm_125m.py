@@ -1,0 +1,26 @@
+"""xLSTM-125M [arXiv:2405.04517] — sLSTM + mLSTM recurrent blocks.
+
+Assigned spec: 12L, d_model=768, 4 heads, d_ff=0 (blocks own their
+up/down projections, proj factor 2), vocab=50304.
+Pattern 3:1 mLSTM:sLSTM (the paper's [7:1]-style mix at 12-layer scale).
+O(1)-in-seq recurrent state => long_500k runs.  This is also the family
+closest to the EnFed paper's own LSTM classifier.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-125m",
+    family="ssm",
+    citation="arXiv:2405.04517",
+    num_layers=12,
+    d_model=768,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=0,
+    vocab_size=50_304,
+    block_pattern=("mlstm", "mlstm", "mlstm", "slstm"),
+    mlstm_proj_factor=2.0,
+    tie_embeddings=True,
+    dtype="bfloat16",
+)

@@ -1,0 +1,35 @@
+"""EnFed core: the paper's contribution as a first-class feature.
+
+Protocol (incentives, handshake, AES transport, Algorithm-1 round loop),
+cost model (eqs. 4-7), and the FL topologies expressed as TPU collective
+schedules.
+"""
+
+from repro.core.aggregation import fedavg, masked_fedavg, masked_weighted_mean_stacked
+from repro.core.battery import BatteryState
+from repro.core.energy import CostModel, DeviceProfile, LinkProfile, EnergyReport
+from repro.core.incentive import (
+    NeighborDevice,
+    Contract,
+    select_contributors,
+    participation_mask,
+    make_fleet,
+)
+from repro.core.rounds import EnFedConfig, EnFedSession, SessionResult
+from repro.core.federated import (
+    SupervisedTask,
+    CFLLearner,
+    DFLLearner,
+    FederatedTrainer,
+    cloud_only_baseline,
+)
+from repro.core.topology import AggregationStrategy, aggregate_updates, group_mixing_matrix
+
+__all__ = [
+    "fedavg", "masked_fedavg", "masked_weighted_mean_stacked",
+    "BatteryState", "CostModel", "DeviceProfile", "LinkProfile", "EnergyReport",
+    "NeighborDevice", "Contract", "select_contributors", "participation_mask", "make_fleet",
+    "EnFedConfig", "EnFedSession", "SessionResult",
+    "SupervisedTask", "CFLLearner", "DFLLearner", "FederatedTrainer", "cloud_only_baseline",
+    "AggregationStrategy", "aggregate_updates", "group_mixing_matrix",
+]

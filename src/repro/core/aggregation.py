@@ -1,0 +1,73 @@
+"""Model-update aggregation (paper eq. 14: FedAvg over contributors).
+
+Two forms:
+
+* **List form** (`fedavg`, `masked_fedavg`) — used by the fleet
+  simulator, where contributor updates arrive as a list of pytrees
+  (optionally decrypted from the AES transport).  Eq. (14):
+  ``w <- (1/N_c) * sum_j w_j`` with optional per-contributor weights
+  (data-size weighting) and the participation mask from the
+  incentive/contract layer.
+
+* **Stacked form** (`masked_weighted_mean_stacked`) — jit-friendly, a
+  single pytree whose leaves carry a leading contributor axis; used by
+  the vmapped-clients federated trainer.
+
+The distributed (mesh) form lives in ``repro.core.topology``.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.tree import tree_weighted_mean
+
+
+def fedavg(updates: Sequence, weights: Optional[Sequence[float]] = None):
+    """Paper eq. (14). ``weights`` default to uniform (1/N_c each)."""
+    if not updates:
+        raise ValueError("fedavg needs at least one update")
+    if weights is None:
+        weights = [1.0] * len(updates)
+    return tree_weighted_mean(list(updates), jnp.asarray(weights, jnp.float32))
+
+
+def masked_fedavg(updates: Sequence, mask: Sequence[float],
+                  weights: Optional[Sequence[float]] = None):
+    """FedAvg over the contributors selected by the participation mask."""
+    mask = jnp.asarray(mask, jnp.float32)
+    if weights is None:
+        weights = jnp.ones_like(mask)
+    else:
+        weights = jnp.asarray(weights, jnp.float32)
+    return tree_weighted_mean(list(updates), mask * weights)
+
+
+def masked_weighted_mean_stacked(stacked, mask, weights=None):
+    """Leaves of ``stacked`` have shape (N_c, ...). Fully jit-safe.
+
+    Equivalent to `masked_fedavg` but over a stacked axis — this is the
+    form the Pallas ``fedavg`` kernel implements for the TPU hot path.
+    """
+    mask = jnp.asarray(mask, jnp.float32)
+    w = mask if weights is None else mask * jnp.asarray(weights, jnp.float32)
+    denom = jnp.sum(w) + 1e-9
+
+    def _avg(leaf):
+        wb = w.reshape((-1,) + (1,) * (leaf.ndim - 1))
+        return (jnp.sum(leaf.astype(jnp.float32) * wb, axis=0) / denom).astype(leaf.dtype)
+
+    return jax.tree_util.tree_map(_avg, stacked)
+
+
+def delta(new_params, old_params):
+    """Model update as a delta (what contributors actually transmit when
+    the requester already holds a base model)."""
+    return jax.tree_util.tree_map(jnp.subtract, new_params, old_params)
+
+
+def apply_delta(params, d, scale: float = 1.0):
+    return jax.tree_util.tree_map(lambda p, u: p + scale * u, params, d)

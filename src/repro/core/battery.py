@@ -1,0 +1,33 @@
+"""Battery state and discharge model.
+
+The paper gates EnFed rounds on the requesting device's battery:
+continue only while ``B_p >= B_min_A`` (Algorithm 1, checkbatterylevel).
+Discharge is non-linear in reality (paper §III notes this); we model the
+energy-to-charge conversion with a load-dependent efficiency factor so
+heavy phases (training) drain proportionally more than their Joule count.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class BatteryState:
+    capacity_j: float = 40e3
+    level: float = 1.0                 # fraction of capacity remaining
+    # non-linearity: effective capacity shrinks under high draw (Peukert-like)
+    high_load_penalty: float = 0.15
+    high_load_threshold_w: float = 3.0
+
+    def discharge(self, energy_j: float, avg_power_w: float = 1.0) -> "BatteryState":
+        eff = 1.0 + (self.high_load_penalty if avg_power_w > self.high_load_threshold_w else 0.0)
+        new_level = self.level - eff * energy_j / self.capacity_j
+        return dataclasses.replace(self, level=max(new_level, 0.0))
+
+    def below(self, threshold: float) -> bool:
+        return self.level < threshold
+
+    @property
+    def percent(self) -> float:
+        return 100.0 * self.level

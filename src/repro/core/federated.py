@@ -1,0 +1,252 @@
+"""High-level federated learners.
+
+* :class:`SupervisedTask` — jit-compiled local fit/evaluate for the
+  paper's classifiers (Adam, categorical cross-entropy, paper Table III).
+* :class:`CFLLearner`, :class:`DFLLearner` — the paper's baselines at
+  fleet scale (a virtual server for CFL; mesh/ring gossip for DFL), with
+  eq. (4)-(7) cost reports for the *requesting* device.
+* :func:`cloud_only_baseline` — the no-FL system of §IV-G.
+* :class:`FederatedTrainer` — jit-native client-stacked trainer (params
+  carry a leading client axis, topologies are mixing matrices) used to
+  federate the architecture zoo; shards clients over the mesh data axis.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregation, topology
+from repro.core.energy import CostModel, EnergyReport
+from repro.models.classifiers import accuracy as _accuracy, cross_entropy_loss
+from repro.optim import adam, apply_updates
+from repro.utils.tree import tree_size, tree_bytes
+
+
+# ---------------------------------------------------------------------------
+# supervised task wrapper (paper's LSTM / MLP classifiers)
+# ---------------------------------------------------------------------------
+
+
+class SupervisedTask:
+    def __init__(self, model, lr: float = 1e-3, batch_size_hint: int = 32):
+        self.model = model
+        self.lr = lr
+        self._opt = adam(lr)
+        self._fit_step = jax.jit(self._step)
+        self._eval = jax.jit(lambda p, x, y: _accuracy(self.model.forward(p, x), y))
+
+    def init(self, seed: int = 0):
+        return self.model.init(jax.random.PRNGKey(seed))
+
+    def _step(self, params, opt_state, xb, yb):
+        def loss_fn(p):
+            return cross_entropy_loss(self.model.forward(p, xb), yb)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        updates, opt_state = self._opt.update(grads, opt_state, params)
+        return apply_updates(params, updates), opt_state, loss
+
+    def fit(self, params, data, epochs: int, batch_size: int, seed: int = 0):
+        """Epochs of Adam over shuffled minibatches. Returns (params, losses)."""
+        x, y = data
+        n = (len(x) // batch_size) * batch_size
+        if n == 0:  # shard smaller than one batch: single full-batch step
+            n, batch_size = len(x), len(x)
+        opt_state = self._opt.init(params)
+        losses = []
+        rng = np.random.default_rng(seed)
+        for e in range(epochs):
+            idx = rng.permutation(len(x))[:n]
+            ep_loss = 0.0
+            for s in range(0, n, batch_size):
+                sel = idx[s:s + batch_size]
+                params, opt_state, loss = self._fit_step(params, opt_state, x[sel], y[sel])
+                ep_loss += float(loss)
+            losses.append(ep_loss / max(n // batch_size, 1))
+        return params, losses
+
+    def evaluate(self, params, data) -> float:
+        x, y = data
+        return float(self._eval(params, x, y))
+
+
+# ---------------------------------------------------------------------------
+# baselines: CFL and DFL at fleet scale
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class BaselineResult:
+    accuracy: float
+    rounds: int
+    report: EnergyReport
+    history: Dict[str, List[float]]
+    params: object = None
+
+
+class CFLLearner:
+    """Centralized FedAvg: virtual server, all clients train every round."""
+
+    def __init__(self, task: SupervisedTask, client_data: Sequence, requester_test,
+                 cost_model: Optional[CostModel] = None):
+        self.task = task
+        self.client_data = list(client_data)
+        self.requester_test = requester_test
+        self.cost = cost_model or CostModel()
+
+    def run(self, *, target_accuracy: float, max_rounds: int, epochs: int,
+            batch_size: int, seed: int = 0) -> BaselineResult:
+        params = self.task.init(seed)
+        history = {"accuracy": [], "loss": []}
+        measured = 0.0
+        rounds = 0
+        for r in range(max_rounds):
+            updates, weights = [], []
+            for ci, data in enumerate(self.client_data):
+                t0 = time.perf_counter()
+                p_c, losses = self.task.fit(params, data, epochs, batch_size,
+                                            seed=seed + 31 * r + ci)
+                dt = time.perf_counter() - t0
+                if ci == 0:  # client 0 is "the requesting device"
+                    measured += dt
+                updates.append(p_c)
+                weights.append(len(data[0]))
+            params = aggregation.fedavg(updates, weights)
+            acc = self.task.evaluate(params, self.requester_test)
+            rounds = r + 1
+            history["accuracy"].append(acc)
+            if acc >= target_accuracy:
+                break
+        report = self.cost.cfl_session(
+            rounds=rounds, num_params=tree_size(params), model_bytes=tree_bytes(params),
+            num_samples=len(self.client_data[0][0]), epochs=epochs,
+            measured_local_time=measured)
+        return BaselineResult(accuracy=history["accuracy"][-1], rounds=rounds,
+                              report=report, history=history, params=params)
+
+
+class DFLLearner:
+    """Decentralized FL over a mesh or ring topology (paper's DFL baseline)."""
+
+    def __init__(self, task: SupervisedTask, client_data: Sequence, requester_test,
+                 topology_kind: str = "mesh", cost_model: Optional[CostModel] = None):
+        assert topology_kind in ("mesh", "ring")
+        self.task = task
+        self.client_data = list(client_data)
+        self.requester_test = requester_test
+        self.kind = topology_kind
+        self.cost = cost_model or CostModel()
+
+    def run(self, *, target_accuracy: float, max_rounds: int, epochs: int,
+            batch_size: int, seed: int = 0) -> BaselineResult:
+        n = len(self.client_data)
+        node_params = [self.task.init(seed + i) for i in range(n)]
+        strategy = topology.AggregationStrategy(
+            kind="dfl_mesh" if self.kind == "mesh" else "dfl_ring")
+        M = topology.group_mixing_matrix(n, strategy)
+        history = {"accuracy": []}
+        measured = 0.0
+        rounds = 0
+        for r in range(max_rounds):
+            # local training at every node
+            for i, data in enumerate(self.client_data):
+                t0 = time.perf_counter()
+                node_params[i], _ = self.task.fit(node_params[i], data, epochs,
+                                                  batch_size, seed=seed + 77 * r + i)
+                if i == 0:
+                    measured += time.perf_counter() - t0
+            # gossip/mix according to topology
+            stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *node_params)
+            mixed = topology.apply_mixing(stacked, M)
+            node_params = [jax.tree_util.tree_map(lambda x: x[i], mixed) for i in range(n)]
+            acc = self.task.evaluate(node_params[0], self.requester_test)
+            rounds = r + 1
+            history["accuracy"].append(acc)
+            if acc >= target_accuracy:
+                break
+        p0 = node_params[0]
+        report = self.cost.dfl_session(
+            rounds=rounds, n_peers=n - 1, num_params=tree_size(p0),
+            model_bytes=tree_bytes(p0), num_samples=len(self.client_data[0][0]),
+            epochs=epochs, topology=self.kind, measured_local_time=measured)
+        return BaselineResult(accuracy=history["accuracy"][-1], rounds=rounds,
+                              report=report, history=history, params=p0)
+
+
+def cloud_only_baseline(task: SupervisedTask, pooled_train, requester_test, *,
+                        epochs: int, batch_size: int,
+                        cost_model: Optional[CostModel] = None, seed: int = 0):
+    """§IV-G: the user ships raw data to the cloud; the cloud trains and
+    returns predictions.  Response time = WAN upload of the raw dataset +
+    measured cloud training walltime + result round trip.
+    Returns (accuracy, response_time_s, params)."""
+    cost = cost_model or CostModel()
+    params = task.init(seed)
+    t0 = time.perf_counter()
+    params, _ = task.fit(params, pooled_train, epochs, batch_size, seed=seed)
+    t_cloud_train = time.perf_counter() - t0
+    acc = task.evaluate(params, requester_test)
+    x, _y = pooled_train
+    data_bytes = int(np.asarray(x).nbytes)
+    t_up = 8.0 * data_bytes / cost.link.wan_rate_bps
+    resp = t_up + cost.link.cloud_rtt_s + t_cloud_train + cost.link.cloud_rtt_s
+    return acc, resp, params
+
+
+# ---------------------------------------------------------------------------
+# client-stacked federated trainer for the architecture zoo
+# ---------------------------------------------------------------------------
+
+
+class FederatedTrainer:
+    """Jit-native FL over a stacked client axis.
+
+    ``params`` leaves have shape (C, ...) and are sharded over the mesh
+    data axis; each round every client runs ``local_steps`` of SGD/Adam on
+    its own batch shard (via vmap), then the topology mixing matrix is
+    applied (CFL / DFL / EnFed neighborhoods with participation masks).
+    This gives exact per-client FL semantics inside a single jit program.
+    """
+
+    def __init__(self, loss_fn: Callable, num_clients: int,
+                 strategy: topology.AggregationStrategy, lr: float = 1e-3,
+                 local_steps: int = 1):
+        self.loss_fn = loss_fn            # (params, batch) -> scalar loss
+        self.num_clients = num_clients
+        self.strategy = strategy
+        self.opt = adam(lr)
+        self.local_steps = local_steps
+
+    def init(self, params_one, opt_state_one=None):
+        C = self.num_clients
+        stack = lambda t: jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (C,) + x.shape).copy(), t)
+        opt_state_one = opt_state_one if opt_state_one is not None else self.opt.init(params_one)
+        return stack(params_one), jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (C,) + x.shape).copy(), opt_state_one)
+
+    def round(self, stacked_params, stacked_opt, batches, mask=None):
+        """batches: pytree with leading (C, local_steps, ...) axes."""
+
+        def client_update(params, opt_state, client_batches):
+            def one_step(carry, batch):
+                p, s = carry
+                loss, grads = jax.value_and_grad(self.loss_fn)(p, batch)
+                upd, s = self.opt.update(grads, s, p)
+                return (apply_updates(p, upd), s), loss
+
+            (params, opt_state), losses = jax.lax.scan(
+                one_step, (params, opt_state), client_batches)
+            return params, opt_state, jnp.mean(losses)
+
+        new_params, new_opt, losses = jax.vmap(client_update)(
+            stacked_params, stacked_opt, batches)
+        M = topology.mixing_matrix_jnp(self.num_clients, self.strategy, mask)
+        mixed = topology.apply_mixing(new_params, M)
+        return mixed, new_opt, losses

@@ -1,0 +1,173 @@
+"""EnFed Algorithm 1 — the requesting device's session loop.
+
+This is the faithful protocol implementation used by the fleet
+simulator: handshake (contract-theory contributor selection + AES key
+exchange), round loop (collect -> decrypt -> aggregate -> fit -> score),
+gated on desired accuracy, battery threshold, and the round budget.
+
+The model updates really are AES-128-CTR encrypted/decrypted through
+``repro.core.crypto`` and the byte counts feed the eq. (4)-(7) cost
+model, so the reported times/energies account for the same phases the
+paper measures.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+import jax
+
+from repro.core import aggregation, crypto
+from repro.core.battery import BatteryState
+from repro.core.energy import CostModel, EnergyReport
+from repro.core.incentive import Contract, NeighborDevice, select_contributors
+from repro.utils.tree import flatten_to_vector, tree_bytes, tree_size, unflatten_from_vector
+
+
+@dataclasses.dataclass
+class EnFedConfig:
+    desired_accuracy: float = 0.95   # A_A
+    max_rounds: int = 10             # R_A  (paper sets 10)
+    n_max: int = 5                   # N_max contributors (paper setup: 5 VMs)
+    battery_threshold: float = 0.2   # B_min (paper: 20%)
+    offered_incentive: float = 0.6
+    epochs: int = 5                  # E  (local fit epochs per round)
+    batch_size: int = 32             # B_A
+    encrypt: bool = True
+    contributor_refresh_epochs: int = 1  # contributors keep training between rounds
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class SessionResult:
+    accuracy: float
+    rounds: int
+    n_contributors: int
+    report: EnergyReport
+    battery: BatteryState
+    history: Dict[str, List[float]]
+    stop_reason: str
+    params: object = None
+
+
+class EnFedSession:
+    """One requesting device M building its model for application A.
+
+    ``task`` must provide:
+      fit(params, data, epochs, batch_size, seed) -> (params, losses)
+      evaluate(params, data) -> accuracy
+      init(seed) -> params
+    ``contributors`` hold their own (pre-trained) params and local data.
+    """
+
+    def __init__(self, task, own_train, own_test, fleet: List[NeighborDevice],
+                 contributor_states: Dict[int, dict], cfg: EnFedConfig = EnFedConfig(),
+                 cost_model: Optional[CostModel] = None,
+                 battery: Optional[BatteryState] = None):
+        self.task = task
+        self.own_train = own_train
+        self.own_test = own_test
+        self.fleet = fleet
+        self.contributor_states = contributor_states  # id -> {params, data}
+        self.cfg = cfg
+        self.cost = cost_model or CostModel()
+        self.battery = battery or BatteryState()
+
+    # -- protocol phases ------------------------------------------------------
+    def handshake(self) -> List[Contract]:
+        contracts = select_contributors(self.fleet, self.cfg.offered_incentive,
+                                        self.cfg.n_max)
+        rng = np.random.default_rng(self.cfg.seed)
+        self.keys = {c.device_id: rng.integers(0, 256, 16).astype(np.uint8)
+                     for c in contracts}
+        self.nonces = {c.device_id: rng.integers(0, 256, 8).astype(np.uint8)
+                       for c in contracts}
+        return contracts
+
+    def _collect_update(self, device_id: int):
+        """Contributor -> (encrypt) -> wire -> (decrypt) -> params."""
+        params = self.contributor_states[device_id]["params"]
+        if not self.cfg.encrypt:
+            return params, tree_bytes(params)
+        vec, _ = flatten_to_vector(params)
+        cipher = crypto.encrypt_update(vec, self.keys[device_id], self.nonces[device_id])
+        plain = crypto.decrypt_update(cipher, self.keys[device_id], self.nonces[device_id])
+        return unflatten_from_vector(plain, params), int(cipher.shape[0])
+
+    def _refresh_contributors(self, contracts: List[Contract]):
+        """Contributors keep improving their local models between rounds."""
+        if self.cfg.contributor_refresh_epochs <= 0:
+            return
+        for c in contracts:
+            st = self.contributor_states[c.device_id]
+            st["params"], _ = self.task.fit(
+                st["params"], st["data"], self.cfg.contributor_refresh_epochs,
+                self.cfg.batch_size, seed=self.cfg.seed + c.device_id)
+
+    # -- Algorithm 1 ----------------------------------------------------------
+    def run(self) -> SessionResult:
+        cfg = self.cfg
+        contracts = self.handshake()
+        if not contracts:
+            raise RuntimeError("no nearby device agreed to the incentive (N_d < 1)")
+        n_c = len(contracts)
+
+        history = {"accuracy": [], "loss": [], "battery": []}
+        params = None
+        rounds = 0
+        stop = "max_rounds"
+        measured_fit_s = 0.0
+        model_bytes = 0
+
+        for r in range(cfg.max_rounds):
+            updates = []
+            for c in contracts:
+                upd, nbytes = self._collect_update(c.device_id)
+                model_bytes = max(model_bytes, nbytes)
+                if params is None and not updates:
+                    params = upd  # model init from the first received update
+                updates.append(upd)
+            # aggregate (eq. 14) then personalize on own data
+            global_params = aggregation.fedavg(updates)
+            t0 = time.perf_counter()
+            params, losses = self.task.fit(global_params, self.own_train,
+                                           cfg.epochs, cfg.batch_size,
+                                           seed=cfg.seed + r)
+            measured_fit_s += time.perf_counter() - t0
+            acc = float(self.task.evaluate(params, self.own_test))
+            rounds = r + 1
+            history["accuracy"].append(acc)
+            history["loss"].append(float(losses[-1]))
+
+            # battery bookkeeping for this round
+            num_params = tree_size(params)
+            round_report = self.cost.session(
+                rounds=1, n_contrib=n_c, num_params=num_params,
+                model_bytes=model_bytes, num_samples=len(self.own_train[0]),
+                epochs=cfg.epochs, n_devices=len(self.fleet),
+                encrypt=cfg.encrypt)
+            self.battery = self.battery.discharge(round_report.e_tot,
+                                                  avg_power_w=self.cost.device.p_train)
+            history["battery"].append(self.battery.level)
+
+            if acc >= cfg.desired_accuracy:
+                stop = "accuracy_reached"
+                break
+            if self.battery.below(cfg.battery_threshold):
+                stop = "battery_low"
+                break
+            self._refresh_contributors(contracts)
+
+        num_params = tree_size(params)
+        report = self.cost.session(
+            rounds=rounds, n_contrib=n_c, num_params=num_params,
+            model_bytes=model_bytes, num_samples=len(self.own_train[0]),
+            epochs=cfg.epochs, n_devices=len(self.fleet),
+            measured_local_time=measured_fit_s, encrypt=cfg.encrypt)
+        return SessionResult(
+            accuracy=history["accuracy"][-1], rounds=rounds, n_contributors=n_c,
+            report=report, battery=self.battery, history=history,
+            stop_reason=stop, params=params)

@@ -1,0 +1,21 @@
+from repro.data.har import (
+    make_har_windows,
+    make_calories_tabular,
+    HARDatasetConfig,
+    CaloriesDatasetConfig,
+)
+from repro.data.partition import dirichlet_partition, iid_partition
+from repro.data.loader import batch_iterator, train_test_split
+from repro.data.tokens import synthetic_token_batches
+
+__all__ = [
+    "make_har_windows",
+    "make_calories_tabular",
+    "HARDatasetConfig",
+    "CaloriesDatasetConfig",
+    "dirichlet_partition",
+    "iid_partition",
+    "batch_iterator",
+    "train_test_split",
+    "synthetic_token_batches",
+]

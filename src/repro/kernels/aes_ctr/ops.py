@@ -1,0 +1,33 @@
+"""Public op: AES-128-CTR encryption of model updates (Pallas path)."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import crypto
+from repro.kernels.aes_ctr.kernel import aes_ctr_pallas
+from repro.kernels.aes_ctr.ref import aes_ctr_ref
+
+
+def encrypt_bytes(payload_u8, key, nonce, *, use_pallas: bool = True,
+                  interpret: bool = True):
+    """CTR encryption of a uint8 payload; decryption is the same call."""
+    if not use_pallas:
+        return aes_ctr_ref(payload_u8, key, nonce)
+    n = int(payload_u8.shape[0])
+    n_blocks = (n + 15) // 16
+    rks = jnp.asarray(crypto.expand_key(np.asarray(key, np.uint8)))
+    ctr = jnp.asarray(crypto._counter_blocks(np.asarray(nonce, np.uint8), n_blocks))
+    return aes_ctr_pallas(payload_u8, rks, ctr, interpret=interpret)
+
+
+decrypt_bytes = encrypt_bytes  # CTR involution
+
+
+def encrypt_update(vec_f32, key, nonce, **kw):
+    return encrypt_bytes(crypto.float_vector_to_bytes(vec_f32), key, nonce, **kw)
+
+
+def decrypt_update(cipher_u8, key, nonce, **kw):
+    return crypto.bytes_to_float_vector(decrypt_bytes(cipher_u8, key, nonce, **kw))

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for AES-128-CTR — delegates to repro.core.crypto,
+which is itself validated against the FIPS-197 test vector."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import crypto
+
+
+def aes_ctr_ref(payload_u8, key, nonce):
+    """payload_u8: (n,) uint8 -> ciphertext (n,) uint8 (CTR XOR)."""
+    return crypto.encrypt_bytes(payload_u8, key, nonce)
+
+
+def keystream_ref(key, nonce, n_bytes: int):
+    return crypto.keystream(key, nonce, n_bytes)

@@ -1,0 +1,59 @@
+"""Pallas TPU kernel: fused masked-weighted FedAvg aggregation.
+
+Aggregation (paper eq. 14) is a memory-bound reduction over the
+contributor axis: for every parameter tile we stream N contributor
+slices HBM -> VMEM once and emit one fp32 tile.  Fusing the mask, the
+weighting, and the normalization into one pass avoids materializing the
+masked intermediate (which a naive ``(mask*w)[:,None]*updates`` would
+write back to HBM at full N x L size).
+
+Tiling: grid over the flat parameter dimension, block (N, TILE_L) with
+TILE_L = 2048 (16 x 128 lanes) so the working set N*TILE_L*4B stays well
+under VMEM for fleet sizes up to ~256 contributors.  The weight vector
+is small and replicated to every grid step.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_L = 2048
+
+
+def _fedavg_kernel(w_ref, u_ref, o_ref):
+    """w_ref: (N,) fp32; u_ref: (N, TILE_L); o_ref: (TILE_L,)."""
+    w = w_ref[...]
+    u = u_ref[...].astype(jnp.float32)
+    num = jnp.einsum("n,nl->l", w, u)
+    denom = jnp.maximum(jnp.sum(w), 1e-9)
+    o_ref[...] = num / denom
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fedavg_pallas(updates, weights, *, interpret: bool = True):
+    """updates: (N, L); weights: (N,). Returns (L,) fp32.
+
+    L is padded to a TILE_L multiple internally; callers pass any L.
+    """
+    n, l = updates.shape
+    pad = (-l) % TILE_L
+    if pad:
+        updates = jnp.pad(updates, ((0, 0), (0, pad)))
+    lp = l + pad
+    grid = (lp // TILE_L,)
+    out = pl.pallas_call(
+        _fedavg_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n, TILE_L), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((TILE_L,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((lp,), jnp.float32),
+        interpret=interpret,
+    )(weights.astype(jnp.float32), updates)
+    return out[:l]

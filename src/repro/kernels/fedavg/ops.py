@@ -1,0 +1,37 @@
+"""Public op: masked-weighted FedAvg over pytrees or flat stacks.
+
+``fedavg_flat`` is the jit'd wrapper over the Pallas kernel (TPU target;
+``interpret=True`` executes the kernel body on CPU for validation).
+``fedavg_tree`` applies it to a contributor-stacked pytree by flattening
+leaves into one (N, L) stream — the same serialization the AES transport
+uses, so on a real deployment decrypt + aggregate fuse into one pass
+over the wire buffer.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fedavg.kernel import fedavg_pallas
+from repro.kernels.fedavg.ref import fedavg_ref
+
+
+def fedavg_flat(updates, weights, *, use_pallas: bool = True, interpret: bool = True):
+    if use_pallas:
+        return fedavg_pallas(updates, weights, interpret=interpret)
+    return fedavg_ref(updates, weights)
+
+
+def fedavg_tree(stacked_tree, weights, *, use_pallas: bool = True, interpret: bool = True):
+    """Leaves of ``stacked_tree`` have shape (N, ...); returns mean tree."""
+    leaves, treedef = jax.tree_util.tree_flatten(stacked_tree)
+    n = leaves[0].shape[0]
+    sizes = [int(x.size) // n for x in leaves]
+    flat = jnp.concatenate([x.reshape(n, -1).astype(jnp.float32) for x in leaves], axis=1)
+    avg = fedavg_flat(flat, weights, use_pallas=use_pallas, interpret=interpret)
+    out, off = [], 0
+    for leaf, sz in zip(leaves, sizes):
+        out.append(avg[off:off + sz].reshape(leaf.shape[1:]).astype(leaf.dtype))
+        off += sz
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the fused masked-weighted FedAvg reduction."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fedavg_ref(updates, weights):
+    """updates: (N, L) contributor-stacked flat updates; weights: (N,)
+    (participation mask x data-size weights). Returns (L,) fp32:
+
+        out = sum_j w_j * u_j / max(sum_j w_j, eps)      (paper eq. 14)
+    """
+    w = weights.astype(jnp.float32)
+    num = jnp.einsum("n,nl->l", w, updates.astype(jnp.float32))
+    return num / jnp.maximum(jnp.sum(w), 1e-9)

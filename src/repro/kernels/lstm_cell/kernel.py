@@ -1,0 +1,103 @@
+"""Pallas TPU kernel: fused LSTM cell.
+
+The paper's classifier hot loop is the per-timestep LSTM cell: two
+matmuls into four gates plus a chain of elementwise ops.  Unfused, XLA
+materializes the (B, 4H) gate tensor in HBM between the matmul and the
+elementwise stage; fused, gates live in VMEM registers and only h/c
+(B, H each) are written back — the cell becomes MXU-bound instead of
+HBM-bound for the small H typical of HAR models.
+
+Layout: the wrapper reshapes wx (F,4H) -> (F,4,H) and wh -> (H,4,H) so a
+BlockSpec can slice one H-tile of all four gates per grid step.  Tiles:
+grid (B/Bt, H/Ht), Ht = 128 (lane width), Bt up to 128; x and h enter
+with their full contraction dims (F and H are small for this workload —
+the whole working set sits in VMEM).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128
+SUBLANE = 8
+
+
+def _lstm_kernel(x_ref, h_ref, c_ref, wx_ref, wh_ref, b_ref, h_out_ref, c_out_ref):
+    """Blocks: x (Bt,F); h (Bt,H); c (Bt,Ht); wx (F,4,Ht); wh (H,4,Ht);
+    b (4,Ht); outs (Bt,Ht)."""
+    x = x_ref[...].astype(jnp.float32)
+    h = h_ref[...].astype(jnp.float32)
+    c = c_ref[...].astype(jnp.float32)
+    wx = wx_ref[...].astype(jnp.float32)
+    wh = wh_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+
+    def gate(g):
+        return (jnp.dot(x, wx[:, g, :], preferred_element_type=jnp.float32)
+                + jnp.dot(h, wh[:, g, :], preferred_element_type=jnp.float32)
+                + b[g])
+
+    i_g = jax.nn.sigmoid(gate(0))
+    f_g = jax.nn.sigmoid(gate(1))
+    g_g = jnp.tanh(gate(2))
+    o_g = jax.nn.sigmoid(gate(3))
+    c_new = f_g * c + i_g * g_g
+    h_new = o_g * jnp.tanh(c_new)
+    h_out_ref[...] = h_new
+    c_out_ref[...] = c_new
+
+
+def _pad_to(x, axis, mult):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def lstm_cell_pallas(x, h, c, wx, wh, b, *, interpret: bool = True):
+    """Fused LSTM cell. Shapes as in the reference. Returns (h_new, c_new)."""
+    B, F = x.shape
+    H = h.shape[1]
+    # pad to hardware tiles
+    Hp = H + ((-H) % LANE)
+    Fp = F + ((-F) % SUBLANE)
+    Bt = min(128, B + ((-B) % SUBLANE))
+    Bp = B + ((-B) % Bt)
+
+    xp = _pad_to(_pad_to(x, 0, Bt), 1, SUBLANE)
+    hp = _pad_to(_pad_to(h, 0, Bt), 1, LANE)
+    cp = _pad_to(_pad_to(c, 0, Bt), 1, LANE)
+    wx4 = _pad_to(_pad_to(wx.reshape(F, 4, H), 0, SUBLANE), 2, LANE)
+    wh4 = _pad_to(_pad_to(wh.reshape(H, 4, H), 0, LANE), 2, LANE)
+    b4 = _pad_to(b.reshape(4, H), 1, LANE)
+
+    grid = (Bp // Bt, Hp // LANE)
+    h_new, c_new = pl.pallas_call(
+        _lstm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((Bt, Fp), lambda i, j: (i, 0)),
+            pl.BlockSpec((Bt, Hp), lambda i, j: (i, 0)),
+            pl.BlockSpec((Bt, LANE), lambda i, j: (i, j)),
+            pl.BlockSpec((Fp, 4, LANE), lambda i, j: (0, 0, j)),
+            pl.BlockSpec((Hp, 4, LANE), lambda i, j: (0, 0, j)),
+            pl.BlockSpec((4, LANE), lambda i, j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((Bt, LANE), lambda i, j: (i, j)),
+            pl.BlockSpec((Bt, LANE), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bp, Hp), jnp.float32),
+            jax.ShapeDtypeStruct((Bp, Hp), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xp, hp, cp, wx4, wh4, b4)
+    return h_new[:B, :H], c_new[:B, :H]

@@ -1,0 +1,17 @@
+"""Public op: fused LSTM cell, selectable implementation.
+
+``lstm_cell`` has the exact signature the classifier's scan body expects,
+so ``LSTMClassifierConfig(cell="pallas")`` swaps the hot loop in place.
+"""
+
+from __future__ import annotations
+
+from repro.kernels.lstm_cell.kernel import lstm_cell_pallas
+from repro.kernels.lstm_cell.ref import lstm_cell_ref
+
+
+def lstm_cell(x, h, c, wx, wh, b, *, interpret: bool = True):
+    return lstm_cell_pallas(x, h, c, wx, wh, b, interpret=interpret)
+
+
+__all__ = ["lstm_cell", "lstm_cell_pallas", "lstm_cell_ref"]

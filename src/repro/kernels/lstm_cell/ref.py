@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the fused LSTM cell (identical math to
+``repro.models.classifiers.lstm_cell_ref``, re-exported for the kernel
+test harness)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lstm_cell_ref(x, h, c, wx, wh, b):
+    """x: (B,F); h,c: (B,H); wx: (F,4H); wh: (H,4H); b: (4H,).
+
+    Gate layout [i | f | g | o] along the 4H axis.
+    Returns (h_new, c_new).
+    """
+    gates = x @ wx + h @ wh + b
+    i, f, g, o = jnp.split(gates, 4, axis=-1)
+    c_new = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h_new = jax.nn.sigmoid(o) * jnp.tanh(c_new)
+    return h_new, c_new

@@ -1,0 +1,79 @@
+"""Pallas TPU kernel: per-tile symmetric int8 quantize / dequantize.
+
+Beyond-paper optimization: the paper cites gradient/weight quantization
+as the standard lever for communication energy ([13], [14]) but does not
+use it.  EnFed's update transport is the dominant communication cost
+(R x N_c x w bytes), so int8-compressing the update stream cuts both the
+radio energy of the fleet simulation and the collective bytes of the
+distributed roofline by ~4x.
+
+One fused pass: absmax reduction and scaled round-to-int8 in VMEM, one
+tile per grid step, scale emitted per tile.  Dequant is the inverse pass
+fused into the receive path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 1024
+
+
+def _quant_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(absmax, 1e-12) / 127.0
+    q_ref[...] = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    s_ref[0] = scale
+
+
+def _dequant_kernel(q_ref, s_ref, x_ref):
+    x_ref[...] = q_ref[...].astype(jnp.float32) * s_ref[0]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def quantize_pallas(x, *, interpret: bool = True):
+    """x: (L,) fp32 -> (q int8 (Lp,), scales (Lp/TILE,), L). Pads to TILE."""
+    l = x.shape[0]
+    pad = (-l) % TILE
+    if pad:
+        x = jnp.pad(x, (0, pad))
+    lp = l + pad
+    grid = (lp // TILE,)
+    q, s = pl.pallas_call(
+        _quant_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((TILE,), lambda i: (i,))],
+        out_specs=[
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((lp,), jnp.int8),
+            jax.ShapeDtypeStruct((lp // TILE,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)
+    return q, s
+
+
+@functools.partial(jax.jit, static_argnames=("orig_len", "interpret"))
+def dequantize_pallas(q, scales, orig_len: int, *, interpret: bool = True):
+    lp = q.shape[0]
+    grid = (lp // TILE,)
+    x = pl.pallas_call(
+        _dequant_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((TILE,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((lp,), jnp.float32),
+        interpret=interpret,
+    )(q, scales)
+    return x[:orig_len]

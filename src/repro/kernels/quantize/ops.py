@@ -1,0 +1,29 @@
+"""Public op: int8 update compression for the EnFed transport.
+
+``compress_update`` / ``decompress_update`` wrap a flattened fp32 model
+update into (int8 payload, per-tile scales) and back — a 4x cut of the
+bytes entering the AES transport and the aggregation collectives.
+"""
+
+from __future__ import annotations
+
+from repro.kernels.quantize.kernel import quantize_pallas, dequantize_pallas, TILE
+from repro.kernels.quantize.ref import quantize_ref, dequantize_ref
+
+
+def compress_update(vec, *, use_pallas: bool = True, interpret: bool = True):
+    """vec: (L,) fp32 -> (q, scales, L)."""
+    if use_pallas:
+        q, s = quantize_pallas(vec, interpret=interpret)
+    else:
+        import jax.numpy as jnp
+        pad = (-vec.shape[0]) % TILE
+        q, s = quantize_ref(jnp.pad(vec, (0, pad)))
+    return q, s, vec.shape[0]
+
+
+def decompress_update(q, scales, orig_len, *, use_pallas: bool = True,
+                      interpret: bool = True):
+    if use_pallas:
+        return dequantize_pallas(q, scales, orig_len, interpret=interpret)
+    return dequantize_ref(q, scales)[:orig_len]

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for per-tile symmetric int8 quantization."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+TILE = 1024
+
+
+def quantize_ref(x, tile: int = TILE):
+    """x: (L,) fp32, L % tile == 0. Returns (q int8 (L,), scales fp32 (L/tile,)).
+
+    Symmetric per-tile: scale = absmax/127, q = round(x/scale).
+    """
+    xt = x.reshape(-1, tile).astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(xt), axis=1)
+    scale = jnp.maximum(absmax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xt / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q.reshape(-1), scale
+
+
+def dequantize_ref(q, scales, tile: int = TILE):
+    qt = q.reshape(-1, tile).astype(jnp.float32)
+    return (qt * scales[:, None]).reshape(-1)

@@ -1,0 +1,220 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+on the production meshes and record memory / cost / collective stats.
+
+This is the proof that the distribution config is coherent without real
+hardware: a sharding mismatch, an unsupported collective, or an
+inconsistent shard_map spec fails here.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-3b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all            # full matrix
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+Options:
+  --strategy {cfl,enfed,dfl_ring,dfl_mesh,none}   train aggregation schedule
+  --neighborhood N                                EnFed nearby-device count
+  --mla-absorbed                                  absorbed MLA decode variant
+  --out results/dryrun                            JSON output directory
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, INPUT_SHAPES, get_config, shape_supported
+from repro.core.topology import AggregationStrategy
+from repro.launch import inputs as inp
+from repro.launch.hlo_stats import collective_bytes, cost_summary, memory_summary
+from repro.launch.mesh import client_axes_for, make_production_mesh
+from repro.launch.steps import (fed_param_shardings, make_federated_train_step,
+                                make_prefill_step, make_serve_step, num_clients,
+                                stack_for_clients)
+from repro.models import Transformer
+from repro.optim import adam
+from repro.sharding import param_specs, use_mesh
+from repro.sharding.specs import input_specs_sharding
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _sds_tree(shape_tree):
+    return jax.tree_util.tree_map(lambda x: SDS(x.shape, x.dtype), shape_tree)
+
+
+def lower_train(cfg, model, mesh, strategy_kind, neighborhood, compress=None):
+    caxes = client_axes_for(cfg, mesh)
+    C = num_clients(mesh, caxes)
+    strategy = AggregationStrategy(kind=strategy_kind, client_axes=caxes,
+                                   neighborhood_size=neighborhood,
+                                   compress=compress)
+    step, opt = make_federated_train_step(model, mesh, strategy, lr=1e-4)
+    shp = INPUT_SHAPES["train_4k"]
+    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    batch = inp.train_inputs(cfg, shp["global_batch"], shp["seq_len"])
+
+    if not caxes or strategy_kind == "none":
+        opt_shape = jax.eval_shape(opt.init, params_shape)
+        psh = param_specs(params_shape, mesh, fsdp=cfg.fsdp)
+        osh = param_specs(opt_shape, mesh, fsdp=cfg.fsdp)
+        bsh = inp.batch_input_shardings(batch, mesh)
+        jitted = jax.jit(step, in_shardings=(psh, osh, bsh, None))
+        return jitted.lower(params_shape, opt_shape, batch,
+                            SDS((max(C, 1),), jnp.float32)), C
+    pf = jax.tree_util.tree_map(lambda x: SDS((C,) + x.shape, x.dtype), params_shape)
+    opt_shape = jax.eval_shape(opt.init, params_shape)
+    of = jax.tree_util.tree_map(lambda x: SDS((C,) + x.shape, x.dtype), opt_shape)
+    psh = fed_param_shardings(pf, mesh, caxes, cfg.fsdp)
+    osh = fed_param_shardings(of, mesh, caxes, cfg.fsdp)
+    bsh = inp.batch_input_shardings(batch, mesh, client_stacked=True, client_axes=caxes)
+    jitted = jax.jit(step, in_shardings=(psh, osh, bsh, None))
+    return jitted.lower(pf, of, batch, SDS((C,), jnp.float32)), C
+
+
+def lower_prefill(cfg, model, mesh, shape_name):
+    shp = INPUT_SHAPES[shape_name]
+    step = make_prefill_step(model)
+    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    batch = inp.prefill_inputs(cfg, shp["global_batch"], shp["seq_len"])
+    psh = param_specs(params_shape, mesh, fsdp=cfg.fsdp)
+    bsh = inp.batch_input_shardings(batch, mesh)
+    jitted = jax.jit(step, in_shardings=(psh, bsh))
+    return jitted.lower(params_shape, batch)
+
+
+def lower_decode(cfg, model, mesh, shape_name, mla_absorbed=False):
+    shp = INPUT_SHAPES[shape_name]
+    B, S = shp["global_batch"], shp["seq_len"]
+    step = make_serve_step(model, mla_absorbed=mla_absorbed)
+    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    cache = inp.cache_shapes(model, B, S)
+    tokens = SDS((B, 1), jnp.int32)
+    pos = SDS((), jnp.int32)
+    memory = inp.decode_memory(cfg, B, S)
+    psh = param_specs(params_shape, mesh, fsdp=cfg.fsdp)
+    csh = inp.cache_shardings(cache, mesh)
+    tsh = inp.batch_input_shardings({"tokens": tokens}, mesh)["tokens"]
+    args = (params_shape, cache, tokens, pos)
+    shardings = (psh, csh, tsh, None)
+    if memory is not None:
+        msh = inp.cache_shardings({"m": memory}, mesh)["m"]
+        jitted = jax.jit(step, in_shardings=shardings + (msh,))
+        return jitted.lower(*args, memory)
+    jitted = jax.jit(step, in_shardings=shardings)
+    return jitted.lower(*args)
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, strategy: str = "cfl",
+            neighborhood: int = 4, mla_absorbed: bool = False,
+            moe_dispatch: str = None, mlstm_chunk: int = 0,
+            compress: str = None) -> dict:
+    import dataclasses as _dc
+    cfg = get_config(arch)
+    if moe_dispatch and cfg.moe is not None:
+        cfg = cfg.replace(moe=_dc.replace(cfg.moe, dispatch=moe_dispatch))
+    if mlstm_chunk:
+        cfg = cfg.replace(mlstm_chunk=mlstm_chunk)
+    rec = {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+           "strategy": strategy, "status": "skipped", "mla_absorbed": mla_absorbed,
+           "moe_dispatch": moe_dispatch, "mlstm_chunk": mlstm_chunk,
+           "compress": compress}
+    if not shape_supported(cfg, shape_name):
+        rec["reason"] = "full-attention arch: long_500k decode skipped (DESIGN.md)"
+        return rec
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = Transformer(cfg)
+    kind = INPUT_SHAPES[shape_name]["kind"]
+    t0 = time.time()
+    with use_mesh(mesh):
+        if kind == "train":
+            lowered, C = lower_train(cfg, model, mesh, strategy, neighborhood,
+                                     compress=compress)
+            rec["num_clients"] = C
+        elif kind == "prefill":
+            lowered = lower_prefill(cfg, model, mesh, shape_name)
+        else:
+            lowered = lower_decode(cfg, model, mesh, shape_name, mla_absorbed)
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+    rec.update(cost_summary(compiled))
+    rec.update(memory_summary(compiled))
+    rec.update(collective_bytes(compiled.as_text()))
+    rec["n_devices"] = int(np.prod(list(mesh.shape.values())))
+    rec["status"] = "ok"
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), default=None)
+    ap.add_argument("--shape", choices=sorted(INPUT_SHAPES), default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--strategy", default="cfl",
+                    choices=("cfl", "enfed", "dfl_ring", "dfl_mesh", "none"))
+    ap.add_argument("--neighborhood", type=int, default=4)
+    ap.add_argument("--compress", default=None, choices=(None, "int8"))
+    ap.add_argument("--mla-absorbed", action="store_true")
+    ap.add_argument("--moe-dispatch", default=None, choices=(None, "sort", "einsum", "ep"))
+    ap.add_argument("--mlstm-chunk", type=int, default=0)
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    archs = sorted(ARCHS) if args.all or not args.arch else [args.arch]
+    shapes = sorted(INPUT_SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}__{shape}__{'pod2' if mp else 'pod1'}__{args.strategy}"
+                if args.mla_absorbed:
+                    tag += "__absorbed"
+                if args.moe_dispatch:
+                    tag += f"__{args.moe_dispatch}"
+                if args.mlstm_chunk:
+                    tag += f"__chunk{args.mlstm_chunk}"
+                if args.compress:
+                    tag += f"__{args.compress}"
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path):
+                    print(f"[skip cached] {tag}")
+                    continue
+                print(f"[dryrun] {tag} ...", flush=True)
+                try:
+                    rec = run_one(arch, shape, mp, args.strategy,
+                                  args.neighborhood, args.mla_absorbed,
+                                  args.moe_dispatch, args.mlstm_chunk,
+                                  args.compress)
+                except Exception as e:
+                    rec = {"arch": arch, "shape": shape, "multi_pod": mp,
+                           "strategy": args.strategy, "status": "error",
+                           "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-2000:]}
+                    n_fail += 1
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=2)
+                msg = rec["status"]
+                if rec["status"] == "ok":
+                    msg += (f" flops/dev={rec.get('flops', 0):.3e}"
+                            f" coll={rec.get('total_collective_bytes', 0):.3e}B"
+                            f" mem={rec.get('total_bytes_per_device', 0)/2**30:.2f}GiB"
+                            f" compile={rec.get('compile_s')}s")
+                print(f"[dryrun] {tag}: {msg}", flush=True)
+    print(f"done ({n_fail} failures)")
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,106 @@
+"""HLO-derived statistics for the roofline analysis.
+
+``collective_bytes`` parses the post-SPMD (per-partition) HLO text and
+sums the output-shape bytes of every collective op, bucketed by kind.
+Shapes in the partitioned module are per-device, so the totals
+approximate the bytes crossing each device's ICI links per step (the
+ring-algorithm factor ~2x for all-reduce is applied in the roofline
+calculation, not here).
+
+``cost_summary`` normalizes ``compiled.cost_analysis()`` across jax
+versions (dict or list-of-dicts).
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  %all-reduce.5 = bf16[1024,512]{1,0} all-reduce(...)
+#       %ag = (f32[8,4]{1,0}, f32[8,4]{1,0}) all-gather-start(...)
+_OP_RE = re.compile(
+    r"=\s*([^=\n]*?)\s*(" + "|".join(_COLLECTIVES) + r")(?:-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device bytes by collective kind + op counts."""
+    by_kind = defaultdict(int)
+    counts = defaultdict(int)
+    for m in _OP_RE.finditer(hlo_text):
+        shape_text, kind = m.group(1), m.group(2)
+        # async pairs appear as -start/-done; the -done's operand is the
+        # -start tuple — count only ops whose text isn't a -done
+        tail = hlo_text[m.end(2):m.end(2) + 6]
+        if tail.startswith("-done"):
+            continue
+        # async -start ops carry an (input, output) staging tuple: halve
+        factor = 0.5 if tail.startswith("-start") else 1.0
+        by_kind[kind] += int(_shape_bytes(shape_text) * factor)
+        counts[kind] += 1
+    out = {f"{k}_bytes": float(v) for k, v in by_kind.items()}
+    out.update({f"{k}_count": float(v) for k, v in counts.items()})
+    out["total_collective_bytes"] = float(sum(by_kind.values()))
+    return out
+
+
+def cost_summary(compiled) -> Dict[str, float]:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    if not isinstance(ca, dict):
+        return {}
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        "transcendentals": float(ca.get("transcendentals", 0.0)),
+    }
+
+
+def memory_summary(compiled) -> Dict[str, float]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    if ma is None:
+        return {}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = float(v)
+    if out:
+        out["total_bytes_per_device"] = (
+            out.get("argument_size_in_bytes", 0.0)
+            + out.get("output_size_in_bytes", 0.0)
+            + out.get("temp_size_in_bytes", 0.0)
+            - out.get("alias_size_in_bytes", 0.0))
+    return out

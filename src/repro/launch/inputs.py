@@ -1,0 +1,129 @@
+"""ShapeDtypeStruct input factories + sharding rules for every step kind.
+
+Everything here is abstract (no device allocation): the dry-run lowers
+``train_step`` / ``prefill_step`` / ``serve_step`` against these specs.
+The modality-frontend carve-out lives here too: audio gets precomputed
+frame embeddings, VLM gets precomputed patch embeddings.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import Transformer
+from repro.models.config import ModelConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _batch_tuple(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _nb(mesh: Mesh):
+    bt = _batch_tuple(mesh)
+    return int(np.prod([mesh.shape[a] for a in bt])) if bt else 1
+
+
+# ---------------------------------------------------------------------------
+# token / frontend inputs
+# ---------------------------------------------------------------------------
+
+
+def train_inputs(cfg: ModelConfig, batch: int, seq: int) -> Dict[str, SDS]:
+    d = {
+        "tokens": SDS((batch, seq), jnp.int32),
+        "labels": SDS((batch, seq), jnp.int32),
+    }
+    if cfg.frontend == "audio":
+        d["frames"] = SDS((batch, seq, cfg.d_model), cfg.jnp_dtype)
+    if cfg.frontend == "vision":
+        d["prefix_embeds"] = SDS((batch, cfg.num_prefix_tokens, cfg.d_model), cfg.jnp_dtype)
+    return d
+
+
+def prefill_inputs(cfg: ModelConfig, batch: int, seq: int) -> Dict[str, SDS]:
+    d = train_inputs(cfg, batch, seq)
+    del d["labels"]
+    return d
+
+
+def decode_inputs(cfg: ModelConfig, batch: int) -> Dict[str, SDS]:
+    return {"tokens": SDS((batch, 1), jnp.int32)}
+
+
+def decode_memory(cfg: ModelConfig, batch: int, seq: int) -> Optional[SDS]:
+    """Encoder memory for enc-dec decode (frames already encoded)."""
+    if cfg.is_encoder_decoder:
+        return SDS((batch, seq, cfg.d_model), cfg.jnp_dtype)
+    return None
+
+
+def cache_shapes(model: Transformer, batch: int, max_len: int):
+    return jax.eval_shape(lambda: model.init_cache(batch, max_len))
+
+
+# ---------------------------------------------------------------------------
+# sharding rules
+# ---------------------------------------------------------------------------
+
+
+def batch_input_shardings(inputs, mesh: Mesh, client_stacked: bool = False,
+                          client_axes: Tuple[str, ...] = ()):
+    """Inputs shard their leading batch axis over ('pod','data') — or over
+    the client axes when feeding the federated (client-stacked) step."""
+    if client_stacked and client_axes:
+        spec0 = client_axes if len(client_axes) > 1 else client_axes[0]
+    else:
+        bt = _batch_tuple(mesh)
+        spec0 = (bt if len(bt) > 1 else (bt[0] if bt else None))
+
+    def f(leaf):
+        axes = [None] * len(leaf.shape)
+        if axes and leaf.shape[0] % max(_nb(mesh), 1) == 0 and leaf.shape[0] > 1:
+            axes[0] = spec0
+        return NamedSharding(mesh, P(*axes))
+
+    return jax.tree_util.tree_map(f, inputs)
+
+
+def cache_shardings(cache, mesh: Mesh):
+    """Decode-state sharding heuristics (DESIGN.md §5):
+
+    * stacked-layer leading axis (scan subtrees) never sharded;
+    * batch axis over ('pod','data') when divisible;
+    * otherwise a long (>=2048) sequence axis is sharded over 'data'
+      (sequence-parallel decode for global_batch=1 long-context);
+    * the innermost axis is tensor-parallel over 'model' when divisible.
+    """
+    bt = _batch_tuple(mesh)
+    nb = _nb(mesh)
+    model_n = mesh.shape["model"] if "model" in mesh.axis_names else 1
+    data_n = mesh.shape["data"] if "data" in mesh.axis_names else 1
+
+    def f(path, leaf):
+        keys = [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+        start = 1 if "scan" in keys else 0
+        shape = leaf.shape
+        axes = [None] * len(shape)
+        used_data = False
+        if len(shape) > start and shape[start] > 1 and shape[start] % nb == 0:
+            axes[start] = bt if len(bt) > 1 else bt[0]
+            used_data = True
+        else:
+            for j in range(start + 1, len(shape)):
+                if shape[j] >= 2048 and data_n > 1 and shape[j] % data_n == 0:
+                    axes[j] = "data"
+                    used_data = True
+                    break
+        last = len(shape) - 1
+        if last > start and axes[last] is None and model_n > 1 and shape[last] % model_n == 0:
+            axes[last] = "model"
+        return NamedSharding(mesh, P(*axes))
+
+    return jax.tree_util.tree_map_with_path(f, cache)

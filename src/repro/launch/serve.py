@@ -1,0 +1,86 @@
+"""Batched serving driver: prefill a prompt batch, then decode tokens.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b \
+      --preset smoke --batch 4 --prompt-len 32 --gen 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, get_config
+from repro.models import Transformer
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), default="qwen2.5-3b")
+    ap.add_argument("--preset", choices=("full", "smoke"), default="smoke")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.8)
+    ap.add_argument("--mla-absorbed", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.preset == "smoke":
+        cfg = cfg.smoke()
+    cfg = cfg.replace(dtype="float32")
+    model = Transformer(cfg)
+    rng = jax.random.PRNGKey(args.seed)
+    params = model.init(rng)
+    B = args.batch
+    max_len = args.prompt_len + args.gen
+
+    prompts = jax.random.randint(jax.random.fold_in(rng, 1),
+                                 (B, args.prompt_len), 0, cfg.vocab_size)
+    batch = {"tokens": prompts}
+    memory = None
+    if cfg.frontend == "audio":
+        frames = jax.random.normal(jax.random.fold_in(rng, 2), (B, 16, cfg.d_model))
+        memory = model.encode(params, frames)
+    if cfg.frontend == "vision":
+        batch["prefix_embeds"] = jax.random.normal(
+            jax.random.fold_in(rng, 3), (B, cfg.num_prefix_tokens, cfg.d_model))
+
+    decode = jax.jit(
+        lambda p, t, c, pos: model.decode_step(p, t, c, pos, memory=memory,
+                                               mla_absorbed=args.mla_absorbed))
+
+    # prefill via sequential decode into the cache (cache-building path),
+    # which exercises the same serve_step the dry-run lowers
+    cache = model.init_cache(B, max_len)
+    t0 = time.time()
+    logits = None
+    for t in range(args.prompt_len):
+        logits, cache = decode(params, prompts[:, t:t + 1], cache, t)
+    t_prefill = time.time() - t0
+
+    out_tokens = []
+    key = jax.random.fold_in(rng, 4)
+    t0 = time.time()
+    for t in range(args.gen):
+        key, sub = jax.random.split(key)
+        nxt = jax.random.categorical(sub, logits[:, 0] / args.temperature)[:, None]
+        out_tokens.append(np.asarray(nxt))
+        logits, cache = decode(params, nxt, cache, args.prompt_len + t)
+    t_gen = time.time() - t0
+
+    toks = np.concatenate(out_tokens, axis=1)
+    print(f"[serve] {cfg.name}: batch={B} prompt={args.prompt_len} gen={args.gen}")
+    print(f"[serve] prefill {t_prefill:.2f}s; decode {t_gen:.2f}s "
+          f"({B * args.gen / max(t_gen, 1e-9):.1f} tok/s)")
+    print(f"[serve] sample token ids: {toks[0][:12].tolist()}")
+    assert toks.shape == (B, args.gen)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,171 @@
+"""Step builders: federated train step, prefill step, serve (decode) step.
+
+The federated train step is the paper's technique as a first-class
+feature of the distributed runtime.  Every client of the FL fleet is one
+shard of the mesh client axes (``data``, plus ``pod`` multi-pod; fsdp
+configs federate over ``pod`` only).  Parameters and optimizer state
+carry an explicit leading client axis of size C = prod(client axis
+sizes), sharded so each device holds exactly one client's replica — the
+same memory as replicated storage, but honest semantics: clients may
+diverge (opportunistic EnFed neighborhoods) and the aggregation
+collective is *explicit* and selectable:
+
+  cfl       psum over all client axes          (~2w bytes, FedAvg)
+  dfl_mesh  all_gather + local mean            (N*w bytes)
+  dfl_ring  (N-1) neighbour ppermute hops      ((N-1)*w, neighbour links)
+  enfed     masked ring-reduce within a        ((k-1)*w, never crosses pod)
+            k-neighborhood of the data axis
+
+Everything inside the client shard_map keeps the ``model`` (and for
+fsdp configs ``data``) axes in auto mode, so tensor-parallel / ZeRO
+sharding composes with the FL schedule.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.topology import AggregationStrategy, aggregate_local
+from repro.models import Transformer, cross_entropy_loss
+from repro.optim import adam, apply_updates
+from repro.sharding import param_specs, manual_axes
+from repro.sharding.specs import _spec_for, _path_str
+
+MTP_LOSS_WEIGHT = 0.3
+
+
+def lm_loss(model: Transformer, params, batch):
+    out = model.forward(params, batch)
+    logits = out["logits"]
+    labels = batch["labels"]
+    if logits.shape[1] != labels.shape[1]:  # VLM prefix tokens carry no labels
+        logits = logits[:, -labels.shape[1]:]
+    loss = cross_entropy_loss(logits.reshape(-1, logits.shape[-1]), labels.reshape(-1))
+    loss = loss + out["aux_loss"]
+    if "mtp_logits" in out:
+        mtp = out["mtp_logits"]
+        if mtp.shape[1] != labels.shape[1]:
+            mtp = mtp[:, -labels.shape[1]:]
+        # MTP head predicts token t+2: shift labels left by one more step
+        mtp_labels = jnp.roll(labels, -1, axis=1)
+        loss = loss + MTP_LOSS_WEIGHT * cross_entropy_loss(
+            mtp[:, :-1].reshape(-1, mtp.shape[-1]), mtp_labels[:, :-1].reshape(-1))
+    return loss
+
+
+def num_clients(mesh: Mesh, client_axes) -> int:
+    return int(np.prod([mesh.shape[a] for a in client_axes])) if client_axes else 1
+
+
+# ---------------------------------------------------------------------------
+# federated parameter/opt-state stacking
+# ---------------------------------------------------------------------------
+
+
+def stack_for_clients(tree, C: int):
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (C,) + x.shape).copy(), tree)
+
+
+def fed_param_shardings(params_shape, mesh: Mesh, client_axes, fsdp: bool):
+    """NamedShardings for client-stacked params: axis0 over the client
+    axes, remaining axes per the base (TP/FSDP) rules."""
+    client = tuple(client_axes)
+
+    def f(path, leaf):
+        base = _spec_for(_path_str(path), leaf.shape[1:], mesh, fsdp=fsdp)
+        inner = [None if (e in client or (isinstance(e, tuple) and set(e) & set(client))) else e
+                 for e in base]
+        spec = P(client if len(client) > 1 else client[0], *inner) if client else P(None, *inner)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(f, params_shape)
+
+
+# ---------------------------------------------------------------------------
+# train step
+# ---------------------------------------------------------------------------
+
+
+def make_federated_train_step(model: Transformer, mesh: Mesh,
+                              strategy: AggregationStrategy, lr: float = 1e-4):
+    """Returns (train_step, opt).  train_step(params_fed, opt_fed, batch,
+    mask) -> (params_fed, opt_fed, loss): one FL round of 1 local step +
+    the strategy's aggregation collective."""
+    opt = adam(lr)
+    client_axes = tuple(strategy.client_axes)
+
+    import contextlib
+    from repro.models.moe import disable_token_local
+    # bf16 MoE token-local routing under grad + auto-sharded params crashes
+    # the XLA-CPU partitioner (see repro.models.moe) — those train steps
+    # enter the routing region through an fp32 boundary cast.  The
+    # client-stacked path is only affected for fsdp configs (the client
+    # shard_map already makes 'data' manual for the others).
+    needs_guard = (model.cfg.moe is not None
+                   and model.cfg.jnp_dtype == jnp.bfloat16
+                   and (model.cfg.fsdp or not client_axes or strategy.kind == "none"))
+    tl_guard = disable_token_local if needs_guard else contextlib.nullcontext
+
+    if not client_axes or strategy.kind == "none":
+        # conventional pjit path: XLA inserts the grad reduction
+        def plain_step(params, opt_state, batch, mask):
+            del mask
+            with tl_guard():
+                loss, grads = jax.value_and_grad(lambda p: lm_loss(model, p, batch))(params)
+            upd, opt_state = opt.update(grads, opt_state, params)
+            return apply_updates(params, upd), opt_state, loss
+
+        return plain_step, opt
+
+    cspec = client_axes if len(client_axes) > 1 else client_axes[0]
+
+    def local_step(p_blk, o_blk, batch_blk, mask):
+        squeeze = lambda t: jax.tree_util.tree_map(lambda x: x[0], t)
+        expand = lambda t: jax.tree_util.tree_map(lambda x: x[None], t)
+        p = squeeze(p_blk)
+        o = squeeze(o_blk)
+        with manual_axes(client_axes), tl_guard():
+            loss, grads = jax.value_and_grad(lambda q: lm_loss(model, q, batch_blk))(p)
+            grads = aggregate_local(grads, mask, mesh, strategy)
+            loss = jax.lax.pmean(loss, client_axes)
+        upd, o = opt.update(grads, o, p)
+        p = apply_updates(p, upd)
+        return expand(p), expand(o), loss
+
+    def train_step(params_fed, opt_fed, batch, mask):
+        return jax.shard_map(
+            local_step, mesh=mesh, axis_names=set(client_axes),
+            in_specs=(P(cspec), P(cspec), P(cspec), P()),
+            out_specs=(P(cspec), P(cspec), P()),
+        )(params_fed, opt_fed, batch, mask)
+
+    return train_step, opt
+
+
+# ---------------------------------------------------------------------------
+# prefill / serve steps
+# ---------------------------------------------------------------------------
+
+
+def make_prefill_step(model: Transformer):
+    def prefill_step(params, batch):
+        out = model.forward(params, batch, last_logit_only=True)
+        return out["logits"]
+
+    return prefill_step
+
+
+def make_serve_step(model: Transformer, mla_absorbed: bool = False):
+    def serve_step(params, cache, tokens, pos, memory=None):
+        logits, cache = model.decode_step(params, tokens, cache, pos,
+                                          memory=memory, mla_absorbed=mla_absorbed)
+        return logits, cache
+
+    return serve_step

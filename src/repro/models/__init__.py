@@ -1,0 +1,23 @@
+from repro.models.config import ModelConfig, MoEConfig, MLAConfig
+from repro.models.transformer import Transformer
+from repro.models.classifiers import (
+    LSTMClassifier,
+    LSTMClassifierConfig,
+    MLPClassifier,
+    MLPClassifierConfig,
+    cross_entropy_loss,
+    accuracy,
+)
+
+__all__ = [
+    "ModelConfig",
+    "MoEConfig",
+    "MLAConfig",
+    "Transformer",
+    "LSTMClassifier",
+    "LSTMClassifierConfig",
+    "MLPClassifier",
+    "MLPClassifierConfig",
+    "cross_entropy_loss",
+    "accuracy",
+]

@@ -1,0 +1,140 @@
+"""The paper's HAR data-analysis models: an LSTM and an MLP classifier.
+
+Table III of the paper: LSTM (softmax head, Adam, categorical
+cross-entropy, 100 epochs) and MLP (hidden sizes (64, 32), ReLU, Adam).
+These are the models federated by EnFed in the faithful reproduction.
+
+The LSTM cell is injectable (``cell="ref" | "pallas"``): the Pallas
+kernel in ``repro.kernels.lstm_cell`` is the TPU hot-path implementation
+and is validated against the reference cell here.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+@dataclasses.dataclass(frozen=True)
+class LSTMClassifierConfig:
+    input_dim: int        # sensor features per timestep
+    seq_len: int          # window length
+    hidden: int = 64
+    num_classes: int = 6
+    cell: str = "ref"     # "ref" | "pallas"
+
+
+@dataclasses.dataclass(frozen=True)
+class MLPClassifierConfig:
+    input_dim: int
+    hidden: Tuple[int, ...] = (64, 32)   # paper Table III
+    num_classes: int = 5
+
+
+# ---------------------------------------------------------------------------
+# LSTM
+# ---------------------------------------------------------------------------
+
+
+def lstm_cell_ref(x, h, c, wx, wh, b):
+    """Reference LSTM cell. x:(B,F) h,c:(B,H) wx:(F,4H) wh:(H,4H) b:(4H,)."""
+    gates = x @ wx + h @ wh + b
+    i, f, g, o = jnp.split(gates, 4, axis=-1)
+    c_new = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h_new = jax.nn.sigmoid(o) * jnp.tanh(c_new)
+    return h_new, c_new
+
+
+def _get_cell(name: str):
+    if name == "ref":
+        return lstm_cell_ref
+    if name == "pallas":
+        from repro.kernels.lstm_cell.ops import lstm_cell as pallas_cell
+        return pallas_cell
+    raise ValueError(name)
+
+
+class LSTMClassifier:
+    def __init__(self, cfg: LSTMClassifierConfig):
+        self.cfg = cfg
+
+    def init(self, rng):
+        cfg = self.cfg
+        ks = jax.random.split(rng, 4)
+        H = cfg.hidden
+        return {
+            "wx": layers.dense_init(ks[0], cfg.input_dim, 4 * H, jnp.float32),
+            "wh": layers.dense_init(ks[1], H, 4 * H, jnp.float32),
+            "b": jnp.zeros((4 * H,), jnp.float32),
+            "w_out": layers.dense_init(ks[2], H, cfg.num_classes, jnp.float32),
+            "b_out": jnp.zeros((cfg.num_classes,), jnp.float32),
+        }
+
+    def forward(self, params, x):
+        """x: (B, T, F) -> logits (B, num_classes)."""
+        cfg = self.cfg
+        B = x.shape[0]
+        cell = _get_cell(cfg.cell)
+        h0 = jnp.zeros((B, cfg.hidden), jnp.float32)
+        c0 = jnp.zeros((B, cfg.hidden), jnp.float32)
+
+        def step(carry, x_t):
+            h, c = carry
+            h, c = cell(x_t, h, c, params["wx"], params["wh"], params["b"])
+            return (h, c), None
+
+        (h, _), _ = jax.lax.scan(step, (h0, c0), jnp.moveaxis(x, 1, 0))
+        return h @ params["w_out"] + params["b_out"]
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+class MLPClassifier:
+    def __init__(self, cfg: MLPClassifierConfig):
+        self.cfg = cfg
+
+    def init(self, rng):
+        cfg = self.cfg
+        dims = (cfg.input_dim,) + tuple(cfg.hidden) + (cfg.num_classes,)
+        ks = jax.random.split(rng, len(dims) - 1)
+        return {
+            f"layer{i}": {
+                "w": layers.dense_init(ks[i], dims[i], dims[i + 1], jnp.float32),
+                "b": jnp.zeros((dims[i + 1],), jnp.float32),
+            }
+            for i in range(len(dims) - 1)
+        }
+
+    def forward(self, params, x):
+        """x: (B, F) -> logits (B, num_classes)."""
+        n = len(params)
+        for i in range(n):
+            lp = params[f"layer{i}"]
+            x = x @ lp["w"] + lp["b"]
+            if i < n - 1:
+                x = jax.nn.relu(x)
+        return x
+
+
+# ---------------------------------------------------------------------------
+# shared loss / metrics
+# ---------------------------------------------------------------------------
+
+
+def cross_entropy_loss(logits, labels):
+    """Categorical cross-entropy (labels are int class ids)."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(nll)
+
+
+def accuracy(logits, labels):
+    return jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))

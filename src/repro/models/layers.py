@@ -1,0 +1,374 @@
+"""Transformer building blocks (pure JAX, functional params-as-pytrees).
+
+Every block exposes two entry points:
+
+* ``*_apply(params, x, ...)``  — full-sequence (training / prefill)
+* ``*_decode(params, x, cache, pos, ...)`` — one-token step against a cache
+
+KV caches for windowed attention ("swa" / "local") are ring buffers of the
+window size, so ``long_500k`` decode holds O(window) state, not O(seq).
+RoPE is applied at cache-write time with absolute positions, making ring
+order irrelevant to the (order-invariant) softmax.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.sharding.ctx import shard_activation
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(rng, fan_in, fan_out, dtype, scale=1.0):
+    std = scale / math.sqrt(fan_in)
+    return (jax.random.normal(rng, (fan_in, fan_out), jnp.float32) * std).astype(dtype)
+
+
+def embed_init(rng, vocab, dim, dtype):
+    return (jax.random.normal(rng, (vocab, dim), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(dim, dtype):
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm_apply(params, x, eps=1e-6):
+    orig = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * params["scale"].astype(jnp.float32)).astype(orig)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, dh); positions: broadcastable to (..., S)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # (dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, dh/2)
+    cos = jnp.cos(angles)[..., None, :]                 # (..., S, 1, dh/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention (full / sliding-window / local)
+# ---------------------------------------------------------------------------
+
+
+def attention_init(rng, cfg: ModelConfig):
+    dh = cfg.resolved_head_dim
+    ks = jax.random.split(rng, 4)
+    dt = cfg.jnp_dtype
+    p = {
+        "wq": dense_init(ks[0], cfg.d_model, cfg.num_heads * dh, dt),
+        "wk": dense_init(ks[1], cfg.d_model, cfg.num_kv_heads * dh, dt),
+        "wv": dense_init(ks[2], cfg.d_model, cfg.num_kv_heads * dh, dt),
+        "wo": dense_init(ks[3], cfg.num_heads * dh, cfg.d_model, dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.num_heads * dh,), dt)
+        p["bk"] = jnp.zeros((cfg.num_kv_heads * dh,), dt)
+        p["bv"] = jnp.zeros((cfg.num_kv_heads * dh,), dt)
+    return p
+
+
+def _qkv(params, x, cfg: ModelConfig):
+    B, S, _ = x.shape
+    dh = cfg.resolved_head_dim
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    q = q.reshape(B, S, cfg.num_heads, dh)
+    k = k.reshape(B, S, cfg.num_kv_heads, dh)
+    v = v.reshape(B, S, cfg.num_kv_heads, dh)
+    return q, k, v
+
+
+def _gqa_core(q, k, v, mask):
+    """q: (B,S,H,dh); k/v: (B,T,K,dh); mask: broadcastable (B,1,1,S,T)."""
+    B, S, H, dh = q.shape
+    K = k.shape[2]
+    G = H // K
+    qr = q.reshape(B, S, K, G, dh)
+    scale = 1.0 / math.sqrt(dh)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qr.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    scores = jnp.where(mask, scores, jnp.float32(-1e30))
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, S, H, dh).astype(q.dtype)
+
+
+def _window_for(block_type: str, cfg: ModelConfig) -> Optional[int]:
+    if block_type == "swa":
+        return cfg.sliding_window
+    if block_type == "local":
+        return cfg.local_window
+    return None
+
+
+def attention_apply(params, x, cfg: ModelConfig, block_type: str = "attn",
+                    positions=None):
+    """Full-sequence causal (optionally windowed) attention."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q, k, v = _qkv(params, x, cfg)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = shard_activation(q, ("batch", None, "model", None))
+    k = shard_activation(k, ("batch", None, None, None))
+    i = jnp.arange(S)[:, None]
+    j = jnp.arange(S)[None, :]
+    mask = j <= i
+    window = _window_for(block_type, cfg)
+    if window is not None:
+        mask = mask & (j > i - window)
+    out = _gqa_core(q, k, v, mask[None, None, None])
+    out = out.reshape(B, S, -1) @ params["wo"]
+    return shard_activation(out, ("batch", None, None))
+
+
+def attention_init_cache(cfg: ModelConfig, block_type: str, batch: int, max_len: int):
+    dh = cfg.resolved_head_dim
+    window = _window_for(block_type, cfg)
+    C = max_len if window is None else min(window, max_len)
+    dt = cfg.jnp_dtype
+    return {
+        "k": jnp.zeros((batch, C, cfg.num_kv_heads, dh), dt),
+        "v": jnp.zeros((batch, C, cfg.num_kv_heads, dh), dt),
+    }
+
+
+def attention_decode(params, x, cache, pos, cfg: ModelConfig, block_type: str = "attn"):
+    """One-token decode. ``pos`` is the scalar absolute position.
+
+    Full attention: cache slot = pos.  Windowed: ring buffer slot = pos % C.
+    """
+    B, S, _ = x.shape
+    assert S == 1
+    q, k, v = _qkv(params, x, cfg)
+    posb = jnp.full((B, 1), pos, dtype=jnp.int32)
+    q = apply_rope(q, posb, cfg.rope_theta)
+    k = apply_rope(k, posb, cfg.rope_theta)
+    C = cache["k"].shape[1]
+    window = _window_for(block_type, cfg)
+    slot = pos if window is None else pos % C
+    new_k = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+    new_v = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+    valid = jnp.arange(C) <= (pos if window is None else jnp.minimum(pos, C - 1))
+    out = _gqa_core(q, new_k, new_v, valid[None, None, None, None, :])
+    out = out.reshape(B, 1, -1) @ params["wo"]
+    return out, {"k": new_k, "v": new_v}
+
+
+# ---------------------------------------------------------------------------
+# Multi-head latent attention (DeepSeek-V3)
+# ---------------------------------------------------------------------------
+
+
+def mla_init(rng, cfg: ModelConfig):
+    m = cfg.mla
+    dt = cfg.jnp_dtype
+    ks = jax.random.split(rng, 8)
+    H = cfg.num_heads
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "wdq": dense_init(ks[0], cfg.d_model, m.q_lora_rank, dt),
+        "q_norm": rmsnorm_init(m.q_lora_rank, dt),
+        "wuq": dense_init(ks[1], m.q_lora_rank, H * qk_dim, dt),
+        "wdkv": dense_init(ks[2], cfg.d_model, m.kv_lora_rank, dt),
+        "kv_norm": rmsnorm_init(m.kv_lora_rank, dt),
+        "wuk": dense_init(ks[3], m.kv_lora_rank, H * m.qk_nope_head_dim, dt),
+        "wuv": dense_init(ks[4], m.kv_lora_rank, H * m.v_head_dim, dt),
+        "wkr": dense_init(ks[5], cfg.d_model, m.qk_rope_head_dim, dt),
+        "wo": dense_init(ks[6], H * m.v_head_dim, cfg.d_model, dt),
+    }
+
+
+def _mla_q(params, x, positions, cfg: ModelConfig):
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    cq = rmsnorm_apply(params["q_norm"], x @ params["wdq"], cfg.norm_eps)
+    q = (cq @ params["wuq"]).reshape(B, S, H, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_expand_kv(params, c_kv, cfg: ModelConfig):
+    """Expand cached latent to per-head k_nope / v."""
+    m = cfg.mla
+    B, T, _ = c_kv.shape
+    H = cfg.num_heads
+    k_nope = (c_kv @ params["wuk"]).reshape(B, T, H, m.qk_nope_head_dim)
+    v = (c_kv @ params["wuv"]).reshape(B, T, H, m.v_head_dim)
+    return k_nope, v
+
+
+def _mla_core(q_nope, q_rope, k_nope, k_rope, v, mask, cfg: ModelConfig):
+    m = cfg.mla
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    s_nope = jnp.einsum("bshd,bthd->bhst", q_nope.astype(jnp.float32), k_nope.astype(jnp.float32))
+    s_rope = jnp.einsum("bshd,btd->bhst", q_rope.astype(jnp.float32), k_rope.astype(jnp.float32))
+    scores = (s_nope + s_rope) * scale
+    scores = jnp.where(mask, scores, jnp.float32(-1e30))
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", probs, v.astype(jnp.float32))
+    return out.astype(q_nope.dtype)
+
+
+def mla_apply(params, x, cfg: ModelConfig, positions=None):
+    B, S, _ = x.shape
+    m = cfg.mla
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q_nope, q_rope = _mla_q(params, x, positions, cfg)
+    c_kv = rmsnorm_apply(params["kv_norm"], x @ params["wdkv"], cfg.norm_eps)
+    k_rope = apply_rope((x @ params["wkr"])[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
+    k_nope, v = _mla_expand_kv(params, c_kv, cfg)
+    i = jnp.arange(S)[:, None]
+    j = jnp.arange(S)[None, :]
+    mask = (j <= i)[None, None]
+    out = _mla_core(q_nope, q_rope, k_nope, k_rope, v, mask, cfg)
+    out = out.reshape(B, S, -1) @ params["wo"]
+    return shard_activation(out, ("batch", None, None))
+
+
+def mla_init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    m = cfg.mla
+    dt = cfg.jnp_dtype
+    return {
+        "c_kv": jnp.zeros((batch, max_len, m.kv_lora_rank), dt),
+        "k_rope": jnp.zeros((batch, max_len, m.qk_rope_head_dim), dt),
+    }
+
+
+def mla_decode(params, x, cache, pos, cfg: ModelConfig):
+    B, S, _ = x.shape
+    assert S == 1
+    posb = jnp.full((B, 1), pos, dtype=jnp.int32)
+    q_nope, q_rope = _mla_q(params, x, posb, cfg)
+    c_kv_t = rmsnorm_apply(params["kv_norm"], x @ params["wdkv"], cfg.norm_eps)
+    k_rope_t = apply_rope((x @ params["wkr"])[:, :, None, :], posb, cfg.rope_theta)[:, :, 0, :]
+    c_kv = jax.lax.dynamic_update_slice(cache["c_kv"], c_kv_t, (0, pos, 0))
+    k_rope = jax.lax.dynamic_update_slice(cache["k_rope"], k_rope_t, (0, pos, 0))
+    # Baseline: expand the whole latent cache to per-head K/V each step.
+    # (§Perf hillclimb replaces this with the absorbed-matmul form.)
+    k_nope, v = _mla_expand_kv(params, c_kv, cfg)
+    valid = (jnp.arange(c_kv.shape[1]) <= pos)[None, None, None, :]
+    out = _mla_core(q_nope, q_rope, k_nope, k_rope, v, valid, cfg)
+    out = out.reshape(B, 1, -1) @ params["wo"]
+    return out, {"c_kv": c_kv, "k_rope": k_rope}
+
+
+def mla_decode_absorbed(params, x, cache, pos, cfg: ModelConfig):
+    """Weight-absorbed MLA decode (DeepSeek-V3 §2.1.2 inference form).
+
+    Instead of expanding the latent cache to per-head K/V (which reads
+    ``T × H × (qk_nope + v)`` elements from HBM per step), fold ``wuk``
+    into the query and ``wuv`` into the output so attention runs directly
+    against the rank-``r`` latent: per-step reads drop to ``T × r``.
+    """
+    m = cfg.mla
+    B, S, _ = x.shape
+    assert S == 1
+    H = cfg.num_heads
+    posb = jnp.full((B, 1), pos, dtype=jnp.int32)
+    q_nope, q_rope = _mla_q(params, x, posb, cfg)
+    c_kv_t = rmsnorm_apply(params["kv_norm"], x @ params["wdkv"], cfg.norm_eps)
+    k_rope_t = apply_rope((x @ params["wkr"])[:, :, None, :], posb, cfg.rope_theta)[:, :, 0, :]
+    c_kv = jax.lax.dynamic_update_slice(cache["c_kv"], c_kv_t, (0, pos, 0))
+    k_rope = jax.lax.dynamic_update_slice(cache["k_rope"], k_rope_t, (0, pos, 0))
+    wuk = params["wuk"].reshape(m.kv_lora_rank, H, m.qk_nope_head_dim)
+    # q_lat[h] = wuk[:,h,:] @ q_nope[h]  -> query in latent space
+    q_lat = jnp.einsum("bshd,rhd->bshr", q_nope.astype(jnp.float32), wuk.astype(jnp.float32))
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    s_lat = jnp.einsum("bshr,btr->bhst", q_lat, c_kv.astype(jnp.float32))
+    s_rope = jnp.einsum("bshd,btd->bhst", q_rope.astype(jnp.float32), k_rope.astype(jnp.float32))
+    scores = (s_lat + s_rope) * scale
+    valid = (jnp.arange(c_kv.shape[1]) <= pos)[None, None, None, :]
+    scores = jnp.where(valid, scores, jnp.float32(-1e30))
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx_lat = jnp.einsum("bhst,btr->bshr", probs, c_kv.astype(jnp.float32))
+    wuv = params["wuv"].reshape(m.kv_lora_rank, H, m.v_head_dim)
+    out = jnp.einsum("bshr,rhd->bshd", ctx_lat, wuv.astype(jnp.float32))
+    out = out.astype(x.dtype).reshape(B, 1, -1) @ params["wo"]
+    return out, {"c_kv": c_kv, "k_rope": k_rope}
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (encoder-decoder)
+# ---------------------------------------------------------------------------
+
+
+def cross_attention_apply(params, x, memory, cfg: ModelConfig):
+    """Decoder query attends over encoder ``memory`` (B, T, D). No mask."""
+    B, S, _ = x.shape
+    dh = cfg.resolved_head_dim
+    q = (x @ params["wq"]).reshape(B, S, cfg.num_heads, dh)
+    k = (memory @ params["wk"]).reshape(B, memory.shape[1], cfg.num_kv_heads, dh)
+    v = (memory @ params["wv"]).reshape(B, memory.shape[1], cfg.num_kv_heads, dh)
+    out = _gqa_core(q, k, v, jnp.ones((1, 1, 1, 1, 1), bool))
+    return out.reshape(B, S, -1) @ params["wo"]
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(rng, cfg: ModelConfig, d_ff: Optional[int] = None):
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(rng, 3)
+    dt = cfg.jnp_dtype
+    return {
+        "wg": dense_init(ks[0], cfg.d_model, d_ff, dt),
+        "wu": dense_init(ks[1], cfg.d_model, d_ff, dt),
+        "wd": dense_init(ks[2], d_ff, cfg.d_model, dt),
+    }
+
+
+def mlp_apply(params, x):
+    h = jax.nn.silu(x @ params["wg"]) * (x @ params["wu"])
+    h = shard_activation(h, ("batch", None, "model"))
+    return h @ params["wd"]
+
+
+# ---------------------------------------------------------------------------
+# logits
+# ---------------------------------------------------------------------------
+
+
+def softcap(logits, cap: float):
+    if cap and cap > 0:
+        return jnp.tanh(logits / cap) * cap
+    return logits

@@ -1,0 +1,335 @@
+"""Mixture-of-experts layer.
+
+Two dispatch schedules, selected by ``MoEConfig.dispatch``:
+
+* ``"sort"`` (default, production path) — sort-based scatter dispatch:
+  top-k assignments are flattened, stably sorted by expert id, capacity
+  is enforced by position-within-expert, and tokens are scattered into a
+  per-expert buffer with one gather/scatter pair.  Memory is O(T*k*D),
+  *linear* in tokens (the one-hot form is O(T^2 * k / E * ...) once
+  capacity scales with T, which is infeasible at 32k tokens/device).
+  Routing runs token-local: when a mesh is active and the ``data`` axis
+  is not already manual (fsdp configs federate over ``pod`` only), the
+  dispatch is wrapped in a nested ``shard_map`` over ``data`` so sort /
+  cumsum / scatter never cross devices.  The expert dimension stays in
+  auto mode, sharded over ``model`` (expert parallel): XLA inserts the
+  buffer reshard (the all-to-all of a classic MoE) around the expert
+  matmuls.
+
+* ``"einsum"`` — the GShard one-hot dispatch (kept for small models and
+  as a cross-validation oracle for the sort path; both enforce identical
+  token-order-within-expert capacity-drop semantics).
+
+Compute is proportional to ``top_k x capacity_factor``, not to the
+number of experts, so dry-run FLOPs are faithful to a real MoE
+deployment (DeepSeek-V3: 256 routed, 8 active [arXiv:2412.19437]).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.models import layers
+from repro.sharding.ctx import current_mesh_context, shard_activation
+
+CAPACITY_FACTOR = 1.25
+
+# Differentiating a nested manual-'data' region with *bf16* values at
+# the shard_map boundary, composed with ZeRO-sharded params, CHECK-
+# crashes XLA-CPU's SPMD partitioner ("Invalid binary instruction opcode
+# copy"; bisection: bf16+fsdp+wrap+grad — any one removed compiles).
+# fsdp TRAIN steps therefore enter the token-local region through an
+# fp32 boundary cast (compute penalty recorded in §Perf); prefill/serve
+# keep the native-dtype boundary (no grad involved).
+_TL_STATE = threading.local()
+
+
+@contextlib.contextmanager
+def disable_token_local():
+    """Grad-safe mode: fp32-cast the token-local shard_map boundary."""
+    prev = getattr(_TL_STATE, "off", False)
+    _TL_STATE.off = True
+    try:
+        yield
+    finally:
+        _TL_STATE.off = prev
+
+
+def moe_init(rng, cfg: ModelConfig):
+    m = cfg.moe
+    d_ff = m.d_ff_expert or cfg.d_ff
+    ks = jax.random.split(rng, 5)
+    dt = cfg.jnp_dtype
+    E = m.num_experts
+    p = {
+        "router": layers.dense_init(ks[0], cfg.d_model, E, jnp.float32),
+        "wg": (jax.random.normal(ks[1], (E, cfg.d_model, d_ff), jnp.float32) / jnp.sqrt(cfg.d_model)).astype(dt),
+        "wu": (jax.random.normal(ks[2], (E, cfg.d_model, d_ff), jnp.float32) / jnp.sqrt(cfg.d_model)).astype(dt),
+        "wd": (jax.random.normal(ks[3], (E, d_ff, cfg.d_model), jnp.float32) / jnp.sqrt(d_ff)).astype(dt),
+    }
+    if m.num_shared_experts > 0:
+        p["shared"] = layers.mlp_init(ks[4], cfg, d_ff=d_ff * m.num_shared_experts)
+    return p
+
+
+def _expert_ffn(params, expert_in):
+    """expert_in: (E, C, D) -> (E, C, D) batched SwiGLU."""
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", expert_in, params["wg"]))
+    h = h * jnp.einsum("ecd,edf->ecf", expert_in, params["wu"])
+    return jnp.einsum("ecf,efd->ecd", h, params["wd"])
+
+
+def _topk(gates, k):
+    top_v, top_i = jax.lax.top_k(gates, k)
+    top_v = top_v / (jnp.sum(top_v, axis=-1, keepdims=True) + 1e-9)
+    return top_v, top_i
+
+
+# ---------------------------------------------------------------------------
+# sort-based scatter dispatch (token-local)
+# ---------------------------------------------------------------------------
+
+
+def _moe_local_sort(params, xt, cfg: ModelConfig):
+    """xt: (T, D) token-local block. Returns (y (T, D), aux scalar)."""
+    m = cfg.moe
+    T, D = xt.shape
+    E, k = m.num_experts, m.num_experts_per_tok
+    capacity = max(1, int(T * k * CAPACITY_FACTOR / E))
+
+    logits = xt.astype(jnp.float32) @ params["router"]
+    gates = jax.nn.softmax(logits, axis=-1)                       # (T, E)
+    top_v, top_i = _topk(gates, k)
+
+    e_flat = top_i.reshape(-1)                                     # (T*k,)
+    w_flat = top_v.reshape(-1)
+    tok_flat = jnp.arange(T * k, dtype=jnp.int32) // k
+
+    order = jnp.argsort(e_flat, stable=True)                       # token order within expert
+    e_sorted = e_flat[order]
+    # position of each routed token within its expert's queue
+    starts = jnp.searchsorted(e_sorted, jnp.arange(E), side="left")
+    pos = jnp.arange(T * k, dtype=jnp.int32) - starts[e_sorted].astype(jnp.int32)
+    keep = pos < capacity
+    slot = jnp.where(keep, e_sorted * capacity + pos, E * capacity)  # sentinel row
+
+    buf = jnp.zeros((E * capacity + 1, D), xt.dtype)
+    buf = buf.at[slot].set(xt[tok_flat[order]])
+    expert_in = buf[:-1].reshape(E, capacity, D)
+    expert_in = shard_activation(expert_in, ("expert", None, None))
+    expert_out = _expert_ffn(params, expert_in)
+    expert_out = shard_activation(expert_out, ("expert", None, None))
+    rows = jnp.concatenate([expert_out.reshape(E * capacity, D),
+                            jnp.zeros((1, D), xt.dtype)], axis=0)
+    routed = rows[slot] * w_flat[order, None].astype(xt.dtype)     # (T*k, D)
+    y = jnp.zeros((T, D), xt.dtype).at[tok_flat[order]].add(routed)
+
+    # Switch-style load-balance auxiliary loss (token-local estimate)
+    me = jnp.mean(gates, axis=0)
+    frac = jnp.mean(jax.nn.one_hot(top_i[:, 0], E, dtype=jnp.float32), axis=0)
+    aux = jnp.sum(me * frac) * E * m.router_aux_loss_coef
+    return y, aux
+
+
+# ---------------------------------------------------------------------------
+# expert-parallel replicated-dispatch schedule (§Perf hillclimb)
+# ---------------------------------------------------------------------------
+
+
+def _moe_expert_parallel(params, x, cfg: ModelConfig, mesh):
+    """Zero-communication dispatch: tokens are already replicated over the
+    'model' axis (tensor-parallel replicates activations), so each model
+    rank routes its local copy and keeps ONLY the tokens assigned to the
+    E/n_model experts it owns.  The only collective is the psum of the
+    (T, D) combined output — O(T*D) instead of the O(E*C*D) buffer
+    all-gather XLA inserts for the auto-sharded schedule (the dominant
+    collective term of the MoE train baselines, §Perf).
+
+    Binds 'data' (token-local routing) and 'model' (expert ownership) in
+    ONE shard_map — Shardy rejects nesting a Manual-marked mesh, so the
+    ep schedule replaces the generic token-local wrap instead of nesting
+    inside it.  Expert weights enter sharded over 'model' on the expert
+    axis.
+    """
+    from repro.sharding.ctx import current_mesh_context as _cmc
+    _ctx = _cmc()
+    m = cfg.moe
+    B, S, D = x.shape
+    E, k = m.num_experts, m.num_experts_per_tok
+    n_model = mesh.shape["model"]
+    n_data = mesh.shape["data"] if "data" in mesh.axis_names else 1
+    # if 'data' is already manual (client shard_map), x is already local
+    _bind = n_data > 1 and (_ctx is None or "data" not in _ctx.manual)
+    e_local = E // n_model
+    T = (B * S) // (n_data if _bind else 1)   # tokens per data shard
+    capacity = max(1, int(T * k * CAPACITY_FACTOR / E))
+
+    def body(xb_l, router, wg, wu, wd):
+        xt_l = xb_l.reshape(-1, D)
+        rank = jax.lax.axis_index("model")
+        logits = xt_l.astype(jnp.float32) @ router
+        gates = jax.nn.softmax(logits, axis=-1)
+        top_v, top_i = _topk(gates, k)
+        e_flat = top_i.reshape(-1)
+        w_flat = top_v.reshape(-1)
+        tok_flat = jnp.arange(T * k, dtype=jnp.int32) // k
+
+        order = jnp.argsort(e_flat, stable=True)
+        e_sorted = e_flat[order]
+        starts = jnp.searchsorted(e_sorted, jnp.arange(E), side="left")
+        pos = jnp.arange(T * k, dtype=jnp.int32) - starts[e_sorted].astype(jnp.int32)
+        lo = rank * e_local
+        mine = (e_sorted >= lo) & (e_sorted < lo + e_local) & (pos < capacity)
+        slot = jnp.where(mine, (e_sorted - lo) * capacity + pos, e_local * capacity)
+
+        buf = jnp.zeros((e_local * capacity + 1, D), xt_l.dtype)
+        buf = buf.at[slot].set(xt_l[tok_flat[order]])
+        expert_in = buf[:-1].reshape(e_local, capacity, D)
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", expert_in, wg))
+        h = h * jnp.einsum("ecd,edf->ecf", expert_in, wu)
+        expert_out = jnp.einsum("ecf,efd->ecd", h, wd)
+        rows = jnp.concatenate([expert_out.reshape(e_local * capacity, D),
+                                jnp.zeros((1, D), xt_l.dtype)], axis=0)
+        routed = rows[slot] * w_flat[order, None].astype(xt_l.dtype)
+        y_part = jnp.zeros((T, D), xt_l.dtype).at[tok_flat[order]].add(routed)
+        y = jax.lax.psum(y_part, "model")          # the ONLY collective
+
+        me = jnp.mean(gates, axis=0)
+        frac = jnp.mean(jax.nn.one_hot(top_i[:, 0], E, dtype=jnp.float32), axis=0)
+        aux = jnp.sum(me * frac) * E * m.router_aux_loss_coef
+        if bind_data:
+            aux = jax.lax.pmean(aux, "data")
+        return y.reshape(xb_l.shape), aux
+
+    from repro.sharding.ctx import current_mesh_context, manual_axes as _man
+    ctx = current_mesh_context()
+    bind_data = ("data" in mesh.axis_names and n_data > 1
+                 and (ctx is None or "data" not in ctx.manual))
+    axes = {"model"} | ({"data"} if bind_data else set())
+    smesh = mesh
+    if ctx is not None and ctx.manual:
+        from jax.sharding import AxisType
+        smesh = mesh.abstract_mesh.update_axis_types(
+            {a: AxisType.Manual for a in ctx.manual})
+
+    def wrapped(xb_l, router, wg, wu, wd):
+        with _man((set(ctx.manual) if ctx else set()) | axes):
+            return body(xb_l, router, wg, wu, wd)
+
+    x_spec = P("data") if bind_data else P()
+    return jax.shard_map(
+        wrapped, mesh=smesh, axis_names=axes,
+        in_specs=(x_spec, P(), P("model"), P("model"), P("model")),
+        out_specs=(x_spec, P()),
+    )(x, params["router"], params["wg"], params["wu"], params["wd"])
+
+
+# ---------------------------------------------------------------------------
+# GShard one-hot dispatch (oracle / small models)
+# ---------------------------------------------------------------------------
+
+
+def _moe_local_einsum(params, xt, cfg: ModelConfig):
+    m = cfg.moe
+    T, D = xt.shape
+    E, k = m.num_experts, m.num_experts_per_tok
+    capacity = max(1, int(T * k * CAPACITY_FACTOR / E))
+
+    logits = xt.astype(jnp.float32) @ params["router"]
+    gates = jax.nn.softmax(logits, axis=-1)
+    top_v, top_i = _topk(gates, k)
+
+    dispatch = jnp.zeros((T, E, capacity), gates.dtype)
+    combine = jnp.zeros((T, E, capacity), gates.dtype)
+    counts = jnp.zeros((E,), jnp.int32)
+    for j in range(k):  # unrolled: k is a small static int
+        oh = jax.nn.one_hot(top_i[:, j], E, dtype=jnp.int32)
+        pos = jnp.cumsum(oh, axis=0) - 1 + counts[None, :]
+        within = (pos < capacity) & (oh > 0)
+        pos_oh = jax.nn.one_hot(jnp.clip(pos, 0, capacity - 1), capacity, dtype=gates.dtype)
+        slot = pos_oh * within[..., None].astype(gates.dtype)
+        dispatch = dispatch + slot
+        combine = combine + slot * top_v[:, j, None, None]
+        counts = counts + jnp.sum(oh * within.astype(jnp.int32), axis=0)
+
+    expert_in = jnp.einsum("tec,td->ecd", dispatch.astype(xt.dtype), xt)
+    expert_out = _expert_ffn(params, expert_in)
+    y = jnp.einsum("tec,ecd->td", combine.astype(xt.dtype), expert_out)
+
+    me = jnp.mean(gates, axis=0)
+    frac = jnp.mean(jax.nn.one_hot(top_i[:, 0], E, dtype=jnp.float32), axis=0)
+    aux = jnp.sum(me * frac) * E * m.router_aux_loss_coef
+    return y, aux
+
+
+# ---------------------------------------------------------------------------
+# public entry
+# ---------------------------------------------------------------------------
+
+
+def moe_apply(params, x, cfg: ModelConfig):
+    """Returns (y, aux_loss).  x: (B, S, D)."""
+    m = cfg.moe
+    B, S, D = x.shape
+    ctx = current_mesh_context()
+    dispatch = m.dispatch
+    if dispatch == "ep":
+        ok = (ctx is not None and "model" in ctx.mesh.axis_names
+              and ctx.mesh.shape["model"] > 1
+              and m.num_experts % ctx.mesh.shape["model"] == 0
+              and "model" not in ctx.manual)
+        if not ok:
+            dispatch = "sort"  # no mesh / no model axis: fall back
+    if dispatch == "ep":
+        y, aux = _moe_expert_parallel(params, x, cfg, ctx.mesh)
+        if m.num_shared_experts > 0:
+            y = y + layers.mlp_apply(params["shared"], x)
+        return y, aux
+    local = _moe_local_sort if dispatch == "sort" else _moe_local_einsum
+    wrap_data = (ctx is not None and "data" in ctx.mesh.axis_names
+                 and ctx.mesh.shape["data"] > 1 and "data" not in ctx.manual
+                 and B % ctx.mesh.shape["data"] == 0)
+    f32_boundary = getattr(_TL_STATE, "off", False)
+
+    if wrap_data:
+        # run routing token-local: manual over 'data', experts stay auto.
+        # Only the routed-path params enter the manual region (they are
+        # data-replicated by the sharding rules); the shared expert stays
+        # outside so it can be FSDP-sharded.
+        mesh = ctx.mesh
+        if ctx.manual:
+            # nested inside the client shard_map: the inner shard_map must
+            # see the already-manual axes marked Manual on its mesh
+            from jax.sharding import AxisType
+            mesh = ctx.mesh.abstract_mesh.update_axis_types(
+                {a: AxisType.Manual for a in ctx.manual})
+        from repro.sharding.ctx import manual_axes as _man
+        bdt = jnp.float32 if f32_boundary else x.dtype
+        routed_params = {k: params[k].astype(bdt) if f32_boundary else params[k]
+                         for k in ("router", "wg", "wu", "wd")}
+
+        def body(xb, p):
+            xt = xb.reshape(-1, D)
+            with _man(set(ctx.manual) | {"data"}):
+                y, aux = local(p, xt, cfg)
+            aux = jax.lax.pmean(aux, "data")
+            return y.reshape(xb.shape), aux
+
+        y, aux = jax.shard_map(
+            body, mesh=mesh, axis_names={"data"},
+            in_specs=(P("data"), P()), out_specs=(P("data"), P()),
+        )(x.astype(bdt), routed_params)
+        y = y.astype(x.dtype)
+    else:
+        y, aux = local(params, x.reshape(-1, D), cfg)
+        y = y.reshape(B, S, D)
+
+    if m.num_shared_experts > 0:
+        y = y + layers.mlp_apply(params["shared"], x)
+    return y, aux

@@ -1,0 +1,307 @@
+"""Recurrent blocks: RG-LRU (Griffin / RecurrentGemma) and xLSTM.
+
+RG-LRU [arXiv:2402.19427]:
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+    a_t = exp(-c * softplus(lam) * sigmoid(r_t)),  c = 8
+Full-sequence mode uses ``jax.lax.associative_scan`` (the recurrence is a
+linear first-order scan, which maps to a log-depth parallel scan on TPU);
+decode mode is a single fused step carrying ``h``.
+
+xLSTM [arXiv:2405.04517]:
+  * mLSTM: matrix memory C (dh x dh per head), exponential input gate,
+    stabilized with a running max state m.
+  * sLSTM: scalar memory with exponential gating and a recurrent kernel.
+Both iterate with ``lax.scan`` over time for training (hillclimb target:
+chunkwise-parallel form) and carry O(1)-in-seq state for decode, which is
+what makes ``long_500k`` decode feasible for the ssm/hybrid families.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models import layers
+from repro.sharding.ctx import pvary_manual
+
+_RG_LRU_C = 8.0
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU / Griffin recurrent block
+# ---------------------------------------------------------------------------
+
+
+def rglru_init(rng, cfg: ModelConfig):
+    W = cfg.rnn_width or cfg.d_model
+    dt = cfg.jnp_dtype
+    ks = jax.random.split(rng, 7)
+    # lambda init so that a ~ U[0.9, 0.999]^c-root (Griffin appendix)
+    u = jax.random.uniform(ks[0], (W,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _RG_LRU_C))
+    return {
+        "wx": layers.dense_init(ks[1], cfg.d_model, W, dt),       # recurrent branch
+        "wy": layers.dense_init(ks[2], cfg.d_model, W, dt),       # gate branch
+        "conv_w": (jax.random.normal(ks[3], (cfg.conv_width, W), jnp.float32) * 0.02).astype(dt),
+        "conv_b": jnp.zeros((W,), dt),
+        "w_input_gate": layers.dense_init(ks[4], W, W, dt, scale=0.5),
+        "w_rec_gate": layers.dense_init(ks[5], W, W, dt, scale=0.5),
+        "lam": lam,
+        "wo": layers.dense_init(ks[6], W, cfg.d_model, dt),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x: (B,S,W); w: (K,W)."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for k in range(K):  # K is 4: unrolled taps
+        out = out + pad[:, k : k + x.shape[1], :] * w[k]
+    return out + b
+
+
+def _rglru_coeffs(params, x):
+    """Gated decay a_t and normalized input b_t for the linear scan."""
+    r = jax.nn.sigmoid(x @ params["w_rec_gate"])
+    i = jax.nn.sigmoid(x @ params["w_input_gate"])
+    log_a = -_RG_LRU_C * jax.nn.softplus(params["lam"]) * r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) multiplier keeps the state norm bounded
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = mult * (i * x).astype(jnp.float32)
+    return a, b
+
+
+def rglru_apply(params, x, cfg: ModelConfig):
+    """Full-sequence Griffin block. x: (B,S,D) -> (B,S,D)."""
+    gate = jax.nn.gelu(x @ params["wy"])
+    u = x @ params["wx"]
+    u = _causal_conv(u, params["conv_w"], params["conv_b"])
+    a, b = _rglru_coeffs(params, u)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    a_s, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h = h.astype(x.dtype) * gate
+    return h @ params["wo"]
+
+
+def rglru_init_state(cfg: ModelConfig, batch: int):
+    W = cfg.rnn_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, W), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, W), cfg.jnp_dtype),
+    }
+
+
+def rglru_decode(params, x, state, cfg: ModelConfig):
+    """One-token Griffin step. x: (B,1,D)."""
+    B = x.shape[0]
+    gate = jax.nn.gelu(x @ params["wy"])                           # (B,1,W)
+    u = (x @ params["wx"])[:, 0, :]                                # (B,W)
+    hist = jnp.concatenate([state["conv"], u[:, None, :]], axis=1)  # (B,K,W)
+    u_conv = jnp.einsum("bkw,kw->bw", hist, params["conv_w"]) + params["conv_b"]
+    a, b = _rglru_coeffs(params, u_conv[:, None, :])
+    h = a[:, 0] * state["h"] + b[:, 0]
+    out = (h[:, None, :].astype(x.dtype) * gate) @ params["wo"]
+    return out, {"h": h, "conv": hist[:, 1:, :]}
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: mLSTM
+# ---------------------------------------------------------------------------
+
+
+def _xlstm_dims(cfg: ModelConfig):
+    d_inner = int(cfg.d_model * cfg.mlstm_proj_factor)
+    H = cfg.num_heads
+    dh = d_inner // H
+    return d_inner, H, dh
+
+
+def mlstm_init(rng, cfg: ModelConfig):
+    d_inner, H, dh = _xlstm_dims(cfg)
+    dt = cfg.jnp_dtype
+    ks = jax.random.split(rng, 8)
+    return {
+        "w_up": layers.dense_init(ks[0], cfg.d_model, 2 * d_inner, dt),
+        "wq": layers.dense_init(ks[1], d_inner, d_inner, dt),
+        "wk": layers.dense_init(ks[2], d_inner, d_inner, dt),
+        "wv": layers.dense_init(ks[3], d_inner, d_inner, dt),
+        "w_if": layers.dense_init(ks[4], d_inner, 2 * H, dt),
+        "b_if": jnp.concatenate([jnp.zeros((H,)), jnp.ones((H,)) * 3.0]).astype(dt),
+        "norm": layers.rmsnorm_init(d_inner, dt),
+        "w_down": layers.dense_init(ks[5], d_inner, cfg.d_model, dt),
+    }
+
+
+def _mlstm_step(carry, inp, dh):
+    """Stabilized mLSTM recurrence, one timestep.
+
+    carry: C (B,H,dh,dh), n (B,H,dh), m (B,H)
+    inp: q,k,v (B,H,dh), i_t, f_t (B,H) pre-activations
+    """
+    C, n, m = carry
+    q, k, v, it, ft = inp
+    log_f = -jax.nn.softplus(-ft)                                  # log sigmoid(f)
+    m_new = jnp.maximum(log_f + m, it)
+    i_p = jnp.exp(it - m_new)
+    f_p = jnp.exp(log_f + m - m_new)
+    C = f_p[..., None, None] * C + i_p[..., None, None] * (v[..., :, None] * k[..., None, :])
+    n = f_p[..., None] * n + i_p[..., None] * k
+    num = jnp.einsum("bhvk,bhk->bhv", C, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q)), jnp.exp(-m_new))
+    h = num / den[..., None]
+    return (C, n, m_new), h
+
+
+def mlstm_apply(params, x, cfg: ModelConfig):
+    """x: (B,S,D) -> (B,S,D). Sequential scan over time (train/prefill)."""
+    B, S, D = x.shape
+    d_inner, H, dh = _xlstm_dims(cfg)
+    up = x @ params["w_up"]
+    u, z = jnp.split(up, 2, axis=-1)                               # (B,S,d_inner)
+    q = (u @ params["wq"]).reshape(B, S, H, dh).astype(jnp.float32) / math.sqrt(dh)
+    k = (u @ params["wk"]).reshape(B, S, H, dh).astype(jnp.float32)
+    v = (u @ params["wv"]).reshape(B, S, H, dh).astype(jnp.float32)
+    gif = (u @ params["w_if"] + params["b_if"]).astype(jnp.float32)
+    it, ft = jnp.split(gif.reshape(B, S, 2 * H), 2, axis=-1)       # (B,S,H)
+
+    init = pvary_manual((
+        jnp.zeros((B, H, dh, dh), jnp.float32),
+        jnp.zeros((B, H, dh), jnp.float32),
+        jnp.full((B, H), -1e30, jnp.float32),
+    ))
+    xs = (
+        jnp.moveaxis(q, 1, 0), jnp.moveaxis(k, 1, 0), jnp.moveaxis(v, 1, 0),
+        jnp.moveaxis(it, 1, 0), jnp.moveaxis(ft, 1, 0),
+    )
+    chunk = cfg.mlstm_chunk
+    if chunk and S % chunk == 0 and S > chunk:
+        # chunked remat: store the (B,H,dh,dh) matrix-memory carry only at
+        # chunk boundaries; backward recomputes within each chunk.
+        n_chunks = S // chunk
+        xs_c = jax.tree_util.tree_map(
+            lambda a: a.reshape((n_chunks, chunk) + a.shape[1:]), xs)
+
+        @jax.checkpoint
+        def chunk_body(carry, chunk_xs):
+            return jax.lax.scan(lambda c, i: _mlstm_step(c, i, dh), carry, chunk_xs)
+
+        _, hs_c = jax.lax.scan(chunk_body, init, xs_c)
+        hs = hs_c.reshape((S,) + hs_c.shape[2:])
+    else:
+        _, hs = jax.lax.scan(lambda c, i: _mlstm_step(c, i, dh), init, xs)
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, d_inner).astype(x.dtype)
+    h = layers.rmsnorm_apply(params["norm"], h, cfg.norm_eps)
+    h = h * jax.nn.silu(z)
+    return h @ params["w_down"]
+
+
+def mlstm_init_state(cfg: ModelConfig, batch: int):
+    _, H, dh = _xlstm_dims(cfg)
+    return {
+        "C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, H, dh), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+    }
+
+
+def mlstm_decode(params, x, state, cfg: ModelConfig):
+    B = x.shape[0]
+    d_inner, H, dh = _xlstm_dims(cfg)
+    up = x[:, 0, :] @ params["w_up"]
+    u, z = jnp.split(up, 2, axis=-1)
+    q = (u @ params["wq"]).reshape(B, H, dh).astype(jnp.float32) / math.sqrt(dh)
+    k = (u @ params["wk"]).reshape(B, H, dh).astype(jnp.float32)
+    v = (u @ params["wv"]).reshape(B, H, dh).astype(jnp.float32)
+    gif = (u @ params["w_if"] + params["b_if"]).astype(jnp.float32)
+    it, ft = jnp.split(gif, 2, axis=-1)
+    (C, n, m), h = _mlstm_step((state["C"], state["n"], state["m"]), (q, k, v, it, ft), dh)
+    h = h.reshape(B, d_inner).astype(x.dtype)
+    h = layers.rmsnorm_apply(params["norm"], h, cfg.norm_eps)
+    h = h * jax.nn.silu(z)
+    return (h @ params["w_down"])[:, None, :], {"C": C, "n": n, "m": m}
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_init(rng, cfg: ModelConfig):
+    d_inner, H, dh = _xlstm_dims(cfg)
+    dt = cfg.jnp_dtype
+    ks = jax.random.split(rng, 4)
+    return {
+        "w_up": layers.dense_init(ks[0], cfg.d_model, d_inner, dt),
+        # input projections for z, i, f, o gates
+        "w_gates": layers.dense_init(ks[1], d_inner, 4 * d_inner, dt),
+        # block-diagonal recurrent kernel: per head (dh x 4*dh)
+        "r_gates": (jax.random.normal(ks[2], (H, dh, 4 * dh), jnp.float32) / math.sqrt(dh)).astype(dt),
+        "b_gates": jnp.zeros((4 * d_inner,), dt),
+        "norm": layers.rmsnorm_init(d_inner, dt),
+        "w_down": layers.dense_init(ks[3], d_inner, cfg.d_model, dt),
+    }
+
+
+def _slstm_step(params, carry, u_t, cfg: ModelConfig):
+    """carry: c, n, m, h (B, d_inner) fp32; u_t: (B, d_inner)."""
+    d_inner, H, dh = _xlstm_dims(cfg)
+    c, n, m, h = carry
+    B = u_t.shape[0]
+    rec = jnp.einsum("bhd,hde->bhe", h.reshape(B, H, dh), params["r_gates"].astype(jnp.float32))
+    gates = (u_t @ params["w_gates"] + params["b_gates"]).astype(jnp.float32)
+    gates = gates.reshape(B, H, 4 * dh) + rec
+    z, i, f, o = jnp.split(gates.reshape(B, 4 * d_inner), 4, axis=-1)
+    z = jnp.tanh(z)
+    o = jax.nn.sigmoid(o)
+    log_f = -jax.nn.softplus(-f)
+    m_new = jnp.maximum(log_f + m, i)
+    i_p = jnp.exp(i - m_new)
+    f_p = jnp.exp(log_f + m - m_new)
+    c = f_p * c + i_p * z
+    n = f_p * n + i_p
+    h_new = o * c / jnp.maximum(n, 1.0)
+    return (c, n, m_new, h_new), h_new
+
+
+def slstm_apply(params, x, cfg: ModelConfig):
+    B, S, D = x.shape
+    d_inner, H, dh = _xlstm_dims(cfg)
+    u = (x @ params["w_up"]).astype(jnp.float32)
+    init = pvary_manual((
+        jnp.zeros((B, d_inner), jnp.float32),   # c
+        jnp.zeros((B, d_inner), jnp.float32),   # n
+        jnp.full((B, d_inner), -1e30, jnp.float32),  # m
+        jnp.zeros((B, d_inner), jnp.float32),   # h
+    ))
+    _, hs = jax.lax.scan(lambda c, ut: _slstm_step(params, c, ut, cfg), init, jnp.moveaxis(u, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).astype(x.dtype)
+    h = layers.rmsnorm_apply(params["norm"], h, cfg.norm_eps)
+    return h @ params["w_down"]
+
+
+def slstm_init_state(cfg: ModelConfig, batch: int):
+    d_inner, _, _ = _xlstm_dims(cfg)
+    return {
+        "c": jnp.zeros((batch, d_inner), jnp.float32),
+        "n": jnp.zeros((batch, d_inner), jnp.float32),
+        "m": jnp.full((batch, d_inner), -1e30, jnp.float32),
+        "h": jnp.zeros((batch, d_inner), jnp.float32),
+    }
+
+
+def slstm_decode(params, x, state, cfg: ModelConfig):
+    u = (x[:, 0, :] @ params["w_up"]).astype(jnp.float32)
+    carry = (state["c"], state["n"], state["m"], state["h"])
+    (c, n, m, h), h_out = _slstm_step(params, carry, u, cfg)
+    y = layers.rmsnorm_apply(params["norm"], h_out.astype(x.dtype), cfg.norm_eps)
+    return (y @ params["w_down"])[:, None, :], {"c": c, "n": n, "m": m, "h": h}

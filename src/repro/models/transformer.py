@@ -1,0 +1,328 @@
+"""Composable decoder / encoder-decoder transformer.
+
+Layers are grouped by the config's cyclic ``block_pattern``: the stack is
+``repeats`` copies of the pattern (parameters stacked on a leading axis
+and iterated with ``lax.scan`` to bound HLO size for 48/61-layer configs)
+plus an unscanned tail for ``num_layers % len(pattern)`` remainder layers
+(e.g. RecurrentGemma's 26 = 8x(rec,rec,local) + (rec,rec)).
+
+Entry points:
+  * ``init(rng)``                          -> params
+  * ``forward(params, batch)``             -> (logits, aux_loss)  (train/prefill)
+  * ``init_cache(batch, max_len)``         -> decode cache
+  * ``decode_step(params, tok, cache, pos[, memory])`` -> (logits, cache)
+
+Batch dict keys: ``tokens`` (B,S) int32; optional ``prefix_embeds``
+(B,P,D) for VLM; ``frames`` (B,T,D) for audio encoder input.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models import layers, moe, recurrent
+from repro.sharding.ctx import shard_activation, pvary_manual
+
+ATTN_TYPES = ("attn", "swa", "local")
+RECURRENT_TYPES = ("rglru", "mlstm", "slstm")
+
+
+def _has_ffn(cfg: ModelConfig) -> bool:
+    return cfg.d_ff > 0 or cfg.moe is not None
+
+
+# ---------------------------------------------------------------------------
+# single block
+# ---------------------------------------------------------------------------
+
+
+def block_init(rng, cfg: ModelConfig, block_type: str, cross: bool = False):
+    ks = jax.random.split(rng, 4)
+    dt = cfg.jnp_dtype
+    p = {"norm1": layers.rmsnorm_init(cfg.d_model, dt)}
+    if block_type in ATTN_TYPES:
+        p["mixer"] = layers.attention_init(ks[0], cfg)
+    elif block_type == "mla":
+        p["mixer"] = layers.mla_init(ks[0], cfg)
+    elif block_type == "rglru":
+        p["mixer"] = recurrent.rglru_init(ks[0], cfg)
+    elif block_type == "mlstm":
+        p["mixer"] = recurrent.mlstm_init(ks[0], cfg)
+    elif block_type == "slstm":
+        p["mixer"] = recurrent.slstm_init(ks[0], cfg)
+    else:
+        raise ValueError(f"unknown block type {block_type}")
+    if cross:
+        p["norm_x"] = layers.rmsnorm_init(cfg.d_model, dt)
+        p["cross"] = layers.attention_init(ks[2], cfg)
+    if _has_ffn(cfg):
+        p["norm2"] = layers.rmsnorm_init(cfg.d_model, dt)
+        p["ffn"] = moe.moe_init(ks[1], cfg) if cfg.moe is not None else layers.mlp_init(ks[1], cfg)
+    return p
+
+
+def block_apply(params, x, cfg: ModelConfig, block_type: str,
+                memory=None, positions=None, causal: bool = True):
+    """Full-sequence block. Returns (x, aux_loss)."""
+    h = layers.rmsnorm_apply(params["norm1"], x, cfg.norm_eps)
+    if block_type in ATTN_TYPES:
+        if causal:
+            h = layers.attention_apply(params["mixer"], h, cfg, block_type, positions)
+        else:
+            h = _bidir_attention(params["mixer"], h, cfg, positions)
+    elif block_type == "mla":
+        h = layers.mla_apply(params["mixer"], h, cfg, positions)
+    elif block_type == "rglru":
+        h = recurrent.rglru_apply(params["mixer"], h, cfg)
+    elif block_type == "mlstm":
+        h = recurrent.mlstm_apply(params["mixer"], h, cfg)
+    elif block_type == "slstm":
+        h = recurrent.slstm_apply(params["mixer"], h, cfg)
+    x = x + h
+    if "cross" in params and memory is not None:
+        h = layers.rmsnorm_apply(params["norm_x"], x, cfg.norm_eps)
+        x = x + layers.cross_attention_apply(params["cross"], h, memory, cfg)
+    aux = jnp.float32(0.0)
+    if "ffn" in params:
+        h = layers.rmsnorm_apply(params["norm2"], x, cfg.norm_eps)
+        if cfg.moe is not None:
+            h, aux = moe.moe_apply(params["ffn"], h, cfg)
+        else:
+            h = layers.mlp_apply(params["ffn"], h)
+        x = x + h
+    return x, aux
+
+
+def _bidir_attention(params, x, cfg: ModelConfig, positions=None):
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q, k, v = layers._qkv(params, x, cfg)
+    q = layers.apply_rope(q, positions, cfg.rope_theta)
+    k = layers.apply_rope(k, positions, cfg.rope_theta)
+    out = layers._gqa_core(q, k, v, jnp.ones((1, 1, 1, 1, 1), bool))
+    return out.reshape(B, S, -1) @ params["wo"]
+
+
+def block_init_cache(cfg: ModelConfig, block_type: str, batch: int, max_len: int):
+    if block_type in ATTN_TYPES:
+        return layers.attention_init_cache(cfg, block_type, batch, max_len)
+    if block_type == "mla":
+        return layers.mla_init_cache(cfg, batch, max_len)
+    if block_type == "rglru":
+        return recurrent.rglru_init_state(cfg, batch)
+    if block_type == "mlstm":
+        return recurrent.mlstm_init_state(cfg, batch)
+    if block_type == "slstm":
+        return recurrent.slstm_init_state(cfg, batch)
+    raise ValueError(block_type)
+
+
+def block_decode(params, x, cache, pos, cfg: ModelConfig, block_type: str,
+                 memory=None, mla_absorbed: bool = False):
+    h = layers.rmsnorm_apply(params["norm1"], x, cfg.norm_eps)
+    if block_type in ATTN_TYPES:
+        h, cache = layers.attention_decode(params["mixer"], h, cache, pos, cfg, block_type)
+    elif block_type == "mla":
+        fn = layers.mla_decode_absorbed if mla_absorbed else layers.mla_decode
+        h, cache = fn(params["mixer"], h, cache, pos, cfg)
+    elif block_type == "rglru":
+        h, cache = recurrent.rglru_decode(params["mixer"], h, cache, cfg)
+    elif block_type == "mlstm":
+        h, cache = recurrent.mlstm_decode(params["mixer"], h, cache, cfg)
+    elif block_type == "slstm":
+        h, cache = recurrent.slstm_decode(params["mixer"], h, cache, cfg)
+    x = x + h
+    if "cross" in params and memory is not None:
+        h = layers.rmsnorm_apply(params["norm_x"], x, cfg.norm_eps)
+        x = x + layers.cross_attention_apply(params["cross"], h, memory, cfg)
+    if "ffn" in params:
+        h = layers.rmsnorm_apply(params["norm2"], x, cfg.norm_eps)
+        if cfg.moe is not None:
+            h, _ = moe.moe_apply(params["ffn"], h, cfg)
+        else:
+            h = layers.mlp_apply(params["ffn"], h)
+        x = x + h
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# the model
+# ---------------------------------------------------------------------------
+
+
+class Transformer:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        P = len(cfg.block_pattern)
+        self.repeats = cfg.num_layers // P
+        self.tail_types = cfg.block_pattern[: cfg.num_layers % P]
+
+    # -- init ---------------------------------------------------------------
+    def init(self, rng):
+        cfg = self.cfg
+        n_keys = 6 + len(self.tail_types)
+        ks = list(jax.random.split(rng, n_keys))
+        cross = cfg.is_encoder_decoder
+        params = {"embed": layers.embed_init(ks[0], cfg.vocab_size, cfg.d_model, cfg.jnp_dtype)}
+
+        def stack_init(rng_, block_type):
+            subs = jax.random.split(rng_, self.repeats)
+            ps = [block_init(k, cfg, block_type, cross=cross) for k in subs]
+            return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *ps)
+
+        if self.repeats > 0:
+            params["scan"] = {
+                f"p{i}_{bt}": stack_init(jax.random.fold_in(ks[1], i), bt)
+                for i, bt in enumerate(cfg.block_pattern)
+            }
+        for t, bt in enumerate(self.tail_types):
+            params[f"tail{t}_{bt}"] = block_init(ks[2 + t], cfg, bt, cross=cross)
+        params["final_norm"] = layers.rmsnorm_init(cfg.d_model, cfg.jnp_dtype)
+        if not cfg.tie_embeddings:
+            params["unembed"] = layers.dense_init(ks[3], cfg.d_model, cfg.vocab_size, cfg.jnp_dtype)
+        if cfg.is_encoder_decoder:
+            params["encoder"] = self._encoder_init(ks[4])
+        if cfg.mtp_depth > 0:
+            params["mtp"] = {
+                "proj": layers.dense_init(ks[5], 2 * cfg.d_model, cfg.d_model, cfg.jnp_dtype),
+                "block": block_init(jax.random.fold_in(ks[5], 1), cfg, cfg.block_pattern[-1]),
+                "norm": layers.rmsnorm_init(cfg.d_model, cfg.jnp_dtype),
+            }
+        return params
+
+    def _encoder_init(self, rng):
+        cfg = self.cfg
+        ks = jax.random.split(rng, cfg.encoder_layers + 1)
+        ps = [block_init(k, cfg, "attn") for k in ks[:-1]]
+        stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *ps)
+        return {"blocks": stacked, "norm": layers.rmsnorm_init(cfg.d_model, cfg.jnp_dtype)}
+
+    # -- encoder ------------------------------------------------------------
+    def encode(self, params, frames):
+        """frames: (B,T,D) precomputed frontend embeddings (stub carve-out)."""
+        cfg = self.cfg
+        x = frames.astype(cfg.jnp_dtype)
+
+        def body(x, blk):
+            x, _ = block_apply(blk, x, cfg, "attn", causal=False)
+            return x, None
+
+        x, _ = jax.lax.scan(body, x, params["encoder"]["blocks"])
+        return layers.rmsnorm_apply(params["encoder"]["norm"], x, cfg.norm_eps)
+
+    # -- embedding ----------------------------------------------------------
+    def _embed(self, params, batch):
+        cfg = self.cfg
+        x = params["embed"][batch["tokens"]]
+        if cfg.num_prefix_tokens > 0 and "prefix_embeds" in batch:
+            x = jnp.concatenate([batch["prefix_embeds"].astype(x.dtype), x], axis=1)
+        return shard_activation(x, ("batch", None, None))
+
+    def _unembed(self, params, x):
+        cfg = self.cfg
+        x = layers.rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+        w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+        logits = x @ w
+        return layers.softcap(logits, cfg.logit_softcap)
+
+    # -- full-sequence forward ---------------------------------------------
+    def forward(self, params, batch, last_logit_only: bool = False):
+        """``last_logit_only=True`` is the prefill path: hidden states run
+        the full sequence but only the final position is unembedded (the
+        vocab matmul dominates otherwise)."""
+        cfg = self.cfg
+        x = self._embed(params, batch)
+        memory = self.encode(params, batch["frames"]) if cfg.is_encoder_decoder else None
+        positions = jnp.arange(x.shape[1])[None, :]
+        aux = pvary_manual(jnp.float32(0.0))
+
+        def run_block(blk, x, bt):
+            def f(blk, x, memory, positions):
+                return block_apply(blk, x, cfg, bt, memory=memory, positions=positions)
+            if cfg.remat:
+                f = jax.checkpoint(f)
+            return f(blk, x, memory, positions)
+
+        if self.repeats > 0:
+            def body(carry, blks):
+                x, aux = carry
+                for i, bt in enumerate(cfg.block_pattern):
+                    x, a = run_block(blks[f"p{i}_{bt}"], x, bt)
+                    aux = aux + a
+                return (x, aux), None
+
+            (x, aux), _ = jax.lax.scan(body, (x, aux), params["scan"])
+        for t, bt in enumerate(self.tail_types):
+            x, a = run_block(params[f"tail{t}_{bt}"], x, bt)
+            aux = aux + a
+
+        logits = self._unembed(params, x[:, -1:] if last_logit_only else x)
+        out = {"logits": shard_activation(logits, ("batch", None, "model")), "aux_loss": aux}
+        if cfg.mtp_depth > 0 and not last_logit_only:
+            out["mtp_logits"] = self._mtp(params, x, batch)
+        return out
+
+    def _mtp(self, params, h, batch):
+        """DeepSeek-V3 multi-token-prediction head: predict token t+2 from
+        the final hidden state at t combined with the embedding of t+1."""
+        cfg = self.cfg
+        emb_next = params["embed"][batch["tokens"]]
+        emb_next = jnp.roll(emb_next, -1, axis=1)
+        if cfg.num_prefix_tokens > 0 and "prefix_embeds" in batch:
+            pad = jnp.zeros((h.shape[0], cfg.num_prefix_tokens, cfg.d_model), h.dtype)
+            emb_next = jnp.concatenate([pad, emb_next], axis=1)
+        g = jnp.concatenate([layers.rmsnorm_apply(params["mtp"]["norm"], h, cfg.norm_eps),
+                             emb_next.astype(h.dtype)], axis=-1)
+        g = g @ params["mtp"]["proj"]
+        g, _ = block_apply(params["mtp"]["block"], g, cfg, cfg.block_pattern[-1])
+        return self._unembed(params, g)
+
+    # -- decode ---------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int):
+        cfg = self.cfg
+        cache = {}
+        if self.repeats > 0:
+            cache["scan"] = {}
+            for i, bt in enumerate(cfg.block_pattern):
+                one = block_init_cache(cfg, bt, batch, max_len)
+                cache["scan"][f"p{i}_{bt}"] = jax.tree_util.tree_map(
+                    lambda x: jnp.broadcast_to(x, (self.repeats,) + x.shape).copy(), one
+                )
+        for t, bt in enumerate(self.tail_types):
+            cache[f"tail{t}_{bt}"] = block_init_cache(cfg, bt, batch, max_len)
+        return cache
+
+    def decode_step(self, params, tokens, cache, pos, memory=None,
+                    mla_absorbed: bool = False):
+        """tokens: (B,1) int32; pos: scalar int32 absolute position."""
+        cfg = self.cfg
+        x = params["embed"][tokens]
+        x = shard_activation(x, ("batch", None, None))
+        new_cache = {}
+
+        if self.repeats > 0:
+            def body(x, blks_and_cache):
+                blks, cch = blks_and_cache
+                new_c = {}
+                for i, bt in enumerate(cfg.block_pattern):
+                    key = f"p{i}_{bt}"
+                    x, c = block_decode(blks[key], x, cch[key], pos, cfg, bt,
+                                        memory=memory, mla_absorbed=mla_absorbed)
+                    new_c[key] = c
+                return x, new_c
+
+            x, new_scan = jax.lax.scan(body, x, (params["scan"], cache["scan"]))
+            new_cache["scan"] = new_scan
+        for t, bt in enumerate(self.tail_types):
+            key = f"tail{t}_{bt}"
+            x, c = block_decode(params[key], x, cache[key], pos, cfg, bt,
+                                memory=memory, mla_absorbed=mla_absorbed)
+            new_cache[key] = c
+
+        logits = self._unembed(params, x)
+        return logits, new_cache

@@ -1,0 +1,13 @@
+from repro.optim.optimizers import Optimizer, adam, adamw, sgd, apply_updates
+from repro.optim.schedules import constant, cosine_decay, warmup_cosine
+
+__all__ = [
+    "Optimizer",
+    "adam",
+    "adamw",
+    "sgd",
+    "apply_updates",
+    "constant",
+    "cosine_decay",
+    "warmup_cosine",
+]

@@ -1,0 +1,112 @@
+"""Optimizers in pure JAX (no optax in this environment).
+
+API mirrors the optax ``GradientTransformation`` pair so later swapping
+is mechanical:
+
+    opt = adam(1e-3)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+
+Adam moments are kept in fp32 regardless of param dtype (bf16-safe), and
+the second moment uses the gradient squared in fp32 — matching production
+mixed-precision practice and what the dry-run memory analysis assumes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Union[float, Callable[[jnp.ndarray], jnp.ndarray]]
+
+
+def _lr_at(lr: Schedule, step):
+    return lr(step) if callable(lr) else jnp.float32(lr)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable  # (grads, state, params) -> (updates, state)
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray
+    mu: object
+    nu: object
+
+
+def adam(lr: Schedule, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0, grad_clip: Optional[float] = None) -> Optimizer:
+    def init(params):
+        f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree_util.tree_map(f32, params),
+            nu=jax.tree_util.tree_map(f32, params),
+        )
+
+    def update(grads, state, params):
+        step = state.step + 1
+        if grad_clip is not None:
+            gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                                 for g in jax.tree_util.tree_leaves(grads)))
+            scale = jnp.minimum(1.0, grad_clip / (gnorm + 1e-9))
+            grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+        mu = jax.tree_util.tree_map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state.mu, grads)
+        nu = jax.tree_util.tree_map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)), state.nu, grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        lr_t = _lr_at(lr, step)
+
+        def upd(m, v, p):
+            u = -(lr_t * (m / bc1) / (jnp.sqrt(v / bc2) + eps))
+            if weight_decay:
+                u = u - lr_t * weight_decay * p.astype(jnp.float32)
+            return u.astype(p.dtype)
+
+        updates = jax.tree_util.tree_map(upd, mu, nu, params)
+        return updates, AdamState(step=step, mu=mu, nu=nu)
+
+    return Optimizer(init=init, update=update)
+
+
+def adamw(lr: Schedule, weight_decay: float = 0.01, **kw) -> Optimizer:
+    return adam(lr, weight_decay=weight_decay, **kw)
+
+
+class SGDState(NamedTuple):
+    step: jnp.ndarray
+    momentum: object
+
+
+def sgd(lr: Schedule, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        mom = (jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+               if momentum else None)
+        return SGDState(step=jnp.zeros((), jnp.int32), momentum=mom)
+
+    def update(grads, state, params):
+        step = state.step + 1
+        lr_t = _lr_at(lr, step)
+        if momentum:
+            mom = jax.tree_util.tree_map(
+                lambda m, g: momentum * m + g.astype(jnp.float32), state.momentum, grads)
+            updates = jax.tree_util.tree_map(
+                lambda m, p: (-lr_t * m).astype(p.dtype), mom, params)
+            return updates, SGDState(step=step, momentum=mom)
+        updates = jax.tree_util.tree_map(
+            lambda g, p: (-lr_t * g.astype(jnp.float32)).astype(p.dtype), grads, params)
+        return updates, SGDState(step=step, momentum=None)
+
+    return Optimizer(init=init, update=update)
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(jnp.add, params, updates)

@@ -1,0 +1,21 @@
+from repro.sharding.ctx import (
+    MeshContext,
+    use_mesh,
+    current_mesh_context,
+    shard_activation,
+    batch_axes,
+    manual_axes,
+)
+from repro.sharding.specs import param_specs, input_specs_sharding, batch_spec
+
+__all__ = [
+    "MeshContext",
+    "use_mesh",
+    "current_mesh_context",
+    "shard_activation",
+    "batch_axes",
+    "manual_axes",
+    "param_specs",
+    "input_specs_sharding",
+    "batch_spec",
+]

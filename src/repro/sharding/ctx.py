@@ -1,0 +1,130 @@
+"""Mesh context: activation sharding constraints that degrade to no-ops.
+
+Model code calls :func:`shard_activation(x, ("batch", None, "model"))`
+with *logical* axis names.  When a mesh context is active (set by the
+launcher / dry-run) the logical names are mapped to mesh axes and a
+``with_sharding_constraint`` is inserted; on a bare CPU test run the call
+is a no-op, so smoke tests see a single device and no mesh.
+
+Logical axes:
+  "batch"  -> ("pod", "data") on the multi-pod mesh, ("data",) single-pod
+  "model"  -> "model" (tensor-parallel: heads / d_ff / experts)
+  "expert" -> "model" (expert-parallel shares the model axis)
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+class MeshContext:
+    def __init__(self, mesh: Mesh):
+        self.mesh = mesh
+        names = mesh.axis_names
+        if "pod" in names:
+            self.batch_axes: Tuple[str, ...] = ("pod", "data")
+        else:
+            self.batch_axes = ("data",)
+        self.model_axis = "model" if "model" in names else None
+        self.manual: frozenset = frozenset()
+
+    def resolve(self, logical):
+        """Map a tuple of logical axis names to a PartitionSpec."""
+        out = []
+        for ax in logical:
+            if ax is None:
+                out.append(None)
+            elif ax == "batch":
+                out.append(self.batch_axes if len(self.batch_axes) > 1 else self.batch_axes[0])
+            elif ax in ("model", "expert"):
+                out.append(self.model_axis)
+            else:  # raw mesh axis name
+                out.append(ax if ax in self.mesh.axis_names else None)
+        return P(*out)
+
+
+def current_mesh_context() -> Optional[MeshContext]:
+    return getattr(_STATE, "ctx", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh]):
+    prev = getattr(_STATE, "ctx", None)
+    _STATE.ctx = MeshContext(mesh) if mesh is not None else None
+    try:
+        if mesh is not None:
+            with mesh:
+                yield _STATE.ctx
+        else:
+            yield None
+    finally:
+        _STATE.ctx = prev
+
+
+def batch_axes() -> Tuple[str, ...]:
+    ctx = current_mesh_context()
+    return ctx.batch_axes if ctx is not None else ()
+
+
+@contextlib.contextmanager
+def manual_axes(axes):
+    """Mark mesh axes as manual (inside a ``shard_map`` over the client
+    axes): sharding constraints must not mention them, so ``resolve``
+    drops them while the context is active."""
+    ctx = current_mesh_context()
+    if ctx is None:
+        yield
+        return
+    prev = ctx.manual
+    ctx.manual = frozenset(axes)
+    try:
+        yield
+    finally:
+        ctx.manual = prev
+
+
+def pvary_manual(x):
+    """Mark ``x`` as varying over the active manual (client) axes.
+
+    Needed for scan carries initialized from constants inside the
+    federated shard_map (the MoE aux-loss accumulator): the carry must
+    enter the scan with the same varying-manual-axes type it exits with.
+    No-op outside a manual region.
+    """
+    ctx = current_mesh_context()
+    if ctx is None or not ctx.manual:
+        return x
+    return jax.lax.pcast(x, tuple(sorted(ctx.manual)), to="varying")
+
+
+def shard_activation(x, logical):
+    """Constrain ``x`` to the logical sharding; no-op without a mesh."""
+    ctx = current_mesh_context()
+    if ctx is None:
+        return x
+    spec = ctx.resolve(logical)
+    if ctx.manual:
+        # drop manual (client) axes — they are local inside the shard_map —
+        # and constrain against an abstract mesh that marks them Manual
+        def strip(entry):
+            if entry is None:
+                return None
+            if isinstance(entry, tuple):
+                kept = tuple(a for a in entry if a not in ctx.manual)
+                return kept if kept else None
+            return None if entry in ctx.manual else entry
+        spec = P(*[strip(e) for e in spec])
+        if all(e is None for e in spec):
+            return x
+        from jax.sharding import AxisType
+        amesh = ctx.mesh.abstract_mesh.update_axis_types(
+            {a: AxisType.Manual for a in ctx.manual})
+        return jax.lax.with_sharding_constraint(x, NamedSharding(amesh, spec))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))

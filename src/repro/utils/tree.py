@@ -1,0 +1,111 @@
+"""Pytree arithmetic utilities.
+
+Every federated-learning primitive in ``repro.core`` operates on model
+parameter pytrees; these helpers keep that code free of repeated
+``jax.tree_util.tree_map`` boilerplate and are themselves jit-safe.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_add(a, b):
+    """Elementwise ``a + b`` over two pytrees with identical structure."""
+    return jax.tree_util.tree_map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    """Elementwise ``a - b`` over two pytrees with identical structure."""
+    return jax.tree_util.tree_map(jnp.subtract, a, b)
+
+
+def tree_scale(tree, scalar):
+    """Multiply every leaf of ``tree`` by ``scalar`` (python or 0-d array)."""
+    return jax.tree_util.tree_map(lambda x: x * scalar, tree)
+
+
+def tree_zeros_like(tree):
+    return jax.tree_util.tree_map(jnp.zeros_like, tree)
+
+
+def tree_dot(a, b):
+    """Inner product of two pytrees (fp32 accumulation)."""
+    leaves = jax.tree_util.tree_map(
+        lambda x, y: jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32)), a, b
+    )
+    return jax.tree_util.tree_reduce(jnp.add, leaves, jnp.float32(0.0))
+
+
+def tree_l2_norm(tree):
+    return jnp.sqrt(tree_dot(tree, tree))
+
+
+def tree_size(tree) -> int:
+    """Total number of scalar parameters in a pytree (static)."""
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    """Total byte footprint of a pytree (static)."""
+    return sum(int(x.size) * x.dtype.itemsize for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_weighted_mean(trees, weights):
+    """Weighted mean of a list of pytrees.
+
+    ``weights`` is a 1-D array of the same length as ``trees``; the result
+    is ``sum_i w_i * tree_i / sum_i w_i``.  This is FedAvg (paper eq. 14)
+    in its list form, used by the single-host simulator.  The distributed
+    path uses ``repro.core.aggregation`` collectives instead.
+    """
+    weights = jnp.asarray(weights, dtype=jnp.float32)
+    total = jnp.sum(weights)
+
+    def _avg(*leaves):
+        stacked = jnp.stack([l.astype(jnp.float32) for l in leaves])
+        w = weights.reshape((-1,) + (1,) * (stacked.ndim - 1))
+        return (jnp.sum(stacked * w, axis=0) / total).astype(leaves[0].dtype)
+
+    return jax.tree_util.tree_map(_avg, *trees)
+
+
+def tree_cast(tree, dtype):
+    return jax.tree_util.tree_map(lambda x: x.astype(dtype), tree)
+
+
+def flatten_to_vector(tree):
+    """Concatenate all leaves into a single 1-D fp32 vector.
+
+    Returns ``(vector, unflatten_fn)``.  Used by the crypto / quantize
+    layers which operate on the serialized update stream exactly as the
+    paper's AES-128 transport does.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    shapes = [l.shape for l in leaves]
+    dtypes = [l.dtype for l in leaves]
+    sizes = [int(l.size) for l in leaves]
+    vec = jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in leaves]) if leaves else jnp.zeros((0,), jnp.float32)
+
+    def unflatten(v):
+        out = []
+        offset = 0
+        for shape, dtype, size in zip(shapes, dtypes, sizes):
+            out.append(v[offset : offset + size].reshape(shape).astype(dtype))
+            offset += size
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    return vec, unflatten
+
+
+def unflatten_from_vector(vec, like_tree):
+    """Inverse of :func:`flatten_to_vector` given a template pytree."""
+    leaves, treedef = jax.tree_util.tree_flatten(like_tree)
+    out = []
+    offset = 0
+    for l in leaves:
+        size = int(l.size)
+        out.append(vec[offset : offset + size].reshape(l.shape).astype(l.dtype))
+        offset += size
+    return jax.tree_util.tree_unflatten(treedef, out)

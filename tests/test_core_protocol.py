@@ -1,0 +1,242 @@
+"""Unit + property tests for the EnFed core: aggregation, incentives,
+energy model, battery, crypto, convergence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (BatteryState, CostModel, aggregation, fedavg,
+                        make_fleet, masked_fedavg, participation_mask,
+                        select_contributors)
+from repro.core.convergence import aggregated_loss, loss_delta_converged
+from repro.core.topology import (AggregationStrategy, group_mixing_matrix,
+                                 mixing_matrix_jnp)
+
+RNG = np.random.default_rng(0)
+
+
+# ---------------------------------------------------------------------------
+# aggregation (paper eq. 14)
+# ---------------------------------------------------------------------------
+
+
+def _rand_tree(seed):
+    r = np.random.default_rng(seed)
+    return {"w": jnp.asarray(r.normal(size=(4, 3)).astype(np.float32)),
+            "b": jnp.asarray(r.normal(size=(5,)).astype(np.float32))}
+
+
+def test_fedavg_is_mean():
+    trees = [_rand_tree(i) for i in range(4)]
+    avg = fedavg(trees)
+    manual = np.mean([np.asarray(t["w"]) for t in trees], axis=0)
+    np.testing.assert_allclose(np.asarray(avg["w"]), manual, rtol=1e-6)
+
+
+def test_masked_fedavg_excludes_nonparticipants():
+    trees = [_rand_tree(i) for i in range(4)]
+    avg = masked_fedavg(trees, mask=[1, 0, 1, 0])
+    manual = (np.asarray(trees[0]["w"]) + np.asarray(trees[2]["w"])) / 2
+    np.testing.assert_allclose(np.asarray(avg["w"]), manual, rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 8), st.integers(0, 10_000))
+def test_fedavg_bounded_by_extremes(n, seed):
+    """Convexity: every coordinate of the average lies within the
+    per-coordinate min/max of the contributors."""
+    r = np.random.default_rng(seed)
+    trees = [{"x": jnp.asarray(r.normal(size=(6,)).astype(np.float32))} for _ in range(n)]
+    w = r.random(n).astype(np.float32) + 0.01
+    avg = np.asarray(fedavg(trees, list(w))["x"])
+    stack = np.stack([np.asarray(t["x"]) for t in trees])
+    assert (avg >= stack.min(0) - 1e-5).all() and (avg <= stack.max(0) + 1e-5).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 6), st.floats(0.1, 10.0))
+def test_fedavg_scale_equivariance(n, scale):
+    trees = [_rand_tree(i) for i in range(n)]
+    avg1 = fedavg(trees)
+    scaled = [jax.tree_util.tree_map(lambda x: x * scale, t) for t in trees]
+    avg2 = fedavg(scaled)
+    np.testing.assert_allclose(np.asarray(avg2["w"]),
+                               np.asarray(avg1["w"]) * scale, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# mixing matrices
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", ["cfl", "dfl_mesh", "dfl_ring", "enfed", "none"])
+@pytest.mark.parametrize("C", [4, 6, 8])
+def test_mixing_matrix_row_stochastic(kind, C):
+    s = AggregationStrategy(kind=kind, neighborhood_size=2)
+    M = group_mixing_matrix(C, s)
+    np.testing.assert_allclose(M.sum(axis=1), np.ones(C), rtol=1e-5)
+    assert (M >= 0).all()
+
+
+@pytest.mark.parametrize("kind", ["cfl", "dfl_mesh", "dfl_ring", "enfed", "none"])
+def test_mixing_matrix_jnp_matches_numpy(kind):
+    C = 6
+    mask = np.array([1, 1, 0, 1, 1, 1], np.float32)
+    s = AggregationStrategy(kind=kind, neighborhood_size=3)
+    M_np = group_mixing_matrix(C, s, mask=mask)
+    M_j = np.asarray(mixing_matrix_jnp(C, s, jnp.asarray(mask)))
+    np.testing.assert_allclose(M_j, M_np, rtol=1e-5, atol=1e-6)
+
+
+def test_enfed_mixing_is_block_diagonal():
+    s = AggregationStrategy(kind="enfed", neighborhood_size=2)
+    M = group_mixing_matrix(6, s)
+    for i in range(6):
+        for j in range(6):
+            if i // 2 != j // 2:
+                assert M[i, j] == 0.0, "EnFed must not mix across neighborhoods"
+
+
+# ---------------------------------------------------------------------------
+# incentives / contracts
+# ---------------------------------------------------------------------------
+
+
+def test_contract_selection_respects_reservation_and_nmax():
+    fleet = make_fleet(10, seed=0, p_has_model=1.0)
+    for d in fleet:
+        d.reservation_price = 0.9 if d.device_id < 5 else 0.1
+    contracts = select_contributors(fleet, offered_incentive=0.5, n_max=3)
+    assert len(contracts) <= 3
+    assert all(c.device_id >= 5 for c in contracts), "reservation price ignored"
+    mask = participation_mask(10, contracts)
+    assert mask.sum() == len(contracts)
+
+
+def test_contract_selection_prefers_fresh_models():
+    fleet = make_fleet(4, seed=1, p_has_model=1.0)
+    for d in fleet:
+        d.reservation_price = 0.1
+        d.battery_level = 0.9
+        d.data_size = 1000
+        d.model_staleness = 5.0
+    fleet[2].model_staleness = 0.0
+    contracts = select_contributors(fleet, offered_incentive=0.5, n_max=1)
+    assert contracts[0].device_id == 2
+
+
+# ---------------------------------------------------------------------------
+# energy model (eqs. 4-7)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 10), st.integers(1, 8), st.integers(1, 20))
+def test_energy_monotone_in_rounds_contributors_epochs(rounds, n_c, epochs):
+    cm = CostModel()
+    kw = dict(num_params=10_000, model_bytes=40_000, num_samples=500)
+    base = cm.session(rounds=rounds, n_contrib=n_c, epochs=epochs, **kw)
+    more_rounds = cm.session(rounds=rounds + 1, n_contrib=n_c, epochs=epochs, **kw)
+    more_contrib = cm.session(rounds=rounds, n_contrib=n_c + 1, epochs=epochs, **kw)
+    assert more_rounds.e_tot > base.e_tot
+    assert more_rounds.t_train > base.t_train
+    assert more_contrib.e_tot >= base.e_tot
+
+
+def test_energy_decomposition_consistent():
+    cm = CostModel()
+    rep = cm.session(rounds=3, n_contrib=5, num_params=10_000,
+                     model_bytes=40_000, num_samples=500, epochs=5)
+    assert rep.e_tot == pytest.approx(rep.e_comp + rep.e_comm)
+    assert rep.t_train == pytest.approx(rep.times.total)
+
+
+def test_encryption_adds_time_and_energy():
+    cm = CostModel()
+    kw = dict(rounds=3, n_contrib=5, num_params=10_000, model_bytes=40_000,
+              num_samples=500, epochs=5)
+    enc = cm.session(encrypt=True, **kw)
+    plain = cm.session(encrypt=False, **kw)
+    assert enc.t_train > plain.t_train
+    assert enc.e_tot > plain.e_tot
+
+
+def test_dfl_ring_cheaper_than_mesh():
+    cm = CostModel()
+    kw = dict(rounds=4, n_peers=5, num_params=10_000, model_bytes=40_000,
+              num_samples=500, epochs=5)
+    ring = cm.dfl_session(topology="ring", **kw)
+    mesh = cm.dfl_session(topology="mesh", **kw)
+    assert ring.e_tot < mesh.e_tot, "paper: ring DFL costs less than mesh DFL"
+
+
+# ---------------------------------------------------------------------------
+# battery
+# ---------------------------------------------------------------------------
+
+
+def test_battery_discharge_and_threshold():
+    b = BatteryState(capacity_j=100.0, level=0.5)
+    b2 = b.discharge(10.0, avg_power_w=1.0)
+    assert b2.level == pytest.approx(0.4)
+    assert not b2.below(0.2) and b2.discharge(100.0).below(0.2)
+
+
+def test_battery_high_load_penalty():
+    b = BatteryState(capacity_j=100.0, level=1.0)
+    light = b.discharge(10.0, avg_power_w=1.0)
+    heavy = b.discharge(10.0, avg_power_w=5.0)
+    assert heavy.level < light.level, "non-linear discharge under load"
+
+
+# ---------------------------------------------------------------------------
+# crypto
+# ---------------------------------------------------------------------------
+
+
+def test_aes_fips197_vector():
+    from repro.core import crypto
+    key = np.array([int(x, 16) for x in
+                    "00 01 02 03 04 05 06 07 08 09 0a 0b 0c 0d 0e 0f".split()], np.uint8)
+    pt = np.array([int(x, 16) for x in
+                   "00 11 22 33 44 55 66 77 88 99 aa bb cc dd ee ff".split()], np.uint8)
+    rks = jnp.asarray(crypto.expand_key(key))
+    ct = np.asarray(crypto.aes128_encrypt_blocks(jnp.asarray(pt[None]), rks))[0]
+    assert "".join(f"{b:02x}" for b in ct) == "69c4e0d86a7b0430d8cdb78070b4c55a"
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 500), st.integers(0, 2**32 - 1))
+def test_aes_ctr_update_roundtrip(n, seed):
+    from repro.core import crypto
+    r = np.random.default_rng(seed)
+    key = r.integers(0, 256, 16).astype(np.uint8)
+    nonce = r.integers(0, 256, 8).astype(np.uint8)
+    vec = jnp.asarray(r.normal(size=(n,)).astype(np.float32))
+    ct = crypto.encrypt_update(vec, key, nonce)
+    back = crypto.decrypt_update(ct, key, nonce)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(vec))
+
+
+def test_aes_wrong_key_fails_to_decrypt():
+    from repro.core import crypto
+    key1 = np.arange(16, dtype=np.uint8)
+    key2 = key1.copy(); key2[0] ^= 1
+    nonce = np.arange(8, dtype=np.uint8)
+    vec = jnp.asarray(RNG.normal(size=(64,)).astype(np.float32))
+    ct = crypto.encrypt_update(vec, key1, nonce)
+    wrong = crypto.decrypt_update(ct, key2, nonce)
+    assert not np.allclose(np.asarray(wrong), np.asarray(vec))
+
+
+# ---------------------------------------------------------------------------
+# convergence helpers
+# ---------------------------------------------------------------------------
+
+
+def test_loss_delta_convergence():
+    assert loss_delta_converged([1.0, 0.5, 0.4999, 0.4998], tol=1e-3)
+    assert not loss_delta_converged([1.0, 0.5, 0.3], tol=1e-3)
+    assert aggregated_loss([1.0, 2.0, 3.0]) == pytest.approx(2.0)

@@ -1,0 +1,129 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracles,
+swept across shapes and dtypes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+RNG = np.random.default_rng(42)
+
+
+# ---------------------------------------------------------------------------
+# fedavg
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,l", [(1, 17), (3, 2048), (5, 3001), (16, 777), (64, 4096)])
+@pytest.mark.parametrize("dtype", [np.float32, np.float16])
+def test_fedavg_matches_ref(n, l, dtype):
+    from repro.kernels.fedavg.kernel import fedavg_pallas
+    from repro.kernels.fedavg.ref import fedavg_ref
+    u = jnp.asarray(RNG.normal(size=(n, l)).astype(dtype))
+    w = jnp.asarray((RNG.random(n) > 0.3).astype(np.float32) * RNG.random(n).astype(np.float32))
+    got = fedavg_pallas(u, w)
+    want = fedavg_ref(u, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_fedavg_all_masked_is_zero():
+    from repro.kernels.fedavg.kernel import fedavg_pallas
+    u = jnp.asarray(RNG.normal(size=(4, 100)).astype(np.float32))
+    out = fedavg_pallas(u, jnp.zeros((4,), jnp.float32))
+    assert np.allclose(np.asarray(out), 0.0)
+
+
+def test_fedavg_tree_roundtrip():
+    from repro.kernels.fedavg.ops import fedavg_tree
+    tree = {"a": jnp.asarray(RNG.normal(size=(3, 8, 4)).astype(np.float32)),
+            "b": jnp.asarray(RNG.normal(size=(3, 5)).astype(np.float32))}
+    w = jnp.asarray([1.0, 1.0, 1.0])
+    avg = fedavg_tree(tree, w)
+    np.testing.assert_allclose(np.asarray(avg["a"]),
+                               np.asarray(tree["a"]).mean(0), rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# lstm_cell
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,F,H", [(1, 3, 16), (8, 10, 32), (32, 6, 64),
+                                   (100, 7, 130), (128, 128, 128), (129, 16, 200)])
+def test_lstm_cell_matches_ref(B, F, H):
+    from repro.kernels.lstm_cell.kernel import lstm_cell_pallas
+    from repro.kernels.lstm_cell.ref import lstm_cell_ref
+    x = jnp.asarray(RNG.normal(size=(B, F)).astype(np.float32))
+    h = jnp.asarray(RNG.normal(size=(B, H)).astype(np.float32))
+    c = jnp.asarray(RNG.normal(size=(B, H)).astype(np.float32))
+    wx = jnp.asarray(RNG.normal(size=(F, 4 * H)).astype(np.float32) * 0.1)
+    wh = jnp.asarray(RNG.normal(size=(H, 4 * H)).astype(np.float32) * 0.1)
+    b = jnp.asarray(RNG.normal(size=(4 * H,)).astype(np.float32) * 0.1)
+    h1, c1 = lstm_cell_pallas(x, h, c, wx, wh, b)
+    h2, c2 = lstm_cell_ref(x, h, c, wx, wh, b)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c2), rtol=1e-5, atol=1e-5)
+
+
+def test_lstm_classifier_pallas_parity():
+    from repro.models import LSTMClassifier, LSTMClassifierConfig
+    ref = LSTMClassifier(LSTMClassifierConfig(6, 16, hidden=32, num_classes=6, cell="ref"))
+    pal = LSTMClassifier(LSTMClassifierConfig(6, 16, hidden=32, num_classes=6, cell="pallas"))
+    p = ref.init(jax.random.PRNGKey(0))
+    x = jnp.asarray(RNG.normal(size=(8, 16, 6)).astype(np.float32))
+    np.testing.assert_allclose(np.asarray(ref.forward(p, x)),
+                               np.asarray(pal.forward(p, x)), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# quantize
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("l", [1024, 5000, 1 << 15, 1 << 15 | 3])
+def test_quantize_roundtrip_error_bound(l):
+    from repro.kernels.quantize.kernel import quantize_pallas, dequantize_pallas
+    v = jnp.asarray(RNG.normal(size=(l,)).astype(np.float32))
+    q, s = quantize_pallas(v)
+    back = dequantize_pallas(q, s, l)
+    # per-tile error bound: absmax/127 per tile, bounded globally
+    err = np.abs(np.asarray(back) - np.asarray(v)).max()
+    bound = float(jnp.max(jnp.abs(v))) / 127 + 1e-6
+    assert err <= bound
+
+
+def test_quantize_matches_ref_on_tile_multiple():
+    from repro.kernels.quantize.kernel import quantize_pallas
+    from repro.kernels.quantize.ref import quantize_ref
+    v = jnp.asarray(RNG.normal(size=(4096,)).astype(np.float32))
+    qk, sk = quantize_pallas(v)
+    qr, sr = quantize_ref(v)
+    np.testing.assert_array_equal(np.asarray(qk), np.asarray(qr))
+    np.testing.assert_allclose(np.asarray(sk), np.asarray(sr), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# aes_ctr
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [16, 100, 5000, 8192 + 5])
+def test_aes_ctr_kernel_matches_ref(n):
+    from repro.kernels.aes_ctr.ops import encrypt_bytes
+    from repro.kernels.aes_ctr.ref import aes_ctr_ref
+    key = RNG.integers(0, 256, 16).astype(np.uint8)
+    nonce = RNG.integers(0, 256, 8).astype(np.uint8)
+    pay = jnp.asarray(RNG.integers(0, 256, n).astype(np.uint8))
+    np.testing.assert_array_equal(np.asarray(encrypt_bytes(pay, key, nonce)),
+                                  np.asarray(aes_ctr_ref(pay, key, nonce)))
+
+
+def test_aes_ctr_kernel_roundtrip():
+    from repro.kernels.aes_ctr.ops import encrypt_bytes, decrypt_bytes
+    key = np.arange(16, dtype=np.uint8)
+    nonce = np.arange(8, dtype=np.uint8)
+    pay = jnp.asarray(RNG.integers(0, 256, 1000).astype(np.uint8))
+    ct = encrypt_bytes(pay, key, nonce)
+    assert not np.array_equal(np.asarray(ct), np.asarray(pay))
+    np.testing.assert_array_equal(np.asarray(decrypt_bytes(ct, key, nonce)),
+                                  np.asarray(pay))

@@ -1,0 +1,87 @@
+"""End-to-end behaviour tests: the EnFed protocol against the paper's
+claims at test scale, plus the training/serving drivers."""
+
+import numpy as np
+import pytest
+
+from repro.core import (EnFedConfig, EnFedSession, SupervisedTask,
+                        BatteryState, make_fleet)
+from repro.data import HARDatasetConfig, dirichlet_partition, make_har_windows
+from repro.models import LSTMClassifier, LSTMClassifierConfig
+
+
+@pytest.fixture(scope="module")
+def har_setup():
+    x, y, _ = make_har_windows(HARDatasetConfig(num_samples=1200, seq_len=24))
+    parts = dirichlet_partition(y, 6, alpha=1.0, seed=0)
+    shards = [(x[p], y[p]) for p in parts]
+    own_x, own_y = shards[0]
+    n = int(len(own_x) * 0.8)
+    task = SupervisedTask(LSTMClassifier(LSTMClassifierConfig(6, 24, 48, 6)), lr=3e-3)
+    fleet = make_fleet(5, seed=1, p_has_model=1.0)
+    states = {}
+    for i, dev in enumerate(fleet):
+        dev.reservation_price = 0.4
+        p = task.init(seed=10 + i)
+        p, _ = task.fit(p, shards[i + 1], epochs=4, batch_size=32, seed=i)
+        states[dev.device_id] = {"params": p, "data": shards[i + 1]}
+    return task, shards, (own_x[:n], own_y[:n]), (own_x[n:], own_y[n:]), fleet, states
+
+
+def test_enfed_session_improves_over_random(har_setup):
+    task, shards, own_train, own_test, fleet, states = har_setup
+    rand_acc = task.evaluate(task.init(seed=123), own_test)
+    res = EnFedSession(task, own_train, own_test, fleet, states,
+                       EnFedConfig(desired_accuracy=0.9, epochs=4, max_rounds=4)).run()
+    assert res.accuracy > max(rand_acc + 0.2, 0.5)
+    assert res.n_contributors == 5
+    assert res.stop_reason in ("accuracy_reached", "max_rounds", "battery_low")
+
+
+def test_enfed_stops_on_battery_threshold(har_setup):
+    task, shards, own_train, own_test, fleet, states = har_setup
+    battery = BatteryState(capacity_j=3.0, level=0.25)
+    res = EnFedSession(task, own_train, own_test, fleet, states,
+                       EnFedConfig(desired_accuracy=0.999, epochs=2, max_rounds=10),
+                       battery=battery).run()
+    assert res.stop_reason == "battery_low"
+    assert res.rounds < 10
+
+
+def test_enfed_respects_round_budget(har_setup):
+    task, shards, own_train, own_test, fleet, states = har_setup
+    res = EnFedSession(task, own_train, own_test, fleet, states,
+                       EnFedConfig(desired_accuracy=0.9999, epochs=1, max_rounds=2)).run()
+    assert res.rounds == 2 and res.stop_reason == "max_rounds"
+
+
+def test_enfed_encrypted_equals_plain_aggregation(har_setup):
+    """AES transport must be transparent: same accuracy trajectory."""
+    task, shards, own_train, own_test, fleet, states = har_setup
+    states2 = {k: {"params": v["params"], "data": v["data"]} for k, v in states.items()}
+    cfg = EnFedConfig(desired_accuracy=0.999, epochs=2, max_rounds=2,
+                      contributor_refresh_epochs=0)
+    r1 = EnFedSession(task, own_train, own_test, fleet, states, cfg).run()
+    cfg2 = EnFedConfig(desired_accuracy=0.999, epochs=2, max_rounds=2,
+                       contributor_refresh_epochs=0, encrypt=False)
+    r2 = EnFedSession(task, own_train, own_test, fleet, states2, cfg2).run()
+    np.testing.assert_allclose(r1.history["accuracy"], r2.history["accuracy"], atol=1e-3)
+
+
+def test_train_driver_end_to_end(tmp_path):
+    from repro.launch import train as train_mod
+    rc = train_mod.main(["--arch", "xlstm-125m", "--preset", "smoke",
+                         "--steps", "8", "--clients", "2", "--batch", "4",
+                         "--seq", "32", "--strategy", "enfed",
+                         "--ckpt-dir", str(tmp_path / "ckpt"),
+                         "--ckpt-every", "4", "--log-every", "100"])
+    assert rc == 0  # loss improved
+    from repro.checkpoint import latest_step
+    assert latest_step(str(tmp_path / "ckpt")) is not None
+
+
+def test_serve_driver_end_to_end():
+    from repro.launch import serve as serve_mod
+    rc = serve_mod.main(["--arch", "qwen2.5-3b", "--preset", "smoke",
+                         "--batch", "2", "--prompt-len", "8", "--gen", "4"])
+    assert rc == 0
