@@ -1,0 +1,114 @@
+"""Fleet-engine scaling benchmark: rounds/s and simulated energy as the
+number of concurrent requester sessions grows 8 -> 512.
+
+For each fleet size R the jit fleet engine (``repro.core.fleet``) runs
+all R sessions as ONE compiled program; the loop engine
+(``EnFedSession.run``) is timed on a few sessions and extrapolated to
+the same R (its cost is linear in sessions by construction — one Python
+round loop each).  The headline metric is session-rounds/s; the
+crossover (fleet engine beating the loop engine's per-session
+wall-clock) lands well below R=32 on CPU.
+
+  PYTHONPATH=src python -m benchmarks.fleet_bench [--sizes 8,32,128,512]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core import (EnFedConfig, EnFedSession, RequesterSpec,
+                        SupervisedTask, make_fleet, run_fleet)
+from repro.data import CaloriesDatasetConfig, dirichlet_partition, make_calories_tabular
+from repro.models import MLPClassifier, MLPClassifierConfig
+
+BATCH = 32
+N_CONTRIB = 3
+LOOP_SAMPLE_SESSIONS = 3   # loop engine timed on this many, extrapolated
+
+
+def _build_problem(seed: int = 0):
+    """Shared task + contributor population for every requester."""
+    x, y = make_calories_tabular(CaloriesDatasetConfig(num_samples=1200, seed=seed))
+    task = SupervisedTask(MLPClassifier(MLPClassifierConfig(8, (32,), 5)), lr=3e-3)
+    parts = dirichlet_partition(y, num_clients=N_CONTRIB + 1, alpha=100.0, seed=seed)
+    shards = [(x[p], y[p]) for p in parts]
+    fleet = make_fleet(N_CONTRIB, seed=seed + 1, p_has_model=1.0)
+    states = {}
+    for i, dev in enumerate(fleet):
+        dev.reservation_price = 0.4
+        p = task.init(seed=10 + i)
+        p, _ = task.fit(p, shards[i + 1], epochs=1, batch_size=BATCH, seed=i)
+        states[dev.device_id] = {"params": p, "data": shards[i + 1]}
+    own_x, own_y = shards[0]
+    n = int(len(own_x) * 0.8)
+    return task, fleet, states, (own_x[:n], own_y[:n]), (own_x[n:], own_y[n:])
+
+
+def _make_specs(R: int, own_train, own_test, fleet, states, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    specs = []
+    for _ in range(R):
+        sel = rng.permutation(len(own_train[0]))[:4 * BATCH]
+        specs.append(RequesterSpec(
+            own_train=(own_train[0][sel], own_train[1][sel]),
+            own_test=own_test, neighborhood=fleet, contributor_states=states))
+    return specs
+
+
+def run(verbose: bool = True, sizes=(8, 32, 128, 512)):
+    task, fleet, states, own_train, own_test = _build_problem()
+    cfg = EnFedConfig(desired_accuracy=0.999, max_rounds=3, epochs=1,
+                      batch_size=BATCH, encrypt=False,
+                      contributor_refresh_epochs=1)
+
+    # loop-engine baseline: seconds per session, measured once (cost is
+    # per-session linear: one Python dispatch chain per session)
+    loop_specs = _make_specs(LOOP_SAMPLE_SESSIONS, own_train, own_test, fleet, states)
+    t0 = time.perf_counter()
+    loop_rounds = 0
+    for spec in loop_specs:
+        res = EnFedSession(task, spec.own_train, spec.own_test, fleet,
+                           {k: dict(v) for k, v in states.items()}, cfg).run()
+        loop_rounds += res.rounds
+    loop_s_per_session = (time.perf_counter() - t0) / LOOP_SAMPLE_SESSIONS
+
+    rows = []
+    for R in sizes:
+        specs = _make_specs(R, own_train, own_test, fleet, states)
+        t0 = time.perf_counter()
+        result = run_fleet(task, specs, cfg)
+        wall = time.perf_counter() - t0          # includes jit compile
+        t0 = time.perf_counter()
+        result = run_fleet(task, specs, cfg)     # steady-state (cached jit)
+        wall_warm = time.perf_counter() - t0
+        total_rounds = int(result.rounds.sum())
+        rps = total_rounds / wall_warm
+        loop_equiv_s = loop_s_per_session * R
+        rows.append((f"fleet/R={R}", wall_warm * 1e6 / R,
+                     f"rounds/s={rps:.1f} E={result.total_energy_j:.1f}J "
+                     f"loop_equiv={loop_equiv_s:.1f}s speedup={loop_equiv_s / wall_warm:.1f}x"))
+        if verbose:
+            print(f"[fleet R={R:4d}] warm {wall_warm:6.2f}s (cold {wall:6.2f}s) | "
+                  f"{total_rounds} session-rounds -> {rps:7.1f} rounds/s | "
+                  f"simulated E={result.total_energy_j:9.1f} J | "
+                  f"loop engine would need ~{loop_equiv_s:6.1f}s "
+                  f"({loop_equiv_s / wall_warm:5.1f}x slower)")
+    if verbose:
+        print(f"[loop baseline] {loop_s_per_session:.2f} s/session "
+              f"({LOOP_SAMPLE_SESSIONS} sessions measured)")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sizes", default="8,32,128,512",
+                    help="comma list of fleet sizes to sweep")
+    args = ap.parse_args()
+    run(sizes=tuple(int(s) for s in args.sizes.split(",")))
+
+
+if __name__ == "__main__":
+    main()

@@ -13,13 +13,15 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: table4,table5,table7,figs,kernels,roofline")
+                    help="comma list: table4,table5,table7,figs,kernels,fleet,roofline")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
     suites = []
     if only is None or "kernels" in only:
         suites.append(("kernels", "benchmarks.kernel_bench"))
+    if only is None or "fleet" in only:
+        suites.append(("fleet", "benchmarks.fleet_bench"))
     if only is None or "table4" in only:
         suites.append(("table4", "benchmarks.table4_lstm"))
     if only is None or "table5" in only:

@@ -5,6 +5,11 @@ This is the experiment behind Tables IV/V/VII of the paper, at example
 scale (the full benchmark lives in benchmarks/).
 
   PYTHONPATH=src python examples/har_federated.py [--dataset har|calories]
+                                                  [--engine loop|fleet]
+
+``--engine fleet`` runs the same EnFed session through the jit-native
+fleet engine (repro.core.fleet) instead of the Python round loop — same
+protocol, same result (parity-tested), one compiled program.
 """
 
 import argparse
@@ -39,6 +44,8 @@ def main():
     ap.add_argument("--dataset", choices=("har", "calories"), default="har")
     ap.add_argument("--target", type=float, default=0.95)
     ap.add_argument("--epochs", type=int, default=8)
+    ap.add_argument("--engine", choices=("loop", "fleet"), default="loop",
+                    help="EnFed execution engine (fleet = one jit program)")
     args = ap.parse_args()
 
     task, shards, own_train, own_test, pooled = build(args.dataset)
@@ -53,7 +60,7 @@ def main():
         states[dev.device_id] = {"params": p, "data": shards[i + 1]}
     enfed = EnFedSession(task, own_train, own_test, fleet, states,
                          EnFedConfig(desired_accuracy=args.target, epochs=args.epochs,
-                                     max_rounds=10)).run()
+                                     max_rounds=10)).run(engine=args.engine)
 
     # --- baselines -----------------------------------------------------
     client_data = [own_train] + shards[1:6]

@@ -23,6 +23,8 @@ from repro.core.federated import (
     FederatedTrainer,
     cloud_only_baseline,
 )
+from repro.core.fleet import FleetResult, RequesterSpec, run_fleet
+from repro.core.protocol import Phase
 from repro.core.topology import AggregationStrategy, aggregate_updates, group_mixing_matrix
 
 __all__ = [
@@ -31,5 +33,6 @@ __all__ = [
     "NeighborDevice", "Contract", "select_contributors", "participation_mask", "make_fleet",
     "EnFedConfig", "EnFedSession", "SessionResult",
     "SupervisedTask", "CFLLearner", "DFLLearner", "FederatedTrainer", "cloud_only_baseline",
+    "FleetResult", "RequesterSpec", "run_fleet", "Phase",
     "AggregationStrategy", "aggregate_updates", "group_mixing_matrix",
 ]

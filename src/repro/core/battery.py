@@ -5,11 +5,42 @@ continue only while ``B_p >= B_min_A`` (Algorithm 1, checkbatterylevel).
 Discharge is non-linear in reality (paper §III notes this); we model the
 energy-to-charge conversion with a load-dependent efficiency factor so
 heavy phases (training) drain proportionally more than their Joule count.
+
+Two forms, one formula:
+
+* :class:`BatteryState` — host-side dataclass used by the loop engine
+  (``repro.core.rounds``), one instance per requesting device.
+* :func:`discharge_level` — the same arithmetic on (possibly traced)
+  arrays, used by the jit fleet engine (``repro.core.fleet``) where the
+  battery of every requester is a lane of one vector.  The loop engine's
+  ``BatteryState.discharge`` delegates to it so the two engines cannot
+  drift apart.
 """
 
 from __future__ import annotations
 
 import dataclasses
+
+
+def load_efficiency(avg_power_w: float, high_load_penalty: float,
+                    high_load_threshold_w: float) -> float:
+    """Peukert-like efficiency factor: >1 under heavy draw."""
+    return 1.0 + (high_load_penalty if avg_power_w > high_load_threshold_w else 0.0)
+
+
+def discharge_level(level, energy_j, capacity_j, efficiency=1.0):
+    """New battery fraction after spending ``energy_j`` joules.
+
+    Works on python floats and on jnp arrays alike (the fleet engine
+    passes per-requester vectors); clamping uses whichever ``max``-like
+    semantics the operand supports.
+    """
+    new_level = level - efficiency * energy_j / capacity_j
+    if isinstance(new_level, (int, float)):  # host path (loop engine)
+        return max(new_level, 0.0)
+    import jax.numpy as jnp  # array path (fleet engine)
+
+    return jnp.maximum(new_level, 0.0)
 
 
 @dataclasses.dataclass
@@ -21,9 +52,10 @@ class BatteryState:
     high_load_threshold_w: float = 3.0
 
     def discharge(self, energy_j: float, avg_power_w: float = 1.0) -> "BatteryState":
-        eff = 1.0 + (self.high_load_penalty if avg_power_w > self.high_load_threshold_w else 0.0)
-        new_level = self.level - eff * energy_j / self.capacity_j
-        return dataclasses.replace(self, level=max(new_level, 0.0))
+        eff = load_efficiency(avg_power_w, self.high_load_penalty,
+                              self.high_load_threshold_w)
+        new_level = discharge_level(self.level, energy_j, self.capacity_j, eff)
+        return dataclasses.replace(self, level=float(new_level))
 
     def below(self, threshold: float) -> bool:
         return self.level < threshold

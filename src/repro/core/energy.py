@@ -148,6 +148,23 @@ class CostModel:
                    else rounds * self.t_local_fit(num_params, num_samples, epochs))
         return self._energy(t)
 
+    def round_energy(self, *, n_contrib: int, num_params: int, model_bytes: int,
+                     num_samples: int, epochs: int,
+                     n_devices: Optional[int] = None,
+                     encrypt: bool = True) -> float:
+        """E_tot of one EnFed round (eq. 5 with ``rounds=1``).
+
+        This is the per-round battery-discharge constant: given a fixed
+        model/contributor population it does not depend on traced state,
+        so the fleet engine precomputes it host-side per requester and
+        the loop engine charges it after every executed round.  Both
+        engines MUST use this method so battery trajectories match.
+        """
+        return self.session(rounds=1, n_contrib=n_contrib, num_params=num_params,
+                            model_bytes=model_bytes, num_samples=num_samples,
+                            epochs=epochs, n_devices=n_devices,
+                            encrypt=encrypt).e_tot
+
     def _energy(self, t: PhaseTimes) -> EnergyReport:
         d = self.device
         e_comp = (t.t_init * d.p_init + (t.t_enc + t.t_dec) * d.p_crypto

@@ -1,0 +1,377 @@
+"""Jit-native EnFed fleet engine: many concurrent requester sessions,
+one compiled program.
+
+The loop engine (``repro.core.rounds.EnFedSession``) executes Algorithm 1
+as Python control flow — one ``task.fit`` dispatch per contributor per
+round — which caps simulations at a handful of sessions.  This module
+ports the same protocol onto stacked arrays so an entire fleet of
+requesting devices advances together:
+
+* **handshake** — contract selection stays host-side (it is cheap,
+  deterministic numpy); it emits the (R, N_max) contract mask and, with
+  the session strategy (``topology.contributor_round_mask``), the static
+  per-round aggregation weights.
+* **collect + aggregate** — contributor params carry a leading
+  (R, N_max) axis; eq. (14) for every session is ONE launch of the
+  batched Pallas ``fedavg`` kernel (``repro.kernels.fedavg``).
+* **fit / refresh** — minibatch index schedules are precomputed
+  host-side from the same ``numpy`` RNG seeds the loop engine uses, so
+  both engines see identical batches; the epochs×steps Adam loop is a
+  ``lax.scan`` and requesters advance under ``vmap``.
+* **score + account** — accuracy/battery stopping conditions are
+  ``jnp.where`` masks over per-requester lanes instead of Python
+  ``break``; battery is traced per-device state discharged by the
+  precomputed eq. (5) per-round constant (``CostModel.round_energy``).
+* **rounds** — ``lax.scan`` over the round axis; a stopped session's
+  lanes freeze (params, battery, round count, stop code).
+
+Parity with the loop engine — same aggregated params, round counts, stop
+reasons, and battery trajectories — is asserted by
+``tests/test_fleet_engine.py`` across aggregation strategies and
+encrypt on/off.  The AES-128-CTR transport is bit-exact (validated in
+the loop engine / kernel tests), so the fleet engine models encryption
+in the cost domain (byte counts -> eq. (4)-(7) -> battery) without
+re-running the cipher per round.
+
+Constraints: every requester/contributor shard must hold at least
+``cfg.batch_size`` samples (the loop engine's sub-batch fallback is not
+vectorized), and all sessions share one ``SupervisedTask``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import protocol
+from repro.core.battery import BatteryState, discharge_level, load_efficiency
+from repro.core.energy import CostModel
+from repro.core.incentive import NeighborDevice, sign_contracts_fleet
+from repro.core.rounds import EnFedConfig, SessionResult
+from repro.kernels.fedavg.ops import fedavg_tree_batched
+from repro.models.classifiers import cross_entropy_loss
+from repro.optim import apply_updates
+from repro.utils.tree import tree_bytes, tree_size, tree_where
+
+
+@dataclasses.dataclass
+class RequesterSpec:
+    """One requesting device's inputs, mirroring ``EnFedSession``'s."""
+
+    own_train: tuple                      # (x, y) numpy/array shard
+    own_test: tuple
+    neighborhood: Sequence[NeighborDevice]
+    contributor_states: Dict[int, dict]   # device_id -> {params, data}
+    battery: Optional[BatteryState] = None
+
+
+@dataclasses.dataclass
+class FleetResult:
+    """Stacked outcome of one fleet program plus per-session views."""
+
+    sessions: List[SessionResult]
+    rounds: np.ndarray          # (R,) executed rounds per session
+    stop_codes: np.ndarray      # (R,) protocol.STOP_* codes
+    accuracy: np.ndarray        # (R,) final accuracy
+    battery_level: np.ndarray   # (R,) final battery fraction
+    total_energy_j: float       # summed eq. (5) energy across the fleet
+    history: Dict[str, np.ndarray]  # (max_rounds, R) traces + executed mask
+
+
+def _fit_schedule(n: int, epochs: int, batch: int, seed: int, steps_max: int):
+    """The loop engine's minibatch plan, materialized: same numpy RNG,
+    same permutation, same truncation to n//batch full batches."""
+    steps = n // batch
+    if steps < 1:
+        raise ValueError(
+            f"fleet engine needs >= batch_size samples per shard (got {n} < {batch})")
+    rng = np.random.default_rng(seed)
+    idx = np.zeros((epochs, steps_max, batch), np.int32)
+    valid = np.zeros((epochs, steps_max), np.float32)
+    for e in range(epochs):
+        perm = rng.permutation(n)[:steps * batch].astype(np.int32)
+        idx[e, :steps] = perm.reshape(steps, batch)
+        valid[e, :steps] = 1.0
+    return idx, valid
+
+
+def _pad_stack(arrays, pad_len: int):
+    """Stack ragged leading-axis arrays into (R, pad_len, ...) + mask."""
+    shape = arrays[0].shape[1:]
+    out = np.zeros((len(arrays), pad_len) + shape, arrays[0].dtype)
+    mask = np.zeros((len(arrays), pad_len), np.float32)
+    for i, a in enumerate(arrays):
+        out[i, :len(a)] = a
+        mask[i, :len(a)] = 1.0
+    return out, mask
+
+
+def _stack_trees(trees, template=None):
+    """List of pytrees -> pytree with leading stacked axis (None entries
+    become zeros_like(template))."""
+    template = template if template is not None else next(t for t in trees if t is not None)
+    filled = [t if t is not None else jax.tree_util.tree_map(np.zeros_like, template)
+              for t in trees]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]),
+                                  *filled)
+
+
+@functools.partial(jax.jit, static_argnames=("task", "use_pallas", "do_refresh"))
+def _fleet_program(task, use_pallas, do_refresh, arrays):
+    """The whole fleet's Algorithm 1 as one compiled program.
+
+    Module-level so the jit cache is shared across ``run_fleet`` calls:
+    re-running with the same ``task`` (id-hashed static) and the same
+    array shapes — e.g. parametrized parity tests sweeping strategies,
+    encryption, or stopping thresholds, all of which are traced inputs
+    (``round_w``, ``e_round``, ``desired_accuracy``...) — reuses the
+    compiled executable instead of re-tracing per call.
+    """
+    model, opt = task.model, task._opt
+    R, N = arrays["round_w"].shape
+    _, _, ref_epochs, ref_steps, _ = arrays["ref_idx"].shape
+
+    def fit_one(params, x, y, idx, valid):
+        """Identical math to SupervisedTask.fit for one device's shard."""
+        E, S, B = idx.shape
+
+        def one_step(carry, sv):
+            p, s = carry
+            ib, v = sv
+            xb, yb = x[ib], y[ib]
+            loss, grads = jax.value_and_grad(
+                lambda pp: cross_entropy_loss(model.forward(pp, xb), yb))(p)
+            upd, s2 = opt.update(grads, s, p)
+            p2 = apply_updates(p, upd)
+            return (tree_where(v > 0, p2, p), tree_where(v > 0, s2, s)), loss * v
+
+        (params, _), losses = jax.lax.scan(
+            one_step, (params, opt.init(params)),
+            (idx.reshape(E * S, B), valid.reshape(E * S)))
+        per_epoch = losses.reshape(E, S).sum(1) / jnp.maximum(valid.reshape(E, S).sum(1), 1.0)
+        return params, per_epoch[-1]
+
+    def eval_one(params, x, y, mask):
+        logits = model.forward(params, x)
+        correct = (jnp.argmax(logits, axis=-1) == y).astype(jnp.float32)
+        return jnp.sum(correct * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+    def round_body(carry, fit_idx_r):
+        contrib_p, last_p, level, active, stop_code, rounds_done = carry
+
+        # Phase.COLLECT + Phase.AGGREGATE: one batched kernel launch
+        global_p = fedavg_tree_batched(contrib_p, arrays["round_w"],
+                                       use_pallas=use_pallas)
+        # Phase.FIT (requesters personalize) + Phase.SCORE
+        new_p, last_loss = jax.vmap(fit_one)(global_p, arrays["own_x"],
+                                             arrays["own_y"], fit_idx_r,
+                                             arrays["fit_valid"])
+        acc = jax.vmap(eval_one)(new_p, arrays["test_x"], arrays["test_y"],
+                                 arrays["test_mask"])
+
+        # Phase.ACCOUNT: traced battery discharge for executed rounds
+        level_new = discharge_level(level, arrays["e_round"],
+                                    arrays["capacity"], arrays["eff"])
+        reached = acc >= arrays["desired_accuracy"]
+        low = level_new < arrays["battery_threshold"]
+        stop_code = jnp.where(active & reached, protocol.STOP_ACCURACY,
+                              jnp.where(active & ~reached & low,
+                                        protocol.STOP_BATTERY, stop_code))
+        level = jnp.where(active, level_new, level)
+        rounds_done = rounds_done + active.astype(jnp.int32)
+        last_p = tree_where(active, new_p, last_p)
+        next_active = active & ~reached & ~low
+
+        # Phase.REFRESH: contributors keep training (frozen once stopped)
+        if do_refresh:
+            cx, cy = arrays["cx"], arrays["cy"]
+            flat = jax.tree_util.tree_map(
+                lambda l: l.reshape((R * N,) + l.shape[2:]), contrib_p)
+            refreshed, _ = jax.vmap(fit_one)(
+                flat, cx.reshape((R * N,) + cx.shape[2:]),
+                cy.reshape(R * N, -1),
+                arrays["ref_idx"].reshape((R * N, ref_epochs, ref_steps) +
+                                          arrays["ref_idx"].shape[4:]),
+                arrays["ref_valid"].reshape(R * N, ref_epochs, ref_steps))
+            refreshed = jax.tree_util.tree_map(
+                lambda l, ref: ref.reshape(l.shape), contrib_p, refreshed)
+            contrib_p = tree_where(next_active, refreshed, contrib_p)
+
+        carry = (contrib_p, last_p, level, next_active, stop_code, rounds_done)
+        return carry, (acc, last_loss, level, active.astype(jnp.float32))
+
+    contrib_p = arrays["contrib_p"]
+    last_p0 = jax.tree_util.tree_map(lambda l: jnp.zeros_like(l[:, 0]), contrib_p)
+    carry0 = (contrib_p, last_p0, arrays["level0"],
+              jnp.ones((R,), bool),
+              jnp.full((R,), protocol.STOP_MAX_ROUNDS, jnp.int32),
+              jnp.zeros((R,), jnp.int32))
+    carry, traces = jax.lax.scan(round_body, carry0, arrays["fit_idx"])
+    contrib_final, last_p, level, _, stop_code, rounds_done = carry
+    return contrib_final, last_p, level, stop_code, rounds_done, traces
+
+
+def run_fleet(task, requesters: Sequence[RequesterSpec],
+              cfg: EnFedConfig = EnFedConfig(),
+              cost_model: Optional[CostModel] = None,
+              use_pallas: bool = True) -> FleetResult:
+    """Run ``len(requesters)`` concurrent EnFed sessions as one jit program."""
+    cost = cost_model or CostModel()
+    R = len(requesters)
+    if R == 0:
+        raise ValueError("empty fleet")
+
+    # ---- Phase.HANDSHAKE (host-side, static) ------------------------------
+    contracts, contract_mask = sign_contracts_fleet(
+        [spec.neighborhood for spec in requesters],
+        cfg.offered_incentive, cfg.n_max)
+    for i, cs in enumerate(contracts):
+        if not cs:
+            raise RuntimeError(
+                f"requester {i}: no nearby device agreed to the incentive (N_d < 1)")
+    N = contract_mask.shape[1]
+
+    # per-round aggregation weights = contract mask x strategy round mask
+    round_w = np.zeros((R, N), np.float32)
+    for i, cs in enumerate(contracts):
+        round_w[i, :len(cs)] = protocol.round_weights(len(cs), cfg.strategy)
+
+    # ---- contributor state / data stacks ----------------------------------
+    template = requesters[0].contributor_states[
+        contracts[0][0].device_id]["params"]
+    contrib_params, contrib_x, contrib_y = [], [], []
+    for spec, cs in zip(requesters, contracts):
+        row_p, row_x, row_y = [], [], []
+        for c in cs:
+            st = spec.contributor_states[c.device_id]
+            row_p.append(st["params"])
+            row_x.append(np.asarray(st["data"][0]))
+            row_y.append(np.asarray(st["data"][1]).astype(np.int32))
+        contrib_params.append(row_p)
+        contrib_x.append(row_x)
+        contrib_y.append(row_y)
+
+    n_c_max = max(max(len(x) for x in row) for row in contrib_x)
+    cx = np.zeros((R, N, n_c_max) + contrib_x[0][0].shape[1:], np.float32)
+    cy = np.zeros((R, N, n_c_max), np.int32)
+    for i in range(R):
+        for j, (x, y) in enumerate(zip(contrib_x[i], contrib_y[i])):
+            cx[i, j, :len(x)] = x
+            cy[i, j, :len(y)] = y
+    padded_rows = [row + [None] * (N - len(row)) for row in contrib_params]
+    contrib_stack = _stack_trees(
+        [_stack_trees(row, template) for row in padded_rows])
+
+    # ---- requester data + schedules ---------------------------------------
+    own_x, _ = _pad_stack([np.asarray(s.own_train[0], np.float32) for s in requesters],
+                          max(len(s.own_train[0]) for s in requesters))
+    own_y, _ = _pad_stack([np.asarray(s.own_train[1], np.int32) for s in requesters],
+                          own_x.shape[1])
+    test_x, test_mask = _pad_stack([np.asarray(s.own_test[0], np.float32) for s in requesters],
+                                   max(len(s.own_test[0]) for s in requesters))
+    test_y, _ = _pad_stack([np.asarray(s.own_test[1], np.int32) for s in requesters],
+                           test_x.shape[1])
+
+    fit_steps_max = max(len(s.own_train[0]) // cfg.batch_size for s in requesters)
+    fit_idx = np.zeros((cfg.max_rounds, R, cfg.epochs, fit_steps_max, cfg.batch_size),
+                       np.int32)
+    fit_valid = np.zeros((R, cfg.epochs, fit_steps_max), np.float32)
+    for i, spec in enumerate(requesters):
+        n_i = len(spec.own_train[0])
+        for r in range(cfg.max_rounds):
+            idx, valid = _fit_schedule(n_i, cfg.epochs, cfg.batch_size,
+                                       cfg.seed + r, fit_steps_max)
+            fit_idx[r, i] = idx
+            if r == 0:  # the valid-step mask is round-invariant
+                fit_valid[i] = valid
+
+    ref_epochs = max(cfg.contributor_refresh_epochs, 0)
+    ref_steps_max = max((len(x) // cfg.batch_size
+                         for row in contrib_x for x in row), default=1)
+    ref_idx = np.zeros((R, N, ref_epochs, ref_steps_max, cfg.batch_size), np.int32)
+    ref_valid = np.zeros((R, N, ref_epochs, ref_steps_max), np.float32)
+    if ref_epochs > 0:
+        for i, cs in enumerate(contracts):
+            for j, c in enumerate(cs):
+                idx, valid = _fit_schedule(len(contrib_x[i][j]), ref_epochs,
+                                           cfg.batch_size, cfg.seed + c.device_id,
+                                           ref_steps_max)
+                ref_idx[i, j] = idx
+                ref_valid[i, j] = valid
+
+    # ---- Phase.ACCOUNT constants (static per requester) -------------------
+    num_params = tree_size(template)
+    model_bytes = 4 * num_params if cfg.encrypt else tree_bytes(template)
+    batteries = [s.battery or BatteryState() for s in requesters]
+    e_round = np.array([cost.round_energy(
+        n_contrib=len(cs), num_params=num_params, model_bytes=model_bytes,
+        num_samples=len(spec.own_train[0]), epochs=cfg.epochs,
+        n_devices=len(spec.neighborhood), encrypt=cfg.encrypt)
+        for spec, cs in zip(requesters, contracts)], np.float32)
+    capacity = np.array([b.capacity_j for b in batteries], np.float32)
+    level0 = np.array([b.level for b in batteries], np.float32)
+    eff = np.array([load_efficiency(cost.device.p_train, b.high_load_penalty,
+                                    b.high_load_threshold_w) for b in batteries],
+                   np.float32)
+
+    # ---- the compiled program ---------------------------------------------
+    arrays = dict(
+        contrib_p=contrib_stack, fit_idx=jnp.asarray(fit_idx),
+        level0=jnp.asarray(level0), own_x=jnp.asarray(own_x),
+        own_y=jnp.asarray(own_y), test_x=jnp.asarray(test_x),
+        test_y=jnp.asarray(test_y), test_mask=jnp.asarray(test_mask),
+        fit_valid=jnp.asarray(fit_valid), round_w=jnp.asarray(round_w),
+        e_round=jnp.asarray(e_round), capacity=jnp.asarray(capacity),
+        eff=jnp.asarray(eff),
+        desired_accuracy=jnp.float32(cfg.desired_accuracy),
+        battery_threshold=jnp.float32(cfg.battery_threshold),
+        cx=jnp.asarray(cx), cy=jnp.asarray(cy),
+        ref_idx=jnp.asarray(ref_idx), ref_valid=jnp.asarray(ref_valid))
+    contrib_final, last_p, level, stop_code, rounds_done, traces = _fleet_program(
+        task, use_pallas, ref_epochs > 0, arrays)
+    acc_h, loss_h, bat_h, exec_h = (np.asarray(t) for t in traces)
+    rounds_np = np.asarray(rounds_done)
+    codes_np = np.asarray(stop_code)
+    level_np = np.asarray(level)
+
+    # contributor write-back: like the loop engine's in-place refresh,
+    # each requester's contributor_states end up holding that session's
+    # final (refresh-trained, frozen-once-stopped) contributor params.
+    # Requesters sharing one states dict see the last writer's lanes.
+    if ref_epochs > 0:
+        for i, (spec, cs) in enumerate(zip(requesters, contracts)):
+            for j, c in enumerate(cs):
+                spec.contributor_states[c.device_id]["params"] = (
+                    jax.tree_util.tree_map(lambda l: l[i, j], contrib_final))
+
+    # ---- per-session views (loop-engine-compatible SessionResults) --------
+    sessions = []
+    total_e = 0.0
+    for i, (spec, cs, b0) in enumerate(zip(requesters, contracts, batteries)):
+        r_i = int(rounds_np[i])
+        report = cost.session(
+            rounds=r_i, n_contrib=len(cs), num_params=num_params,
+            model_bytes=model_bytes, num_samples=len(spec.own_train[0]),
+            epochs=cfg.epochs, n_devices=len(spec.neighborhood),
+            encrypt=cfg.encrypt)
+        total_e += report.e_tot
+        battery = dataclasses.replace(b0, level=float(level_np[i]))
+        history = {"accuracy": [float(a) for a in acc_h[:r_i, i]],
+                   "loss": [float(l) for l in loss_h[:r_i, i]],
+                   "battery": [float(l) for l in bat_h[:r_i, i]]}
+        sessions.append(SessionResult(
+            accuracy=history["accuracy"][-1] if history["accuracy"] else 0.0,
+            rounds=r_i, n_contributors=len(cs), report=report, battery=battery,
+            history=history, stop_reason=protocol.stop_reason_name(codes_np[i]),
+            params=jax.tree_util.tree_map(lambda l: l[i], last_p)))
+    return FleetResult(
+        sessions=sessions, rounds=rounds_np, stop_codes=codes_np,
+        accuracy=np.array([s.accuracy for s in sessions], np.float32),
+        battery_level=level_np, total_energy_j=float(total_e),
+        history={"accuracy": acc_h, "loss": loss_h, "battery": bat_h,
+                 "executed": exec_h})

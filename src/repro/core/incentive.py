@@ -70,6 +70,28 @@ def participation_mask(num_devices: int, contracts: Sequence[Contract]) -> np.nd
     return mask
 
 
+def sign_contracts_fleet(neighborhoods: Sequence[Sequence[NeighborDevice]],
+                         offered_incentive: float, n_max: int,
+                         min_battery: float = 0.1):
+    """Handshake phase for a whole *fleet of requesters* at once.
+
+    ``neighborhoods[i]`` is requester *i*'s view of the shared device
+    population (the devices in its radio range).  Returns
+    ``(contracts, mask)`` where ``contracts[i]`` is requester *i*'s
+    ranked contract list and ``mask`` is an (R, n_max) float32 matrix
+    with 1.0 at slot (i, j) iff requester *i* signed a j-th contributor.
+    The mask is the static participation input of the jit fleet engine
+    (``repro.core.fleet``); slot order == contract rank, matching the
+    loop engine's aggregation order.
+    """
+    contracts = [select_contributors(devs, offered_incentive, n_max, min_battery)
+                 for devs in neighborhoods]
+    mask = np.zeros((len(contracts), n_max), np.float32)
+    for i, cs in enumerate(contracts):
+        mask[i, :len(cs)] = 1.0
+    return contracts, mask
+
+
 def make_fleet(num_devices: int, seed: int = 0, p_has_model: float = 0.9) -> List[NeighborDevice]:
     """Randomized nearby-device fleet for simulations."""
     rng = np.random.default_rng(seed)

@@ -1,0 +1,68 @@
+"""Shared EnFed protocol-phase vocabulary (Algorithm 1).
+
+Both execution engines speak this vocabulary:
+
+* ``repro.core.rounds.EnFedSession`` — the **loop engine**: one Python
+  iteration per round, one ``task.fit`` dispatch per contributor.  It is
+  the readable reference oracle, faithful to Algorithm 1 line by line.
+* ``repro.core.fleet`` — the **fleet engine**: many concurrent requester
+  sessions compiled into a single jit program (``vmap`` over requesters,
+  ``lax.scan`` over rounds, masked stopping).
+
+Keeping the phase names, stop reasons, and per-round aggregation weights
+in one module is what makes the two engines provably equivalent: the
+parity tests in ``tests/test_fleet_engine.py`` assert the fleet engine
+reproduces the loop engine phase for phase.
+"""
+
+from __future__ import annotations
+
+import enum
+from typing import Sequence
+
+import numpy as np
+
+
+class Phase(enum.Enum):
+    """The protocol phases of Algorithm 1 / eq. (4), in execution order."""
+
+    HANDSHAKE = "handshake"    # contract selection + AES key exchange
+    COLLECT = "collect"        # receive (and decrypt) contributor updates
+    AGGREGATE = "aggregate"    # eq. (14) masked FedAvg
+    FIT = "fit"                # requester personalizes on its own shard
+    SCORE = "score"            # evaluate against the desired accuracy A_A
+    ACCOUNT = "account"        # eq. (4)-(7) cost roll-up + battery discharge
+    REFRESH = "refresh"        # contributors keep training between rounds
+
+
+ROUND_PHASES = (Phase.COLLECT, Phase.AGGREGATE, Phase.FIT, Phase.SCORE,
+                Phase.ACCOUNT, Phase.REFRESH)
+
+# Stop reasons, encoded as small ints so the fleet engine can carry them
+# as traced per-requester state.  Order encodes check priority: the loop
+# engine tests accuracy before battery, so does the fleet engine.
+STOP_MAX_ROUNDS = 0
+STOP_ACCURACY = 1
+STOP_BATTERY = 2
+
+STOP_REASONS = ("max_rounds", "accuracy_reached", "battery_low")
+
+
+def stop_reason_name(code: int) -> str:
+    return STOP_REASONS[int(code)]
+
+
+def round_weights(n_contrib: int, strategy=None) -> np.ndarray:
+    """Per-round aggregation weights over the *signed* contributors.
+
+    The strategy (``repro.core.topology.AggregationStrategy``) decides
+    which of the signed contributors feed eq. (14) each round; see
+    :func:`repro.core.topology.contributor_round_mask`.  Both engines
+    call this function so their aggregation weights are identical by
+    construction.
+    """
+    from repro.core.topology import contributor_round_mask
+
+    if strategy is None:
+        return np.ones((n_contrib,), np.float32)
+    return contributor_round_mask(n_contrib, strategy)

@@ -1,4 +1,4 @@
-"""EnFed Algorithm 1 — the requesting device's session loop.
+"""EnFed Algorithm 1 — the requesting device's session loop (loop engine).
 
 This is the faithful protocol implementation used by the fleet
 simulator: handshake (contract-theory contributor selection + AES key
@@ -9,6 +9,17 @@ The model updates really are AES-128-CTR encrypted/decrypted through
 ``repro.core.crypto`` and the byte counts feed the eq. (4)-(7) cost
 model, so the reported times/energies account for the same phases the
 paper measures.
+
+Two engines execute this protocol (phase names and stop reasons shared
+via ``repro.core.protocol``):
+
+* the **loop engine** below — one Python iteration per round; the
+  readable reference oracle, and the only engine that runs the real AES
+  transport bytes through ``repro.core.crypto`` each round.
+* the **fleet engine** (``repro.core.fleet``) — many concurrent
+  requester sessions vectorized into one jit program.  Select it with
+  ``EnFedSession.run(engine="fleet")``; its round/stop/battery semantics
+  are parity-tested against this loop in ``tests/test_fleet_engine.py``.
 """
 
 from __future__ import annotations
@@ -20,10 +31,11 @@ from typing import Callable, Dict, List, Optional
 import numpy as np
 import jax
 
-from repro.core import aggregation, crypto
+from repro.core import aggregation, crypto, protocol
 from repro.core.battery import BatteryState
 from repro.core.energy import CostModel, EnergyReport
 from repro.core.incentive import Contract, NeighborDevice, select_contributors
+from repro.core.topology import AggregationStrategy
 from repro.utils.tree import flatten_to_vector, tree_bytes, tree_size, unflatten_from_vector
 
 
@@ -39,6 +51,9 @@ class EnFedConfig:
     encrypt: bool = True
     contributor_refresh_epochs: int = 1  # contributors keep training between rounds
     seed: int = 0
+    # which signed contributors feed eq. (14) each round (None = all, the
+    # paper's virtual-server behaviour); see topology.contributor_round_mask
+    strategy: Optional[AggregationStrategy] = None
 
 
 @dataclasses.dataclass
@@ -76,7 +91,7 @@ class EnFedSession:
         self.cost = cost_model or CostModel()
         self.battery = battery or BatteryState()
 
-    # -- protocol phases ------------------------------------------------------
+    # -- protocol phases (protocol.Phase.HANDSHAKE) ---------------------------
     def handshake(self) -> List[Contract]:
         contracts = select_contributors(self.fleet, self.cfg.offered_incentive,
                                         self.cfg.n_max)
@@ -88,7 +103,7 @@ class EnFedSession:
         return contracts
 
     def _collect_update(self, device_id: int):
-        """Contributor -> (encrypt) -> wire -> (decrypt) -> params."""
+        """Phase.COLLECT: contributor -> (encrypt) -> wire -> (decrypt)."""
         params = self.contributor_states[device_id]["params"]
         if not self.cfg.encrypt:
             return params, tree_bytes(params)
@@ -98,7 +113,7 @@ class EnFedSession:
         return unflatten_from_vector(plain, params), int(cipher.shape[0])
 
     def _refresh_contributors(self, contracts: List[Contract]):
-        """Contributors keep improving their local models between rounds."""
+        """Phase.REFRESH: contributors keep improving between rounds."""
         if self.cfg.contributor_refresh_epochs <= 0:
             return
         for c in contracts:
@@ -108,17 +123,36 @@ class EnFedSession:
                 self.cfg.batch_size, seed=self.cfg.seed + c.device_id)
 
     # -- Algorithm 1 ----------------------------------------------------------
-    def run(self) -> SessionResult:
+    def run(self, engine: str = "loop") -> SessionResult:
+        """Execute the session.  ``engine="loop"`` (default) runs the
+        Python reference loop below; ``engine="fleet"`` compiles this
+        session as a 1-requester fleet through ``repro.core.fleet``."""
+        if engine == "fleet":
+            from repro.core import fleet as fleet_mod
+
+            spec = fleet_mod.RequesterSpec(
+                own_train=self.own_train, own_test=self.own_test,
+                neighborhood=self.fleet,
+                contributor_states=self.contributor_states,
+                battery=self.battery)
+            result = fleet_mod.run_fleet(self.task, [spec], self.cfg,
+                                         cost_model=self.cost)
+            self.battery = result.sessions[0].battery
+            return result.sessions[0]
+        if engine != "loop":
+            raise ValueError(f"unknown engine {engine!r} (loop|fleet)")
+
         cfg = self.cfg
         contracts = self.handshake()
         if not contracts:
             raise RuntimeError("no nearby device agreed to the incentive (N_d < 1)")
         n_c = len(contracts)
+        round_w = protocol.round_weights(n_c, cfg.strategy)
 
         history = {"accuracy": [], "loss": [], "battery": []}
         params = None
         rounds = 0
-        stop = "max_rounds"
+        stop = protocol.STOP_MAX_ROUNDS
         measured_fit_s = 0.0
         model_bytes = 0
 
@@ -130,34 +164,34 @@ class EnFedSession:
                 if params is None and not updates:
                     params = upd  # model init from the first received update
                 updates.append(upd)
-            # aggregate (eq. 14) then personalize on own data
-            global_params = aggregation.fedavg(updates)
+            # Phase.AGGREGATE (eq. 14) then Phase.FIT on own data
+            global_params = aggregation.masked_fedavg(updates, round_w)
             t0 = time.perf_counter()
             params, losses = self.task.fit(global_params, self.own_train,
                                            cfg.epochs, cfg.batch_size,
                                            seed=cfg.seed + r)
             measured_fit_s += time.perf_counter() - t0
+            # Phase.SCORE
             acc = float(self.task.evaluate(params, self.own_test))
             rounds = r + 1
             history["accuracy"].append(acc)
             history["loss"].append(float(losses[-1]))
 
-            # battery bookkeeping for this round
+            # Phase.ACCOUNT: battery bookkeeping for this round
             num_params = tree_size(params)
-            round_report = self.cost.session(
-                rounds=1, n_contrib=n_c, num_params=num_params,
-                model_bytes=model_bytes, num_samples=len(self.own_train[0]),
-                epochs=cfg.epochs, n_devices=len(self.fleet),
-                encrypt=cfg.encrypt)
-            self.battery = self.battery.discharge(round_report.e_tot,
+            e_round = self.cost.round_energy(
+                n_contrib=n_c, num_params=num_params, model_bytes=model_bytes,
+                num_samples=len(self.own_train[0]), epochs=cfg.epochs,
+                n_devices=len(self.fleet), encrypt=cfg.encrypt)
+            self.battery = self.battery.discharge(e_round,
                                                   avg_power_w=self.cost.device.p_train)
             history["battery"].append(self.battery.level)
 
             if acc >= cfg.desired_accuracy:
-                stop = "accuracy_reached"
+                stop = protocol.STOP_ACCURACY
                 break
             if self.battery.below(cfg.battery_threshold):
-                stop = "battery_low"
+                stop = protocol.STOP_BATTERY
                 break
             self._refresh_contributors(contracts)
 
@@ -170,4 +204,4 @@ class EnFedSession:
         return SessionResult(
             accuracy=history["accuracy"][-1], rounds=rounds, n_contributors=n_c,
             report=report, battery=self.battery, history=history,
-            stop_reason=stop, params=params)
+            stop_reason=protocol.stop_reason_name(stop), params=params)

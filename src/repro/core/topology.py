@@ -212,6 +212,40 @@ def aggregate_updates(updates, mesh: Mesh, strategy: AggregationStrategy,
 
 
 # ---------------------------------------------------------------------------
+# contributor-level round masks (requester-centric view, both EnFed engines)
+# ---------------------------------------------------------------------------
+
+
+def contributor_round_mask(n_contrib: int, strategy: AggregationStrategy) -> np.ndarray:
+    """Which *signed* contributors feed the requester's eq. (14) each round.
+
+    The requester-centric analogue of the fleet-scale regimes above, for
+    the session engines (``repro.core.rounds`` loop engine and
+    ``repro.core.fleet`` jit engine).  Contributors are indexed in
+    contract order (best utility first):
+
+    * ``cfl`` / ``dfl_mesh`` / ``none`` — every signed contributor's
+      update reaches the requester (virtual server / full mesh).
+    * ``dfl_ring`` — only the requester's two ring neighbours transmit
+      (contract ranks 0 and n-1; with <= 2 contributors the ring is the
+      mesh).
+    * ``enfed`` — the ``neighborhood_size`` nearest (= best-utility)
+      contributors; 0 means all signed contributors, the paper default.
+    """
+    m = np.ones((n_contrib,), np.float32)
+    if n_contrib <= 0:
+        return m
+    if strategy.kind == "dfl_ring" and n_contrib > 2:
+        m[:] = 0.0
+        m[0] = 1.0
+        m[n_contrib - 1] = 1.0
+    elif strategy.kind == "enfed" and strategy.neighborhood_size:
+        k = min(strategy.neighborhood_size, n_contrib)
+        m[k:] = 0.0
+    return m
+
+
+# ---------------------------------------------------------------------------
 # mixing matrices for the client-stacked trainer
 # ---------------------------------------------------------------------------
 

@@ -33,6 +33,48 @@ def _fedavg_kernel(w_ref, u_ref, o_ref):
     o_ref[...] = num / denom
 
 
+def _fedavg_batched_kernel(w_ref, u_ref, o_ref):
+    """w_ref: (1, N) fp32; u_ref: (1, N, TILE_L); o_ref: (1, TILE_L).
+
+    One requester session per leading grid step — the fleet engine's
+    aggregation hot path runs every session's eq. (14) in one launch.
+    """
+    w = w_ref[0]
+    u = u_ref[0].astype(jnp.float32)
+    num = jnp.einsum("n,nl->l", w, u)
+    denom = jnp.maximum(jnp.sum(w), 1e-9)
+    o_ref[0] = num / denom
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fedavg_batched_pallas(updates, weights, *, interpret: bool = True):
+    """updates: (R, N, L); weights: (R, N). Returns (R, L) fp32.
+
+    The requester-batched form of :func:`fedavg_pallas`: grid
+    (R, L/TILE_L), each step reduces one requester's contributor stack
+    for one parameter tile.  Used by ``repro.core.fleet`` to aggregate
+    every concurrent session in a single kernel launch.
+    """
+    r, n, l = updates.shape
+    pad = (-l) % TILE_L
+    if pad:
+        updates = jnp.pad(updates, ((0, 0), (0, 0), (0, pad)))
+    lp = l + pad
+    grid = (r, lp // TILE_L)
+    out = pl.pallas_call(
+        _fedavg_batched_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, n), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, n, TILE_L), lambda i, j: (i, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, TILE_L), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, lp), jnp.float32),
+        interpret=interpret,
+    )(weights.astype(jnp.float32), updates)
+    return out[:, :l]
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def fedavg_pallas(updates, weights, *, interpret: bool = True):
     """updates: (N, L); weights: (N,). Returns (L,) fp32.

@@ -13,14 +13,46 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.fedavg.kernel import fedavg_pallas
-from repro.kernels.fedavg.ref import fedavg_ref
+from repro.kernels.fedavg.kernel import fedavg_batched_pallas, fedavg_pallas
+from repro.kernels.fedavg.ref import fedavg_batched_ref, fedavg_ref
 
 
 def fedavg_flat(updates, weights, *, use_pallas: bool = True, interpret: bool = True):
     if use_pallas:
         return fedavg_pallas(updates, weights, interpret=interpret)
     return fedavg_ref(updates, weights)
+
+
+def fedavg_flat_batched(updates, weights, *, use_pallas: bool = True,
+                        interpret: bool = True):
+    """updates: (R, N, L); weights: (R, N) -> (R, L) fp32 per-session means."""
+    if use_pallas:
+        return fedavg_batched_pallas(updates, weights, interpret=interpret)
+    return fedavg_batched_ref(updates, weights)
+
+
+def fedavg_tree_batched(stacked_tree, weights, *, use_pallas: bool = True,
+                        interpret: bool = True):
+    """Requester-batched tree aggregation for the fleet engine.
+
+    Leaves of ``stacked_tree`` have shape (R, N, ...): R concurrent
+    requester sessions, N contributor slots each.  Returns the pytree of
+    per-session aggregated params with leaves (R, ...).  All leaves are
+    flattened into one (R, N, L) stream so the whole fleet's eq. (14)
+    is a single kernel launch.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(stacked_tree)
+    r, n = leaves[0].shape[:2]
+    sizes = [int(x.size) // (r * n) for x in leaves]
+    flat = jnp.concatenate(
+        [x.reshape(r, n, -1).astype(jnp.float32) for x in leaves], axis=2)
+    avg = fedavg_flat_batched(flat, weights, use_pallas=use_pallas,
+                              interpret=interpret)
+    out, off = [], 0
+    for leaf, sz in zip(leaves, sizes):
+        out.append(avg[:, off:off + sz].reshape((r,) + leaf.shape[2:]).astype(leaf.dtype))
+        off += sz
+    return jax.tree_util.tree_unflatten(treedef, out)
 
 
 def fedavg_tree(stacked_tree, weights, *, use_pallas: bool = True, interpret: bool = True):

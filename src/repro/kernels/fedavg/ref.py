@@ -14,3 +14,11 @@ def fedavg_ref(updates, weights):
     w = weights.astype(jnp.float32)
     num = jnp.einsum("n,nl->l", w, updates.astype(jnp.float32))
     return num / jnp.maximum(jnp.sum(w), 1e-9)
+
+
+def fedavg_batched_ref(updates, weights):
+    """updates: (R, N, L); weights: (R, N). Requester-batched eq. (14):
+    one independent masked-weighted mean per leading session index."""
+    w = weights.astype(jnp.float32)
+    num = jnp.einsum("rn,rnl->rl", w, updates.astype(jnp.float32))
+    return num / jnp.maximum(jnp.sum(w, axis=1, keepdims=True), 1e-9)

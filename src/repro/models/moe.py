@@ -107,9 +107,13 @@ def _moe_local_sort(params, xt, cfg: ModelConfig):
     gates = jax.nn.softmax(logits, axis=-1)                       # (T, E)
     top_v, top_i = _topk(gates, k)
 
-    e_flat = top_i.reshape(-1)                                     # (T*k,)
-    w_flat = top_v.reshape(-1)
-    tok_flat = jnp.arange(T * k, dtype=jnp.int32) // k
+    # Flatten choice-major (j*T + t) so each expert's queue holds all
+    # 1st-choice tokens (in token order) before any 2nd-choice token —
+    # the same capacity-drop order the einsum/GShard oracle enforces via
+    # its per-j cumsum with carried counts.
+    e_flat = top_i.T.reshape(-1)                                   # (k*T,)
+    w_flat = top_v.T.reshape(-1)
+    tok_flat = jnp.tile(jnp.arange(T, dtype=jnp.int32), k)
 
     order = jnp.argsort(e_flat, stable=True)                       # token order within expert
     e_sorted = e_flat[order]
@@ -176,9 +180,11 @@ def _moe_expert_parallel(params, x, cfg: ModelConfig, mesh):
         logits = xt_l.astype(jnp.float32) @ router
         gates = jax.nn.softmax(logits, axis=-1)
         top_v, top_i = _topk(gates, k)
-        e_flat = top_i.reshape(-1)
-        w_flat = top_v.reshape(-1)
-        tok_flat = jnp.arange(T * k, dtype=jnp.int32) // k
+        # choice-major flatten: match the GShard capacity-drop order
+        # (see _moe_local_sort)
+        e_flat = top_i.T.reshape(-1)
+        w_flat = top_v.T.reshape(-1)
+        tok_flat = jnp.tile(jnp.arange(T, dtype=jnp.int32), k)
 
         order = jnp.argsort(e_flat, stable=True)
         e_sorted = e_flat[order]

@@ -75,6 +75,23 @@ def tree_cast(tree, dtype):
     return jax.tree_util.tree_map(lambda x: x.astype(dtype), tree)
 
 
+def tree_where(cond, a, b):
+    """Leafwise ``jnp.where(cond, a, b)`` with broadcast over trailing dims.
+
+    ``cond`` is a scalar or a vector indexing the leaves' leading axis
+    (e.g. the fleet engine's per-requester active mask); it is reshaped
+    to broadcast against each leaf.  Used for masked state updates inside
+    jit round loops (``jnp.where`` instead of Python ``break``).
+    """
+    cond = jnp.asarray(cond)
+
+    def _where(x, y):
+        c = cond.reshape(cond.shape + (1,) * (x.ndim - cond.ndim)) if x.ndim > cond.ndim else cond
+        return jnp.where(c, x, y)
+
+    return jax.tree_util.tree_map(_where, a, b)
+
+
 def flatten_to_vector(tree):
     """Concatenate all leaves into a single 1-D fp32 vector.
 

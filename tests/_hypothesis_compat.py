@@ -1,0 +1,46 @@
+"""Import-or-skip shim for ``hypothesis``.
+
+Tier-1 must collect and run green on a bare interpreter (CI CPU image,
+fresh checkout) where ``hypothesis`` is not installed.  Property tests
+import ``given``/``settings``/``st`` from here instead of from
+``hypothesis`` directly: when the real library is present they behave
+identically; when it is absent each property test becomes a single
+skipped test with a clear reason instead of a collection error.
+
+Install the real thing with ``pip install -r requirements-dev.txt``.
+"""
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on bare CI images
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Accepts any ``st.<strategy>(...)`` call at decoration time."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
+    def settings(*a, **k):
+        return lambda fn: fn
+
+    def given(*a, **k):
+        def deco(fn):
+            # Replace the property test with a zero-arg skipper so pytest
+            # neither calls it without its hypothesis-driven args nor
+            # mistakes those args for fixtures.
+            def skipper():
+                pytest.skip("hypothesis not installed "
+                            "(pip install -r requirements-dev.txt)")
+
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            return skipper
+
+        return deco

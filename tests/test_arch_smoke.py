@@ -12,6 +12,11 @@ from repro.configs import ARCHS, get_config
 from repro.models import Transformer, cross_entropy_loss
 from repro.optim import adam, apply_updates
 
+# the full architecture sweep is minutes of compile time; tier-1 covers
+# the representative architectures via tests/test_models.py (forward /
+# decode parity), the exhaustive sweep runs with -m slow
+pytestmark = pytest.mark.slow
+
 ARCH_IDS = sorted(ARCHS)
 
 

@@ -6,7 +6,17 @@ import subprocess
 import sys
 import textwrap
 
+import jax.sharding
 import pytest
+
+# each test spawns a fresh interpreter with 8 fake devices and re-jits
+# from scratch; tier-1 skips them, run with -m slow.  launch.mesh needs
+# jax.sharding.AxisType (jax >= 0.5), absent from the pinned toolchain.
+pytestmark = [
+    pytest.mark.slow,
+    pytest.mark.skipif(not hasattr(jax.sharding, "AxisType"),
+                       reason="repro.launch.mesh needs jax.sharding.AxisType (jax>=0.5)"),
+]
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 

@@ -1,0 +1,209 @@
+"""Loop-engine / fleet-engine parity (Algorithm 1, two executions).
+
+The loop engine (`repro.core.rounds.EnFedSession`) is the readable
+reference oracle; the fleet engine (`repro.core.fleet.run_fleet`)
+compiles many concurrent requester sessions into one jit program.  These
+tests assert the fleet engine reproduces the oracle exactly: aggregated
+params (allclose), round counts, stop reasons, and per-round battery
+trajectories — across aggregation strategies, encrypt on/off, and all
+three stop conditions.
+"""
+
+import copy
+
+import numpy as np
+import pytest
+from jax.flatten_util import ravel_pytree
+
+from repro.core import (AggregationStrategy, EnFedConfig, EnFedSession,
+                        RequesterSpec, SupervisedTask, make_fleet, run_fleet)
+from repro.core.battery import BatteryState
+from repro.data import CaloriesDatasetConfig, dirichlet_partition, make_calories_tabular
+from repro.models import MLPClassifier, MLPClassifierConfig
+
+BATCH = 16
+
+
+def _build(n_contrib=3, n_samples=600, seed=0):
+    """One tiny HAR-style problem: shared task, requester shard + test
+    split, a contributor fleet with pre-trained states."""
+    x, y = make_calories_tabular(CaloriesDatasetConfig(num_samples=n_samples))
+    task = SupervisedTask(MLPClassifier(MLPClassifierConfig(8, (16,), 5)), lr=3e-3)
+    parts = dirichlet_partition(y, num_clients=n_contrib + 1, alpha=100.0, seed=seed)
+    shards = [(x[p], y[p]) for p in parts]
+    own_x, own_y = shards[0]
+    n = int(len(own_x) * 0.8)
+    own_train, own_test = (own_x[:n], own_y[:n]), (own_x[n:], own_y[n:])
+    fleet = make_fleet(n_contrib, seed=1, p_has_model=1.0)
+    states = {}
+    for i, dev in enumerate(fleet):
+        dev.reservation_price = 0.4
+        p = task.init(seed=10 + i)
+        p, _ = task.fit(p, shards[i + 1], epochs=1, batch_size=BATCH, seed=i)
+        states[dev.device_id] = {"params": p, "data": shards[i + 1]}
+    return task, own_train, own_test, fleet, states
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return _build()
+
+
+def _run_both(problem, cfg, battery_kw=None):
+    """Run the same session through both engines on fresh copies of the
+    mutable state (contributor params, battery)."""
+    task, own_train, own_test, fleet, states = problem
+    battery_kw = battery_kw or {}
+    loop = EnFedSession(task, own_train, own_test, fleet, copy.deepcopy(states),
+                        cfg, battery=BatteryState(**battery_kw)).run()
+    spec = RequesterSpec(own_train=own_train, own_test=own_test, neighborhood=fleet,
+                         contributor_states=copy.deepcopy(states),
+                         battery=BatteryState(**battery_kw))
+    fleet_res = run_fleet(task, [spec], cfg)
+    return loop, fleet_res.sessions[0]
+
+
+def _assert_parity(loop, fl):
+    assert fl.rounds == loop.rounds
+    assert fl.stop_reason == loop.stop_reason
+    assert fl.n_contributors == loop.n_contributors
+    np.testing.assert_allclose(fl.history["accuracy"], loop.history["accuracy"],
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(fl.history["battery"], loop.history["battery"],
+                               rtol=1e-5, atol=1e-6)
+    lv, _ = ravel_pytree(loop.params)
+    fv, _ = ravel_pytree(fl.params)
+    np.testing.assert_allclose(np.asarray(fv), np.asarray(lv), rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# parity across strategies x encryption
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("strategy,encrypt", [
+    (None, True),                                            # paper default
+    (AggregationStrategy(kind="dfl_mesh"), False),           # full mesh
+    (AggregationStrategy(kind="dfl_ring"), False),           # ring neighbours
+    (AggregationStrategy(kind="cfl"), True),                 # virtual server
+    (AggregationStrategy(kind="enfed", neighborhood_size=2), True),
+], ids=["default-enc", "mesh-plain", "ring-plain", "cfl-enc", "enfed2-enc"])
+def test_fleet_matches_loop_across_strategies(problem, strategy, encrypt):
+    cfg = EnFedConfig(desired_accuracy=0.99, max_rounds=2, epochs=2,
+                      batch_size=BATCH, encrypt=encrypt,
+                      contributor_refresh_epochs=1, strategy=strategy)
+    loop, fl = _run_both(problem, cfg)
+    assert loop.stop_reason == "max_rounds"
+    _assert_parity(loop, fl)
+
+
+# ---------------------------------------------------------------------------
+# stop conditions
+# ---------------------------------------------------------------------------
+
+
+def test_fleet_stops_on_accuracy_like_loop(problem):
+    cfg = EnFedConfig(desired_accuracy=0.05, max_rounds=4, epochs=1,
+                      batch_size=BATCH, encrypt=False,
+                      contributor_refresh_epochs=0)
+    loop, fl = _run_both(problem, cfg)
+    assert loop.stop_reason == "accuracy_reached" and loop.rounds == 1
+    _assert_parity(loop, fl)
+
+
+def test_fleet_stops_on_battery_like_loop(problem):
+    # tiny battery: one round's energy drains it below the threshold
+    cfg = EnFedConfig(desired_accuracy=0.99, max_rounds=4, epochs=1,
+                      batch_size=BATCH, encrypt=False,
+                      contributor_refresh_epochs=0)
+    loop, fl = _run_both(problem, cfg, battery_kw=dict(capacity_j=0.2, level=0.3))
+    assert loop.stop_reason == "battery_low"
+    _assert_parity(loop, fl)
+
+
+def test_fleet_writes_back_refreshed_contributors(problem):
+    """Side-effect parity: after a session with contributor refresh, both
+    engines leave the SAME refreshed params in contributor_states."""
+    task, own_train, own_test, fleet, states = problem
+    cfg = EnFedConfig(desired_accuracy=0.99, max_rounds=2, epochs=1,
+                      batch_size=BATCH, encrypt=False,
+                      contributor_refresh_epochs=1)
+    loop_states = copy.deepcopy(states)
+    EnFedSession(task, own_train, own_test, fleet, loop_states, cfg).run()
+    fleet_states = copy.deepcopy(states)
+    run_fleet(task, [RequesterSpec(own_train, own_test, fleet, fleet_states)], cfg)
+    for dev_id, st in loop_states.items():
+        before, _ = ravel_pytree(states[dev_id]["params"])
+        lv, _ = ravel_pytree(st["params"])
+        fv, _ = ravel_pytree(fleet_states[dev_id]["params"])
+        assert not np.allclose(np.asarray(lv), np.asarray(before)), "refresh ran"
+        np.testing.assert_allclose(np.asarray(fv), np.asarray(lv),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_session_fleet_engine_flag(problem):
+    """EnFedSession.run(engine='fleet') routes through the fleet engine."""
+    task, own_train, own_test, fleet, states = problem
+    cfg = EnFedConfig(desired_accuracy=0.99, max_rounds=1, epochs=1,
+                      batch_size=BATCH, encrypt=False,
+                      contributor_refresh_epochs=0)
+    sess = EnFedSession(task, own_train, own_test, fleet, copy.deepcopy(states), cfg)
+    res = sess.run(engine="fleet")
+    ref = EnFedSession(task, own_train, own_test, fleet, copy.deepcopy(states), cfg).run()
+    assert res.rounds == ref.rounds and res.stop_reason == ref.stop_reason
+    np.testing.assert_allclose(res.accuracy, ref.accuracy, rtol=1e-5)
+    assert sess.battery.level == pytest.approx(ref.battery.level, rel=1e-5)
+    with pytest.raises(ValueError):
+        sess.run(engine="warp")
+
+
+# ---------------------------------------------------------------------------
+# many concurrent sessions in one program
+# ---------------------------------------------------------------------------
+
+
+def test_fleet_runs_64_concurrent_sessions(problem):
+    """>= 64 requester sessions advance in ONE jit program, and lanes
+    match per-session loop-engine runs spot-checked at both ends."""
+    task, own_train, own_test, fleet, states = problem
+    cfg = EnFedConfig(desired_accuracy=0.99, max_rounds=1, epochs=1,
+                      batch_size=BATCH, encrypt=False,
+                      contributor_refresh_epochs=0)
+    R = 64
+    rng = np.random.default_rng(0)
+    specs = []
+    for i in range(R):
+        # distinct shards per requester: rotate + subsample the own shard
+        sel = rng.permutation(len(own_train[0]))[:max(BATCH * 2, len(own_train[0]) // 2)]
+        specs.append(RequesterSpec(
+            own_train=(own_train[0][sel], own_train[1][sel]),
+            own_test=own_test, neighborhood=fleet,
+            contributor_states=copy.deepcopy(states), battery=BatteryState()))
+    result = run_fleet(task, specs, cfg)
+    assert len(result.sessions) == R
+    assert result.rounds.shape == (R,) and (result.rounds == 1).all()
+    assert result.history["accuracy"].shape == (cfg.max_rounds, R)
+    assert result.total_energy_j > 0
+
+    for lane in (0, R - 1):
+        loop = EnFedSession(task, (specs[lane].own_train[0], specs[lane].own_train[1]),
+                            own_test, fleet, copy.deepcopy(states), cfg).run()
+        fl = result.sessions[lane]
+        assert fl.rounds == loop.rounds and fl.stop_reason == loop.stop_reason
+        np.testing.assert_allclose(fl.history["accuracy"], loop.history["accuracy"],
+                                   rtol=1e-5, atol=1e-6)
+        lv, _ = ravel_pytree(loop.params)
+        fv, _ = ravel_pytree(fl.params)
+        np.testing.assert_allclose(np.asarray(fv), np.asarray(lv),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_fleet_rejects_empty_and_underfilled():
+    with pytest.raises(ValueError):
+        run_fleet(None, [])
+    task, own_train, own_test, fleet, states = _build(n_contrib=2, n_samples=300)
+    tiny = (own_train[0][:4], own_train[1][:4])  # < one batch
+    cfg = EnFedConfig(max_rounds=1, epochs=1, batch_size=BATCH, encrypt=False,
+                      contributor_refresh_epochs=0)
+    with pytest.raises(ValueError):
+        run_fleet(task, [RequesterSpec(tiny, own_test, fleet, states)], cfg)

@@ -1,5 +1,7 @@
 """Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracles,
-swept across shapes and dtypes."""
+swept across shapes and dtypes — including non-multiple-of-block shapes
+for every kernel (fedavg TILE_L, lstm_cell batch/hidden tiles, aes_ctr
+BLOCK_TILE, quantize TILE)."""
 
 import jax
 import jax.numpy as jnp
@@ -41,6 +43,58 @@ def test_fedavg_tree_roundtrip():
     avg = fedavg_tree(tree, w)
     np.testing.assert_allclose(np.asarray(avg["a"]),
                                np.asarray(tree["a"]).mean(0), rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("r,n,l", [(1, 1, 17), (4, 3, 2048), (8, 5, 3001),
+                                   (64, 4, 777)])
+def test_fedavg_batched_matches_ref(r, n, l):
+    """The fleet engine's hot path: every session's eq. (14) in one
+    launch, including padded (zero-weight) contributor slots and
+    non-multiple-of-TILE_L lengths."""
+    from repro.kernels.fedavg.kernel import fedavg_batched_pallas
+    from repro.kernels.fedavg.ref import fedavg_batched_ref
+    u = jnp.asarray(RNG.normal(size=(r, n, l)).astype(np.float32))
+    w = jnp.asarray((RNG.random((r, n)) > 0.3).astype(np.float32)
+                    * RNG.random((r, n)).astype(np.float32))
+    got = fedavg_batched_pallas(u, w)
+    want = fedavg_batched_ref(u, w)
+    assert got.shape == (r, l)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_fedavg_batched_each_session_independent():
+    """Row i of the batched kernel == the single-session kernel on row i."""
+    from repro.kernels.fedavg.kernel import fedavg_batched_pallas, fedavg_pallas
+    u = jnp.asarray(RNG.normal(size=(3, 4, 513)).astype(np.float32))
+    w = jnp.asarray(RNG.random((3, 4)).astype(np.float32))
+    got = fedavg_batched_pallas(u, w)
+    for i in range(3):
+        np.testing.assert_allclose(np.asarray(got[i]),
+                                   np.asarray(fedavg_pallas(u[i], w[i])),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_fedavg_tree_batched_matches_list_form():
+    """fedavg_tree_batched (fleet engine) == masked_fedavg per session."""
+    from repro.core.aggregation import masked_fedavg
+    from repro.kernels.fedavg.ops import fedavg_tree_batched
+    R, N = 3, 4
+    trees = [[{"w": jnp.asarray(RNG.normal(size=(6, 3)).astype(np.float32)),
+               "b": jnp.asarray(RNG.normal(size=(5,)).astype(np.float32))}
+              for _ in range(N)] for _ in range(R)]
+    w = np.zeros((R, N), np.float32)
+    w[:, :2] = 1.0  # only the first two contributors participate
+    stacked = jax.tree_util.tree_map(
+        lambda *leaves: jnp.stack(leaves),
+        *[jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *row) for row in trees])
+    got = fedavg_tree_batched(stacked, jnp.asarray(w))
+    for i in range(R):
+        want = masked_fedavg(trees[i], list(w[i]))
+        np.testing.assert_allclose(np.asarray(got["w"][i]), np.asarray(want["w"]),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(got["b"][i]), np.asarray(want["b"]),
+                                   rtol=1e-5, atol=1e-6)
 
 
 # ---------------------------------------------------------------------------
@@ -100,6 +154,25 @@ def test_quantize_matches_ref_on_tile_multiple():
     qr, sr = quantize_ref(v)
     np.testing.assert_array_equal(np.asarray(qk), np.asarray(qr))
     np.testing.assert_allclose(np.asarray(sk), np.asarray(sr), rtol=1e-6)
+
+
+@pytest.mark.parametrize("l", [100, 1024 + 1, 3 * 1024 - 7])
+def test_quantize_matches_ref_on_non_tile_multiple(l):
+    """Kernel zero-pads to TILE; the ref on the explicitly padded input
+    must agree, and the dequantized head must round-trip the original."""
+    from repro.kernels.quantize.kernel import dequantize_pallas, quantize_pallas
+    from repro.kernels.quantize.ref import TILE, dequantize_ref, quantize_ref
+    v = jnp.asarray(RNG.normal(size=(l,)).astype(np.float32))
+    pad = (-l) % TILE
+    vp = jnp.pad(v, (0, pad))
+    qk, sk = quantize_pallas(v)
+    qr, sr = quantize_ref(vp)
+    np.testing.assert_array_equal(np.asarray(qk), np.asarray(qr))
+    np.testing.assert_allclose(np.asarray(sk), np.asarray(sr), rtol=1e-6)
+    back_k = dequantize_pallas(qk, sk, l)
+    back_r = dequantize_ref(qr, sr)[:l]
+    np.testing.assert_allclose(np.asarray(back_k), np.asarray(back_r),
+                               rtol=1e-6, atol=1e-7)
 
 
 # ---------------------------------------------------------------------------

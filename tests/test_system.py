@@ -68,6 +68,7 @@ def test_enfed_encrypted_equals_plain_aggregation(har_setup):
     np.testing.assert_allclose(r1.history["accuracy"], r2.history["accuracy"], atol=1e-3)
 
 
+@pytest.mark.slow  # full train driver re-jits a transformer from scratch
 def test_train_driver_end_to_end(tmp_path):
     from repro.launch import train as train_mod
     rc = train_mod.main(["--arch", "xlstm-125m", "--preset", "smoke",
