@@ -1,26 +1,43 @@
-"""Fleet-engine scaling benchmark: rounds/s and simulated energy as the
-number of concurrent requester sessions grows 8 -> 512.
+"""Fleet-engine scaling benchmark: rounds/s, staged host->device bytes,
+and simulated energy as the number of concurrent requester sessions
+grows 8 -> 512 — emitted as ``BENCH_fleet.json`` so every PR leaves a
+perf trail.
 
 For each fleet size R the jit fleet engine (``repro.core.fleet``) runs
 all R sessions as ONE compiled program; the loop engine
 (``EnFedSession.run``) is timed on a few sessions and extrapolated to
 the same R (its cost is linear in sessions by construction — one Python
-round loop each).  The headline metric is session-rounds/s; the
-crossover (fleet engine beating the loop engine's per-session
-wall-clock) lands well below R=32 on CPU.
+round loop each).  The headline metrics:
+
+* **session-rounds/s** (warm, cached jit) — the scaling number;
+* **staged index bytes** — what the host ships to the device for
+  minibatch scheduling.  The PR 1 engine staged a
+  (max_rounds, R, epochs, steps, batch) int32 tensor (plus the
+  contributor-refresh plan); the PR 2 engine derives schedules on
+  device from counters, staging only (R,) shard sizes and (R, N)
+  seeds.  Both numbers land in the JSON as before/after.
+
+``--smoke`` additionally runs a 1-session fleet against the loop-engine
+oracle and exits non-zero on any parity regression (rounds, stop
+reason, accuracy history, final params) — the CI gate.
 
   PYTHONPATH=src python -m benchmarks.fleet_bench [--sizes 8,32,128,512]
+      [--smoke] [--out BENCH_fleet.json]
 """
 
 from __future__ import annotations
 
 import argparse
+import copy
+import json
+import sys
 import time
 
 import numpy as np
 
 from repro.core import (EnFedConfig, EnFedSession, RequesterSpec,
                         SupervisedTask, make_fleet, run_fleet)
+from repro.core import schedule
 from repro.data import CaloriesDatasetConfig, dirichlet_partition, make_calories_tabular
 from repro.models import MLPClassifier, MLPClassifierConfig
 
@@ -58,22 +75,80 @@ def _make_specs(R: int, own_train, own_test, fleet, states, seed: int = 0):
     return specs
 
 
-def run(verbose: bool = True, sizes=(8, 32, 128, 512)):
+def _pr1_index_bytes(cfg: EnFedConfig, R: int, specs, states) -> int:
+    """Bytes the PR 1 engine staged for minibatch scheduling: the
+    host-materialized (max_rounds, R, epochs, steps, batch) fit_idx +
+    fit_valid + the (R, N, ref_epochs, ref_steps, batch) refresh plan."""
+    steps = max(schedule.fit_steps(len(s.own_train[0]), cfg.batch_size)
+                for s in specs)
+    fit_idx = 4 * cfg.max_rounds * R * cfg.epochs * steps * cfg.batch_size
+    fit_valid = 4 * R * cfg.epochs * steps
+    ref = 0
+    if cfg.contributor_refresh_epochs > 0:
+        ref_steps = max(schedule.fit_steps(len(st["data"][0]), cfg.batch_size)
+                        for st in states.values())
+        n = len(states)
+        ref = (4 * R * n * cfg.contributor_refresh_epochs * ref_steps
+               * (cfg.batch_size + 1))
+    return fit_idx + fit_valid + ref
+
+
+def _parity_smoke(task, fleet, states, own_train, own_test, cfg) -> dict:
+    """1-session fleet vs the loop-engine oracle; the CI regression gate."""
+    loop = EnFedSession(task, own_train, own_test, fleet,
+                        copy.deepcopy(states), cfg).run()
+    fl = run_fleet(task, [RequesterSpec(own_train, own_test, fleet,
+                                        copy.deepcopy(states))],
+                   cfg).sessions[0]
+    if fl.rounds != loop.rounds or fl.stop_reason != loop.stop_reason:
+        # histories have different lengths; report the structural
+        # divergence instead of diffing them
+        return {"pass": False, "rounds": (loop.rounds, fl.rounds),
+                "stop": (loop.stop_reason, fl.stop_reason),
+                "max_param_diff": None, "max_accuracy_diff": None}
+    from jax.flatten_util import ravel_pytree
+    lv, _ = ravel_pytree(loop.params)
+    fv, _ = ravel_pytree(fl.params)
+    max_diff = float(np.abs(np.asarray(lv) - np.asarray(fv)).max())
+    acc_diff = float(np.abs(np.asarray(loop.history["accuracy"])
+                            - np.asarray(fl.history["accuracy"])).max())
+    ok = max_diff < 1e-4 and acc_diff < 1e-5
+    return {"pass": bool(ok), "rounds": (loop.rounds, fl.rounds),
+            "stop": (loop.stop_reason, fl.stop_reason),
+            "max_param_diff": max_diff, "max_accuracy_diff": acc_diff}
+
+
+def run(verbose: bool = True, sizes=(8, 32, 128, 512), smoke: bool = False,
+        out: str | None = None):
+    import jax
+
     task, fleet, states, own_train, own_test = _build_problem()
     cfg = EnFedConfig(desired_accuracy=0.999, max_rounds=3, epochs=1,
                       batch_size=BATCH, encrypt=False,
                       contributor_refresh_epochs=1)
+    report = {"backend": jax.default_backend(),
+              "config": {"max_rounds": cfg.max_rounds, "epochs": cfg.epochs,
+                         "batch_size": cfg.batch_size, "n_contrib": N_CONTRIB},
+              "results": []}
+
+    if smoke:
+        smoke_cfg = EnFedConfig(desired_accuracy=0.99, max_rounds=2, epochs=1,
+                                batch_size=BATCH, encrypt=False,
+                                contributor_refresh_epochs=1)
+        report["parity_smoke"] = _parity_smoke(task, fleet, states, own_train,
+                                               own_test, smoke_cfg)
+        if verbose:
+            print(f"[parity smoke] {report['parity_smoke']}")
 
     # loop-engine baseline: seconds per session, measured once (cost is
     # per-session linear: one Python dispatch chain per session)
     loop_specs = _make_specs(LOOP_SAMPLE_SESSIONS, own_train, own_test, fleet, states)
     t0 = time.perf_counter()
-    loop_rounds = 0
     for spec in loop_specs:
-        res = EnFedSession(task, spec.own_train, spec.own_test, fleet,
-                           {k: dict(v) for k, v in states.items()}, cfg).run()
-        loop_rounds += res.rounds
+        EnFedSession(task, spec.own_train, spec.own_test, fleet,
+                     {k: dict(v) for k, v in states.items()}, cfg).run()
     loop_s_per_session = (time.perf_counter() - t0) / LOOP_SAMPLE_SESSIONS
+    report["loop_baseline_s_per_session"] = loop_s_per_session
 
     rows = []
     for R in sizes:
@@ -87,18 +162,63 @@ def run(verbose: bool = True, sizes=(8, 32, 128, 512)):
         total_rounds = int(result.rounds.sum())
         rps = total_rounds / wall_warm
         loop_equiv_s = loop_s_per_session * R
+        before_idx = _pr1_index_bytes(cfg, R, specs, states)
+        report["results"].append({
+            "R": R, "cold_s": round(wall, 4), "warm_s": round(wall_warm, 4),
+            "session_rounds": total_rounds, "rounds_per_s": round(rps, 2),
+            "simulated_energy_j": round(result.total_energy_j, 2),
+            "loop_equiv_s": round(loop_equiv_s, 2),
+            "speedup_vs_loop": round(loop_equiv_s / wall_warm, 2),
+            "staged_host_bytes": result.staged_host_bytes,
+            "staged_index_bytes_after": result.staged_index_bytes,
+            "staged_index_bytes_before_pr1": before_idx,
+            "index_bytes_reduction_x": round(
+                before_idx / max(result.staged_index_bytes, 1), 1)})
         rows.append((f"fleet/R={R}", wall_warm * 1e6 / R,
                      f"rounds/s={rps:.1f} E={result.total_energy_j:.1f}J "
                      f"loop_equiv={loop_equiv_s:.1f}s speedup={loop_equiv_s / wall_warm:.1f}x"))
         if verbose:
             print(f"[fleet R={R:4d}] warm {wall_warm:6.2f}s (cold {wall:6.2f}s) | "
                   f"{total_rounds} session-rounds -> {rps:7.1f} rounds/s | "
-                  f"simulated E={result.total_energy_j:9.1f} J | "
+                  f"staged {result.staged_host_bytes / 1e6:7.2f} MB "
+                  f"(index bytes {result.staged_index_bytes} vs PR1 {before_idx}) | "
                   f"loop engine would need ~{loop_equiv_s:6.1f}s "
                   f"({loop_equiv_s / wall_warm:5.1f}x slower)")
     if verbose:
         print(f"[loop baseline] {loop_s_per_session:.2f} s/session "
               f"({LOOP_SAMPLE_SESSIONS} sessions measured)")
+
+    # early-exit demo: a fleet whose sessions all hit the accuracy target
+    # in round 1 executes O(1) round bodies even with a 16-round budget
+    # (the PR 1 engine scanned all 16 regardless).
+    R_demo = min(max(sizes), 128)
+    ee_cfg = EnFedConfig(desired_accuracy=0.05, max_rounds=16, epochs=1,
+                         batch_size=BATCH, encrypt=False,
+                         contributor_refresh_epochs=1)
+    ee_specs = _make_specs(R_demo, own_train, own_test, fleet, states)
+    run_fleet(task, ee_specs, ee_cfg)                  # compile
+    t0 = time.perf_counter()
+    ee = run_fleet(task, ee_specs, ee_cfg)
+    ee_warm = time.perf_counter() - t0
+    bodies = int(ee.history["round_executed"].sum())
+    report["early_exit_demo"] = {
+        "R": R_demo, "max_rounds": ee_cfg.max_rounds,
+        "round_bodies_executed": bodies, "warm_s": round(ee_warm, 4),
+        "rounds_per_session": int(ee.rounds.max())}
+    if verbose:
+        print(f"[early exit R={R_demo}] all sessions stop in round "
+              f"{int(ee.rounds.max())}: {bodies}/{ee_cfg.max_rounds} round "
+              f"bodies executed, warm {ee_warm:.2f}s")
+
+    if out:
+        with open(out, "w") as f:
+            json.dump(report, f, indent=2)
+        if verbose:
+            print(f"[bench] wrote {out}")
+    if smoke and not report["parity_smoke"]["pass"]:
+        print("PARITY REGRESSION: fleet engine diverged from the loop oracle",
+              file=sys.stderr)
+        sys.exit(1)
     return rows
 
 
@@ -106,8 +226,13 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--sizes", default="8,32,128,512",
                     help="comma list of fleet sizes to sweep")
+    ap.add_argument("--smoke", action="store_true",
+                    help="run the fleet-vs-loop parity gate; exit 1 on regression")
+    ap.add_argument("--out", default="BENCH_fleet.json",
+                    help="JSON report path ('' disables)")
     args = ap.parse_args()
-    run(sizes=tuple(int(s) for s in args.sizes.split(",")))
+    run(sizes=tuple(int(s) for s in args.sizes.split(",")),
+        smoke=args.smoke, out=args.out or None)
 
 
 if __name__ == "__main__":

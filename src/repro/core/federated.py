@@ -21,11 +21,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import aggregation, topology
+from repro.core import aggregation, schedule, topology
 from repro.core.energy import CostModel, EnergyReport
-from repro.models.classifiers import accuracy as _accuracy, cross_entropy_loss
+from repro.models.classifiers import (accuracy as _accuracy,
+                                      masked_cross_entropy_loss)
 from repro.optim import adam, apply_updates
-from repro.utils.tree import tree_size, tree_bytes
+from repro.utils.tree import tree_size, tree_bytes, tree_where
 
 
 # ---------------------------------------------------------------------------
@@ -44,31 +45,49 @@ class SupervisedTask:
     def init(self, seed: int = 0):
         return self.model.init(jax.random.PRNGKey(seed))
 
-    def _step(self, params, opt_state, xb, yb):
+    def _step(self, params, opt_state, xb, yb, wb):
+        """One masked Adam step — the EXACT math both engines run.
+
+        ``wb`` is the per-sample weight row from the derived schedule
+        (``repro.core.schedule``); a step whose weights are all zero is a
+        no-op (the fleet engine's padded lanes hit this path).
+        """
         def loss_fn(p):
-            return cross_entropy_loss(self.model.forward(p, xb), yb)
+            return masked_cross_entropy_loss(self.model.forward(p, xb), yb, wb)
 
         loss, grads = jax.value_and_grad(loss_fn)(params)
-        updates, opt_state = self._opt.update(grads, opt_state, params)
-        return apply_updates(params, updates), opt_state, loss
+        updates, new_opt = self._opt.update(grads, opt_state, params)
+        new_params = apply_updates(params, updates)
+        take = jnp.sum(wb) > 0
+        return (tree_where(take, new_params, params),
+                tree_where(take, new_opt, opt_state),
+                jnp.where(take, loss, 0.0))
 
     def fit(self, params, data, epochs: int, batch_size: int, seed: int = 0):
-        """Epochs of Adam over shuffled minibatches. Returns (params, losses)."""
+        """Epochs of Adam over shuffled minibatches. Returns (params, losses).
+
+        Batches come from the counter-based derived schedule
+        (``repro.core.schedule.minibatch_plan``), the same derivation the
+        fleet engine evaluates inside its compiled round loop — so the
+        two engines see identical batches by construction.  Shards
+        smaller than one batch run as a single padded step whose padding
+        carries zero weight.
+        """
         x, y = data
-        n = (len(x) // batch_size) * batch_size
-        if n == 0:  # shard smaller than one batch: single full-batch step
-            n, batch_size = len(x), len(x)
+        idx, w = schedule.minibatch_plan(seed, epochs=epochs, n=len(x),
+                                         batch=batch_size)
+        idx, w = np.asarray(idx), np.asarray(w)
+        steps = idx.shape[1]
         opt_state = self._opt.init(params)
         losses = []
-        rng = np.random.default_rng(seed)
         for e in range(epochs):
-            idx = rng.permutation(len(x))[:n]
             ep_loss = 0.0
-            for s in range(0, n, batch_size):
-                sel = idx[s:s + batch_size]
-                params, opt_state, loss = self._fit_step(params, opt_state, x[sel], y[sel])
+            for s in range(steps):
+                sel = idx[e, s]
+                params, opt_state, loss = self._fit_step(
+                    params, opt_state, x[sel], y[sel], w[e, s])
                 ep_loss += float(loss)
-            losses.append(ep_loss / max(n // batch_size, 1))
+            losses.append(ep_loss / steps)
         return params, losses
 
     def evaluate(self, params, data) -> float:

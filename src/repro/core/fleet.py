@@ -1,29 +1,55 @@
 """Jit-native EnFed fleet engine: many concurrent requester sessions,
-one compiled program.
+one compiled program, allocation- and transfer-lean.
 
 The loop engine (``repro.core.rounds.EnFedSession``) executes Algorithm 1
 as Python control flow — one ``task.fit`` dispatch per contributor per
 round — which caps simulations at a handful of sessions.  This module
 ports the same protocol onto stacked arrays so an entire fleet of
-requesting devices advances together:
+requesting devices advances together.  Three design rules keep the hot
+path lean at R=512 and beyond:
 
-* **handshake** — contract selection stays host-side (it is cheap,
-  deterministic numpy); it emits the (R, N_max) contract mask and, with
-  the session strategy (``topology.contributor_round_mask``), the static
-  per-round aggregation weights.
-* **collect + aggregate** — contributor params carry a leading
-  (R, N_max) axis; eq. (14) for every session is ONE launch of the
-  batched Pallas ``fedavg`` kernel (``repro.kernels.fedavg``).
-* **fit / refresh** — minibatch index schedules are precomputed
-  host-side from the same ``numpy`` RNG seeds the loop engine uses, so
-  both engines see identical batches; the epochs×steps Adam loop is a
-  ``lax.scan`` and requesters advance under ``vmap``.
-* **score + account** — accuracy/battery stopping conditions are
-  ``jnp.where`` masks over per-requester lanes instead of Python
-  ``break``; battery is traced per-device state discharged by the
-  precomputed eq. (5) per-round constant (``CostModel.round_energy``).
-* **rounds** — ``lax.scan`` over the round axis; a stopped session's
-  lanes freeze (params, battery, round count, stop code).
+* **Flat-parameter round state.**  Contributor params are raveled ONCE
+  at setup (``repro.utils.tree.tree_ravel``) into a single (R, N, P)
+  fp32 buffer — R requester sessions, N contributor slots, P flat model
+  parameters.  That buffer IS the round state: the batched Pallas
+  ``fedavg`` kernel (eq. 14 for every session, one launch) reads it
+  directly, masked freezes are plain ``jnp.where`` on it, and it is
+  donated to XLA (``donate_argnames``) so the round loop updates it in
+  place.  Pytrees reappear only inside the per-device ``fit_one`` /
+  ``eval_one`` views (``tree_unravel`` on a lane's (P,) slice) and at
+  the host boundary when results are unpacked.
+
+* **On-device minibatch scheduling.**  No index tensors are staged:
+  batches come from the counter-based derived schedule
+  (``repro.core.schedule``), evaluated inside the compiled round loop
+  from the traced round number.  The loop engine's ``SupervisedTask.fit``
+  evaluates the SAME derivation host-side, so both engines see identical
+  batches by construction; prefix-stable per-sample scores make one
+  traced program serve requesters with different shard sizes, including
+  shards smaller than one batch (single padded step, zero-weight
+  padding).  The old host plan was a (max_rounds, R, epochs, steps,
+  batch) int32 tensor — at R=512 it dominated host RAM and host->device
+  bytes; it no longer exists.
+
+* **Early-exit rounds, no dead work.**  The round loop is a chunked
+  ``lax.while_loop``: after every ``round_chunk`` rounds the program
+  checks whether any lane is still active and stops outright when the
+  whole fleet is done, so a fleet that converges by round k executes
+  O(k) round bodies, not ``max_rounds``.  Inside a chunk, each round
+  body sits under ``lax.cond`` — once every lane has stopped (or the
+  chunk runs past ``max_rounds``) the fit/refresh compute is skipped,
+  not computed-and-discarded; the contributor refresh is additionally
+  gated on any lane surviving into the next round.  Because traces are
+  preallocated (max_rounds, R) buffers written in place, early exit
+  leaves the untouched tail at zero — ``history["round_executed"]``
+  records exactly which round bodies ran.
+
+Phase mapping (vocabulary in ``repro.core.protocol``): handshake stays
+host-side (cheap, deterministic numpy) and emits the (R, N) contract
+mask + static per-round aggregation weights; collect+aggregate is the
+batched fedavg launch on the flat buffer; fit/score/account are vmapped
+masked lanes; refresh trains contributors on their own shards between
+rounds (frozen once their requester stops).
 
 Parity with the loop engine — same aggregated params, round counts, stop
 reasons, and battery trajectories — is asserted by
@@ -31,11 +57,8 @@ reasons, and battery trajectories — is asserted by
 encrypt on/off.  The AES-128-CTR transport is bit-exact (validated in
 the loop engine / kernel tests), so the fleet engine models encryption
 in the cost domain (byte counts -> eq. (4)-(7) -> battery) without
-re-running the cipher per round.
-
-Constraints: every requester/contributor shard must hold at least
-``cfg.batch_size`` samples (the loop engine's sub-batch fallback is not
-vectorized), and all sessions share one ``SupervisedTask``.
+re-running the cipher per round.  All sessions share one
+``SupervisedTask``.
 """
 
 from __future__ import annotations
@@ -48,15 +71,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import protocol
+from repro.core import protocol, schedule
 from repro.core.battery import BatteryState, discharge_level, load_efficiency
 from repro.core.energy import CostModel
 from repro.core.incentive import NeighborDevice, sign_contracts_fleet
 from repro.core.rounds import EnFedConfig, SessionResult
-from repro.kernels.fedavg.ops import fedavg_tree_batched
-from repro.models.classifiers import cross_entropy_loss
+from repro.kernels.fedavg.ops import fedavg_flat_batched
+from repro.models.classifiers import masked_cross_entropy_loss
 from repro.optim import apply_updates
-from repro.utils.tree import tree_bytes, tree_size, tree_where
+from repro.utils.tree import (tree_bytes, tree_ravel, tree_size, tree_unravel,
+                              tree_where)
 
 
 @dataclasses.dataclass
@@ -80,24 +104,10 @@ class FleetResult:
     accuracy: np.ndarray        # (R,) final accuracy
     battery_level: np.ndarray   # (R,) final battery fraction
     total_energy_j: float       # summed eq. (5) energy across the fleet
-    history: Dict[str, np.ndarray]  # (max_rounds, R) traces + executed mask
-
-
-def _fit_schedule(n: int, epochs: int, batch: int, seed: int, steps_max: int):
-    """The loop engine's minibatch plan, materialized: same numpy RNG,
-    same permutation, same truncation to n//batch full batches."""
-    steps = n // batch
-    if steps < 1:
-        raise ValueError(
-            f"fleet engine needs >= batch_size samples per shard (got {n} < {batch})")
-    rng = np.random.default_rng(seed)
-    idx = np.zeros((epochs, steps_max, batch), np.int32)
-    valid = np.zeros((epochs, steps_max), np.float32)
-    for e in range(epochs):
-        perm = rng.permutation(n)[:steps * batch].astype(np.int32)
-        idx[e, :steps] = perm.reshape(steps, batch)
-        valid[e, :steps] = 1.0
-    return idx, valid
+    history: Dict[str, np.ndarray]  # (max_rounds, R) traces; "round_executed"
+                                    # is (max_rounds,) — 1 where a round body ran
+    staged_host_bytes: int = 0  # host->device bytes staged for the program
+    staged_index_bytes: int = 0  # subset that is minibatch-schedule metadata
 
 
 def _pad_stack(arrays, pad_len: int):
@@ -121,8 +131,15 @@ def _stack_trees(trees, template=None):
                                   *filled)
 
 
-@functools.partial(jax.jit, static_argnames=("task", "use_pallas", "do_refresh"))
-def _fleet_program(task, use_pallas, do_refresh, arrays):
+@functools.partial(
+    jax.jit,
+    static_argnames=("task", "use_pallas", "interpret", "do_refresh", "chunk",
+                     "max_rounds", "epochs", "batch", "steps_max",
+                     "ref_epochs", "ref_steps", "spec"),
+    donate_argnames=("contrib_flat",))
+def _fleet_program(task, use_pallas, interpret, do_refresh, chunk, max_rounds,
+                   epochs, batch, steps_max, ref_epochs, ref_steps, spec,
+                   contrib_flat, arrays):
     """The whole fleet's Algorithm 1 as one compiled program.
 
     Module-level so the jit cache is shared across ``run_fleet`` calls:
@@ -131,47 +148,85 @@ def _fleet_program(task, use_pallas, do_refresh, arrays):
     encryption, or stopping thresholds, all of which are traced inputs
     (``round_w``, ``e_round``, ``desired_accuracy``...) — reuses the
     compiled executable instead of re-tracing per call.
+
+    ``contrib_flat`` (R, N, P) is the donated flat round state;
+    ``spec`` is the static :func:`repro.utils.tree.tree_ravel` spec that
+    recovers per-device parameter pytrees from (P,) lane views.
     """
     model, opt = task.model, task._opt
-    R, N = arrays["round_w"].shape
-    _, _, ref_epochs, ref_steps, _ = arrays["ref_idx"].shape
+    R, N, P = contrib_flat.shape
+    n_pad = arrays["own_x"].shape[1]
 
-    def fit_one(params, x, y, idx, valid):
-        """Identical math to SupervisedTask.fit for one device's shard."""
+    def fit_one(flat_p, x, y, idx, w):
+        """Identical math to SupervisedTask.fit for one device's shard,
+        on a flat (P,) parameter view."""
         E, S, B = idx.shape
+        params = tree_unravel(spec, flat_p)
 
         def one_step(carry, sv):
             p, s = carry
-            ib, v = sv
+            ib, wb = sv
             xb, yb = x[ib], y[ib]
             loss, grads = jax.value_and_grad(
-                lambda pp: cross_entropy_loss(model.forward(pp, xb), yb))(p)
+                lambda pp: masked_cross_entropy_loss(
+                    model.forward(pp, xb), yb, wb))(p)
             upd, s2 = opt.update(grads, s, p)
             p2 = apply_updates(p, upd)
-            return (tree_where(v > 0, p2, p), tree_where(v > 0, s2, s)), loss * v
+            take = jnp.sum(wb) > 0
+            return ((tree_where(take, p2, p), tree_where(take, s2, s)),
+                    jnp.where(take, loss, 0.0))
 
         (params, _), losses = jax.lax.scan(
             one_step, (params, opt.init(params)),
-            (idx.reshape(E * S, B), valid.reshape(E * S)))
-        per_epoch = losses.reshape(E, S).sum(1) / jnp.maximum(valid.reshape(E, S).sum(1), 1.0)
-        return params, per_epoch[-1]
+            (idx.reshape(E * S, B), w.reshape(E * S, B)))
+        valid_steps = (w.sum(-1) > 0).astype(jnp.float32).reshape(E, S).sum(1)
+        per_epoch = losses.reshape(E, S).sum(1) / jnp.maximum(valid_steps, 1.0)
+        flat_out, _ = tree_ravel(params)
+        return flat_out, per_epoch[-1]
 
-    def eval_one(params, x, y, mask):
-        logits = model.forward(params, x)
+    def eval_one(flat_p, x, y, mask):
+        logits = model.forward(tree_unravel(spec, flat_p), x)
         correct = (jnp.argmax(logits, axis=-1) == y).astype(jnp.float32)
         return jnp.sum(correct * mask) / jnp.maximum(jnp.sum(mask), 1.0)
 
-    def round_body(carry, fit_idx_r):
-        contrib_p, last_p, level, active, stop_code, rounds_done = carry
+    if do_refresh:
+        # Phase.REFRESH schedule is round-invariant (seed = cfg.seed +
+        # device_id), so its indices are derived once per program, on
+        # device, and reused every round.
+        nc_pad = arrays["cx"].shape[2]
+        ref_scores = jax.vmap(jax.vmap(
+            lambda s: schedule.epoch_scores(s, ref_epochs, nc_pad)))(
+            arrays["ref_seeds"])
+        ref_idx, ref_w = jax.vmap(jax.vmap(
+            lambda sc, n: schedule.plan_from_scores(sc, n, batch, ref_steps)))(
+            ref_scores, arrays["ref_n"])
+        cxf = arrays["cx"].reshape((R * N,) + arrays["cx"].shape[2:])
+        cyf = arrays["cy"].reshape(R * N, -1)
+        ref_idx = ref_idx.reshape(R * N, ref_epochs, ref_steps, batch)
+        ref_w = ref_w.reshape(R * N, ref_epochs, ref_steps, batch)
 
-        # Phase.COLLECT + Phase.AGGREGATE: one batched kernel launch
-        global_p = fedavg_tree_batched(contrib_p, arrays["round_w"],
-                                       use_pallas=use_pallas)
-        # Phase.FIT (requesters personalize) + Phase.SCORE
-        new_p, last_loss = jax.vmap(fit_one)(global_p, arrays["own_x"],
-                                             arrays["own_y"], fit_idx_r,
-                                             arrays["fit_valid"])
-        acc = jax.vmap(eval_one)(new_p, arrays["test_x"], arrays["test_y"],
+    def run_round(state, rr):
+        """One live round body.  Entered only via lax.cond when at least
+        one lane is active and rr < max_rounds (so ``active`` needs no
+        extra validity masking inside)."""
+        (contrib, last, level, active, stop_code, rounds_done,
+         acc_h, loss_h, bat_h, exec_h, body_h) = state
+
+        # Phase.COLLECT + Phase.AGGREGATE: one batched kernel launch,
+        # directly on the flat (R, N, P) round state.
+        glob = fedavg_flat_batched(contrib, arrays["round_w"],
+                                   use_pallas=use_pallas, interpret=interpret)
+
+        # Phase.FIT (requesters personalize) + Phase.SCORE.  The round's
+        # minibatch indices are derived here, on device, from the traced
+        # round number — nothing was staged from the host.
+        scores = schedule.epoch_scores(arrays["seed0"] + rr, epochs, n_pad)
+        idx, w = jax.vmap(
+            lambda n: schedule.plan_from_scores(scores, n, batch, steps_max))(
+            arrays["n_own"])
+        new_flat, last_loss = jax.vmap(fit_one)(
+            glob, arrays["own_x"], arrays["own_y"], idx, w)
+        acc = jax.vmap(eval_one)(new_flat, arrays["test_x"], arrays["test_y"],
                                  arrays["test_mask"])
 
         # Phase.ACCOUNT: traced battery discharge for executed rounds
@@ -184,47 +239,91 @@ def _fleet_program(task, use_pallas, do_refresh, arrays):
                                         protocol.STOP_BATTERY, stop_code))
         level = jnp.where(active, level_new, level)
         rounds_done = rounds_done + active.astype(jnp.int32)
-        last_p = tree_where(active, new_p, last_p)
+        last = jnp.where(active[:, None], new_flat, last)
         next_active = active & ~reached & ~low
 
-        # Phase.REFRESH: contributors keep training (frozen once stopped)
+        # Phase.REFRESH: contributors keep training (frozen once their
+        # requester stops); skipped entirely — not computed-and-masked —
+        # when no lane survives into the next round.
         if do_refresh:
-            cx, cy = arrays["cx"], arrays["cy"]
-            flat = jax.tree_util.tree_map(
-                lambda l: l.reshape((R * N,) + l.shape[2:]), contrib_p)
-            refreshed, _ = jax.vmap(fit_one)(
-                flat, cx.reshape((R * N,) + cx.shape[2:]),
-                cy.reshape(R * N, -1),
-                arrays["ref_idx"].reshape((R * N, ref_epochs, ref_steps) +
-                                          arrays["ref_idx"].shape[4:]),
-                arrays["ref_valid"].reshape(R * N, ref_epochs, ref_steps))
-            refreshed = jax.tree_util.tree_map(
-                lambda l, ref: ref.reshape(l.shape), contrib_p, refreshed)
-            contrib_p = tree_where(next_active, refreshed, contrib_p)
+            def refresh(c):
+                refreshed, _ = jax.vmap(fit_one)(
+                    c.reshape(R * N, P), cxf, cyf, ref_idx, ref_w)
+                return jnp.where(next_active[:, None, None],
+                                 refreshed.reshape(R, N, P), c)
 
-        carry = (contrib_p, last_p, level, next_active, stop_code, rounds_done)
-        return carry, (acc, last_loss, level, active.astype(jnp.float32))
+            contrib = jax.lax.cond(jnp.any(next_active), refresh,
+                                   lambda c: c, contrib)
 
-    contrib_p = arrays["contrib_p"]
-    last_p0 = jax.tree_util.tree_map(lambda l: jnp.zeros_like(l[:, 0]), contrib_p)
-    carry0 = (contrib_p, last_p0, arrays["level0"],
+        def put(buf, row):
+            return jax.lax.dynamic_update_slice_in_dim(buf, row[None], rr, 0)
+
+        acc_h = put(acc_h, acc)
+        loss_h = put(loss_h, last_loss)
+        bat_h = put(bat_h, level)
+        exec_h = put(exec_h, active.astype(jnp.float32))
+        body_h = put(body_h, jnp.float32(1.0))
+        return (contrib, last, level, next_active, stop_code, rounds_done,
+                acc_h, loss_h, bat_h, exec_h, body_h)
+
+    state0 = (contrib_flat,
+              jnp.zeros((R, P), contrib_flat.dtype),
+              arrays["level0"],
               jnp.ones((R,), bool),
               jnp.full((R,), protocol.STOP_MAX_ROUNDS, jnp.int32),
-              jnp.zeros((R,), jnp.int32))
-    carry, traces = jax.lax.scan(round_body, carry0, arrays["fit_idx"])
-    contrib_final, last_p, level, _, stop_code, rounds_done = carry
-    return contrib_final, last_p, level, stop_code, rounds_done, traces
+              jnp.zeros((R,), jnp.int32),
+              jnp.zeros((max_rounds, R), jnp.float32),   # accuracy trace
+              jnp.zeros((max_rounds, R), jnp.float32),   # loss trace
+              jnp.zeros((max_rounds, R), jnp.float32),   # battery trace
+              jnp.zeros((max_rounds, R), jnp.float32),   # active-lane trace
+              jnp.zeros((max_rounds,), jnp.float32))     # body-executed trace
+
+    def maybe_round(i, carry):
+        r0, state = carry
+        rr = r0 + i
+        state = jax.lax.cond((rr < max_rounds) & jnp.any(state[3]),
+                             lambda s: run_round(s, rr), lambda s: s, state)
+        return r0, state
+
+    def while_cond(carry):
+        r0, state = carry
+        return (r0 < max_rounds) & jnp.any(state[3])
+
+    def while_body(carry):
+        r0, state = carry
+        _, state = jax.lax.fori_loop(0, chunk, maybe_round, (r0, state))
+        return r0 + chunk, state
+
+    _, state = jax.lax.while_loop(while_cond, while_body,
+                                  (jnp.int32(0), state0))
+    (contrib, last, level, _, stop_code, rounds_done,
+     acc_h, loss_h, bat_h, exec_h, body_h) = state
+    return (contrib, last, level, stop_code, rounds_done,
+            (acc_h, loss_h, bat_h, exec_h, body_h))
 
 
 def run_fleet(task, requesters: Sequence[RequesterSpec],
               cfg: EnFedConfig = EnFedConfig(),
               cost_model: Optional[CostModel] = None,
-              use_pallas: bool = True) -> FleetResult:
-    """Run ``len(requesters)`` concurrent EnFed sessions as one jit program."""
+              use_pallas: bool = True,
+              interpret: Optional[bool] = None,
+              round_chunk: int = 4) -> FleetResult:
+    """Run ``len(requesters)`` concurrent EnFed sessions as one jit program.
+
+    ``interpret`` selects Pallas interpret mode for the aggregation
+    kernel (``None`` = compiled on TPU, interpreted on CPU — see
+    ``repro.kernels.common.resolve_interpret``).  ``round_chunk`` is the
+    early-exit granularity: the compiled round loop re-checks "is any
+    session still active?" every ``round_chunk`` rounds.
+    """
+    from repro.kernels.common import resolve_interpret
+
     cost = cost_model or CostModel()
     R = len(requesters)
     if R == 0:
         raise ValueError("empty fleet")
+    if round_chunk < 1:
+        raise ValueError(f"round_chunk must be >= 1 (got {round_chunk})")
 
     # ---- Phase.HANDSHAKE (host-side, static) ------------------------------
     contracts, contract_mask = sign_contracts_fleet(
@@ -266,8 +365,11 @@ def run_fleet(task, requesters: Sequence[RequesterSpec],
     padded_rows = [row + [None] * (N - len(row)) for row in contrib_params]
     contrib_stack = _stack_trees(
         [_stack_trees(row, template) for row in padded_rows])
+    # the flat-parameter round state: raveled ONCE here, donated to the
+    # program, carried flat through every round
+    contrib_flat, ravel_spec = tree_ravel(contrib_stack, batch_ndim=2)
 
-    # ---- requester data + schedules ---------------------------------------
+    # ---- requester data + derived-schedule metadata -----------------------
     own_x, _ = _pad_stack([np.asarray(s.own_train[0], np.float32) for s in requesters],
                           max(len(s.own_train[0]) for s in requesters))
     own_y, _ = _pad_stack([np.asarray(s.own_train[1], np.int32) for s in requesters],
@@ -277,32 +379,18 @@ def run_fleet(task, requesters: Sequence[RequesterSpec],
     test_y, _ = _pad_stack([np.asarray(s.own_test[1], np.int32) for s in requesters],
                            test_x.shape[1])
 
-    fit_steps_max = max(len(s.own_train[0]) // cfg.batch_size for s in requesters)
-    fit_idx = np.zeros((cfg.max_rounds, R, cfg.epochs, fit_steps_max, cfg.batch_size),
-                       np.int32)
-    fit_valid = np.zeros((R, cfg.epochs, fit_steps_max), np.float32)
-    for i, spec in enumerate(requesters):
-        n_i = len(spec.own_train[0])
-        for r in range(cfg.max_rounds):
-            idx, valid = _fit_schedule(n_i, cfg.epochs, cfg.batch_size,
-                                       cfg.seed + r, fit_steps_max)
-            fit_idx[r, i] = idx
-            if r == 0:  # the valid-step mask is round-invariant
-                fit_valid[i] = valid
+    n_own = np.array([len(s.own_train[0]) for s in requesters], np.int32)
+    steps_max = max(schedule.fit_steps(int(n), cfg.batch_size) for n in n_own)
 
     ref_epochs = max(cfg.contributor_refresh_epochs, 0)
-    ref_steps_max = max((len(x) // cfg.batch_size
-                         for row in contrib_x for x in row), default=1)
-    ref_idx = np.zeros((R, N, ref_epochs, ref_steps_max, cfg.batch_size), np.int32)
-    ref_valid = np.zeros((R, N, ref_epochs, ref_steps_max), np.float32)
-    if ref_epochs > 0:
-        for i, cs in enumerate(contracts):
-            for j, c in enumerate(cs):
-                idx, valid = _fit_schedule(len(contrib_x[i][j]), ref_epochs,
-                                           cfg.batch_size, cfg.seed + c.device_id,
-                                           ref_steps_max)
-                ref_idx[i, j] = idx
-                ref_valid[i, j] = valid
+    ref_steps = max((schedule.fit_steps(len(x), cfg.batch_size)
+                     for row in contrib_x for x in row), default=1)
+    ref_seeds = np.zeros((R, N), np.int32)
+    ref_n = np.zeros((R, N), np.int32)
+    for i, cs in enumerate(contracts):
+        for j, c in enumerate(cs):
+            ref_seeds[i, j] = cfg.seed + c.device_id
+            ref_n[i, j] = len(contrib_x[i][j])
 
     # ---- Phase.ACCOUNT constants (static per requester) -------------------
     num_params = tree_size(template)
@@ -321,20 +409,28 @@ def run_fleet(task, requesters: Sequence[RequesterSpec],
 
     # ---- the compiled program ---------------------------------------------
     arrays = dict(
-        contrib_p=contrib_stack, fit_idx=jnp.asarray(fit_idx),
         level0=jnp.asarray(level0), own_x=jnp.asarray(own_x),
         own_y=jnp.asarray(own_y), test_x=jnp.asarray(test_x),
         test_y=jnp.asarray(test_y), test_mask=jnp.asarray(test_mask),
-        fit_valid=jnp.asarray(fit_valid), round_w=jnp.asarray(round_w),
+        n_own=jnp.asarray(n_own), seed0=jnp.int32(cfg.seed),
+        round_w=jnp.asarray(round_w),
         e_round=jnp.asarray(e_round), capacity=jnp.asarray(capacity),
         eff=jnp.asarray(eff),
         desired_accuracy=jnp.float32(cfg.desired_accuracy),
-        battery_threshold=jnp.float32(cfg.battery_threshold),
-        cx=jnp.asarray(cx), cy=jnp.asarray(cy),
-        ref_idx=jnp.asarray(ref_idx), ref_valid=jnp.asarray(ref_valid))
-    contrib_final, last_p, level, stop_code, rounds_done, traces = _fleet_program(
-        task, use_pallas, ref_epochs > 0, arrays)
-    acc_h, loss_h, bat_h, exec_h = (np.asarray(t) for t in traces)
+        battery_threshold=jnp.float32(cfg.battery_threshold))
+    if ref_epochs > 0:
+        arrays.update(cx=jnp.asarray(cx), cy=jnp.asarray(cy),
+                      ref_seeds=jnp.asarray(ref_seeds),
+                      ref_n=jnp.asarray(ref_n))
+    staged = [contrib_flat] + [v for v in arrays.values() if hasattr(v, "nbytes")]
+    staged_bytes = int(sum(int(v.nbytes) for v in staged))
+    index_bytes = int(n_own.nbytes + ref_seeds.nbytes + ref_n.nbytes + 4)
+
+    contrib_final, last_flat, level, stop_code, rounds_done, traces = _fleet_program(
+        task, use_pallas, resolve_interpret(interpret), ref_epochs > 0,
+        int(round_chunk), cfg.max_rounds, cfg.epochs, cfg.batch_size,
+        steps_max, ref_epochs, ref_steps, ravel_spec, contrib_flat, arrays)
+    acc_h, loss_h, bat_h, exec_h, body_h = (np.asarray(t) for t in traces)
     rounds_np = np.asarray(rounds_done)
     codes_np = np.asarray(stop_code)
     level_np = np.asarray(level)
@@ -344,12 +440,14 @@ def run_fleet(task, requesters: Sequence[RequesterSpec],
     # final (refresh-trained, frozen-once-stopped) contributor params.
     # Requesters sharing one states dict see the last writer's lanes.
     if ref_epochs > 0:
+        contrib_tree = tree_unravel(ravel_spec, contrib_final)
         for i, (spec, cs) in enumerate(zip(requesters, contracts)):
             for j, c in enumerate(cs):
                 spec.contributor_states[c.device_id]["params"] = (
-                    jax.tree_util.tree_map(lambda l: l[i, j], contrib_final))
+                    jax.tree_util.tree_map(lambda l: l[i, j], contrib_tree))
 
     # ---- per-session views (loop-engine-compatible SessionResults) --------
+    last_p = tree_unravel(ravel_spec, last_flat)
     sessions = []
     total_e = 0.0
     for i, (spec, cs, b0) in enumerate(zip(requesters, contracts, batteries)):
@@ -374,4 +472,5 @@ def run_fleet(task, requesters: Sequence[RequesterSpec],
         accuracy=np.array([s.accuracy for s in sessions], np.float32),
         battery_level=level_np, total_energy_j=float(total_e),
         history={"accuracy": acc_h, "loss": loss_h, "battery": bat_h,
-                 "executed": exec_h})
+                 "executed": exec_h, "round_executed": body_h},
+        staged_host_bytes=staged_bytes, staged_index_bytes=index_bytes)

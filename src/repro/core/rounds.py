@@ -20,6 +20,12 @@ via ``repro.core.protocol``):
   requester sessions vectorized into one jit program.  Select it with
   ``EnFedSession.run(engine="fleet")``; its round/stop/battery semantics
   are parity-tested against this loop in ``tests/test_fleet_engine.py``.
+
+Both engines draw minibatches from the counter-based derived schedule
+in ``repro.core.schedule`` (``task.fit`` evaluates it host-side with
+``seed = cfg.seed + round``; the fleet engine derives the same indices
+on device from its traced round number), so their batches are identical
+by construction.
 """
 
 from __future__ import annotations

@@ -1,0 +1,110 @@
+"""Counter-based minibatch schedule, shared by both EnFed engines.
+
+Both engines draw their shuffled minibatches from the SAME derived
+schedule, so engine parity holds by construction instead of by replaying
+a host-side ``numpy`` RNG:
+
+* every sample index ``i`` gets a uint32 sort key
+  ``hash(fold_in(PRNGKey(seed), epoch), i)`` — a pure counter-based
+  ``jax.random`` derivation with **no dependence on the shard size**, so
+  the first ``n`` scores of a padded shard equal the scores of the
+  unpadded shard (prefix stability);
+* an epoch's sample order is the stable argsort of those scores, with
+  out-of-shard (padded) slots forced to sort last;
+* the order is chopped into ``steps`` batches of ``batch`` indices, with
+  a per-sample 0/1 weight mask.  Shards holding at least one full batch
+  truncate to ``(n // batch) * batch`` samples (the classic drop-last
+  epoch); smaller shards run as ONE padded batch whose padding carries
+  zero weight — the vectorized form of the loop engine's old full-batch
+  fallback.
+
+The **loop engine** (``SupervisedTask.fit``) evaluates the plan with
+``n_pad == n`` host-side, one jitted step per batch.  The **fleet
+engine** (``repro.core.fleet``) evaluates the SAME functions inside its
+compiled round loop — the round index is a traced scalar, so no
+``(max_rounds, R, epochs, steps, batch)`` index tensor is ever
+materialized on the host or staged to the device.  Per-requester shard
+sizes enter only through the traced ``n`` argument of
+:func:`plan_from_scores`; prefix stability guarantees the batches match
+the loop engine's exactly.
+
+Seed convention (unchanged from the numpy era): requester fit in round
+``r`` uses ``seed = cfg.seed + r``; contributor refresh uses
+``seed = cfg.seed + device_id`` (round-invariant).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+_UINT32_MAX = jnp.uint32(0xFFFFFFFF)
+
+
+def index_scores(key, n: int):
+    """(n,) uint32 per-sample sort keys; prefix-stable in ``n``.
+
+    Score ``i`` is a threefry hash of ``(key, i)`` alone, so growing
+    ``n`` (padding a shard) appends scores without changing existing
+    ones — the property that lets one traced fleet program serve
+    requesters with different shard sizes.
+    """
+    idx = jnp.arange(n, dtype=jnp.uint32)
+    keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(idx)
+    return jax.vmap(lambda k: jax.random.bits(k, (), jnp.uint32))(keys)
+
+
+def epoch_scores(seed, epochs: int, n_pad: int):
+    """(epochs, n_pad) uint32 scores for one fit call.
+
+    ``seed`` may be a python int (loop engine) or a traced scalar (fleet
+    engine deriving ``cfg.seed + round`` inside its round loop).
+    """
+    base = jax.random.PRNGKey(seed)
+    keys = jax.vmap(lambda e: jax.random.fold_in(base, e))(
+        jnp.arange(epochs, dtype=jnp.uint32))
+    return jax.vmap(lambda k: index_scores(k, n_pad))(keys)
+
+
+def plan_from_scores(scores, n, batch: int, steps: int):
+    """Turn per-epoch scores into gather indices + per-sample weights.
+
+    ``scores``: (epochs, n_pad) uint32 from :func:`epoch_scores`;
+    ``n``: true shard size (python int or traced scalar), ``n <= n_pad``;
+    ``steps``: static step count, ``steps * batch`` may exceed ``n_pad``
+    (trailing positions carry zero weight).
+
+    Returns ``idx`` (epochs, steps, batch) int32 and ``w`` (epochs,
+    steps, batch) fp32.  Positions past the usable sample budget —
+    ``(n // batch) * batch`` when the shard holds a full batch, else
+    ``n`` (the padded single-step fallback) — get weight 0 and index 0.
+    """
+    epochs, n_pad = scores.shape
+    take = steps * batch
+    pos = jnp.arange(n_pad, dtype=jnp.int32)
+    masked = jnp.where(pos[None, :] < n, scores, _UINT32_MAX)
+    perm = jnp.argsort(masked, axis=-1).astype(jnp.int32)  # stable: valid first
+    if take > n_pad:
+        perm = jnp.pad(perm, ((0, 0), (0, take - n_pad)))
+    n_limit = jnp.where(n >= batch, (n // batch) * batch, n)
+    w = (jnp.arange(take, dtype=jnp.int32) < n_limit).astype(jnp.float32)
+    idx = jnp.where(w > 0, perm[:, :take], 0).astype(jnp.int32)
+    return (idx.reshape(epochs, steps, batch),
+            jnp.broadcast_to(w.reshape(1, steps, batch), (epochs, steps, batch)))
+
+
+def fit_steps(n: int, batch: int) -> int:
+    """Static step count for a shard: drop-last full batches, or one
+    padded+masked step when the shard is smaller than a batch."""
+    return max(n // batch, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("epochs", "n", "batch"))
+def minibatch_plan(seed, *, epochs: int, n: int, batch: int):
+    """The loop engine's whole fit plan: ``idx, w`` with shapes
+    (epochs, fit_steps(n, batch), batch).  Jitted with static shapes so
+    successive rounds (seed changes value, not shape) reuse the trace."""
+    scores = epoch_scores(seed, epochs, n)
+    return plan_from_scores(scores, n, batch, fit_steps(n, batch))

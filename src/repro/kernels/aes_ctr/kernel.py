@@ -25,6 +25,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
+from repro.kernels.common import resolve_interpret
+
 from repro.core import crypto
 
 BLOCK_TILE = 512  # AES blocks per grid step (512 x 16 B = 8 KiB tile)
@@ -65,9 +67,10 @@ def _aes_ctr_kernel(ctr_ref, pay_ref, rk_ref, sbox_ref, mul2_ref, mul3_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def aes_ctr_pallas(payload_u8, round_keys, ctr_blocks, *, interpret: bool = True):
+def aes_ctr_pallas(payload_u8, round_keys, ctr_blocks, *, interpret=None):
     """payload_u8: (n,) uint8; round_keys: (11,16) uint8;
     ctr_blocks: (ceil(n/16), 16) uint8 CTR input blocks. Returns (n,) uint8."""
+    interpret = resolve_interpret(interpret)
     n = payload_u8.shape[0]
     n_blocks = ctr_blocks.shape[0]
     pad = n_blocks * 16 - n

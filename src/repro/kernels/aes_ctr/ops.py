@@ -11,7 +11,7 @@ from repro.kernels.aes_ctr.ref import aes_ctr_ref
 
 
 def encrypt_bytes(payload_u8, key, nonce, *, use_pallas: bool = True,
-                  interpret: bool = True):
+                  interpret=None):
     """CTR encryption of a uint8 payload; decryption is the same call."""
     if not use_pallas:
         return aes_ctr_ref(payload_u8, key, nonce)

@@ -1,0 +1,29 @@
+"""Shared kernel-launch policy.
+
+Every Pallas kernel in ``repro.kernels`` takes an ``interpret`` flag.
+``interpret=True`` runs the kernel body as a jax interpreter program
+(correct on any backend, used by the CPU test/CI tier);
+``interpret=False`` compiles the kernel for the accelerator.  Callers
+that don't care pass ``None`` and get the right default for the active
+backend: real compilation on TPU, interpret mode everywhere Pallas
+cannot lower natively (CPU CI images, laptops).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+
+def resolve_interpret(interpret: Optional[bool] = None) -> bool:
+    """Resolve an ``interpret`` request against the active backend.
+
+    ``None`` (the default everywhere) means "interpret only if the
+    backend cannot compile Pallas", i.e. ``jax.default_backend() ==
+    "cpu"``.  Explicit ``True``/``False`` is passed through, so tests can
+    force interpret mode and TPU users can force compilation.
+    """
+    if interpret is None:
+        return jax.default_backend() == "cpu"
+    return bool(interpret)

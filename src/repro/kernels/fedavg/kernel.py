@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.common import resolve_interpret
+
 TILE_L = 2048
 
 
@@ -47,7 +49,7 @@ def _fedavg_batched_kernel(w_ref, u_ref, o_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def fedavg_batched_pallas(updates, weights, *, interpret: bool = True):
+def fedavg_batched_pallas(updates, weights, *, interpret=None):
     """updates: (R, N, L); weights: (R, N). Returns (R, L) fp32.
 
     The requester-batched form of :func:`fedavg_pallas`: grid
@@ -55,6 +57,7 @@ def fedavg_batched_pallas(updates, weights, *, interpret: bool = True):
     for one parameter tile.  Used by ``repro.core.fleet`` to aggregate
     every concurrent session in a single kernel launch.
     """
+    interpret = resolve_interpret(interpret)
     r, n, l = updates.shape
     pad = (-l) % TILE_L
     if pad:
@@ -76,11 +79,12 @@ def fedavg_batched_pallas(updates, weights, *, interpret: bool = True):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def fedavg_pallas(updates, weights, *, interpret: bool = True):
+def fedavg_pallas(updates, weights, *, interpret=None):
     """updates: (N, L); weights: (N,). Returns (L,) fp32.
 
     L is padded to a TILE_L multiple internally; callers pass any L.
     """
+    interpret = resolve_interpret(interpret)
     n, l = updates.shape
     pad = (-l) % TILE_L
     if pad:

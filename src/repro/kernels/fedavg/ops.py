@@ -1,11 +1,18 @@
 """Public op: masked-weighted FedAvg over pytrees or flat stacks.
 
-``fedavg_flat`` is the jit'd wrapper over the Pallas kernel (TPU target;
-``interpret=True`` executes the kernel body on CPU for validation).
-``fedavg_tree`` applies it to a contributor-stacked pytree by flattening
-leaves into one (N, L) stream — the same serialization the AES transport
-uses, so on a real deployment decrypt + aggregate fuse into one pass
-over the wire buffer.
+``fedavg_flat`` is the jit'd wrapper over the Pallas kernel;
+``interpret=None`` (the default everywhere) resolves per backend via
+``repro.kernels.common.resolve_interpret`` — compiled on TPU,
+interpreted on CPU.  ``fedavg_tree`` applies it to a contributor-stacked
+pytree by flattening leaves into one (N, L) stream — the same
+serialization the AES transport uses, so on a real deployment decrypt +
+aggregate fuse into one pass over the wire buffer.
+
+The fleet engine (``repro.core.fleet``) does not pay the per-round
+flatten: it ravels contributor params once at setup
+(``repro.utils.tree.tree_ravel``) and launches ``fedavg_flat_batched``
+directly on the flat (R, N, P) round-state buffer.  ``fedavg_tree_batched``
+remains for callers that hold a stacked pytree.
 """
 
 from __future__ import annotations
@@ -17,14 +24,14 @@ from repro.kernels.fedavg.kernel import fedavg_batched_pallas, fedavg_pallas
 from repro.kernels.fedavg.ref import fedavg_batched_ref, fedavg_ref
 
 
-def fedavg_flat(updates, weights, *, use_pallas: bool = True, interpret: bool = True):
+def fedavg_flat(updates, weights, *, use_pallas: bool = True, interpret=None):
     if use_pallas:
         return fedavg_pallas(updates, weights, interpret=interpret)
     return fedavg_ref(updates, weights)
 
 
 def fedavg_flat_batched(updates, weights, *, use_pallas: bool = True,
-                        interpret: bool = True):
+                        interpret=None):
     """updates: (R, N, L); weights: (R, N) -> (R, L) fp32 per-session means."""
     if use_pallas:
         return fedavg_batched_pallas(updates, weights, interpret=interpret)
@@ -32,14 +39,15 @@ def fedavg_flat_batched(updates, weights, *, use_pallas: bool = True,
 
 
 def fedavg_tree_batched(stacked_tree, weights, *, use_pallas: bool = True,
-                        interpret: bool = True):
-    """Requester-batched tree aggregation for the fleet engine.
+                        interpret=None):
+    """Requester-batched tree aggregation for stacked-pytree callers.
 
     Leaves of ``stacked_tree`` have shape (R, N, ...): R concurrent
     requester sessions, N contributor slots each.  Returns the pytree of
     per-session aggregated params with leaves (R, ...).  All leaves are
     flattened into one (R, N, L) stream so the whole fleet's eq. (14)
-    is a single kernel launch.
+    is a single kernel launch.  (The fleet engine skips this per-call
+    flatten entirely by carrying its round state pre-raveled.)
     """
     leaves, treedef = jax.tree_util.tree_flatten(stacked_tree)
     r, n = leaves[0].shape[:2]
@@ -55,7 +63,7 @@ def fedavg_tree_batched(stacked_tree, weights, *, use_pallas: bool = True,
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
-def fedavg_tree(stacked_tree, weights, *, use_pallas: bool = True, interpret: bool = True):
+def fedavg_tree(stacked_tree, weights, *, use_pallas: bool = True, interpret=None):
     """Leaves of ``stacked_tree`` have shape (N, ...); returns mean tree."""
     leaves, treedef = jax.tree_util.tree_flatten(stacked_tree)
     n = leaves[0].shape[0]

@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.common import resolve_interpret
+
 LANE = 128
 SUBLANE = 8
 
@@ -61,8 +63,9 @@ def _pad_to(x, axis, mult):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def lstm_cell_pallas(x, h, c, wx, wh, b, *, interpret: bool = True):
+def lstm_cell_pallas(x, h, c, wx, wh, b, *, interpret=None):
     """Fused LSTM cell. Shapes as in the reference. Returns (h_new, c_new)."""
+    interpret = resolve_interpret(interpret)
     B, F = x.shape
     H = h.shape[1]
     # pad to hardware tiles

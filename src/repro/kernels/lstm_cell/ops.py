@@ -10,7 +10,7 @@ from repro.kernels.lstm_cell.kernel import lstm_cell_pallas
 from repro.kernels.lstm_cell.ref import lstm_cell_ref
 
 
-def lstm_cell(x, h, c, wx, wh, b, *, interpret: bool = True):
+def lstm_cell(x, h, c, wx, wh, b, *, interpret=None):
     return lstm_cell_pallas(x, h, c, wx, wh, b, interpret=interpret)
 
 

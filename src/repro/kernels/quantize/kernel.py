@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.common import resolve_interpret
+
 TILE = 1024
 
 
@@ -36,8 +38,9 @@ def _dequant_kernel(q_ref, s_ref, x_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def quantize_pallas(x, *, interpret: bool = True):
+def quantize_pallas(x, *, interpret=None):
     """x: (L,) fp32 -> (q int8 (Lp,), scales (Lp/TILE,), L). Pads to TILE."""
+    interpret = resolve_interpret(interpret)
     l = x.shape[0]
     pad = (-l) % TILE
     if pad:
@@ -62,7 +65,8 @@ def quantize_pallas(x, *, interpret: bool = True):
 
 
 @functools.partial(jax.jit, static_argnames=("orig_len", "interpret"))
-def dequantize_pallas(q, scales, orig_len: int, *, interpret: bool = True):
+def dequantize_pallas(q, scales, orig_len: int, *, interpret=None):
+    interpret = resolve_interpret(interpret)
     lp = q.shape[0]
     grid = (lp // TILE,)
     x = pl.pallas_call(

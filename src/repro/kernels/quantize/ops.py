@@ -11,7 +11,7 @@ from repro.kernels.quantize.kernel import quantize_pallas, dequantize_pallas, TI
 from repro.kernels.quantize.ref import quantize_ref, dequantize_ref
 
 
-def compress_update(vec, *, use_pallas: bool = True, interpret: bool = True):
+def compress_update(vec, *, use_pallas: bool = True, interpret=None):
     """vec: (L,) fp32 -> (q, scales, L)."""
     if use_pallas:
         q, s = quantize_pallas(vec, interpret=interpret)
@@ -23,7 +23,7 @@ def compress_update(vec, *, use_pallas: bool = True, interpret: bool = True):
 
 
 def decompress_update(q, scales, orig_len, *, use_pallas: bool = True,
-                      interpret: bool = True):
+                      interpret=None):
     if use_pallas:
         return dequantize_pallas(q, scales, orig_len, interpret=interpret)
     return dequantize_ref(q, scales)[:orig_len]

@@ -6,6 +6,7 @@ from repro.models.classifiers import (
     MLPClassifier,
     MLPClassifierConfig,
     cross_entropy_loss,
+    masked_cross_entropy_loss,
     accuracy,
 )
 
@@ -19,5 +20,6 @@ __all__ = [
     "MLPClassifier",
     "MLPClassifierConfig",
     "cross_entropy_loss",
+    "masked_cross_entropy_loss",
     "accuracy",
 ]

@@ -136,5 +136,19 @@ def cross_entropy_loss(logits, labels):
     return jnp.mean(nll)
 
 
+def masked_cross_entropy_loss(logits, labels, weights):
+    """Per-sample-weighted categorical cross-entropy.
+
+    ``weights`` is the minibatch's 0/1 sample mask from
+    ``repro.core.schedule`` (all-ones for full batches; zero on the
+    padding of a sub-batch shard's single padded step).  Both EnFed
+    engines optimize THIS loss, so their training math is identical even
+    on shards smaller than one batch.
+    """
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    return jnp.sum(nll * weights) / jnp.maximum(jnp.sum(weights), 1.0)
+
+
 def accuracy(logits, labels):
     return jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))

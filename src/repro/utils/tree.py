@@ -92,6 +92,52 @@ def tree_where(cond, a, b):
     return jax.tree_util.tree_map(_where, a, b)
 
 
+def tree_ravel(tree, batch_ndim: int = 0):
+    """Ravel a (possibly batch-stacked) pytree into one fp32 buffer.
+
+    The first ``batch_ndim`` axes of every leaf are treated as shared
+    batch axes (e.g. the fleet engine's (R, N) requester x contributor
+    grid); everything after them is concatenated into a flat trailing
+    parameter axis.  Returns ``(flat, spec)`` where ``flat`` has shape
+    ``batch_shape + (P,)`` and ``spec`` is a static, hashable description
+    consumed by :func:`tree_unravel`.
+
+    This is the fleet engine's zero-copy round-state representation: the
+    ravel happens ONCE at setup, the (R, N, P) buffer is carried through
+    the whole round loop (and donated back to XLA), and the Pallas fedavg
+    kernel launches directly on it with no per-round concatenate/split.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    if not leaves:
+        return jnp.zeros((0,) * (batch_ndim + 1), jnp.float32), (treedef, ())
+    batch_shape = leaves[0].shape[:batch_ndim]
+    meta = tuple((tuple(l.shape[batch_ndim:]), jnp.dtype(l.dtype).name) for l in leaves)
+    flat = jnp.concatenate(
+        [l.reshape(batch_shape + (-1,)).astype(jnp.float32) for l in leaves],
+        axis=-1)
+    return flat, (treedef, meta)
+
+
+def tree_unravel(spec, flat):
+    """Inverse of :func:`tree_ravel` for any leading batch shape.
+
+    ``flat`` has shape ``batch_shape + (P,)`` (the batch shape need not
+    match the one seen at ravel time — per-lane views unravel the same
+    spec), leaves come back as ``batch_shape + leaf_shape`` in their
+    original dtypes.
+    """
+    treedef, meta = spec
+    batch_shape = flat.shape[:-1]
+    out, off = [], 0
+    for shape, dtype in meta:
+        size = 1
+        for d in shape:
+            size *= d
+        out.append(flat[..., off:off + size].reshape(batch_shape + shape).astype(dtype))
+        off += size
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
 def flatten_to_vector(tree):
     """Concatenate all leaves into a single 1-D fp32 vector.
 

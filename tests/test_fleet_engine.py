@@ -198,12 +198,93 @@ def test_fleet_runs_64_concurrent_sessions(problem):
                                    rtol=1e-4, atol=1e-5)
 
 
-def test_fleet_rejects_empty_and_underfilled():
+def test_fleet_rejects_empty():
     with pytest.raises(ValueError):
         run_fleet(None, [])
+
+
+def test_fleet_sub_batch_shard_matches_loop():
+    """A requester shard smaller than one batch runs in the fleet engine
+    as a single padded+masked step — and matches the loop engine, which
+    takes the same padded step through the shared derived schedule."""
     task, own_train, own_test, fleet, states = _build(n_contrib=2, n_samples=300)
-    tiny = (own_train[0][:4], own_train[1][:4])  # < one batch
-    cfg = EnFedConfig(max_rounds=1, epochs=1, batch_size=BATCH, encrypt=False,
+    tiny = (own_train[0][:BATCH - 4], own_train[1][:BATCH - 4])  # < one batch
+    cfg = EnFedConfig(desired_accuracy=0.99, max_rounds=2, epochs=2,
+                      batch_size=BATCH, encrypt=False,
+                      contributor_refresh_epochs=1)
+    loop = EnFedSession(task, tiny, own_test, fleet, copy.deepcopy(states),
+                        cfg).run()
+    fl = run_fleet(task, [RequesterSpec(tiny, own_test, fleet,
+                                        copy.deepcopy(states))], cfg).sessions[0]
+    _assert_parity(loop, fl)
+
+
+def test_fleet_mixed_sub_batch_and_full_lanes():
+    """Sub-batch and full-batch requesters coexist in ONE program; each
+    lane matches its own loop-engine run."""
+    task, own_train, own_test, fleet, states = _build(n_contrib=2, n_samples=300)
+    shards = [(own_train[0][:BATCH // 2], own_train[1][:BATCH // 2]),
+              (own_train[0], own_train[1])]
+    cfg = EnFedConfig(desired_accuracy=0.99, max_rounds=2, epochs=1,
+                      batch_size=BATCH, encrypt=False,
                       contributor_refresh_epochs=0)
+    specs = [RequesterSpec(sh, own_test, fleet, copy.deepcopy(states))
+             for sh in shards]
+    result = run_fleet(task, specs, cfg)
+    for lane, sh in enumerate(shards):
+        loop = EnFedSession(task, sh, own_test, fleet,
+                            copy.deepcopy(states), cfg).run()
+        _assert_parity(loop, result.sessions[lane])
+
+
+# ---------------------------------------------------------------------------
+# early exit: a converged fleet executes O(k), not O(max_rounds), bodies
+# ---------------------------------------------------------------------------
+
+
+def test_fleet_early_exit_executes_o_k_round_bodies(problem):
+    """Every session stops by round 1 (trivial accuracy target); with
+    max_rounds=32 the program must execute only the first round chunk —
+    asserted via the executed-body trace, which is written in place by
+    the rounds that actually ran."""
+    task, own_train, own_test, fleet, states = problem
+    cfg = EnFedConfig(desired_accuracy=0.05, max_rounds=32, epochs=1,
+                      batch_size=BATCH, encrypt=False,
+                      contributor_refresh_epochs=1)
+    result = run_fleet(task, [RequesterSpec(own_train, own_test, fleet,
+                                            copy.deepcopy(states))],
+                       cfg, round_chunk=4)
+    assert (result.rounds == 1).all()
+    assert (result.stop_codes == 1).all()  # protocol.STOP_ACCURACY
+    body = result.history["round_executed"]
+    assert body.shape == (cfg.max_rounds,)
+    # O(k): at most one chunk of bodies ran, nothing near max_rounds
+    assert body.sum() <= 4
+    assert body[0] == 1.0 and (body[4:] == 0.0).all()
+    # per-lane active mask agrees: only round 0 had a live lane
+    assert result.history["executed"][0].all()
+    assert (result.history["executed"][1:] == 0.0).all()
+
+
+def test_fleet_round_chunk_does_not_change_results(problem):
+    """Parity across chunk sizes, including a chunk that overshoots
+    max_rounds (the in-chunk lax.cond masks the overhang)."""
+    task, own_train, own_test, fleet, states = problem
+    cfg = EnFedConfig(desired_accuracy=0.99, max_rounds=3, epochs=1,
+                      batch_size=BATCH, encrypt=False,
+                      contributor_refresh_epochs=1)
+    results = [run_fleet(task, [RequesterSpec(own_train, own_test, fleet,
+                                              copy.deepcopy(states))],
+                         cfg, round_chunk=c) for c in (1, 2, 8)]
+    ref = results[0].sessions[0]
+    for res in results[1:]:
+        fl = res.sessions[0]
+        assert fl.rounds == ref.rounds and fl.stop_reason == ref.stop_reason
+        np.testing.assert_allclose(fl.history["accuracy"], ref.history["accuracy"],
+                                   rtol=1e-6)
+        lv, _ = ravel_pytree(ref.params)
+        fv, _ = ravel_pytree(fl.params)
+        np.testing.assert_allclose(np.asarray(fv), np.asarray(lv), rtol=1e-6)
     with pytest.raises(ValueError):
-        run_fleet(task, [RequesterSpec(tiny, own_test, fleet, states)], cfg)
+        run_fleet(task, [RequesterSpec(own_train, own_test, fleet, states)],
+                  cfg, round_chunk=0)

@@ -97,6 +97,38 @@ def test_fedavg_tree_batched_matches_list_form():
                                    rtol=1e-5, atol=1e-6)
 
 
+def test_fedavg_batched_on_preraveled_flat_buffer():
+    """The fleet engine's PR 2 hot path: contributor params raveled ONCE
+    (tree_ravel) into the (R, N, P) round-state buffer, the batched
+    kernel launched directly on it — interpret mode vs the jnp oracle,
+    off-tile P (not a TILE_L multiple) and the N=1 edge case."""
+    from repro.kernels.fedavg.kernel import fedavg_batched_pallas
+    from repro.kernels.fedavg.ref import fedavg_batched_ref
+    from repro.utils.tree import tree_ravel, tree_unravel
+
+    for r, n in [(3, 4), (2, 1)]:  # N=1: single-contributor sessions
+        tree = {"w": jnp.asarray(RNG.normal(size=(r, n, 37, 19)).astype(np.float32)),
+                "b": jnp.asarray(RNG.normal(size=(r, n, 300)).astype(np.float32))}
+        flat, spec = tree_ravel(tree, batch_ndim=2)
+        assert flat.shape[-1] % 2048 != 0, "off-tile by construction"
+        w = jnp.asarray(RNG.random((r, n)).astype(np.float32) + 0.1)
+        got = fedavg_batched_pallas(flat, w, interpret=True)
+        want = fedavg_batched_ref(flat, w)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-6)
+        # unravel of the aggregate == leafwise weighted mean of the tree
+        agg = tree_unravel(spec, got)
+        for key in ("w", "b"):
+            leaf = np.asarray(tree[key], np.float32)
+            wn = np.asarray(w)[..., None]
+            while wn.ndim < leaf.ndim:
+                wn = wn[..., None]
+            want_leaf = (leaf * wn).sum(1) / np.asarray(w).sum(1).reshape(
+                (r,) + (1,) * (leaf.ndim - 2))
+            np.testing.assert_allclose(np.asarray(agg[key]), want_leaf,
+                                       rtol=1e-5, atol=1e-5)
+
+
 # ---------------------------------------------------------------------------
 # lstm_cell
 # ---------------------------------------------------------------------------

@@ -1,0 +1,134 @@
+"""The derived minibatch schedule (repro.core.schedule) is the parity
+keystone of PR 2: both engines draw batches from the same counter-based
+jax.random derivation, so these tests pin down (a) prefix stability —
+the property that lets one traced fleet program serve shards of
+different sizes — and (b) loop-plan == fleet-plan equality under
+padding, including the sub-batch single-padded-step fallback."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import schedule
+
+
+def test_index_scores_prefix_stable():
+    key = jax.random.PRNGKey(7)
+    s_small = np.asarray(schedule.index_scores(key, 33))
+    s_big = np.asarray(schedule.index_scores(key, 257))
+    np.testing.assert_array_equal(s_small, s_big[:33])
+
+
+def test_epoch_scores_depend_on_seed_and_epoch():
+    a = np.asarray(schedule.epoch_scores(0, 3, 64))
+    b = np.asarray(schedule.epoch_scores(1, 3, 64))
+    assert a.shape == (3, 64)
+    assert not (a == b).any(axis=1).all(), "different seeds, different orders"
+    assert not (a[0] == a[1]).all(), "different epochs, different orders"
+
+
+def test_epoch_scores_traced_seed_matches_python_seed():
+    """The fleet engine derives seeds as traced scalars inside its round
+    loop; the loop engine passes python ints.  Same value, same scores."""
+    traced = jax.jit(lambda s: schedule.epoch_scores(s, 2, 40))(jnp.int32(13))
+    host = schedule.epoch_scores(13, 2, 40)
+    np.testing.assert_array_equal(np.asarray(traced), np.asarray(host))
+
+
+@pytest.mark.parametrize("n,n_pad", [(64, 64), (64, 100), (37, 96), (7, 96), (7, 7)])
+def test_plan_padded_matches_unpadded(n, n_pad):
+    """The fleet evaluates the plan over a padded shard with a traced
+    ``n``; restricted to usable positions it must equal the loop
+    engine's unpadded plan exactly (same indices, same weights)."""
+    batch, epochs = 16, 3
+    steps_loop = schedule.fit_steps(n, batch)
+    steps_fleet = max(steps_loop, (n_pad // batch) or 1) + 1  # over-provisioned
+    idx_l, w_l = (np.asarray(a) for a in schedule.minibatch_plan(
+        5, epochs=epochs, n=n, batch=batch))
+    scores = schedule.epoch_scores(5, epochs, n_pad)
+    idx_f, w_f = (np.asarray(a) for a in schedule.plan_from_scores(
+        scores, jnp.int32(n), batch, steps_fleet))
+    assert idx_l.shape == (epochs, steps_loop, batch)
+    assert idx_f.shape == (epochs, steps_fleet, batch)
+    np.testing.assert_array_equal(idx_f[:, :steps_loop], idx_l)
+    np.testing.assert_array_equal(w_f[:, :steps_loop], w_l)
+    assert (w_f[:, steps_loop:] == 0).all(), "over-provisioned steps are masked"
+    assert (idx_f[:, steps_loop:] == 0).all()
+
+
+def test_plan_is_a_permutation_of_full_batches():
+    idx, w = (np.asarray(a) for a in schedule.minibatch_plan(
+        0, epochs=2, n=48, batch=16))
+    assert idx.shape == (2, 3, 16) and (w == 1.0).all()
+    for e in range(2):
+        seen = idx[e].ravel()
+        assert len(set(seen.tolist())) == 48, "each epoch visits each sample once"
+        assert seen.max() < 48
+
+
+def test_sub_batch_plan_single_padded_step():
+    """n < batch: one step, first n slots carry the n samples (each
+    exactly once), the rest are zero-weight padding."""
+    idx, w = (np.asarray(a) for a in schedule.minibatch_plan(
+        3, epochs=2, n=5, batch=16))
+    assert idx.shape == (2, 1, 16)
+    assert (w[:, :, :5] == 1.0).all() and (w[:, :, 5:] == 0.0).all()
+    for e in range(2):
+        assert sorted(idx[e, 0, :5].tolist()) == [0, 1, 2, 3, 4]
+        assert (idx[e, 0, 5:] == 0).all()
+
+
+def test_drop_last_truncation():
+    """n not a batch multiple: (n // batch) * batch samples are used,
+    mirroring the loop engine's historical drop-last behaviour."""
+    idx, w = (np.asarray(a) for a in schedule.minibatch_plan(
+        1, epochs=1, n=50, batch=16))
+    assert idx.shape == (1, 3, 16)
+    assert (w == 1.0).all()
+    assert len(set(idx[0].ravel().tolist())) == 48  # 48 distinct samples
+
+
+def test_supervised_task_fit_consumes_derived_plan():
+    """SupervisedTask.fit batches come from minibatch_plan: training with
+    a manually-applied plan reproduces fit() exactly."""
+    from jax.flatten_util import ravel_pytree
+
+    from repro.core import SupervisedTask
+    from repro.models import MLPClassifier, MLPClassifierConfig
+
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(70, 8)).astype(np.float32)
+    y = rng.integers(0, 5, 70).astype(np.int32)
+    task = SupervisedTask(MLPClassifier(MLPClassifierConfig(8, (16,), 5)), lr=1e-2)
+    p0 = task.init(seed=0)
+    fitted, _ = task.fit(p0, (x, y), epochs=2, batch_size=32, seed=9)
+
+    idx, w = (np.asarray(a) for a in schedule.minibatch_plan(
+        9, epochs=2, n=70, batch=32))
+    params, opt_state = p0, task._opt.init(p0)
+    for e in range(idx.shape[0]):
+        for s in range(idx.shape[1]):
+            sel = idx[e, s]
+            params, opt_state, _ = task._fit_step(params, opt_state,
+                                                  x[sel], y[sel], w[e, s])
+    want, _ = ravel_pytree(fitted)
+    got, _ = ravel_pytree(params)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_tree_ravel_unravel_roundtrip():
+    """The fleet engine's flat round state: ravel once, unravel lanes."""
+    from repro.utils.tree import tree_ravel, tree_unravel
+
+    rng = np.random.default_rng(1)
+    tree = {"w": jnp.asarray(rng.normal(size=(4, 3, 6, 2)).astype(np.float32)),
+            "b": jnp.asarray(rng.normal(size=(4, 3, 5)).astype(np.float32))}
+    flat, spec = tree_ravel(tree, batch_ndim=2)
+    assert flat.shape == (4, 3, 6 * 2 + 5)
+    back = tree_unravel(spec, flat)
+    np.testing.assert_array_equal(np.asarray(back["w"]), np.asarray(tree["w"]))
+    np.testing.assert_array_equal(np.asarray(back["b"]), np.asarray(tree["b"]))
+    # per-lane view: unravel a single (P,) row with the same spec
+    lane = tree_unravel(spec, flat[2, 1])
+    np.testing.assert_array_equal(np.asarray(lane["w"]), np.asarray(tree["w"][2, 1]))
