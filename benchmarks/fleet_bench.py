@@ -9,17 +9,26 @@ all R sessions as ONE compiled program; the loop engine
 the same R (its cost is linear in sessions by construction — one Python
 round loop each).  The headline metrics:
 
-* **session-rounds/s** (warm, cached jit) — the scaling number;
+* **session-rounds/s** (warm, cached jit) — the scaling number, for the
+  static world AND for the opportunistic world (``results_mobility``:
+  per-round on-device re-negotiation — waypoint kinematics, radio-range
+  masks, battery-floor releases — with membership stats per row);
 * **staged index bytes** — what the host ships to the device for
   minibatch scheduling.  The PR 1 engine staged a
   (max_rounds, R, epochs, steps, batch) int32 tensor (plus the
   contributor-refresh plan); the PR 2 engine derives schedules on
   device from counters, staging only (R,) shard sizes and (R, N)
   seeds.  Both numbers land in the JSON as before/after.
+* **staged shard bytes** — contributor training shards.  Dense
+  per-requester staging shipped the same shared shards R times as an
+  (R, N, n_c, F) block; the deduplicated engine stages each unique
+  shard once plus an (R, N) gather index.  Before/after per row.
 
-``--smoke`` additionally runs a 1-session fleet against the loop-engine
-oracle and exits non-zero on any parity regression (rounds, stop
-reason, accuracy history, final params) — the CI gate.
+``--smoke`` additionally runs (a) a 1-session fleet against the
+loop-engine oracle and (b) a CHURN scenario — contributors leave radio
+range mid-session and contracts are re-negotiated — asserting full
+parity including the per-round membership masks, and exits non-zero on
+any regression — the CI gate.
 
   PYTHONPATH=src python -m benchmarks.fleet_bench [--sizes 8,32,128,512]
       [--smoke] [--out BENCH_fleet.json]
@@ -35,9 +44,9 @@ import time
 
 import numpy as np
 
-from repro.core import (EnFedConfig, EnFedSession, RequesterSpec,
-                        SupervisedTask, make_fleet, run_fleet)
-from repro.core import schedule
+from repro.core import (EnFedConfig, EnFedSession, MobilityConfig,
+                        RequesterSpec, SupervisedTask, make_fleet, run_fleet)
+from repro.core import mobility, schedule
 from repro.data import CaloriesDatasetConfig, dirichlet_partition, make_calories_tabular
 from repro.models import MLPClassifier, MLPClassifierConfig
 
@@ -118,6 +127,78 @@ def _parity_smoke(task, fleet, states, own_train, own_test, cfg) -> dict:
             "max_param_diff": max_diff, "max_accuracy_diff": acc_diff}
 
 
+def _churn_mobility() -> MobilityConfig:
+    """The benchmark's opportunistic world: devices re-waypoint every
+    round inside a 200 m arena with a 95 m radio range — enough motion
+    that a contract-holding contributor walks out of range mid-session
+    (>= 25% of the pool leaves at least once) and re-negotiation signs
+    replacements."""
+    return MobilityConfig(radio_range_m=95.0, leg_rounds=1, seed=5)
+
+
+def _membership_stats(result) -> dict:
+    """Fleet-level churn statistics from the (max_rounds, R, N) trace.
+
+    Join/leave transitions only count between rounds a lane actually
+    EXECUTED — a session stopping (or the fleet early-exiting) zeroes
+    its trailing trace rows, which is termination, not radio churn."""
+    member = result.history["member"] > 0            # (T, R, N)
+    executed = result.history["executed"] > 0        # (T, R)
+    both = (executed[1:] & executed[:-1])[..., None]
+    diff = member[1:].astype(np.int8) - member[:-1].astype(np.int8)
+    joins = int(((diff > 0) & both).sum())
+    leaves = int(((diff < 0) & both).sum())
+    exec_rounds = max(float(executed.sum()), 1.0)
+    counts = member.sum(-1)
+    return {
+        "mean_members_per_round": round(
+            float((counts * executed).sum() / exec_rounds), 3),
+        "join_events": joins, "leave_events": leaves,
+        "empty_neighborhood_rounds": int(((counts == 0) & executed).sum()),
+        "member_rounds": int((member & executed[..., None]).sum())}
+
+
+def _churn_smoke(task, fleet, states, own_train, own_test) -> dict:
+    """Churn parity gate: a session whose contributor set is provably
+    re-negotiated mid-run (members leave radio range / arrivals sign)
+    must match the loop-engine oracle on rounds, stop reason, membership
+    masks, params, and battery trajectory."""
+    cfg = EnFedConfig(desired_accuracy=0.999, max_rounds=6, epochs=1,
+                      batch_size=BATCH, encrypt=False, n_max=2,
+                      contributor_refresh_epochs=1,
+                      mobility=_churn_mobility())
+    loop = EnFedSession(task, own_train, own_test, fleet,
+                        copy.deepcopy(states), cfg).run()
+    res = run_fleet(task, [RequesterSpec(own_train, own_test, fleet,
+                                         copy.deepcopy(states))], cfg)
+    fl = res.sessions[0]
+    out = {"pass": False, "rounds": (loop.rounds, fl.rounds),
+           "stop": (loop.stop_reason, fl.stop_reason),
+           "loop_members": loop.history["members"],
+           "fleet_members": fl.history["members"]}
+    if fl.rounds != loop.rounds or fl.stop_reason != loop.stop_reason:
+        return out
+    masks_l = np.array(loop.history["member_mask"])
+    masks_f = np.array(fl.history["member_mask"])
+    out["mask_match"] = bool((masks_l == masks_f).all())
+    joins, leaves = mobility.membership_events(masks_l)
+    out["join_events"], out["leave_events"] = joins, leaves
+    # the gate must exercise RE-NEGOTIATION: >= 25% of the pool (here,
+    # >= 1 of 3 contributors) leaves mid-session
+    out["churned"] = leaves >= max(1, len(fleet) // 4)
+    from jax.flatten_util import ravel_pytree
+    lv, _ = ravel_pytree(loop.params)
+    fv, _ = ravel_pytree(fl.params)
+    out["max_param_diff"] = float(np.abs(np.asarray(lv) - np.asarray(fv)).max())
+    out["max_battery_diff"] = float(np.abs(
+        np.asarray(loop.history["battery"])
+        - np.asarray(fl.history["battery"])).max())
+    out["pass"] = bool(out["mask_match"] and out["churned"]
+                       and out["max_param_diff"] < 1e-4
+                       and out["max_battery_diff"] < 1e-5)
+    return out
+
+
 def run(verbose: bool = True, sizes=(8, 32, 128, 512), smoke: bool = False,
         out: str | None = None):
     import jax
@@ -139,6 +220,10 @@ def run(verbose: bool = True, sizes=(8, 32, 128, 512), smoke: bool = False,
                                                own_test, smoke_cfg)
         if verbose:
             print(f"[parity smoke] {report['parity_smoke']}")
+        report["churn_smoke"] = _churn_smoke(task, fleet, states, own_train,
+                                             own_test)
+        if verbose:
+            print(f"[churn smoke] {report['churn_smoke']}")
 
     # loop-engine baseline: seconds per session, measured once (cost is
     # per-session linear: one Python dispatch chain per session)
@@ -173,7 +258,12 @@ def run(verbose: bool = True, sizes=(8, 32, 128, 512), smoke: bool = False,
             "staged_index_bytes_after": result.staged_index_bytes,
             "staged_index_bytes_before_pr1": before_idx,
             "index_bytes_reduction_x": round(
-                before_idx / max(result.staged_index_bytes, 1), 1)})
+                before_idx / max(result.staged_index_bytes, 1), 1),
+            "staged_shard_bytes_after": result.staged_shard_bytes,
+            "staged_shard_bytes_before_dense": result.staged_shard_bytes_dense,
+            "shard_bytes_reduction_x": round(
+                result.staged_shard_bytes_dense
+                / max(result.staged_shard_bytes, 1), 1)})
         rows.append((f"fleet/R={R}", wall_warm * 1e6 / R,
                      f"rounds/s={rps:.1f} E={result.total_energy_j:.1f}J "
                      f"loop_equiv={loop_equiv_s:.1f}s speedup={loop_equiv_s / wall_warm:.1f}x"))
@@ -187,6 +277,36 @@ def run(verbose: bool = True, sizes=(8, 32, 128, 512), smoke: bool = False,
     if verbose:
         print(f"[loop baseline] {loop_s_per_session:.2f} s/session "
               f"({LOOP_SAMPLE_SESSIONS} sessions measured)")
+
+    # opportunistic-world sweep: the SAME fleet sizes with per-round
+    # on-device re-negotiation (mobility kinematics + radio-range masks +
+    # contributor battery dynamics).  The headline acceptance number is
+    # rounds/s at the largest R with mobility enabled.
+    mob_cfg = EnFedConfig(desired_accuracy=0.999, max_rounds=cfg.max_rounds,
+                          epochs=cfg.epochs, batch_size=BATCH, encrypt=False,
+                          n_max=2, contributor_refresh_epochs=1,
+                          mobility=_churn_mobility())
+    report["results_mobility"] = []
+    for R in sizes:
+        specs = _make_specs(R, own_train, own_test, fleet, states, seed=1)
+        run_fleet(task, specs, mob_cfg)               # compile
+        specs = _make_specs(R, own_train, own_test, fleet, states, seed=1)
+        t0 = time.perf_counter()
+        result = run_fleet(task, specs, mob_cfg)
+        wall_warm = time.perf_counter() - t0
+        total_rounds = int(result.rounds.sum())
+        rps = total_rounds / wall_warm
+        row = {"R": R, "warm_s": round(wall_warm, 4),
+               "session_rounds": total_rounds, "rounds_per_s": round(rps, 2),
+               "simulated_energy_j": round(result.total_energy_j, 2)}
+        row.update(_membership_stats(result))
+        report["results_mobility"].append(row)
+        if verbose:
+            print(f"[mobility R={R:4d}] warm {wall_warm:6.2f}s | "
+                  f"{total_rounds} session-rounds -> {rps:7.1f} rounds/s | "
+                  f"mean members {row['mean_members_per_round']:.2f} | "
+                  f"joins {row['join_events']} leaves {row['leave_events']} "
+                  f"empty rounds {row['empty_neighborhood_rounds']}")
 
     # early-exit demo: a fleet whose sessions all hit the accuracy target
     # in round 1 executes O(1) round bodies even with a 16-round budget
@@ -218,6 +338,10 @@ def run(verbose: bool = True, sizes=(8, 32, 128, 512), smoke: bool = False,
     if smoke and not report["parity_smoke"]["pass"]:
         print("PARITY REGRESSION: fleet engine diverged from the loop oracle",
               file=sys.stderr)
+        sys.exit(1)
+    if smoke and not report["churn_smoke"]["pass"]:
+        print("CHURN REGRESSION: mobility re-negotiation diverged from the "
+              "loop oracle (or the scenario stopped churning)", file=sys.stderr)
         sys.exit(1)
     return rows
 

@@ -6,10 +6,17 @@ scale (the full benchmark lives in benchmarks/).
 
   PYTHONPATH=src python examples/har_federated.py [--dataset har|calories]
                                                   [--engine loop|fleet]
+                                                  [--churn]
 
 ``--engine fleet`` runs the same EnFed session through the jit-native
 fleet engine (repro.core.fleet) instead of the Python round loop — same
 protocol, same result (parity-tested), one compiled program.
+
+``--churn`` turns on the opportunistic world (repro.core.mobility): the
+neighbors walk random-waypoint trajectories, contracts are re-negotiated
+every round as devices enter/leave radio range or hit their battery
+floor, and the walkthrough prints the per-round membership so you can
+watch the requester keep training while its neighborhood churns.
 """
 
 import argparse
@@ -17,7 +24,8 @@ import argparse
 import numpy as np
 
 from repro.core import (CFLLearner, DFLLearner, EnFedConfig, EnFedSession,
-                        SupervisedTask, cloud_only_baseline, make_fleet)
+                        MobilityConfig, SupervisedTask, cloud_only_baseline,
+                        make_fleet)
 from repro.data import (CaloriesDatasetConfig, HARDatasetConfig,
                         dirichlet_partition, make_calories_tabular,
                         make_har_windows)
@@ -39,6 +47,53 @@ def build(dataset: str):
     return task, shards, (own_x[:n], own_y[:n]), (own_x[n:], own_y[n:]), (x, y)
 
 
+def churn_walkthrough(task, shards, own_train, own_test, args):
+    """The opportunistic-world demo: one requester keeps training for the
+    whole round budget while neighbors churn through its radio range.
+
+    Every round the session re-negotiates: contributors that wandered
+    out of the 90 m range (or drained to the battery floor) are
+    released, devices that wandered in are signed, and a higher-utility
+    arrival displaces the weakest member.  Rounds with an EMPTY
+    neighborhood are survivable — the requester trains alone on its own
+    shard.  Both engines derive the identical world; pick with --engine.
+    """
+    fleet = make_fleet(5, seed=1, p_has_model=1.0)
+    states = {}
+    for i, dev in enumerate(fleet):
+        dev.reservation_price = 0.4
+        p = task.init(seed=10 + i)
+        p, _ = task.fit(p, shards[i + 1], epochs=1, batch_size=32, seed=i)
+        states[dev.device_id] = {"params": p, "data": shards[i + 1]}
+    cfg = EnFedConfig(
+        desired_accuracy=args.target, epochs=args.epochs, max_rounds=10,
+        n_max=3, contributor_refresh_epochs=1,
+        mobility=MobilityConfig(arena_m=200.0, radio_range_m=90.0,
+                                leg_rounds=2, seed=5))
+    res = EnFedSession(task, own_train, own_test, fleet, states,
+                       cfg).run(engine=args.engine)
+
+    print(f"\n=== churn walkthrough ({args.dataset}, engine={args.engine}) ===")
+    print(f"{'round':>5} {'members':>8} {'contract set':<18} {'acc':>6} {'battery':>8}")
+    prev = None
+    for r in range(res.rounds):
+        mask = np.asarray(res.history["member_mask"][r]) > 0
+        ids = [d for d, m in enumerate(mask) if m]
+        note = ""
+        if prev is not None:
+            joined = sorted(set(ids) - set(prev))
+            left = sorted(set(prev) - set(ids))
+            bits = ([f"+{j}" for j in joined] + [f"-{l}" for l in left])
+            note = "  " + " ".join(bits) if bits else ""
+        print(f"{r:>5} {int(mask.sum()):>8} {str(ids):<18} "
+              f"{res.history['accuracy'][r]:6.3f} "
+              f"{res.history['battery'][r]:8.3f}{note}")
+        prev = ids
+    print(f"requester finished: {res.rounds} rounds, stop={res.stop_reason}, "
+          f"final acc {res.accuracy:.3f}")
+    return 0
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dataset", choices=("har", "calories"), default="har")
@@ -46,9 +101,14 @@ def main():
     ap.add_argument("--epochs", type=int, default=8)
     ap.add_argument("--engine", choices=("loop", "fleet"), default="loop",
                     help="EnFed execution engine (fleet = one jit program)")
+    ap.add_argument("--churn", action="store_true",
+                    help="opportunistic-world walkthrough: neighbors enter/"
+                         "leave radio range mid-session (repro.core.mobility)")
     args = ap.parse_args()
 
     task, shards, own_train, own_test, pooled = build(args.dataset)
+    if args.churn:
+        return churn_walkthrough(task, shards, own_train, own_test, args)
 
     # --- EnFed ---------------------------------------------------------
     fleet = make_fleet(5, seed=1, p_has_model=1.0)

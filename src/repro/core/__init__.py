@@ -24,6 +24,7 @@ from repro.core.federated import (
     cloud_only_baseline,
 )
 from repro.core.fleet import FleetResult, RequesterSpec, run_fleet
+from repro.core.mobility import MobilityConfig
 from repro.core.protocol import Phase
 from repro.core.topology import AggregationStrategy, aggregate_updates, group_mixing_matrix
 
@@ -33,6 +34,6 @@ __all__ = [
     "NeighborDevice", "Contract", "select_contributors", "participation_mask", "make_fleet",
     "EnFedConfig", "EnFedSession", "SessionResult",
     "SupervisedTask", "CFLLearner", "DFLLearner", "FederatedTrainer", "cloud_only_baseline",
-    "FleetResult", "RequesterSpec", "run_fleet", "Phase",
+    "FleetResult", "RequesterSpec", "run_fleet", "MobilityConfig", "Phase",
     "AggregationStrategy", "aggregate_updates", "group_mixing_matrix",
 ]

@@ -107,10 +107,14 @@ class CostModel:
         return n_contrib * self.link.handshake_s
 
     def t_key_exchange(self, n_contrib: int) -> float:
+        if n_contrib <= 0:
+            return 0.0   # nobody to exchange keys with (empty neighborhood)
         per = 8.0 * self.link.key_bytes / self.link.rate_bps
         return per if self.parallel_receive else n_contrib * per
 
     def t_receive_updates(self, n_contrib: int, model_bytes: int) -> float:
+        if n_contrib <= 0:
+            return 0.0   # member-less round: nothing arrives on the wire
         per = 8.0 * model_bytes / self.link.rate_bps
         return per if self.parallel_receive else n_contrib * per
 
@@ -165,6 +169,30 @@ class CostModel:
                             epochs=epochs, n_devices=n_devices,
                             encrypt=encrypt).e_tot
 
+    def contributor_round_energy(self, *, num_params: int, model_bytes: int,
+                                 num_samples: int, refresh_epochs: int,
+                                 encrypt: bool = True):
+        """One participating round's cost on the CONTRIBUTOR side, split as
+        ``(e_tx, e_refresh)``.
+
+        ``e_tx`` — transmit (and, when the transport is encrypted,
+        encrypt) one model update; paid every round the device is under
+        contract.  ``e_refresh`` — the between-round local training of
+        Phase.REFRESH; paid only when the session continues past the
+        round.  The mobility layer (``repro.core.mobility``) discharges
+        contributor batteries with these constants in BOTH engines, which
+        is what makes the battery-floor release in
+        ``membership_step`` meaningful.
+        """
+        d = self.device
+        t_tx = 8.0 * model_bytes / self.link.rate_bps
+        e_tx = t_tx * d.p_tx
+        if encrypt:
+            e_tx += self.t_crypto(model_bytes) * d.p_crypto
+        e_refresh = (self.t_local_fit(num_params, num_samples, refresh_epochs)
+                     * d.p_train if refresh_epochs > 0 else 0.0)
+        return e_tx, e_refresh
+
     def _energy(self, t: PhaseTimes) -> EnergyReport:
         d = self.device
         e_comp = (t.t_init * d.p_init + (t.t_enc + t.t_dec) * d.p_crypto
@@ -214,6 +242,25 @@ class CostModel:
         rep = EnergyReport(times=t, e_comp=e_comp, e_comm=e_comm)
         rep.times.t_com += t_send  # total wall time includes sending
         return rep
+
+    def round_energy_table(self, *, max_contrib: int, num_params: int,
+                           model_bytes: int, num_samples: int, epochs: int,
+                           n_devices: Optional[int] = None,
+                           encrypt: bool = True):
+        """``[round_energy(n_contrib=j) for j in 0..max_contrib]``.
+
+        Under mobility the per-round contributor count is dynamic, so the
+        battery-discharge constant becomes this (max_contrib + 1,) lookup
+        table: the loop engine indexes it with each round's member count,
+        the fleet engine stages it and gathers with the traced count.
+        Entry 0 is a member-less round — the requester still fits on its
+        own shard (and burns the request broadcast), it just receives
+        nothing.
+        """
+        return [self.round_energy(
+            n_contrib=j, num_params=num_params, model_bytes=model_bytes,
+            num_samples=num_samples, epochs=epochs, n_devices=n_devices,
+            encrypt=encrypt) for j in range(max_contrib + 1)]
 
     def cloud_only_response(self, *, data_bytes: int, num_params: int,
                             num_samples: int, epochs: int,

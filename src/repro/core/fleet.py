@@ -5,8 +5,8 @@ The loop engine (``repro.core.rounds.EnFedSession``) executes Algorithm 1
 as Python control flow — one ``task.fit`` dispatch per contributor per
 round — which caps simulations at a handful of sessions.  This module
 ports the same protocol onto stacked arrays so an entire fleet of
-requesting devices advances together.  Three design rules keep the hot
-path lean at R=512 and beyond:
+requesting devices advances together.  Design rules for the hot path at
+R=512 and beyond:
 
 * **Flat-parameter round state.**  Contributor params are raveled ONCE
   at setup (``repro.utils.tree.tree_ravel``) into a single (R, N, P)
@@ -27,9 +27,15 @@ path lean at R=512 and beyond:
   batches by construction; prefix-stable per-sample scores make one
   traced program serve requesters with different shard sizes, including
   shards smaller than one batch (single padded step, zero-weight
-  padding).  The old host plan was a (max_rounds, R, epochs, steps,
-  batch) int32 tensor — at R=512 it dominated host RAM and host->device
-  bytes; it no longer exists.
+  padding).
+
+* **Deduplicated contributor shards.**  Requesters sharing one
+  contributor population used to re-stage the same training shards R
+  times as a dense (R, N, n_c, F) block — the dominant host->device
+  transfer at R=512.  Shards are now staged once into a unique-shard
+  table (U, n_c, F) plus an (R, N) gather index; the program gathers
+  per-lane views on device.  ``FleetResult.staged_shard_bytes`` vs
+  ``staged_shard_bytes_dense`` records the saving.
 
 * **Early-exit rounds, no dead work.**  The round loop is a chunked
   ``lax.while_loop``: after every ``round_chunk`` rounds the program
@@ -38,27 +44,45 @@ path lean at R=512 and beyond:
   O(k) round bodies, not ``max_rounds``.  Inside a chunk, each round
   body sits under ``lax.cond`` — once every lane has stopped (or the
   chunk runs past ``max_rounds``) the fit/refresh compute is skipped,
-  not computed-and-discarded; the contributor refresh is additionally
-  gated on any lane surviving into the next round.  Because traces are
-  preallocated (max_rounds, R) buffers written in place, early exit
-  leaves the untouched tail at zero — ``history["round_executed"]``
-  records exactly which round bodies ran.
+  not computed-and-discarded.  Because traces are preallocated
+  (max_rounds, ...) buffers written in place, early exit leaves the
+  untouched tail at zero — ``history["round_executed"]`` records exactly
+  which round bodies ran.
+
+* **Opportunistic world (``cfg.mobility``).**  With a
+  ``repro.core.mobility.MobilityConfig`` set, the contract set is no
+  longer frozen at handshake: contributor lanes hold the whole agreeing
+  *candidate pool*, and every round body re-negotiates membership on
+  device — counter-based waypoint positions from the traced round
+  number, radio-range proximity, battery-floor releases (contributor
+  batteries are traced (R, N) state discharged per participating
+  round), and top-``n_max``-by-utility signing so arrivals undercut
+  weaker members.  The resulting (R, N) membership mask IS the fedavg
+  weight vector of that round's batched kernel launch (via
+  ``topology.dynamic_round_weights``), gates Phase.REFRESH to current
+  members, and indexes a per-member-count energy table for the
+  requester's battery discharge.  ``history["member"]`` traces the mask
+  per round.  The loop engine's ``EnFedSession._run_mobility`` derives
+  the same world through the same ``repro.core.mobility`` functions with
+  concrete round numbers — identical trajectories, masks, params, and
+  battery curves by construction.
 
 Phase mapping (vocabulary in ``repro.core.protocol``): handshake stays
-host-side (cheap, deterministic numpy) and emits the (R, N) contract
-mask + static per-round aggregation weights; collect+aggregate is the
-batched fedavg launch on the flat buffer; fit/score/account are vmapped
-masked lanes; refresh trains contributors on their own shards between
-rounds (frozen once their requester stops).
+host-side (cheap, deterministic numpy) and emits either the static
+(R, N) contract mask + per-round aggregation weights, or — under
+mobility — the candidate pool whose per-round RENEGOTIATE step runs on
+device; collect+aggregate is the batched fedavg launch on the flat
+buffer; fit/score/account are vmapped masked lanes; refresh trains
+contributors on their own shards between rounds.
 
 Parity with the loop engine — same aggregated params, round counts, stop
-reasons, and battery trajectories — is asserted by
-``tests/test_fleet_engine.py`` across aggregation strategies and
-encrypt on/off.  The AES-128-CTR transport is bit-exact (validated in
-the loop engine / kernel tests), so the fleet engine models encryption
-in the cost domain (byte counts -> eq. (4)-(7) -> battery) without
-re-running the cipher per round.  All sessions share one
-``SupervisedTask``.
+reasons, membership masks, and battery trajectories — is asserted by
+``tests/test_fleet_engine.py`` across aggregation strategies, encrypt
+on/off, and churn scenarios.  The AES-128-CTR transport is bit-exact
+(validated in the loop engine / kernel tests), so the fleet engine
+models encryption in the cost domain (byte counts -> eq. (4)-(7) ->
+battery) without re-running the cipher per round.  All sessions share
+one ``SupervisedTask``.
 """
 
 from __future__ import annotations
@@ -71,10 +95,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import protocol, schedule
+from repro.core import mobility as mobility_mod
+from repro.core import protocol, schedule, topology
 from repro.core.battery import BatteryState, discharge_level, load_efficiency
 from repro.core.energy import CostModel
-from repro.core.incentive import NeighborDevice, sign_contracts_fleet
+from repro.core.incentive import (NeighborDevice, candidate_pool,
+                                  sign_contracts_fleet)
 from repro.core.rounds import EnFedConfig, SessionResult
 from repro.kernels.fedavg.ops import fedavg_flat_batched
 from repro.models.classifiers import masked_cross_entropy_loss
@@ -105,9 +131,14 @@ class FleetResult:
     battery_level: np.ndarray   # (R,) final battery fraction
     total_energy_j: float       # summed eq. (5) energy across the fleet
     history: Dict[str, np.ndarray]  # (max_rounds, R) traces; "round_executed"
-                                    # is (max_rounds,) — 1 where a round body ran
+                                    # is (max_rounds,) — 1 where a round body
+                                    # ran; "member" is (max_rounds, R, N)
+                                    # under mobility (token zeros otherwise:
+                                    # the static mask is just round_w > 0)
     staged_host_bytes: int = 0  # host->device bytes staged for the program
     staged_index_bytes: int = 0  # subset that is minibatch-schedule metadata
+    staged_shard_bytes: int = 0  # contributor-shard table + gather indices
+    staged_shard_bytes_dense: int = 0  # what the dense (R, N, ...) form costs
 
 
 def _pad_stack(arrays, pad_len: int):
@@ -135,11 +166,12 @@ def _stack_trees(trees, template=None):
     jax.jit,
     static_argnames=("task", "use_pallas", "interpret", "do_refresh", "chunk",
                      "max_rounds", "epochs", "batch", "steps_max",
-                     "ref_epochs", "ref_steps", "spec"),
+                     "ref_epochs", "ref_steps", "spec", "mob", "n_max",
+                     "strategy"),
     donate_argnames=("contrib_flat",))
 def _fleet_program(task, use_pallas, interpret, do_refresh, chunk, max_rounds,
                    epochs, batch, steps_max, ref_epochs, ref_steps, spec,
-                   contrib_flat, arrays):
+                   mob, n_max, strategy, contrib_flat, arrays):
     """The whole fleet's Algorithm 1 as one compiled program.
 
     Module-level so the jit cache is shared across ``run_fleet`` calls:
@@ -151,11 +183,15 @@ def _fleet_program(task, use_pallas, interpret, do_refresh, chunk, max_rounds,
 
     ``contrib_flat`` (R, N, P) is the donated flat round state;
     ``spec`` is the static :func:`repro.utils.tree.tree_ravel` spec that
-    recovers per-device parameter pytrees from (P,) lane views.
+    recovers per-device parameter pytrees from (P,) lane views.  ``mob``
+    is the static :class:`repro.core.mobility.MobilityConfig` (None =
+    static neighborhood); under mobility, contributor lanes are the
+    candidate pool and membership is re-negotiated on device each round.
     """
     model, opt = task.model, task._opt
     R, N, P = contrib_flat.shape
     n_pad = arrays["own_x"].shape[1]
+    mobility_on = mob is not None
 
     def fit_one(flat_p, x, y, idx, w):
         """Identical math to SupervisedTask.fit for one device's shard,
@@ -192,16 +228,18 @@ def _fleet_program(task, use_pallas, interpret, do_refresh, chunk, max_rounds,
     if do_refresh:
         # Phase.REFRESH schedule is round-invariant (seed = cfg.seed +
         # device_id), so its indices are derived once per program, on
-        # device, and reused every round.
-        nc_pad = arrays["cx"].shape[2]
+        # device, and reused every round.  The training shards come from
+        # the deduplicated unique-shard table: one on-device gather
+        # replaces the old dense (R, N, n_c, F) host staging.
+        nc_pad = arrays["cx_tab"].shape[1]
         ref_scores = jax.vmap(jax.vmap(
             lambda s: schedule.epoch_scores(s, ref_epochs, nc_pad)))(
             arrays["ref_seeds"])
         ref_idx, ref_w = jax.vmap(jax.vmap(
             lambda sc, n: schedule.plan_from_scores(sc, n, batch, ref_steps)))(
             ref_scores, arrays["ref_n"])
-        cxf = arrays["cx"].reshape((R * N,) + arrays["cx"].shape[2:])
-        cyf = arrays["cy"].reshape(R * N, -1)
+        cxf = arrays["cx_tab"][arrays["cidx"].reshape(R * N)]
+        cyf = arrays["cy_tab"][arrays["cidx"].reshape(R * N)]
         ref_idx = ref_idx.reshape(R * N, ref_epochs, ref_steps, batch)
         ref_w = ref_w.reshape(R * N, ref_epochs, ref_steps, batch)
 
@@ -209,13 +247,31 @@ def _fleet_program(task, use_pallas, interpret, do_refresh, chunk, max_rounds,
         """One live round body.  Entered only via lax.cond when at least
         one lane is active and rr < max_rounds (so ``active`` needs no
         extra validity masking inside)."""
-        (contrib, last, level, active, stop_code, rounds_done,
-         acc_h, loss_h, bat_h, exec_h, body_h) = state
+        (contrib, last, level, active, stop_code, rounds_done, clevel,
+         acc_h, loss_h, bat_h, exec_h, body_h, member_h) = state
+
+        # Phase.RENEGOTIATE (mobility): release members that walked out
+        # of radio range or hit the battery floor, sign in-range
+        # arrivals, let higher-utility arrivals displace weaker members
+        # — all on device, from the traced round number.
+        if mobility_on:
+            member, rank, _util = mobility_mod.membership_step(
+                mob, rr, arrays["req_ids"], arrays["cand_ids"],
+                arrays["cand_mask"], arrays["base_util"], clevel, n_max)
+            round_w = topology.dynamic_round_weights(member, rank, strategy)
+            count = jnp.sum(member, axis=1).astype(jnp.int32)
+        else:
+            round_w = arrays["round_w"]
 
         # Phase.COLLECT + Phase.AGGREGATE: one batched kernel launch,
-        # directly on the flat (R, N, P) round state.
-        glob = fedavg_flat_batched(contrib, arrays["round_w"],
+        # directly on the flat (R, N, P) round state; under mobility the
+        # membership mask IS the kernel's weight vector, and a lane whose
+        # whole neighborhood churned away keeps training on its own
+        # previous params.
+        glob = fedavg_flat_batched(contrib, round_w,
                                    use_pallas=use_pallas, interpret=interpret)
+        if mobility_on:
+            glob = jnp.where((count > 0)[:, None], glob, last)
 
         # Phase.FIT (requesters personalize) + Phase.SCORE.  The round's
         # minibatch indices are derived here, on device, from the traced
@@ -229,8 +285,16 @@ def _fleet_program(task, use_pallas, interpret, do_refresh, chunk, max_rounds,
         acc = jax.vmap(eval_one)(new_flat, arrays["test_x"], arrays["test_y"],
                                  arrays["test_mask"])
 
-        # Phase.ACCOUNT: traced battery discharge for executed rounds
-        level_new = discharge_level(level, arrays["e_round"],
+        # Phase.ACCOUNT: traced battery discharge for executed rounds;
+        # under mobility the round energy depends on how many members
+        # actually fed eq. (14) — a host-precomputed per-count table,
+        # gathered with the traced count.
+        if mobility_on:
+            e_round = jnp.take_along_axis(arrays["e_tab"], count[:, None],
+                                          axis=1)[:, 0]
+        else:
+            e_round = arrays["e_round"]
+        level_new = discharge_level(level, e_round,
                                     arrays["capacity"], arrays["eff"])
         reached = acc >= arrays["desired_accuracy"]
         low = level_new < arrays["battery_threshold"]
@@ -242,14 +306,28 @@ def _fleet_program(task, use_pallas, interpret, do_refresh, chunk, max_rounds,
         last = jnp.where(active[:, None], new_flat, last)
         next_active = active & ~reached & ~low
 
+        # Contributor-side discharge (mobility): members paid the
+        # transmission term this round; the refresh term only while
+        # their requester's session survives.  Releases at the battery
+        # floor feed back into the NEXT round's membership_step.
+        if mobility_on:
+            clevel = mobility_mod.contributor_discharge(
+                clevel, member & active[:, None], arrays["e_tx"],
+                arrays["e_ref"], next_active[:, None],
+                mob.contributor_capacity_j)
+
         # Phase.REFRESH: contributors keep training (frozen once their
-        # requester stops); skipped entirely — not computed-and-masked —
-        # when no lane survives into the next round.
+        # requester stops; under mobility, only CURRENT members train);
+        # skipped entirely — not computed-and-masked — when no lane
+        # survives into the next round.
         if do_refresh:
+            rmask = (next_active[:, None] & member) if mobility_on \
+                else next_active[:, None]
+
             def refresh(c):
                 refreshed, _ = jax.vmap(fit_one)(
                     c.reshape(R * N, P), cxf, cyf, ref_idx, ref_w)
-                return jnp.where(next_active[:, None, None],
+                return jnp.where(rmask[..., None],
                                  refreshed.reshape(R, N, P), c)
 
             contrib = jax.lax.cond(jnp.any(next_active), refresh,
@@ -263,20 +341,31 @@ def _fleet_program(task, use_pallas, interpret, do_refresh, chunk, max_rounds,
         bat_h = put(bat_h, level)
         exec_h = put(exec_h, active.astype(jnp.float32))
         body_h = put(body_h, jnp.float32(1.0))
+        if mobility_on:
+            member_h = put(member_h,
+                           (member & active[:, None]).astype(jnp.float32))
         return (contrib, last, level, next_active, stop_code, rounds_done,
-                acc_h, loss_h, bat_h, exec_h, body_h)
+                clevel, acc_h, loss_h, bat_h, exec_h, body_h, member_h)
 
+    last0 = (jnp.broadcast_to(arrays["init_flat"], (R, P)) if mobility_on
+             else jnp.zeros((R, P), contrib_flat.dtype))
+    clevel0 = arrays["clevel0"] if mobility_on else jnp.zeros((R, N), jnp.float32)
     state0 = (contrib_flat,
-              jnp.zeros((R, P), contrib_flat.dtype),
+              last0,
               arrays["level0"],
               jnp.ones((R,), bool),
               jnp.full((R,), protocol.STOP_MAX_ROUNDS, jnp.int32),
               jnp.zeros((R,), jnp.int32),
+              clevel0,
               jnp.zeros((max_rounds, R), jnp.float32),   # accuracy trace
               jnp.zeros((max_rounds, R), jnp.float32),   # loss trace
               jnp.zeros((max_rounds, R), jnp.float32),   # battery trace
               jnp.zeros((max_rounds, R), jnp.float32),   # active-lane trace
-              jnp.zeros((max_rounds,), jnp.float32))     # body-executed trace
+              jnp.zeros((max_rounds,), jnp.float32),     # body-executed trace
+              # membership trace; static-world runs carry a token buffer
+              # (the mask would just be round_w > 0 replicated per round)
+              jnp.zeros((max_rounds, R, N) if mobility_on else (1, 1, 1),
+                        jnp.float32))
 
     def maybe_round(i, carry):
         r0, state = carry
@@ -296,10 +385,10 @@ def _fleet_program(task, use_pallas, interpret, do_refresh, chunk, max_rounds,
 
     _, state = jax.lax.while_loop(while_cond, while_body,
                                   (jnp.int32(0), state0))
-    (contrib, last, level, _, stop_code, rounds_done,
-     acc_h, loss_h, bat_h, exec_h, body_h) = state
+    (contrib, last, level, _, stop_code, rounds_done, clevel,
+     acc_h, loss_h, bat_h, exec_h, body_h, member_h) = state
     return (contrib, last, level, stop_code, rounds_done,
-            (acc_h, loss_h, bat_h, exec_h, body_h))
+            (acc_h, loss_h, bat_h, exec_h, body_h, member_h))
 
 
 def run_fleet(task, requesters: Sequence[RequesterSpec],
@@ -315,10 +404,18 @@ def run_fleet(task, requesters: Sequence[RequesterSpec],
     ``repro.kernels.common.resolve_interpret``).  ``round_chunk`` is the
     early-exit granularity: the compiled round loop re-checks "is any
     session still active?" every ``round_chunk`` rounds.
+
+    With ``cfg.mobility`` set, contributor lanes hold each requester's
+    candidate pool and membership churns on device — requester lane i
+    moves as device ``cfg.mobility.requester_id + i`` in the shared
+    kinematics space, so a 1-lane fleet reproduces
+    ``EnFedSession.run()`` under the same :class:`MobilityConfig`
+    exactly.
     """
     from repro.kernels.common import resolve_interpret
 
     cost = cost_model or CostModel()
+    mob = cfg.mobility
     R = len(requesters)
     if R == 0:
         raise ValueError("empty fleet")
@@ -326,42 +423,91 @@ def run_fleet(task, requesters: Sequence[RequesterSpec],
         raise ValueError(f"round_chunk must be >= 1 (got {round_chunk})")
 
     # ---- Phase.HANDSHAKE (host-side, static) ------------------------------
-    contracts, contract_mask = sign_contracts_fleet(
-        [spec.neighborhood for spec in requesters],
-        cfg.offered_incentive, cfg.n_max)
-    for i, cs in enumerate(contracts):
+    # Static world: sign utility-ranked contracts once.  Mobility: fix the
+    # candidate POOL (agreeing devices, stable device order — the lane
+    # order of both engines); membership is re-negotiated per round on
+    # device by mobility.membership_step.
+    if mob is None:
+        contracts, contract_mask = sign_contracts_fleet(
+            [spec.neighborhood for spec in requesters],
+            cfg.offered_incentive, cfg.n_max)
+        lane_devs = contracts
+    else:
+        lane_devs = [candidate_pool(spec.neighborhood, cfg.offered_incentive)
+                     for spec in requesters]
+    for i, cs in enumerate(lane_devs):
         if not cs:
             raise RuntimeError(
                 f"requester {i}: no nearby device agreed to the incentive (N_d < 1)")
-    N = contract_mask.shape[1]
+    N = (contract_mask.shape[1] if mob is None
+         else max(len(cs) for cs in lane_devs))
 
-    # per-round aggregation weights = contract mask x strategy round mask
-    round_w = np.zeros((R, N), np.float32)
-    for i, cs in enumerate(contracts):
-        round_w[i, :len(cs)] = protocol.round_weights(len(cs), cfg.strategy)
+    if mob is None:
+        # per-round aggregation weights = contract mask x strategy round mask
+        round_w = np.zeros((R, N), np.float32)
+        for i, cs in enumerate(lane_devs):
+            round_w[i, :len(cs)] = protocol.round_weights(len(cs), cfg.strategy)
+    else:
+        # membership (and therefore the weight vector) is traced; stage
+        # the static candidate descriptors instead
+        req_ids = np.array([mob.requester_id + i for i in range(R)], np.int32)
+        cand_ids = np.zeros((R, N), np.int32)
+        cand_mask = np.zeros((R, N), bool)
+        base_util = np.zeros((R, N), np.float32)
+        clevel0 = np.zeros((R, N), np.float32)
+        for i, cs in enumerate(lane_devs):
+            n_i = len(cs)
+            max_data = max(d.data_size for d in cs)
+            cand_ids[i, :n_i] = [d.device_id for d in cs]
+            cand_mask[i, :n_i] = True
+            clevel0[i, :n_i] = [d.battery_level for d in cs]
+            # one vectorized call per requester, the same arithmetic the
+            # loop engine's _run_mobility stages
+            base_util[i, :n_i] = np.asarray(mobility_mod.static_utility_term(
+                np.array([d.model_staleness for d in cs], np.float32),
+                np.array([d.data_size for d in cs], np.float32),
+                np.float32(max_data)), np.float32)
 
     # ---- contributor state / data stacks ----------------------------------
+    # Shared shards are deduplicated: each unique (device, shard) pair is
+    # staged once into a table, lanes carry gather indices.  At R=512
+    # with one shared contributor population this removes the dominant
+    # host->device transfer (the ROADMAP's cx item).
     template = requesters[0].contributor_states[
-        contracts[0][0].device_id]["params"]
-    contrib_params, contrib_x, contrib_y = [], [], []
-    for spec, cs in zip(requesters, contracts):
-        row_p, row_x, row_y = [], [], []
-        for c in cs:
+        lane_devs[0][0].device_id]["params"]
+    contrib_params = []
+    shard_rows: dict = {}
+    shard_x, shard_y = [], []
+    cidx = np.zeros((R, N), np.int32)
+    shard_len = np.zeros((R, N), np.int32)
+    for i, (spec, cs) in enumerate(zip(requesters, lane_devs)):
+        row_p = []
+        for j, c in enumerate(cs):
             st = spec.contributor_states[c.device_id]
             row_p.append(st["params"])
-            row_x.append(np.asarray(st["data"][0]))
-            row_y.append(np.asarray(st["data"][1]).astype(np.int32))
+            xa = np.ascontiguousarray(st["data"][0], np.float32)
+            ya = np.ascontiguousarray(st["data"][1], np.int32)
+            # content identity, not object identity: deep-copied
+            # contributor_states (the common RequesterSpec pattern) must
+            # still collapse to one staged shard per device
+            key = (c.device_id, xa.shape, hash(xa.tobytes()), hash(ya.tobytes()))
+            row = shard_rows.get(key)
+            if row is None:
+                row = len(shard_x)
+                shard_rows[key] = row
+                shard_x.append(xa)
+                shard_y.append(ya)
+            cidx[i, j] = row
+            shard_len[i, j] = len(shard_x[row])
         contrib_params.append(row_p)
-        contrib_x.append(row_x)
-        contrib_y.append(row_y)
 
-    n_c_max = max(max(len(x) for x in row) for row in contrib_x)
-    cx = np.zeros((R, N, n_c_max) + contrib_x[0][0].shape[1:], np.float32)
-    cy = np.zeros((R, N, n_c_max), np.int32)
-    for i in range(R):
-        for j, (x, y) in enumerate(zip(contrib_x[i], contrib_y[i])):
-            cx[i, j, :len(x)] = x
-            cy[i, j, :len(y)] = y
+    n_c_max = max(len(x) for x in shard_x)
+    U = len(shard_x)
+    cx_tab = np.zeros((U, n_c_max) + shard_x[0].shape[1:], np.float32)
+    cy_tab = np.zeros((U, n_c_max), np.int32)
+    for u, (x, y) in enumerate(zip(shard_x, shard_y)):
+        cx_tab[u, :len(x)] = x
+        cy_tab[u, :len(y)] = y
     padded_rows = [row + [None] * (N - len(row)) for row in contrib_params]
     contrib_stack = _stack_trees(
         [_stack_trees(row, template) for row in padded_rows])
@@ -383,24 +529,42 @@ def run_fleet(task, requesters: Sequence[RequesterSpec],
     steps_max = max(schedule.fit_steps(int(n), cfg.batch_size) for n in n_own)
 
     ref_epochs = max(cfg.contributor_refresh_epochs, 0)
-    ref_steps = max((schedule.fit_steps(len(x), cfg.batch_size)
-                     for row in contrib_x for x in row), default=1)
+    ref_steps = max((schedule.fit_steps(int(n), cfg.batch_size)
+                     for n in shard_len[shard_len > 0]), default=1)
     ref_seeds = np.zeros((R, N), np.int32)
-    ref_n = np.zeros((R, N), np.int32)
-    for i, cs in enumerate(contracts):
+    for i, cs in enumerate(lane_devs):
         for j, c in enumerate(cs):
             ref_seeds[i, j] = cfg.seed + c.device_id
-            ref_n[i, j] = len(contrib_x[i][j])
 
     # ---- Phase.ACCOUNT constants (static per requester) -------------------
     num_params = tree_size(template)
     model_bytes = 4 * num_params if cfg.encrypt else tree_bytes(template)
     batteries = [s.battery or BatteryState() for s in requesters]
-    e_round = np.array([cost.round_energy(
-        n_contrib=len(cs), num_params=num_params, model_bytes=model_bytes,
-        num_samples=len(spec.own_train[0]), epochs=cfg.epochs,
-        n_devices=len(spec.neighborhood), encrypt=cfg.encrypt)
-        for spec, cs in zip(requesters, contracts)], np.float32)
+    if mob is None:
+        e_round = np.array([cost.round_energy(
+            n_contrib=len(cs), num_params=num_params, model_bytes=model_bytes,
+            num_samples=len(spec.own_train[0]), epochs=cfg.epochs,
+            n_devices=len(spec.neighborhood), encrypt=cfg.encrypt)
+            for spec, cs in zip(requesters, lane_devs)], np.float32)
+    else:
+        # member count is traced -> per-count lookup table, plus the
+        # contributor-side per-round energy split (tx / refresh)
+        e_tab = np.array([cost.round_energy_table(
+            max_contrib=N, num_params=num_params, model_bytes=model_bytes,
+            num_samples=len(spec.own_train[0]), epochs=cfg.epochs,
+            n_devices=len(spec.neighborhood), encrypt=cfg.encrypt)
+            for spec in requesters], np.float32)
+        e_tx = np.zeros((R, N), np.float32)
+        e_ref = np.zeros((R, N), np.float32)
+        for i, cs in enumerate(lane_devs):
+            for j in range(len(cs)):
+                e_tx[i, j], e_ref[i, j] = cost.contributor_round_energy(
+                    num_params=num_params, model_bytes=model_bytes,
+                    num_samples=int(shard_len[i, j]),
+                    refresh_epochs=cfg.contributor_refresh_epochs,
+                    encrypt=cfg.encrypt)
+        init_params = task.init(seed=cfg.seed)
+        init_flat, _ = tree_ravel(init_params)
     capacity = np.array([b.capacity_j for b in batteries], np.float32)
     level0 = np.array([b.level for b in batteries], np.float32)
     eff = np.array([load_efficiency(cost.device.p_train, b.high_load_penalty,
@@ -413,24 +577,42 @@ def run_fleet(task, requesters: Sequence[RequesterSpec],
         own_y=jnp.asarray(own_y), test_x=jnp.asarray(test_x),
         test_y=jnp.asarray(test_y), test_mask=jnp.asarray(test_mask),
         n_own=jnp.asarray(n_own), seed0=jnp.int32(cfg.seed),
-        round_w=jnp.asarray(round_w),
-        e_round=jnp.asarray(e_round), capacity=jnp.asarray(capacity),
-        eff=jnp.asarray(eff),
+        capacity=jnp.asarray(capacity), eff=jnp.asarray(eff),
         desired_accuracy=jnp.float32(cfg.desired_accuracy),
         battery_threshold=jnp.float32(cfg.battery_threshold))
+    if mob is None:
+        arrays.update(round_w=jnp.asarray(round_w), e_round=jnp.asarray(e_round))
+    else:
+        arrays.update(req_ids=jnp.asarray(req_ids),
+                      cand_ids=jnp.asarray(cand_ids),
+                      cand_mask=jnp.asarray(cand_mask),
+                      base_util=jnp.asarray(base_util),
+                      clevel0=jnp.asarray(clevel0),
+                      e_tab=jnp.asarray(e_tab), e_tx=jnp.asarray(e_tx),
+                      e_ref=jnp.asarray(e_ref),
+                      init_flat=jnp.asarray(init_flat))
+    shard_bytes = shard_bytes_dense = 0
+    index_bytes = int(n_own.nbytes + 4)
     if ref_epochs > 0:
-        arrays.update(cx=jnp.asarray(cx), cy=jnp.asarray(cy),
+        arrays.update(cx_tab=jnp.asarray(cx_tab), cy_tab=jnp.asarray(cy_tab),
+                      cidx=jnp.asarray(cidx),
                       ref_seeds=jnp.asarray(ref_seeds),
-                      ref_n=jnp.asarray(ref_n))
+                      ref_n=jnp.asarray(shard_len))
+        # shard-table accounting: gather indices live with the shards
+        # (cidx only counts here); schedule metadata is separate
+        shard_bytes = int(cx_tab.nbytes + cy_tab.nbytes + cidx.nbytes)
+        shard_bytes_dense = int(R * N * (cx_tab.nbytes + cy_tab.nbytes)
+                                / max(U, 1))
+        index_bytes += int(ref_seeds.nbytes + shard_len.nbytes)
     staged = [contrib_flat] + [v for v in arrays.values() if hasattr(v, "nbytes")]
     staged_bytes = int(sum(int(v.nbytes) for v in staged))
-    index_bytes = int(n_own.nbytes + ref_seeds.nbytes + ref_n.nbytes + 4)
 
     contrib_final, last_flat, level, stop_code, rounds_done, traces = _fleet_program(
         task, use_pallas, resolve_interpret(interpret), ref_epochs > 0,
         int(round_chunk), cfg.max_rounds, cfg.epochs, cfg.batch_size,
-        steps_max, ref_epochs, ref_steps, ravel_spec, contrib_flat, arrays)
-    acc_h, loss_h, bat_h, exec_h, body_h = (np.asarray(t) for t in traces)
+        steps_max, ref_epochs, ref_steps, ravel_spec, mob, cfg.n_max,
+        cfg.strategy if mob is not None else None, contrib_flat, arrays)
+    acc_h, loss_h, bat_h, exec_h, body_h, member_h = (np.asarray(t) for t in traces)
     rounds_np = np.asarray(rounds_done)
     codes_np = np.asarray(stop_code)
     level_np = np.asarray(level)
@@ -441,7 +623,7 @@ def run_fleet(task, requesters: Sequence[RequesterSpec],
     # Requesters sharing one states dict see the last writer's lanes.
     if ref_epochs > 0:
         contrib_tree = tree_unravel(ravel_spec, contrib_final)
-        for i, (spec, cs) in enumerate(zip(requesters, contracts)):
+        for i, (spec, cs) in enumerate(zip(requesters, lane_devs)):
             for j, c in enumerate(cs):
                 spec.contributor_states[c.device_id]["params"] = (
                     jax.tree_util.tree_map(lambda l: l[i, j], contrib_tree))
@@ -450,10 +632,17 @@ def run_fleet(task, requesters: Sequence[RequesterSpec],
     last_p = tree_unravel(ravel_spec, last_flat)
     sessions = []
     total_e = 0.0
-    for i, (spec, cs, b0) in enumerate(zip(requesters, contracts, batteries)):
+    for i, (spec, cs, b0) in enumerate(zip(requesters, lane_devs, batteries)):
         r_i = int(rounds_np[i])
+        if mob is None:
+            n_contrib_i = float(len(cs))
+        else:
+            # mobility: energy roll-up over the MEAN membership, matching
+            # EnFedSession._run_mobility's report
+            n_contrib_i = (float(member_h[:r_i, i].sum(-1).mean())
+                           if r_i else 0.0)
         report = cost.session(
-            rounds=r_i, n_contrib=len(cs), num_params=num_params,
+            rounds=r_i, n_contrib=n_contrib_i, num_params=num_params,
             model_bytes=model_bytes, num_samples=len(spec.own_train[0]),
             epochs=cfg.epochs, n_devices=len(spec.neighborhood),
             encrypt=cfg.encrypt)
@@ -462,6 +651,11 @@ def run_fleet(task, requesters: Sequence[RequesterSpec],
         history = {"accuracy": [float(a) for a in acc_h[:r_i, i]],
                    "loss": [float(l) for l in loss_h[:r_i, i]],
                    "battery": [float(l) for l in bat_h[:r_i, i]]}
+        if mob is not None:
+            history["member_mask"] = [member_h[r, i].copy()
+                                      for r in range(r_i)]
+            history["members"] = [float(member_h[r, i].sum())
+                                  for r in range(r_i)]
         sessions.append(SessionResult(
             accuracy=history["accuracy"][-1] if history["accuracy"] else 0.0,
             rounds=r_i, n_contributors=len(cs), report=report, battery=battery,
@@ -472,5 +666,8 @@ def run_fleet(task, requesters: Sequence[RequesterSpec],
         accuracy=np.array([s.accuracy for s in sessions], np.float32),
         battery_level=level_np, total_energy_j=float(total_e),
         history={"accuracy": acc_h, "loss": loss_h, "battery": bat_h,
-                 "executed": exec_h, "round_executed": body_h},
-        staged_host_bytes=staged_bytes, staged_index_bytes=index_bytes)
+                 "executed": exec_h, "round_executed": body_h,
+                 "member": member_h},
+        staged_host_bytes=staged_bytes, staged_index_bytes=index_bytes,
+        staged_shard_bytes=shard_bytes,
+        staged_shard_bytes_dense=shard_bytes_dense)

@@ -92,6 +92,46 @@ def sign_contracts_fleet(neighborhoods: Sequence[Sequence[NeighborDevice]],
     return contracts, mask
 
 
+# ---------------------------------------------------------------------------
+# dynamic contracts (the mobility / churn path, repro.core.mobility)
+# ---------------------------------------------------------------------------
+
+
+def candidate_pool(devices: Sequence[NeighborDevice],
+                   offered_incentive: float) -> List[NeighborDevice]:
+    """The *agreeing* devices of a neighborhood, in stable device order.
+
+    Under mobility (``repro.core.mobility``) the handshake no longer
+    freezes a contract set: it fixes the candidate pool — every device
+    that holds a model and whose reservation price the offer covers.
+    Battery and radio range are checked PER ROUND by
+    :func:`repro.core.mobility.membership_step`, which re-negotiates the
+    actual contract set from this pool; candidate order here defines the
+    contributor lane order of both engines.
+    """
+    return [d for d in devices
+            if d.has_model and offered_incentive >= d.reservation_price]
+
+
+def contracts_from_membership(candidates: Sequence[NeighborDevice],
+                              member, util,
+                              offered_incentive: float) -> List[Contract]:
+    """Host view of one round's re-negotiated contract set.
+
+    ``member``/``util`` are the (N,) outputs of
+    :func:`repro.core.mobility.membership_step` for one requester;
+    returns the signed :class:`Contract` list ranked best-utility first
+    (the loop engine's per-round analogue of :func:`select_contributors`).
+    """
+    member = np.asarray(member, bool)
+    util = np.asarray(util, np.float32)
+    order = sorted((j for j in range(len(candidates)) if member[j]),
+                   key=lambda j: (-util[j], j))
+    return [Contract(device_id=candidates[j].device_id,
+                     incentive=offered_incentive, utility=float(util[j]))
+            for j in order]
+
+
 def make_fleet(num_devices: int, seed: int = 0, p_has_model: float = 0.9) -> List[NeighborDevice]:
     """Randomized nearby-device fleet for simulations."""
     rng = np.random.default_rng(seed)

@@ -1,0 +1,254 @@
+"""Opportunistic-world simulator: device mobility, radio-range neighbor
+discovery, and per-round contract re-negotiation — shared by BOTH EnFed
+engines.
+
+EnFed's premise is *opportunistic* collaboration (paper §III): the
+requesting device recruits whoever happens to be in radio range, and the
+neighborhood it exploits is transient — devices walk in and out of range
+while a session runs.  Before this module both engines froze the
+neighborhood at handshake time.  This module turns the contributor set
+into a simulated world with three layers:
+
+* **Counter-based kinematics** (:func:`device_position`).  Every device
+  walks a discretized random-waypoint trajectory: time is split into legs
+  of ``leg_rounds`` rounds, waypoint ``k`` of device ``d`` is a pure
+  counter-based ``jax.random`` draw from ``(seed, d, k)`` (the same
+  hashing style as ``repro.core.schedule``), and the position at round
+  ``r`` linearly interpolates between the leg's endpoints.  Positions are
+  a *closed-form function of (seed, round, device)* — no integrated
+  state — so the loop engine (concrete round numbers, host-side) and the
+  fleet engine (traced round numbers, inside one jit program) derive
+  identical trajectories by construction, and any round's positions can
+  be queried without replaying earlier rounds.  ``mode="static"`` pins
+  every device to its 0th waypoint (classic fixed-topology runs).
+
+* **Radio-range neighbor discovery** (:func:`membership_step`).  Each
+  round the requester's candidate contributors are tested against
+  ``radio_range_m`` — squared-distance proximity masks feed the contract
+  layer.
+
+* **Per-round contract re-negotiation** (:func:`membership_step`).
+  Contributors that left radio range or dropped below the battery floor
+  are released; devices that walked into range are offered contracts;
+  when more eligible devices exist than ``n_max`` slots, the requester
+  keeps the top-``n_max`` by contract utility (the same freshness /
+  data / battery utility as ``repro.core.incentive``) — an arriving
+  higher-utility device *undercuts* and displaces the weakest member.
+  The function is pure jnp on arrays: the fleet engine calls it on traced
+  round numbers inside its chunked ``while_loop``; the loop engine calls
+  it eagerly per round and converts to host dataclasses
+  (``repro.core.incentive.contracts_from_membership``).  One
+  implementation, two engines, parity by construction
+  (``tests/test_mobility.py``, ``tests/test_fleet_engine.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+# Spatial grid: waypoints are drawn on a GRID x GRID integer lattice and
+# positions are carried as int32 lattice coordinates scaled by
+# ``leg_rounds`` (so leg interpolation is EXACT integer arithmetic).
+# Floats only appear in the display/meter conversion — never in the
+# proximity predicate.  This is deliberate: XLA may contract float
+# multiply-add chains into FMAs under jit but not under eager
+# evaluation, so a float kinematics would let the two engines disagree
+# by 1 ULP — enough to flip an in-range test at the boundary.  Integer
+# arithmetic is exact in every fusion regime, which is what makes the
+# masks bit-identical across engines by construction.
+GRID = 512
+
+
+@dataclasses.dataclass(frozen=True)
+class MobilityConfig:
+    """World parameters for one simulated session (hashable => usable as
+    a static arg of the compiled fleet program).
+
+    ``requester_id`` is the device id of the requesting device in the
+    shared kinematics hash-space; fleet lanes use ``requester_id + lane``
+    so concurrent requesters walk distinct trajectories.  The default
+    offset keeps requester ids clear of contributor ids.
+    """
+
+    mode: str = "waypoint"            # "waypoint" | "static"
+    arena_m: float = 200.0            # square world side length (meters)
+    radio_range_m: float = 80.0       # contract-eligible iff dist <= range
+    leg_rounds: int = 4               # rounds per random-waypoint leg
+    seed: int = 0                     # kinematics hash seed
+    requester_id: int = 1 << 20       # requester lane 0's device id
+    battery_floor: float = 0.1        # contributors below this are released
+    contributor_capacity_j: float = 40e3  # battery capacity backing level
+
+    def __post_init__(self):
+        assert self.mode in ("waypoint", "static"), self.mode
+        # scaled lattice coords stay < GRID * leg_rounds; 64 keeps the
+        # exact int32 squared-distance test overflow-free
+        assert 1 <= self.leg_rounds <= 64
+
+    @property
+    def _range2_units(self) -> int:
+        """Radio range squared, on the scaled integer lattice (clamped
+        to int32 — any range covering the arena diagonal is 'everyone')."""
+        units = self.radio_range_m / self.arena_m * GRID * self.leg_rounds
+        return min(int(units * units), 2**31 - 1)
+
+
+def _waypoint_units(seed: int, device_id, k):
+    """Waypoint ``k`` of ``device_id``: an int32 lattice point hashed
+    from ``(seed, device, k)`` alone — prefix-stable in every argument,
+    traced or concrete, and exact (integer) in both engines."""
+    key = jax.random.fold_in(
+        jax.random.fold_in(jax.random.PRNGKey(seed),
+                           jnp.asarray(device_id, jnp.uint32)),
+        jnp.asarray(k, jnp.uint32))
+    return jax.random.randint(key, (2,), 0, GRID, jnp.int32)
+
+
+def _position_units(mob: MobilityConfig, device_id, r):
+    """(2,) int32 lattice position x ``leg_rounds`` at round ``r`` —
+    the exact coordinate both engines compare distances in."""
+    L = mob.leg_rounds
+    if mob.mode == "static":
+        return _waypoint_units(mob.seed, device_id, 0) * L
+    r = jnp.asarray(r, jnp.int32)
+    leg = r // L
+    m = r % L
+    a = _waypoint_units(mob.seed, device_id, leg)
+    b = _waypoint_units(mob.seed, device_id, leg + 1)
+    return a * (L - m) + b * m          # exact linear leg interpolation
+
+
+def device_position(mob: MobilityConfig, device_id, r):
+    """(2,) fp32 position in METERS of one device at round ``r`` — the
+    display/diagnostic view of the exact lattice coordinate.
+
+    ``device_id`` and ``r`` may be python ints (loop engine) or traced
+    scalars (fleet engine) — the derivation is counter-based either way,
+    so both engines see the same world.
+    """
+    scale = float(mob.arena_m) / (GRID * mob.leg_rounds)
+    return _position_units(mob, device_id, r).astype(jnp.float32) * scale
+
+
+def device_positions(mob: MobilityConfig, device_ids, r):
+    """Positions (meters) of a device-id array at round ``r``:
+    ids shape + (2,)."""
+    ids = jnp.asarray(device_ids, jnp.int32)
+    flat = jax.vmap(lambda d: device_position(mob, d, r))(ids.reshape(-1))
+    return flat.reshape(ids.shape + (2,))
+
+
+def trajectory(mob: MobilityConfig, device_id, rounds: int):
+    """(rounds, 2) closed-form trajectory (meters) — diagnostics/tests."""
+    return jax.vmap(lambda r: device_position(mob, device_id, r))(
+        jnp.arange(rounds, dtype=jnp.int32))
+
+
+def in_range_mask(mob: MobilityConfig, requester_id, cand_ids, r):
+    """(..., N) bool: candidate within ``radio_range_m`` of its requester
+    at round ``r``.  ``requester_id`` broadcasts against leading axes of
+    ``cand_ids`` ((N,) for one session, (R, N) for a fleet).  The
+    comparison is exact int32 lattice arithmetic — bit-identical whether
+    ``r`` is concrete (loop engine) or traced (fleet engine)."""
+    ids = jnp.asarray(cand_ids, jnp.int32)
+    pos_u = jax.vmap(lambda d: _position_units(mob, d, r))
+    req = pos_u(jnp.asarray(requester_id, jnp.int32).reshape(-1)).reshape(
+        jnp.asarray(requester_id).shape + (2,))
+    cand = pos_u(ids.reshape(-1)).reshape(ids.shape + (2,))
+    d = cand - req[..., None, :]
+    dist2 = d[..., 0] * d[..., 0] + d[..., 1] * d[..., 1]
+    return dist2 <= jnp.int32(mob._range2_units)
+
+
+def battery_utility_term(level):
+    """The dynamic slice of ``incentive.contract_utility``: battery below
+    50% is progressively risky.  Written as a single min (no
+    multiply-add chain XLA could FMA-contract differently under jit vs
+    eager — the parity-safety rule of this module)."""
+    return jnp.minimum(jnp.asarray(level, jnp.float32) * jnp.float32(0.4),
+                       jnp.float32(0.2))
+
+
+def static_utility_term(staleness, data_size, max_data):
+    """The round-invariant slice of ``incentive.contract_utility``
+    (freshness + data richness); precomputed once per session."""
+    freshness = 1.0 / (1.0 + jnp.asarray(staleness, jnp.float32))
+    data_term = jnp.asarray(data_size, jnp.float32) / jnp.maximum(
+        jnp.asarray(max_data, jnp.float32), 1.0)
+    return 0.5 * freshness + 0.3 * data_term
+
+
+def membership_step(mob: MobilityConfig, r, requester_id, cand_ids,
+                    cand_mask, base_util, level, n_max: int):
+    """One round of contract re-negotiation, pure jnp — THE shared
+    membership derivation of both engines.
+
+    Inputs broadcast over any leading batch shape (the fleet engine
+    passes (R, N) candidate grids, the loop engine (N,) vectors):
+
+    ``r``            round number (python int or traced scalar);
+    ``requester_id`` (...,) requester device ids in the kinematics space;
+    ``cand_ids``     (..., N) candidate device ids;
+    ``cand_mask``    (..., N) bool — real candidate lanes (padding False);
+                     candidates are pre-filtered to *agreeing* devices
+                     (has_model, reservation <= offer) at session setup;
+    ``base_util``    (..., N) fp32 static utility (freshness + data);
+    ``level``        (..., N) fp32 contributor battery fraction;
+    ``n_max``        contract slots.
+
+    Returns ``(member, rank, util)``: ``member`` (..., N) bool — the
+    re-negotiated contract set (in-range, above the battery floor, top
+    ``n_max`` by utility, arrivals displacing weaker members); ``rank``
+    (..., N) int32 utility rank among eligible candidates (0 = best,
+    stable lane-index tiebreak); ``util`` the (..., N) fp32 utilities.
+    """
+    cand_mask = jnp.asarray(cand_mask, bool)
+    level = jnp.asarray(level, jnp.float32)
+    eligible = (cand_mask
+                & in_range_mask(mob, requester_id, cand_ids, r)
+                & (level >= jnp.float32(mob.battery_floor)))
+    util = base_util + battery_utility_term(level)
+    n = util.shape[-1]
+    # rank = how many ELIGIBLE candidates beat me (higher utility, or
+    # equal utility at a lower lane index).  Pure comparisons — no
+    # epsilon arithmetic that jit fusion could perturb; N is small (one
+    # contract table), so the pairwise O(N^2) is free.
+    uk, uj = util[..., None, :], util[..., :, None]
+    lane = jnp.arange(n, dtype=jnp.int32)
+    beats = (uk > uj) | ((uk == uj) & (lane[None, :] < lane[:, None]))
+    rank = jnp.sum(beats & eligible[..., None, :], axis=-1).astype(jnp.int32)
+    member = eligible & (rank < n_max)
+    return member, rank, util
+
+
+def contributor_discharge(level, member, e_tx, e_refresh, refresh_on,
+                          capacity_j: float):
+    """New contributor battery fractions after one participating round.
+
+    ``member`` gates who pays at all (current contract holders);
+    ``refresh_on`` (broadcastable bool) gates the Phase.REFRESH training
+    term — contributors only refresh while their requester's session
+    survives the round.  One arithmetic expression shared by both
+    engines so battery-floor releases trigger on identical values.
+    """
+    pay = jnp.asarray(member, jnp.float32)
+    drain = (jnp.asarray(e_tx, jnp.float32)
+             + jnp.where(refresh_on, jnp.asarray(e_refresh, jnp.float32), 0.0))
+    return jnp.maximum(jnp.asarray(level, jnp.float32)
+                       - drain * pay / jnp.float32(capacity_j), 0.0)
+
+
+def membership_events(member_trace):
+    """Join/leave statistics from a (rounds, ..., N) membership trace:
+    returns ``(joins, leaves)`` summed over rounds 1..end (round 0's
+    initial signing counts as neither)."""
+    import numpy as np
+
+    m = np.asarray(member_trace, bool)
+    if m.shape[0] < 2:
+        return 0, 0
+    diff = m[1:].astype(np.int8) - m[:-1].astype(np.int8)
+    return int((diff > 0).sum()), int((diff < 0).sum())

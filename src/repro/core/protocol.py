@@ -27,6 +27,9 @@ class Phase(enum.Enum):
     """The protocol phases of Algorithm 1 / eq. (4), in execution order."""
 
     HANDSHAKE = "handshake"    # contract selection + AES key exchange
+    RENEGOTIATE = "renegotiate"  # mobility: per-round contract churn
+    #   (release out-of-range / battery-floored members, sign arrivals;
+    #   repro.core.mobility.membership_step, identical in both engines)
     COLLECT = "collect"        # receive (and decrypt) contributor updates
     AGGREGATE = "aggregate"    # eq. (14) masked FedAvg
     FIT = "fit"                # requester personalizes on its own shard
@@ -35,8 +38,8 @@ class Phase(enum.Enum):
     REFRESH = "refresh"        # contributors keep training between rounds
 
 
-ROUND_PHASES = (Phase.COLLECT, Phase.AGGREGATE, Phase.FIT, Phase.SCORE,
-                Phase.ACCOUNT, Phase.REFRESH)
+ROUND_PHASES = (Phase.RENEGOTIATE, Phase.COLLECT, Phase.AGGREGATE, Phase.FIT,
+                Phase.SCORE, Phase.ACCOUNT, Phase.REFRESH)
 
 # Stop reasons, encoded as small ints so the fleet engine can carry them
 # as traced per-requester state.  Order encodes check priority: the loop

@@ -37,10 +37,13 @@ from typing import Callable, Dict, List, Optional
 import numpy as np
 import jax
 
-from repro.core import aggregation, crypto, protocol
+from repro.core import aggregation, crypto, mobility, protocol, topology
 from repro.core.battery import BatteryState
 from repro.core.energy import CostModel, EnergyReport
-from repro.core.incentive import Contract, NeighborDevice, select_contributors
+from repro.core.incentive import (Contract, NeighborDevice, candidate_pool,
+                                  contracts_from_membership,
+                                  select_contributors)
+from repro.core.mobility import MobilityConfig
 from repro.core.topology import AggregationStrategy
 from repro.utils.tree import flatten_to_vector, tree_bytes, tree_size, unflatten_from_vector
 
@@ -60,6 +63,12 @@ class EnFedConfig:
     # which signed contributors feed eq. (14) each round (None = all, the
     # paper's virtual-server behaviour); see topology.contributor_round_mask
     strategy: Optional[AggregationStrategy] = None
+    # opportunistic world (repro.core.mobility): when set, the contributor
+    # set is re-negotiated EVERY round — devices churn in and out of radio
+    # range, contributor batteries drain and release members at the floor,
+    # arrivals undercut weaker members.  None = the static-neighborhood
+    # protocol above.
+    mobility: Optional[MobilityConfig] = None
 
 
 @dataclasses.dataclass
@@ -147,6 +156,8 @@ class EnFedSession:
             return result.sessions[0]
         if engine != "loop":
             raise ValueError(f"unknown engine {engine!r} (loop|fleet)")
+        if self.cfg.mobility is not None:
+            return self._run_mobility()
 
         cfg = self.cfg
         contracts = self.handshake()
@@ -211,3 +222,143 @@ class EnFedSession:
             accuracy=history["accuracy"][-1], rounds=rounds, n_contributors=n_c,
             report=report, battery=self.battery, history=history,
             stop_reason=protocol.stop_reason_name(stop), params=params)
+
+    # -- Algorithm 1 in an opportunistic world (repro.core.mobility) ----------
+    def _run_mobility(self) -> SessionResult:
+        """The churn-aware session loop: Phase.RENEGOTIATE runs every
+        round — contributors leave when they walk out of radio range or
+        hit the battery floor, in-range arrivals are signed, and a
+        higher-utility arrival displaces the weakest member.  Every
+        membership/battery/weight derivation goes through the SAME array
+        functions the fleet engine traces (``repro.core.mobility``,
+        ``topology.dynamic_round_weights``), so the two engines agree on
+        the whole churn trajectory by construction."""
+        cfg = self.cfg
+        mob = cfg.mobility
+
+        # Phase.HANDSHAKE fixes the candidate POOL (agreeing devices) and
+        # exchanges keys with all of them — any candidate may be signed in
+        # a later round, when it wanders into range.
+        cands = candidate_pool(self.fleet, cfg.offered_incentive)
+        if not cands:
+            raise RuntimeError("no nearby device agreed to the incentive (N_d < 1)")
+        rng = np.random.default_rng(cfg.seed)
+        self.keys = {d.device_id: rng.integers(0, 256, 16).astype(np.uint8)
+                     for d in cands}
+        self.nonces = {d.device_id: rng.integers(0, 256, 8).astype(np.uint8)
+                       for d in cands}
+        n_cand = len(cands)
+        ids = np.array([d.device_id for d in cands], np.int32)
+        max_data = max(d.data_size for d in cands)
+        base_util = np.asarray(mobility.static_utility_term(
+            np.array([d.model_staleness for d in cands], np.float32),
+            np.array([d.data_size for d in cands], np.float32),
+            np.float32(max_data)), np.float32)
+        level = np.array([d.battery_level for d in cands], np.float32)
+        cand_mask = np.ones((n_cand,), bool)
+
+        # The requester owns its model from the start (it cannot rely on a
+        # first-round update existing — the neighborhood may be empty).
+        params = self.task.init(seed=cfg.seed)
+        num_params = tree_size(params)
+        model_bytes = 4 * num_params if cfg.encrypt else tree_bytes(params)
+        e_tab = np.array(self.cost.round_energy_table(
+            max_contrib=n_cand, num_params=num_params, model_bytes=model_bytes,
+            num_samples=len(self.own_train[0]), epochs=cfg.epochs,
+            n_devices=len(self.fleet), encrypt=cfg.encrypt), np.float32)
+        e_tx = np.zeros((n_cand,), np.float32)
+        e_ref = np.zeros((n_cand,), np.float32)
+        for j, d in enumerate(cands):
+            st = self.contributor_states[d.device_id]
+            e_tx[j], e_ref[j] = self.cost.contributor_round_energy(
+                num_params=num_params, model_bytes=model_bytes,
+                num_samples=len(st["data"][0]),
+                refresh_epochs=cfg.contributor_refresh_epochs,
+                encrypt=cfg.encrypt)
+
+        history = {"accuracy": [], "loss": [], "battery": [],
+                   "members": [], "member_mask": [], "contracts": []}
+        rounds = 0
+        stop = protocol.STOP_MAX_ROUNDS
+        measured_fit_s = 0.0
+
+        for r in range(cfg.max_rounds):
+            # Phase.RENEGOTIATE: release/sign/undercut for this round.
+            member, rank, util = mobility.membership_step(
+                mob, r, mob.requester_id, ids, cand_mask, base_util, level,
+                cfg.n_max)
+            member = np.asarray(member, bool)
+            round_w = np.asarray(topology.dynamic_round_weights(
+                member, rank, cfg.strategy), np.float32)
+            count = int(member.sum())
+            history["member_mask"].append(member.astype(np.float32))
+            history["members"].append(float(count))
+            history["contracts"].append(contracts_from_membership(
+                cands, member, util, cfg.offered_incentive))
+
+            # Phase.COLLECT + Phase.AGGREGATE over the CURRENT members
+            # (lane order, zero-weight lanes dropped — fp32-identical to
+            # the fleet kernel's full-lane masked reduction).
+            if count > 0:
+                lanes = np.nonzero(member)[0]
+                updates = [self._collect_update(int(ids[j]))[0] for j in lanes]
+                global_params = aggregation.masked_fedavg(
+                    updates, round_w[lanes])
+            else:
+                global_params = params   # alone this round: keep training
+
+            # Phase.FIT + Phase.SCORE
+            t0 = time.perf_counter()
+            params, losses = self.task.fit(global_params, self.own_train,
+                                           cfg.epochs, cfg.batch_size,
+                                           seed=cfg.seed + r)
+            measured_fit_s += time.perf_counter() - t0
+            acc = float(self.task.evaluate(params, self.own_test))
+            rounds = r + 1
+            history["accuracy"].append(acc)
+            history["loss"].append(float(losses[-1]))
+
+            # Phase.ACCOUNT: requester discharge from the member-count
+            # energy table (same table the fleet engine stages).
+            self.battery = self.battery.discharge(
+                float(e_tab[count]), avg_power_w=self.cost.device.p_train)
+            history["battery"].append(self.battery.level)
+
+            if acc >= cfg.desired_accuracy:
+                stop = protocol.STOP_ACCURACY
+            elif self.battery.below(cfg.battery_threshold):
+                stop = protocol.STOP_BATTERY
+            # the session "survives" the round (and contributors refresh)
+            # unless accuracy/battery stopped it — matching the static
+            # engines, the final budget round still refreshes
+            continuing = stop == protocol.STOP_MAX_ROUNDS
+
+            # Contributor-side discharge: members paid transmission this
+            # round; the refresh term only while the session survives.
+            level = np.asarray(mobility.contributor_discharge(
+                level, member, e_tx, e_ref, continuing,
+                mob.contributor_capacity_j), np.float32)
+
+            if stop != protocol.STOP_MAX_ROUNDS:
+                break
+
+            # Phase.REFRESH for current members only
+            if cfg.contributor_refresh_epochs > 0:
+                for j in np.nonzero(member)[0]:
+                    st = self.contributor_states[int(ids[j])]
+                    st["params"], _ = self.task.fit(
+                        st["params"], st["data"],
+                        cfg.contributor_refresh_epochs, cfg.batch_size,
+                        seed=cfg.seed + int(ids[j]))
+
+        mean_members = float(np.mean(history["members"])) if rounds else 0.0
+        report = self.cost.session(
+            rounds=rounds, n_contrib=mean_members, num_params=num_params,
+            model_bytes=model_bytes, num_samples=len(self.own_train[0]),
+            epochs=cfg.epochs, n_devices=len(self.fleet),
+            measured_local_time=measured_fit_s, encrypt=cfg.encrypt)
+        return SessionResult(
+            accuracy=history["accuracy"][-1], rounds=rounds,
+            n_contributors=n_cand, report=report, battery=self.battery,
+            history=history, stop_reason=protocol.stop_reason_name(stop),
+            params=params)

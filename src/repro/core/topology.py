@@ -245,6 +245,41 @@ def contributor_round_mask(n_contrib: int, strategy: AggregationStrategy) -> np.
     return m
 
 
+def dynamic_round_weights(member, rank, strategy: Optional[AggregationStrategy] = None):
+    """Traced per-round aggregation weights under mobility/churn.
+
+    The churn-aware analogue of :func:`contributor_round_mask` — instead
+    of a static contract-rank mask, the inputs are the per-round outputs
+    of ``repro.core.mobility.membership_step``: ``member`` (..., N) bool
+    (the re-negotiated contract set) and ``rank`` (..., N) int32 utility
+    ranks (0 = best).  Any leading batch shape broadcasts, so one call
+    serves the fleet engine's (R, N) grid and the loop engine's (N,)
+    vector:
+
+    * ``None`` / ``cfl`` / ``dfl_mesh`` — every current member feeds
+      eq. (14);
+    * ``dfl_ring`` — the requester's two ring neighbours among current
+      members (best + worst utility rank; everyone when <= 2 members);
+    * ``enfed`` with ``neighborhood_size`` k — the k best-utility current
+      members (0 = all), the paper's nearest-devices semantics.
+
+    Both engines call THIS function, so churn-time aggregation weights
+    agree by construction (mirroring ``protocol.round_weights`` for the
+    static path).
+    """
+    member = jnp.asarray(member, bool)
+    rank = jnp.asarray(rank, jnp.int32)
+    w = member
+    if strategy is not None:
+        if strategy.kind == "dfl_ring":
+            count = jnp.sum(member, axis=-1, keepdims=True).astype(jnp.int32)
+            ring = (rank == 0) | (rank == count - 1)
+            w = member & jnp.where(count > 2, ring, True)
+        elif strategy.kind == "enfed" and strategy.neighborhood_size:
+            w = member & (rank < strategy.neighborhood_size)
+    return w.astype(jnp.float32)
+
+
 # ---------------------------------------------------------------------------
 # mixing matrices for the client-stacked trainer
 # ---------------------------------------------------------------------------

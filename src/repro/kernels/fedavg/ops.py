@@ -32,7 +32,16 @@ def fedavg_flat(updates, weights, *, use_pallas: bool = True, interpret=None):
 
 def fedavg_flat_batched(updates, weights, *, use_pallas: bool = True,
                         interpret=None):
-    """updates: (R, N, L); weights: (R, N) -> (R, L) fp32 per-session means."""
+    """updates: (R, N, L); weights: (R, N) -> (R, L) fp32 per-session means.
+
+    ``weights`` may be a traced per-round vector — under mobility
+    (``repro.core.mobility``) the fleet engine passes each round's
+    re-negotiated membership mask directly, so churn costs no extra
+    kernel.  An all-zero weight row (a session whose whole neighborhood
+    churned out of range) is well-defined: the kernel's
+    ``max(sum_w, 1e-9)`` denominator returns a zero vector, and the
+    caller substitutes the session's previous params.
+    """
     if use_pallas:
         return fedavg_batched_pallas(updates, weights, interpret=interpret)
     return fedavg_batched_ref(updates, weights)

@@ -10,13 +10,15 @@ three stop conditions.
 """
 
 import copy
+import dataclasses
 
 import numpy as np
 import pytest
 from jax.flatten_util import ravel_pytree
 
 from repro.core import (AggregationStrategy, EnFedConfig, EnFedSession,
-                        RequesterSpec, SupervisedTask, make_fleet, run_fleet)
+                        MobilityConfig, RequesterSpec, SupervisedTask,
+                        make_fleet, run_fleet)
 from repro.core.battery import BatteryState
 from repro.data import CaloriesDatasetConfig, dirichlet_partition, make_calories_tabular
 from repro.models import MLPClassifier, MLPClassifierConfig
@@ -203,6 +205,23 @@ def test_fleet_rejects_empty():
         run_fleet(None, [])
 
 
+def test_shard_staging_dedups_equal_content(problem):
+    """Contributor shards are staged ONCE per unique (device, content)
+    pair even when every RequesterSpec deep-copies the states dict (the
+    standard usage pattern) — object identity must not defeat the dedup."""
+    task, own_train, own_test, fleet, states = problem
+    cfg = EnFedConfig(desired_accuracy=0.99, max_rounds=1, epochs=1,
+                      batch_size=BATCH, encrypt=False,
+                      contributor_refresh_epochs=1)
+    R = 4
+    specs = [RequesterSpec(own_train, own_test, fleet, copy.deepcopy(states))
+             for _ in range(R)]
+    res = run_fleet(task, specs, cfg)
+    assert res.staged_shard_bytes_dense > 0
+    # R requesters sharing one 3-device population: ~R x fewer bytes
+    assert res.staged_shard_bytes < res.staged_shard_bytes_dense / (R - 1)
+
+
 def test_fleet_sub_batch_shard_matches_loop():
     """A requester shard smaller than one batch runs in the fleet engine
     as a single padded+masked step — and matches the loop engine, which
@@ -235,6 +254,144 @@ def test_fleet_mixed_sub_batch_and_full_lanes():
         loop = EnFedSession(task, sh, own_test, fleet,
                             copy.deepcopy(states), cfg).run()
         _assert_parity(loop, result.sessions[lane])
+
+
+# ---------------------------------------------------------------------------
+# churn: the opportunistic world (repro.core.mobility) in both engines
+# ---------------------------------------------------------------------------
+
+
+def _assert_churn_parity(loop, fl):
+    """Static parity PLUS the mobility surface: per-round membership
+    masks and member counts must be bit-identical."""
+    _assert_parity(loop, fl)
+    np.testing.assert_array_equal(np.array(loop.history["member_mask"]),
+                                  np.array(fl.history["member_mask"]))
+    assert loop.history["members"] == fl.history["members"]
+
+
+@pytest.mark.parametrize("mob_kw,cfg_kw", [
+    # devices wander in/out of a 110 m radio range every 2 rounds
+    (dict(radio_range_m=110.0, leg_rounds=2, seed=3), {}),
+    # sparse world: rounds with an EMPTY neighborhood (requester trains alone)
+    (dict(radio_range_m=55.0, leg_rounds=2, seed=3), {}),
+    # encrypted transport while churning
+    (dict(radio_range_m=110.0, leg_rounds=2, seed=3), dict(encrypt=True)),
+    # battery-floor releases drive the churn (static positions, tiny
+    # contributor batteries): members drain out and are replaced
+    (dict(mode="static", radio_range_m=500.0, seed=3,
+          contributor_capacity_j=0.004, battery_floor=0.3), {}),
+], ids=["waypoint-churn", "empty-rounds", "churn-encrypted", "floor-release"])
+def test_fleet_matches_loop_under_mobility(problem, mob_kw, cfg_kw):
+    cfg_base = dict(desired_accuracy=0.99, max_rounds=6, epochs=1,
+                    batch_size=BATCH, encrypt=False, n_max=2,
+                    contributor_refresh_epochs=1,
+                    mobility=MobilityConfig(**mob_kw))
+    cfg_base.update(cfg_kw)
+    loop, fl = _run_both(problem, EnFedConfig(**cfg_base))
+    _assert_churn_parity(loop, fl)
+
+
+def test_mobility_renegotiation_actually_churns(problem):
+    """The parity gate must exercise RE-NEGOTIATION, not a static mask:
+    this config provably changes membership mid-session in both engines."""
+    cfg = EnFedConfig(desired_accuracy=0.99, max_rounds=6, epochs=1,
+                      batch_size=BATCH, encrypt=False, n_max=2,
+                      contributor_refresh_epochs=1,
+                      mobility=MobilityConfig(radio_range_m=55.0,
+                                              leg_rounds=2, seed=3))
+    loop, fl = _run_both(problem, cfg)
+    _assert_churn_parity(loop, fl)
+    masks = np.array(loop.history["member_mask"])
+    assert (masks != masks[0]).any(), "membership must change mid-session"
+
+
+def test_mobility_strategies_follow_dynamic_members(problem):
+    """Aggregation strategies compose with churn: the enfed/ring round
+    weights are derived from the CURRENT membership each round."""
+    for strategy in (AggregationStrategy(kind="enfed", neighborhood_size=2),
+                     AggregationStrategy(kind="dfl_ring")):
+        cfg = EnFedConfig(desired_accuracy=0.99, max_rounds=4, epochs=1,
+                          batch_size=BATCH, encrypt=False, n_max=3,
+                          contributor_refresh_epochs=1, strategy=strategy,
+                          mobility=MobilityConfig(radio_range_m=130.0,
+                                                  leg_rounds=2, seed=7))
+        loop, fl = _run_both(problem, cfg)
+        _assert_churn_parity(loop, fl)
+
+
+def test_mobility_battery_stop_parity(problem):
+    cfg = EnFedConfig(desired_accuracy=0.99, max_rounds=6, epochs=1,
+                      batch_size=BATCH, encrypt=False, n_max=3,
+                      contributor_refresh_epochs=1,
+                      mobility=MobilityConfig(radio_range_m=110.0,
+                                              leg_rounds=2, seed=3))
+    loop, fl = _run_both(problem, cfg, battery_kw=dict(capacity_j=0.2, level=0.3))
+    assert loop.stop_reason == "battery_low"
+    _assert_churn_parity(loop, fl)
+
+
+def test_mobility_multi_lane_fleet_matches_per_lane_loops(problem):
+    """Concurrent churning sessions in ONE program: fleet lane i walks as
+    requester_id + i, so each lane must match a loop run configured with
+    that requester id."""
+    task, own_train, own_test, fleet, states = problem
+    mob = MobilityConfig(radio_range_m=110.0, leg_rounds=2, seed=3)
+    cfg = EnFedConfig(desired_accuracy=0.99, max_rounds=4, epochs=1,
+                      batch_size=BATCH, encrypt=False, n_max=2,
+                      contributor_refresh_epochs=1, mobility=mob)
+    R = 3
+    specs = [RequesterSpec(own_train, own_test, fleet, copy.deepcopy(states))
+             for _ in range(R)]
+    result = run_fleet(task, specs, cfg)
+    saw_different_worlds = False
+    ref_members = result.sessions[0].history["members"]
+    for lane in range(R):
+        lane_cfg = dataclasses.replace(
+            cfg, mobility=dataclasses.replace(
+                mob, requester_id=mob.requester_id + lane))
+        loop = EnFedSession(task, own_train, own_test, fleet,
+                            copy.deepcopy(states), lane_cfg).run()
+        _assert_churn_parity(loop, result.sessions[lane])
+        if result.sessions[lane].history["members"] != ref_members:
+            saw_different_worlds = True
+    assert saw_different_worlds, "lanes should see distinct neighborhoods"
+
+
+def test_mobility_writes_back_member_refreshed_contributors(problem):
+    """Refresh write-back under churn: only devices that were members
+    while the session ran get trained; both engines leave identical
+    contributor params behind."""
+    task, own_train, own_test, fleet, states = problem
+    cfg = EnFedConfig(desired_accuracy=0.99, max_rounds=4, epochs=1,
+                      batch_size=BATCH, encrypt=False, n_max=2,
+                      contributor_refresh_epochs=1,
+                      mobility=MobilityConfig(radio_range_m=110.0,
+                                              leg_rounds=2, seed=3))
+    loop_states = copy.deepcopy(states)
+    EnFedSession(task, own_train, own_test, fleet, loop_states, cfg).run()
+    fleet_states = copy.deepcopy(states)
+    run_fleet(task, [RequesterSpec(own_train, own_test, fleet, fleet_states)], cfg)
+    for dev_id in states:
+        lv, _ = ravel_pytree(loop_states[dev_id]["params"])
+        fv, _ = ravel_pytree(fleet_states[dev_id]["params"])
+        np.testing.assert_allclose(np.asarray(fv), np.asarray(lv),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_session_fleet_engine_flag_with_mobility(problem):
+    """EnFedSession.run(engine='fleet') carries cfg.mobility through."""
+    task, own_train, own_test, fleet, states = problem
+    cfg = EnFedConfig(desired_accuracy=0.99, max_rounds=3, epochs=1,
+                      batch_size=BATCH, encrypt=False, n_max=2,
+                      contributor_refresh_epochs=0,
+                      mobility=MobilityConfig(radio_range_m=110.0,
+                                              leg_rounds=2, seed=3))
+    res = EnFedSession(task, own_train, own_test, fleet,
+                       copy.deepcopy(states), cfg).run(engine="fleet")
+    ref = EnFedSession(task, own_train, own_test, fleet,
+                       copy.deepcopy(states), cfg).run()
+    _assert_churn_parity(ref, res)
 
 
 # ---------------------------------------------------------------------------
