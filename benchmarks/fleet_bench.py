@@ -25,13 +25,20 @@ round loop each).  The headline metrics:
   shard once plus an (R, N) gather index.  Before/after per row.
 
 ``--smoke`` additionally runs (a) a 1-session fleet against the
-loop-engine oracle and (b) a CHURN scenario — contributors leave radio
+loop-engine oracle, (b) a CHURN scenario — contributors leave radio
 range mid-session and contracts are re-negotiated — asserting full
-parity including the per-round membership masks, and exits non-zero on
-any regression — the CI gate.
+parity including the per-round membership masks, and (c) the
+``--compare`` paper-claim row (below); it exits non-zero on any
+regression — the CI gate.
+
+``--compare`` runs ``repro.api.Experiment.compare(["enfed", "dfl"])`` on
+the bench HAR config — both methods on ONE world, seed, and CostModel —
+and writes the paper's Table-style ``enfed_vs_dfl`` reduction row
+(time + energy %) into the JSON, so the comparative claim the paper
+leads with is part of every PR's perf trail.
 
   PYTHONPATH=src python -m benchmarks.fleet_bench [--sizes 8,32,128,512]
-      [--smoke] [--out BENCH_fleet.json]
+      [--smoke] [--compare] [--out BENCH_fleet.json]
 """
 
 from __future__ import annotations
@@ -127,6 +134,55 @@ def _parity_smoke(task, fleet, states, own_train, own_test, cfg) -> dict:
             "max_param_diff": max_diff, "max_accuracy_diff": acc_diff}
 
 
+def _compare_row(task, fleet, states, own_train, own_test,
+                 cfg: EnFedConfig) -> dict:
+    """The paper-claim row: EnFed vs DFL through the one-call facade.
+
+    Both methods run on the SAME WorldSpec (requester shard, contributor
+    states, seed) and the SAME CostModel instance; the row is the
+    Table-IV-style time/energy reduction.  ``pass`` requires finite
+    reduction percentages AND proof that the world's CostModel actually
+    prices every method: the comparison is re-run on a world whose
+    device profile draws 10x the power, and each method's reported
+    energy must scale with it — a method silently costing through a
+    private default CostModel would not move, and trips the CI gate."""
+    import dataclasses
+
+    from repro.api import Experiment, MethodSpec, WorldSpec
+    from repro.core import CostModel, DeviceProfile
+
+    method = MethodSpec(
+        desired_accuracy=cfg.desired_accuracy, max_rounds=cfg.max_rounds,
+        epochs=cfg.epochs, batch_size=cfg.batch_size, encrypt=cfg.encrypt,
+        contributor_refresh_epochs=cfg.contributor_refresh_epochs)
+    world = WorldSpec.single(task, own_train, own_test, fleet,
+                             copy.deepcopy(states), seed=cfg.seed)
+    exp = Experiment(world, method)
+    exp.compare(["enfed", "dfl"])    # warm the jit caches: the methods'
+    cmp = exp.compare(["enfed", "dfl"])  # T_loc is semi-empirical (measured
+    # fit wall-clock), so the reported row must not carry compile time
+    row = cmp.reduction("enfed", "dfl")
+
+    d = DeviceProfile()
+    hot = dataclasses.replace(
+        d, p_tx=d.p_tx * 10, p_rx=d.p_rx * 10, p_init=d.p_init * 10,
+        p_crypto=d.p_crypto * 10, p_agg=d.p_agg * 10, p_train=d.p_train * 10)
+    world_hot = WorldSpec.single(task, own_train, own_test, fleet,
+                                 copy.deepcopy(states), seed=cfg.seed,
+                                 cost_model=CostModel(device=hot))
+    cmp_hot = Experiment(world_hot, method).compare(["enfed", "dfl"])
+    row["cost_model_flows"] = bool(
+        all(r.cost_model is world.cost_model for r in cmp)
+        and cmp_hot["enfed"].energy_j > 2.0 * cmp["enfed"].energy_j
+        and cmp_hot["dfl"].energy_j > 2.0 * cmp["dfl"].energy_j)
+    vals = [row["time_reduction_pct"], row["energy_reduction_pct"],
+            row["t_method_s"], row["t_baseline_s"],
+            row["e_method_j"], row["e_baseline_j"]]
+    row["pass"] = bool(row["cost_model_flows"]
+                       and all(v is not None and np.isfinite(v) for v in vals))
+    return row
+
+
 def _churn_mobility() -> MobilityConfig:
     """The benchmark's opportunistic world: devices re-waypoint every
     round inside a 200 m arena with a 95 m radio range — enough motion
@@ -200,7 +256,7 @@ def _churn_smoke(task, fleet, states, own_train, own_test) -> dict:
 
 
 def run(verbose: bool = True, sizes=(8, 32, 128, 512), smoke: bool = False,
-        out: str | None = None):
+        compare: bool = False, out: str | None = None):
     import jax
 
     task, fleet, states, own_train, own_test = _build_problem()
@@ -211,6 +267,15 @@ def run(verbose: bool = True, sizes=(8, 32, 128, 512), smoke: bool = False,
               "config": {"max_rounds": cfg.max_rounds, "epochs": cfg.epochs,
                          "batch_size": cfg.batch_size, "n_contrib": N_CONTRIB},
               "results": []}
+
+    # the paper-claim comparison row rides with --compare AND with the
+    # --smoke CI gate, so the facade-level claim is regression-checked
+    # every PR
+    if compare or smoke:
+        report["enfed_vs_dfl"] = _compare_row(task, fleet, states, own_train,
+                                              own_test, cfg)
+        if verbose:
+            print(f"[compare enfed_vs_dfl] {report['enfed_vs_dfl']}")
 
     if smoke:
         smoke_cfg = EnFedConfig(desired_accuracy=0.99, max_rounds=2, epochs=1,
@@ -343,6 +408,11 @@ def run(verbose: bool = True, sizes=(8, 32, 128, 512), smoke: bool = False,
         print("CHURN REGRESSION: mobility re-negotiation diverged from the "
               "loop oracle (or the scenario stopped churning)", file=sys.stderr)
         sys.exit(1)
+    if smoke and not report["enfed_vs_dfl"]["pass"]:
+        print("COMPARE REGRESSION: Experiment.compare(['enfed','dfl']) no "
+              "longer yields a finite reduction row under one shared "
+              "CostModel", file=sys.stderr)
+        sys.exit(1)
     return rows
 
 
@@ -351,12 +421,17 @@ def main() -> None:
     ap.add_argument("--sizes", default="8,32,128,512",
                     help="comma list of fleet sizes to sweep")
     ap.add_argument("--smoke", action="store_true",
-                    help="run the fleet-vs-loop parity gate; exit 1 on regression")
+                    help="run the fleet-vs-loop parity gate (includes the "
+                         "enfed-vs-dfl compare row); exit 1 on regression")
+    ap.add_argument("--compare", action="store_true",
+                    help="write the repro.api Experiment.compare "
+                         "enfed_vs_dfl reduction row (time + energy %%) "
+                         "into the JSON")
     ap.add_argument("--out", default="BENCH_fleet.json",
                     help="JSON report path ('' disables)")
     args = ap.parse_args()
     run(sizes=tuple(int(s) for s in args.sizes.split(",")),
-        smoke=args.smoke, out=args.out or None)
+        smoke=args.smoke, compare=args.compare, out=args.out or None)
 
 
 if __name__ == "__main__":

@@ -1,16 +1,21 @@
 """Full HAR comparison scenario: EnFed vs CFL vs DFL(mesh/ring) vs
-cloud-only, on both paper datasets (calories->MLP, HARSense->LSTM).
+cloud-only, on both paper datasets (calories->MLP, HARSense->LSTM) —
+expressed entirely through the ``repro.api`` facade.
 
 This is the experiment behind Tables IV/V/VII of the paper, at example
-scale (the full benchmark lives in benchmarks/).
+scale (the full benchmark lives in benchmarks/).  One ``WorldSpec`` is
+built once; ``Experiment.compare`` runs every method on that SAME world,
+seed, and cost model, which is what makes the printed reduction
+percentages meaningful.
 
   PYTHONPATH=src python examples/har_federated.py [--dataset har|calories]
                                                   [--engine loop|fleet]
                                                   [--churn]
 
-``--engine fleet`` runs the same EnFed session through the jit-native
-fleet engine (repro.core.fleet) instead of the Python round loop — same
-protocol, same result (parity-tested), one compiled program.
+``--engine fleet`` runs the EnFed session through the jit-native fleet
+engine (repro.core.fleet) instead of the Python round loop — same
+protocol, same result (parity-tested), one compiled program; the
+baselines are host-side either way.
 
 ``--churn`` turns on the opportunistic world (repro.core.mobility): the
 neighbors walk random-waypoint trajectories, contracts are re-negotiated
@@ -20,12 +25,12 @@ watch the requester keep training while its neighborhood churns.
 """
 
 import argparse
+import dataclasses
 
 import numpy as np
 
-from repro.core import (CFLLearner, DFLLearner, EnFedConfig, EnFedSession,
-                        MobilityConfig, SupervisedTask, cloud_only_baseline,
-                        make_fleet)
+from repro.api import Experiment, ExecutionSpec, MethodSpec, WorldSpec
+from repro.core import MobilityConfig, SupervisedTask, make_fleet
 from repro.data import (CaloriesDatasetConfig, HARDatasetConfig,
                         dirichlet_partition, make_calories_tabular,
                         make_har_windows)
@@ -47,6 +52,21 @@ def build(dataset: str):
     return task, shards, (own_x[:n], own_y[:n]), (own_x[n:], own_y[n:]), (x, y)
 
 
+def make_world(task, shards, own_train, own_test, *, fit_epochs: int,
+               pooled=None, mobility=None) -> WorldSpec:
+    """One shared world: a 5-device neighborhood whose contributors hold
+    pre-trained models over their own shards."""
+    fleet = make_fleet(5, seed=1, p_has_model=1.0)
+    states = {}
+    for i, dev in enumerate(fleet):
+        dev.reservation_price = 0.4
+        p = task.init(seed=10 + i)
+        p, _ = task.fit(p, shards[i + 1], epochs=fit_epochs, batch_size=32, seed=i)
+        states[dev.device_id] = {"params": p, "data": shards[i + 1]}
+    return WorldSpec.single(task, own_train, own_test, fleet, states,
+                            pooled_train=pooled, mobility=mobility)
+
+
 def churn_walkthrough(task, shards, own_train, own_test, args):
     """The opportunistic-world demo: one requester keeps training for the
     whole round budget while neighbors churn through its radio range.
@@ -58,22 +78,17 @@ def churn_walkthrough(task, shards, own_train, own_test, args):
     neighborhood are survivable — the requester trains alone on its own
     shard.  Both engines derive the identical world; pick with --engine.
     """
-    fleet = make_fleet(5, seed=1, p_has_model=1.0)
-    states = {}
-    for i, dev in enumerate(fleet):
-        dev.reservation_price = 0.4
-        p = task.init(seed=10 + i)
-        p, _ = task.fit(p, shards[i + 1], epochs=1, batch_size=32, seed=i)
-        states[dev.device_id] = {"params": p, "data": shards[i + 1]}
-    cfg = EnFedConfig(
-        desired_accuracy=args.target, epochs=args.epochs, max_rounds=10,
-        n_max=3, contributor_refresh_epochs=1,
-        mobility=MobilityConfig(arena_m=200.0, radio_range_m=90.0,
-                                leg_rounds=2, seed=5))
-    res = EnFedSession(task, own_train, own_test, fleet, states,
-                       cfg).run(engine=args.engine)
+    world = make_world(task, shards, own_train, own_test, fit_epochs=1,
+                       mobility=MobilityConfig(arena_m=200.0, radio_range_m=90.0,
+                                               leg_rounds=2, seed=5))
+    res = Experiment(
+        world,
+        method=MethodSpec(desired_accuracy=args.target, epochs=args.epochs,
+                          max_rounds=10, n_max=3,
+                          contributor_refresh_epochs=1),
+        execution=ExecutionSpec(engine=args.engine)).run()
 
-    print(f"\n=== churn walkthrough ({args.dataset}, engine={args.engine}) ===")
+    print(f"\n=== churn walkthrough ({args.dataset}, engine={res.engine}) ===")
     print(f"{'round':>5} {'members':>8} {'contract set':<18} {'acc':>6} {'battery':>8}")
     prev = None
     for r in range(res.rounds):
@@ -110,40 +125,30 @@ def main():
     if args.churn:
         return churn_walkthrough(task, shards, own_train, own_test, args)
 
-    # --- EnFed ---------------------------------------------------------
-    fleet = make_fleet(5, seed=1, p_has_model=1.0)
-    states = {}
-    for i, dev in enumerate(fleet):
-        dev.reservation_price = 0.4
-        p = task.init(seed=10 + i)
-        p, _ = task.fit(p, shards[i + 1], epochs=args.epochs, batch_size=32, seed=i)
-        states[dev.device_id] = {"params": p, "data": shards[i + 1]}
-    enfed = EnFedSession(task, own_train, own_test, fleet, states,
-                         EnFedConfig(desired_accuracy=args.target, epochs=args.epochs,
-                                     max_rounds=10)).run(engine=args.engine)
-
-    # --- baselines -----------------------------------------------------
-    client_data = [own_train] + shards[1:6]
-    cfl = CFLLearner(task, client_data, own_test).run(
-        target_accuracy=args.target, max_rounds=10, epochs=args.epochs, batch_size=32)
-    dfl_mesh = DFLLearner(task, client_data, own_test, "mesh").run(
-        target_accuracy=args.target, max_rounds=10, epochs=args.epochs, batch_size=32)
-    dfl_ring = DFLLearner(task, client_data, own_test, "ring").run(
-        target_accuracy=args.target, max_rounds=10, epochs=args.epochs, batch_size=32)
-    cloud_acc, cloud_resp, _ = cloud_only_baseline(
-        task, pooled, own_test, epochs=args.epochs, batch_size=32)
+    # one world, N methods: the facade guarantees every method sees the
+    # same requesters, contributor states, seed, and cost model
+    world = make_world(task, shards, own_train, own_test,
+                       fit_epochs=args.epochs, pooled=pooled)
+    exp = Experiment(
+        world,
+        method=MethodSpec(desired_accuracy=args.target, epochs=args.epochs,
+                          max_rounds=10, batch_size=32),
+        execution=ExecutionSpec(engine=args.engine))
+    cmp = exp.compare(["enfed", "cfl",
+                       dataclasses.replace(exp.method, name="dfl",
+                                           topology="mesh", label="dfl-mesh"),
+                       dataclasses.replace(exp.method, name="dfl",
+                                           topology="ring", label="dfl-ring"),
+                       "cloud"])
 
     print(f"\n=== {args.dataset} ===")
-    print(f"{'system':<10} {'acc':>6} {'rounds':>6} {'T_train(s)':>11} {'E(J)':>9}")
-    print(f"{'EnFed':<10} {enfed.accuracy:6.3f} {enfed.rounds:6d} "
-          f"{enfed.report.t_train:11.2f} {enfed.report.e_tot:9.2f}")
-    print(f"{'CFL':<10} {cfl.accuracy:6.3f} {cfl.rounds:6d} "
-          f"{cfl.report.t_train:11.2f} {cfl.report.e_tot:9.2f}")
-    print(f"{'DFL-mesh':<10} {dfl_mesh.accuracy:6.3f} {dfl_mesh.rounds:6d} "
-          f"{dfl_mesh.report.t_train:11.2f} {dfl_mesh.report.e_tot:9.2f}")
-    print(f"{'DFL-ring':<10} {dfl_ring.accuracy:6.3f} {dfl_ring.rounds:6d} "
-          f"{dfl_ring.report.t_train:11.2f} {dfl_ring.report.e_tot:9.2f}")
-    print(f"{'cloud':<10} {cloud_acc:6.3f} {'-':>6} {cloud_resp:11.2f} {'-':>9}  (response time)")
+    print(cmp.table())
+    for row in cmp.reductions("enfed"):
+        print(f"EnFed vs {row['baseline']:<6}: "
+              f"{row['time_reduction_pct']:+.1f}% time, "
+              f"{row['energy_reduction_pct']:+.1f}% energy")
+    print("(cloud T_train is the §IV-G response time: upload + cloud "
+          "training + round trip)")
     return 0
 
 

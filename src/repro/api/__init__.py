@@ -1,0 +1,46 @@
+"""repro.api — the one experiment API over worlds, methods, and engines.
+
+Quickstart (the whole public surface in 10 lines)::
+
+    from repro.api import Experiment, WorldSpec, MethodSpec, ExecutionSpec
+
+    world = WorldSpec.single(task, own_train, own_test, fleet, states)
+    exp = Experiment(world,
+                     method=MethodSpec(name="enfed", desired_accuracy=0.95,
+                                       max_rounds=10, epochs=8),
+                     execution=ExecutionSpec(engine="fleet"))
+    result = exp.run()                        # -> RunResult (any method/engine)
+    table = exp.compare(["enfed", "dfl", "cfl", "cloud"])
+    print(table.table(), table.reduction("enfed", "dfl"))
+
+The specs are orthogonal: :class:`WorldSpec` is the simulated world
+(requesters, neighborhoods, contributor states, mobility, batteries,
+ONE shared :class:`~repro.core.energy.CostModel`), :class:`MethodSpec`
+picks a registered method ("enfed" | "dfl" | "cfl" | "cloud", all
+consuming the same EnFedConfig-shaped knobs), and
+:class:`ExecutionSpec` tunes how it executes (loop vs fleet engine,
+Pallas ``interpret``, early-exit ``round_chunk``) without changing the
+simulated outcome.  Every run returns one :class:`RunResult`;
+``Experiment.compare`` returns a :class:`CompareResult` whose
+``reduction()`` rows reproduce the paper's EnFed-vs-baseline time and
+energy savings.  Extend with :func:`register_method`.
+"""
+
+from repro.api.experiment import DEFAULT_COMPARISON, Experiment
+from repro.api.methods import get_runner, method_names, register_method
+from repro.api.result import CompareResult, RunResult, reduction_row
+from repro.api.specs import ExecutionSpec, MethodSpec, WorldSpec
+
+__all__ = [
+    "Experiment",
+    "WorldSpec",
+    "MethodSpec",
+    "ExecutionSpec",
+    "RunResult",
+    "CompareResult",
+    "DEFAULT_COMPARISON",
+    "reduction_row",
+    "register_method",
+    "method_names",
+    "get_runner",
+]

@@ -1,0 +1,165 @@
+"""The method registry: ``"enfed"``, ``"dfl"``, ``"cfl"``, ``"cloud"``.
+
+Each registered runner maps ``(world, method, execution) -> RunResult``
+under the shared contract that makes comparisons meaningful:
+
+* it trains on the world's data/models as-is (``world.fresh_requesters``
+  copies keep runs independent),
+* every energy/time figure comes from the world's ONE
+  :class:`repro.core.energy.CostModel`,
+* the protocol knobs are read from the :class:`MethodSpec`'s
+  EnFedConfig-shaped surface — the baselines have no private kwargs.
+
+New workloads plug in with :func:`register_method` instead of growing a
+fourth ad-hoc entrypoint signature.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Callable, Dict, Tuple
+
+from repro.api.result import RunResult
+from repro.api.specs import ExecutionSpec, MethodSpec, WorldSpec
+from repro.core import federated, protocol
+from repro.core.rounds import EnFedSession, SessionResult
+
+MethodRunner = Callable[[WorldSpec, MethodSpec, ExecutionSpec], RunResult]
+
+_REGISTRY: Dict[str, MethodRunner] = {}
+
+
+def register_method(name: str):
+    """Decorator: add a runner under ``name`` (e.g. a new baseline)."""
+
+    def deco(fn: MethodRunner) -> MethodRunner:
+        _REGISTRY[name] = fn
+        return fn
+
+    return deco
+
+
+def method_names() -> Tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+def get_runner(name: str) -> MethodRunner:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown method {name!r}; registered: {sorted(_REGISTRY)}") from None
+
+
+def _warn_if_mobility_ignored(world: WorldSpec, name: str) -> None:
+    """The host-side baselines have no opportunistic-world execution:
+    they train their full static client set every round.  Comparing them
+    against EnFed-under-churn is apples-to-oranges, so dropping the
+    world's mobility axis must never be silent."""
+    if world.mobility is not None:
+        warnings.warn(
+            f"method {name!r} ignores world.mobility (no opportunistic-"
+            "world execution: its full static client set trains every "
+            "round); a compare() against EnFed-under-churn mixes a churn "
+            "world with static baselines", stacklevel=3)
+
+
+def _baseline_session(res: "federated.BaselineResult", *, target: float,
+                      n_contributors: float) -> SessionResult:
+    """A BaselineResult in the per-requester SessionResult schema."""
+    stopped = res.accuracy >= target
+    stop = (protocol.STOP_ACCURACY if stopped else protocol.STOP_MAX_ROUNDS)
+    return SessionResult(
+        accuracy=res.accuracy, rounds=res.rounds,
+        n_contributors=n_contributors, report=res.report, battery=None,
+        history=res.history, stop_reason=protocol.stop_reason_name(stop),
+        params=res.params)
+
+
+@register_method("enfed")
+def run_enfed(world: WorldSpec, method: MethodSpec,
+              execution: ExecutionSpec) -> RunResult:
+    """EnFed Algorithm 1 — the only method with two engines; the
+    ExecutionSpec picks which and tunes the compiled one."""
+    from repro.core import fleet as fleet_mod
+
+    cfg = method.to_enfed_config(world)
+    cost = world.cost_model
+    reqs = world.fresh_requesters()
+    if execution.engine == "fleet":
+        fr = fleet_mod.run_fleet(
+            world.task, reqs, cfg, cost_model=cost,
+            use_pallas=execution.use_pallas, interpret=execution.interpret,
+            round_chunk=execution.round_chunk)
+        return RunResult.from_sessions(
+            "enfed", "fleet", fr.sessions, cost_model=cost,
+            total_energy_j=fr.total_energy_j, raw=fr)
+    sessions = []
+    for i, r in enumerate(reqs):
+        # requester i walks as device mobility.requester_id + i — the
+        # fleet engine's lane convention — so ExecutionSpec.engine can
+        # never change which world a requester experiences
+        cfg_i = cfg if (cfg.mobility is None or i == 0) else dataclasses.replace(
+            cfg, mobility=dataclasses.replace(
+                cfg.mobility,
+                requester_id=cfg.mobility.requester_id + i))
+        sessions.append(EnFedSession(world.task, r.own_train, r.own_test,
+                                     r.neighborhood, r.contributor_states,
+                                     cfg_i, cost_model=cost,
+                                     battery=r.battery).run())
+    return RunResult.from_sessions("enfed", "loop", sessions, cost_model=cost)
+
+
+@register_method("cfl")
+def run_cfl(world: WorldSpec, method: MethodSpec,
+            execution: ExecutionSpec) -> RunResult:
+    """Centralized FL baseline, per requesting device (client 0)."""
+    _warn_if_mobility_ignored(world, "cfl")
+    cfg = method.to_enfed_config(world)
+    cost = world.cost_model
+    sessions = []
+    # baselines re-init their node params, so the world's contributor
+    # states are read-only here — no fresh copies needed
+    for i, r in enumerate(world.requesters):
+        data = world.client_data(i)
+        res = federated.CFLLearner(world.task, data, r.own_test,
+                                   cost_model=cost).run_config(cfg)
+        sessions.append(_baseline_session(
+            res, target=cfg.desired_accuracy, n_contributors=len(data) - 1))
+    return RunResult.from_sessions("cfl", "loop", sessions, cost_model=cost)
+
+
+@register_method("dfl")
+def run_dfl(world: WorldSpec, method: MethodSpec,
+            execution: ExecutionSpec) -> RunResult:
+    """Decentralized FL baseline over ``method.topology`` (mesh|ring)."""
+    _warn_if_mobility_ignored(world, "dfl")
+    cfg = method.to_enfed_config(world)
+    cost = world.cost_model
+    sessions = []
+    for i, r in enumerate(world.requesters):
+        data = world.client_data(i)
+        res = federated.DFLLearner(world.task, data, r.own_test,
+                                   method.topology,
+                                   cost_model=cost).run_config(cfg)
+        sessions.append(_baseline_session(
+            res, target=cfg.desired_accuracy, n_contributors=len(data) - 1))
+    return RunResult.from_sessions("dfl", "loop", sessions, cost_model=cost)
+
+
+@register_method("cloud")
+def run_cloud(world: WorldSpec, method: MethodSpec,
+              execution: ExecutionSpec) -> RunResult:
+    """The §IV-G no-FL baseline: ship raw data to the cloud, wait, get
+    the result back.  Device-side cost via ``CostModel.cloud_session``."""
+    _warn_if_mobility_ignored(world, "cloud")
+    cfg = method.to_enfed_config(world)
+    cost = world.cost_model
+    sessions = []
+    for i, r in enumerate(world.requesters):
+        res = federated.cloud_only_config(world.task, world.pooled(i),
+                                          r.own_test, cfg, cost_model=cost)
+        sessions.append(_baseline_session(
+            res, target=cfg.desired_accuracy, n_contributors=0.0))
+    return RunResult.from_sessions("cloud", "loop", sessions, cost_model=cost)

@@ -1,8 +1,18 @@
 """EnFed core: the paper's contribution as a first-class feature.
 
 Protocol (incentives, handshake, AES transport, Algorithm-1 round loop),
-cost model (eqs. 4-7), and the FL topologies expressed as TPU collective
-schedules.
+cost model (eqs. 4-7), the two execution engines (loop oracle + jit
+fleet), the opportunistic mobility world, and the FL topologies.
+
+The documented public import surface is the :mod:`repro.api` facade::
+
+    from repro.api import Experiment, WorldSpec, MethodSpec, ExecutionSpec, RunResult
+
+Those facade types are also re-exported here (lazily, via PEP 562 —
+``repro.api`` itself imports these core submodules) so
+``from repro.core import Experiment`` works; the engine-level
+entrypoints below (``EnFedSession``, ``run_fleet``, the baseline
+learners) remain for the facade to delegate to.
 """
 
 from repro.core.aggregation import fedavg, masked_fedavg, masked_weighted_mean_stacked
@@ -22,18 +32,56 @@ from repro.core.federated import (
     DFLLearner,
     FederatedTrainer,
     cloud_only_baseline,
+    cloud_only_config,
 )
 from repro.core.fleet import FleetResult, RequesterSpec, run_fleet
 from repro.core.mobility import MobilityConfig
 from repro.core.protocol import Phase
 from repro.core.topology import AggregationStrategy, aggregate_updates, group_mixing_matrix
 
+# repro.api facade types re-exported lazily (see __getattr__ below).
+_API_EXPORTS = (
+    "Experiment",
+    "WorldSpec",
+    "MethodSpec",
+    "ExecutionSpec",
+    "RunResult",
+    "CompareResult",
+    "register_method",
+)
+
+# The single consolidated public-API list: engine-level core names plus
+# the repro.api facade surface.
 __all__ = [
+    # aggregation + battery + cost model
     "fedavg", "masked_fedavg", "masked_weighted_mean_stacked",
     "BatteryState", "CostModel", "DeviceProfile", "LinkProfile", "EnergyReport",
-    "NeighborDevice", "Contract", "select_contributors", "participation_mask", "make_fleet",
+    # incentives / world
+    "NeighborDevice", "Contract", "select_contributors", "participation_mask",
+    "make_fleet", "MobilityConfig",
+    # EnFed engines + protocol vocabulary
     "EnFedConfig", "EnFedSession", "SessionResult",
-    "SupervisedTask", "CFLLearner", "DFLLearner", "FederatedTrainer", "cloud_only_baseline",
-    "FleetResult", "RequesterSpec", "run_fleet", "MobilityConfig", "Phase",
+    "FleetResult", "RequesterSpec", "run_fleet", "Phase",
+    # baselines (EnFedConfig-plumbed; legacy shims kept)
+    "SupervisedTask", "CFLLearner", "DFLLearner", "FederatedTrainer",
+    "cloud_only_baseline", "cloud_only_config",
+    # topologies
     "AggregationStrategy", "aggregate_updates", "group_mixing_matrix",
+    # repro.api facade (lazy)
+    *_API_EXPORTS,
 ]
+
+
+def __getattr__(name: str):
+    """Lazy facade re-export: ``repro.api`` imports these submodules, so
+    importing it eagerly here would be a cycle; resolving on first
+    access keeps both import orders working."""
+    if name in _API_EXPORTS:
+        import repro.api as _api
+
+        return getattr(_api, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

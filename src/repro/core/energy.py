@@ -262,6 +262,27 @@ class CostModel:
             num_samples=num_samples, epochs=epochs, n_devices=n_devices,
             encrypt=encrypt) for j in range(max_contrib + 1)]
 
+    def cloud_session(self, *, data_bytes: int,
+                      cloud_train_s: float) -> EnergyReport:
+        """Device-side cost of the §IV-G no-FL baseline, in the same
+        :class:`EnergyReport` schema as every FL method — so
+        ``repro.api.Experiment.compare`` can put "cloud" in one table
+        with EnFed/DFL/CFL under one cost model.
+
+        The device uploads its raw dataset (``t_dev`` at transmit
+        power), idles through the WAN round trips (``t_com`` at receive
+        power), and waits out the server's measured training walltime
+        (``t_loc``, burning NO device energy — the training joules are
+        the cloud's).  ``times.total`` is therefore exactly the paper's
+        response time: upload + RTT + cloud training + RTT.
+        """
+        t = PhaseTimes()
+        t.t_dev = 8.0 * data_bytes / self.link.wan_rate_bps
+        t.t_com = 2.0 * self.link.cloud_rtt_s
+        t.t_loc = cloud_train_s
+        e_comm = t.t_dev * self.device.p_tx + t.t_com * self.device.p_rx
+        return EnergyReport(times=t, e_comp=0.0, e_comm=e_comm)
+
     def cloud_only_response(self, *, data_bytes: int, num_params: int,
                             num_samples: int, epochs: int,
                             cloud_flops: float = 2e11) -> float:

@@ -109,8 +109,25 @@ class BaselineResult:
     params: object = None
 
 
+def _as_enfed_config(target_accuracy: float, max_rounds: int, epochs: int,
+                     batch_size: int, seed: int):
+    """Legacy baseline kwargs -> the shared EnFedConfig surface."""
+    from repro.core.rounds import EnFedConfig
+
+    return EnFedConfig(desired_accuracy=target_accuracy, max_rounds=max_rounds,
+                       epochs=epochs, batch_size=batch_size, seed=seed)
+
+
 class CFLLearner:
-    """Centralized FedAvg: virtual server, all clients train every round."""
+    """Centralized FedAvg: virtual server, all clients train every round.
+
+    The primary entrypoint is :meth:`run_config`, which consumes the same
+    :class:`repro.core.rounds.EnFedConfig` fields as EnFed itself
+    (``desired_accuracy``, ``max_rounds``, ``epochs``, ``batch_size``,
+    ``seed``) and the shared :class:`CostModel` — the discipline that
+    makes the paper's EnFed-vs-CFL comparison one call on one world
+    (``repro.api.Experiment.compare``).
+    """
 
     def __init__(self, task: SupervisedTask, client_data: Sequence, requester_test,
                  cost_model: Optional[CostModel] = None):
@@ -119,18 +136,19 @@ class CFLLearner:
         self.requester_test = requester_test
         self.cost = cost_model or CostModel()
 
-    def run(self, *, target_accuracy: float, max_rounds: int, epochs: int,
-            batch_size: int, seed: int = 0) -> BaselineResult:
-        params = self.task.init(seed)
+    def run_config(self, cfg) -> BaselineResult:
+        """Run the baseline under an :class:`EnFedConfig`'s knobs."""
+        params = self.task.init(cfg.seed)
         history = {"accuracy": [], "loss": []}
         measured = 0.0
         rounds = 0
-        for r in range(max_rounds):
+        for r in range(cfg.max_rounds):
             updates, weights = [], []
             for ci, data in enumerate(self.client_data):
                 t0 = time.perf_counter()
-                p_c, losses = self.task.fit(params, data, epochs, batch_size,
-                                            seed=seed + 31 * r + ci)
+                p_c, losses = self.task.fit(params, data, cfg.epochs,
+                                            cfg.batch_size,
+                                            seed=cfg.seed + 31 * r + ci)
                 dt = time.perf_counter() - t0
                 if ci == 0:  # client 0 is "the requesting device"
                     measured += dt
@@ -140,18 +158,30 @@ class CFLLearner:
             acc = self.task.evaluate(params, self.requester_test)
             rounds = r + 1
             history["accuracy"].append(acc)
-            if acc >= target_accuracy:
+            if acc >= cfg.desired_accuracy:
                 break
         report = self.cost.cfl_session(
             rounds=rounds, num_params=tree_size(params), model_bytes=tree_bytes(params),
-            num_samples=len(self.client_data[0][0]), epochs=epochs,
+            num_samples=len(self.client_data[0][0]), epochs=cfg.epochs,
             measured_local_time=measured)
         return BaselineResult(accuracy=history["accuracy"][-1], rounds=rounds,
                               report=report, history=history, params=params)
 
+    def run(self, *, target_accuracy: float, max_rounds: int, epochs: int,
+            batch_size: int, seed: int = 0) -> BaselineResult:
+        """Deprecated shim: private-kwarg form of :meth:`run_config`.
+        Prefer ``repro.api.Experiment(world, method="cfl").run()``."""
+        return self.run_config(_as_enfed_config(target_accuracy, max_rounds,
+                                                epochs, batch_size, seed))
+
 
 class DFLLearner:
-    """Decentralized FL over a mesh or ring topology (paper's DFL baseline)."""
+    """Decentralized FL over a mesh or ring topology (paper's DFL baseline).
+
+    Like :class:`CFLLearner`, the primary entrypoint is
+    :meth:`run_config` on the shared EnFedConfig surface; ``run`` is the
+    deprecated private-kwarg shim.
+    """
 
     def __init__(self, task: SupervisedTask, client_data: Sequence, requester_test,
                  topology_kind: str = "mesh", cost_model: Optional[CostModel] = None):
@@ -162,22 +192,23 @@ class DFLLearner:
         self.kind = topology_kind
         self.cost = cost_model or CostModel()
 
-    def run(self, *, target_accuracy: float, max_rounds: int, epochs: int,
-            batch_size: int, seed: int = 0) -> BaselineResult:
+    def run_config(self, cfg) -> BaselineResult:
+        """Run the baseline under an :class:`EnFedConfig`'s knobs."""
         n = len(self.client_data)
-        node_params = [self.task.init(seed + i) for i in range(n)]
+        node_params = [self.task.init(cfg.seed + i) for i in range(n)]
         strategy = topology.AggregationStrategy(
             kind="dfl_mesh" if self.kind == "mesh" else "dfl_ring")
         M = topology.group_mixing_matrix(n, strategy)
         history = {"accuracy": []}
         measured = 0.0
         rounds = 0
-        for r in range(max_rounds):
+        for r in range(cfg.max_rounds):
             # local training at every node
             for i, data in enumerate(self.client_data):
                 t0 = time.perf_counter()
-                node_params[i], _ = self.task.fit(node_params[i], data, epochs,
-                                                  batch_size, seed=seed + 77 * r + i)
+                node_params[i], _ = self.task.fit(node_params[i], data,
+                                                  cfg.epochs, cfg.batch_size,
+                                                  seed=cfg.seed + 77 * r + i)
                 if i == 0:
                     measured += time.perf_counter() - t0
             # gossip/mix according to topology
@@ -187,35 +218,60 @@ class DFLLearner:
             acc = self.task.evaluate(node_params[0], self.requester_test)
             rounds = r + 1
             history["accuracy"].append(acc)
-            if acc >= target_accuracy:
+            if acc >= cfg.desired_accuracy:
                 break
         p0 = node_params[0]
         report = self.cost.dfl_session(
             rounds=rounds, n_peers=n - 1, num_params=tree_size(p0),
             model_bytes=tree_bytes(p0), num_samples=len(self.client_data[0][0]),
-            epochs=epochs, topology=self.kind, measured_local_time=measured)
+            epochs=cfg.epochs, topology=self.kind, measured_local_time=measured)
         return BaselineResult(accuracy=history["accuracy"][-1], rounds=rounds,
                               report=report, history=history, params=p0)
+
+    def run(self, *, target_accuracy: float, max_rounds: int, epochs: int,
+            batch_size: int, seed: int = 0) -> BaselineResult:
+        """Deprecated shim: private-kwarg form of :meth:`run_config`.
+        Prefer ``repro.api.Experiment(world, method="dfl").run()``."""
+        return self.run_config(_as_enfed_config(target_accuracy, max_rounds,
+                                                epochs, batch_size, seed))
+
+
+def cloud_only_config(task: SupervisedTask, pooled_train, requester_test, cfg,
+                      cost_model: Optional[CostModel] = None) -> BaselineResult:
+    """§IV-G no-FL baseline on the shared EnFedConfig surface: the user
+    ships raw data to the cloud, the cloud trains, the result comes back.
+
+    The device-side :class:`EnergyReport` comes from
+    :meth:`CostModel.cloud_session` (upload tx + waiting rx energy, zero
+    on-device compute); ``report.t_train`` is the end-to-end response
+    time the paper plots — WAN upload + measured cloud training walltime
+    + the result round trip.
+    """
+    cost = cost_model or CostModel()
+    params = task.init(cfg.seed)
+    t0 = time.perf_counter()
+    params, _ = task.fit(params, pooled_train, cfg.epochs, cfg.batch_size,
+                         seed=cfg.seed)
+    t_cloud_train = time.perf_counter() - t0
+    acc = task.evaluate(params, requester_test)
+    x, _y = pooled_train
+    report = cost.cloud_session(data_bytes=int(np.asarray(x).nbytes),
+                                cloud_train_s=t_cloud_train)
+    return BaselineResult(accuracy=acc, rounds=1, report=report,
+                          history={"accuracy": [acc]}, params=params)
 
 
 def cloud_only_baseline(task: SupervisedTask, pooled_train, requester_test, *,
                         epochs: int, batch_size: int,
                         cost_model: Optional[CostModel] = None, seed: int = 0):
-    """§IV-G: the user ships raw data to the cloud; the cloud trains and
-    returns predictions.  Response time = WAN upload of the raw dataset +
-    measured cloud training walltime + result round trip.
+    """Deprecated shim over :func:`cloud_only_config`.  Prefer
+    ``repro.api.Experiment(world, method="cloud").run()``.
     Returns (accuracy, response_time_s, params)."""
-    cost = cost_model or CostModel()
-    params = task.init(seed)
-    t0 = time.perf_counter()
-    params, _ = task.fit(params, pooled_train, epochs, batch_size, seed=seed)
-    t_cloud_train = time.perf_counter() - t0
-    acc = task.evaluate(params, requester_test)
-    x, _y = pooled_train
-    data_bytes = int(np.asarray(x).nbytes)
-    t_up = 8.0 * data_bytes / cost.link.wan_rate_bps
-    resp = t_up + cost.link.cloud_rtt_s + t_cloud_train + cost.link.cloud_rtt_s
-    return acc, resp, params
+    res = cloud_only_config(
+        task, pooled_train, requester_test,
+        _as_enfed_config(0.0, 1, epochs, batch_size, seed),
+        cost_model=cost_model)
+    return res.accuracy, res.report.t_train, res.params
 
 
 # ---------------------------------------------------------------------------

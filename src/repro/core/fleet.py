@@ -392,12 +392,18 @@ def _fleet_program(task, use_pallas, interpret, do_refresh, chunk, max_rounds,
 
 
 def run_fleet(task, requesters: Sequence[RequesterSpec],
-              cfg: EnFedConfig = EnFedConfig(),
+              cfg: Optional[EnFedConfig] = None,
               cost_model: Optional[CostModel] = None,
               use_pallas: bool = True,
               interpret: Optional[bool] = None,
               round_chunk: int = 4) -> FleetResult:
     """Run ``len(requesters)`` concurrent EnFed sessions as one jit program.
+
+    Note: prefer the :mod:`repro.api` facade
+    (``ExecutionSpec(engine="fleet", ...)``) — this function remains the
+    engine entrypoint it delegates to.  ``cfg=None`` constructs a fresh
+    default config per call (a ``cfg=EnFedConfig()`` default would be one
+    import-time mutable instance shared by every caller).
 
     ``interpret`` selects Pallas interpret mode for the aggregation
     kernel (``None`` = compiled on TPU, interpreted on CPU — see
@@ -414,6 +420,7 @@ def run_fleet(task, requesters: Sequence[RequesterSpec],
     """
     from repro.kernels.common import resolve_interpret
 
+    cfg = cfg if cfg is not None else EnFedConfig()
     cost = cost_model or CostModel()
     mob = cfg.mobility
     R = len(requesters)

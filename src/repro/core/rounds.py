@@ -94,7 +94,8 @@ class EnFedSession:
     """
 
     def __init__(self, task, own_train, own_test, fleet: List[NeighborDevice],
-                 contributor_states: Dict[int, dict], cfg: EnFedConfig = EnFedConfig(),
+                 contributor_states: Dict[int, dict],
+                 cfg: Optional[EnFedConfig] = None,
                  cost_model: Optional[CostModel] = None,
                  battery: Optional[BatteryState] = None):
         self.task = task
@@ -102,7 +103,10 @@ class EnFedSession:
         self.own_test = own_test
         self.fleet = fleet
         self.contributor_states = contributor_states  # id -> {params, data}
-        self.cfg = cfg
+        # cfg=None constructs a fresh default per session — a shared
+        # `cfg=EnFedConfig()` default would be ONE mutable instance
+        # evaluated at import time, aliased across every caller
+        self.cfg = cfg if cfg is not None else EnFedConfig()
         self.cost = cost_model or CostModel()
         self.battery = battery or BatteryState()
 
@@ -138,10 +142,19 @@ class EnFedSession:
                 self.cfg.batch_size, seed=self.cfg.seed + c.device_id)
 
     # -- Algorithm 1 ----------------------------------------------------------
-    def run(self, engine: str = "loop") -> SessionResult:
+    def run(self, engine: str = "loop", *, use_pallas: bool = True,
+            interpret: Optional[bool] = None,
+            round_chunk: int = 4) -> SessionResult:
         """Execute the session.  ``engine="loop"`` (default) runs the
         Python reference loop below; ``engine="fleet"`` compiles this
-        session as a 1-requester fleet through ``repro.core.fleet``."""
+        session as a 1-requester fleet through ``repro.core.fleet``,
+        forwarding the engine knobs (``use_pallas``, ``interpret``,
+        ``round_chunk``) to ``run_fleet``.
+
+        Note: prefer the :mod:`repro.api` facade
+        (``Experiment(world, method, execution).run()``) — this method
+        remains as the loop-engine oracle and a delegating shim.
+        """
         if engine == "fleet":
             from repro.core import fleet as fleet_mod
 
@@ -151,7 +164,10 @@ class EnFedSession:
                 contributor_states=self.contributor_states,
                 battery=self.battery)
             result = fleet_mod.run_fleet(self.task, [spec], self.cfg,
-                                         cost_model=self.cost)
+                                         cost_model=self.cost,
+                                         use_pallas=use_pallas,
+                                         interpret=interpret,
+                                         round_chunk=round_chunk)
             self.battery = result.sessions[0].battery
             return result.sessions[0]
         if engine != "loop":

@@ -1,0 +1,355 @@
+"""The repro.api facade: parity with the legacy entrypoints, the unified
+result schema, the shared-cost-model comparison, and the engine-knob
+plumbing the facade subsumes.
+
+Parity discipline: `Experiment.run(method="enfed")` must be a pure
+re-expression of the legacy paths — bit-identical membership masks,
+rounds, stop reasons and battery trajectories, and (bitwise, since it is
+literally the same code on the same inputs) identical params — on static
+AND mobility worlds, through BOTH engines.
+"""
+
+import copy
+import dataclasses
+import inspect
+
+import numpy as np
+import pytest
+from jax.flatten_util import ravel_pytree
+
+from repro.api import (CompareResult, ExecutionSpec, Experiment, MethodSpec,
+                       RunResult, WorldSpec, method_names)
+from repro.core import (EnFedConfig, EnFedSession, MobilityConfig,
+                        RequesterSpec, SupervisedTask, make_fleet, run_fleet)
+from repro.core.energy import CostModel, DeviceProfile
+from repro.data import CaloriesDatasetConfig, dirichlet_partition, make_calories_tabular
+from repro.models import MLPClassifier, MLPClassifierConfig
+
+BATCH = 16
+
+
+def _build(n_contrib=3, n_samples=600, seed=0):
+    x, y = make_calories_tabular(CaloriesDatasetConfig(num_samples=n_samples))
+    task = SupervisedTask(MLPClassifier(MLPClassifierConfig(8, (16,), 5)), lr=3e-3)
+    parts = dirichlet_partition(y, num_clients=n_contrib + 1, alpha=100.0, seed=seed)
+    shards = [(x[p], y[p]) for p in parts]
+    own_x, own_y = shards[0]
+    n = int(len(own_x) * 0.8)
+    own_train, own_test = (own_x[:n], own_y[:n]), (own_x[n:], own_y[n:])
+    fleet = make_fleet(n_contrib, seed=1, p_has_model=1.0)
+    states = {}
+    for i, dev in enumerate(fleet):
+        dev.reservation_price = 0.4
+        p = task.init(seed=10 + i)
+        p, _ = task.fit(p, shards[i + 1], epochs=1, batch_size=BATCH, seed=i)
+        states[dev.device_id] = {"params": p, "data": shards[i + 1]}
+    return task, own_train, own_test, fleet, states
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return _build()
+
+
+def _world(problem, mobility=None):
+    task, own_train, own_test, fleet, states = problem
+    return WorldSpec.single(task, own_train, own_test, fleet,
+                            copy.deepcopy(states), mobility=mobility)
+
+
+_METHOD = MethodSpec(desired_accuracy=0.99, max_rounds=2, epochs=1,
+                     batch_size=BATCH, encrypt=False,
+                     contributor_refresh_epochs=1)
+
+_MOB = MobilityConfig(radio_range_m=95.0, leg_rounds=1, seed=5)
+_MOB_METHOD = dataclasses.replace(_METHOD, desired_accuracy=0.999,
+                                  max_rounds=4, n_max=2)
+
+
+def _legacy_cfg(method: MethodSpec, mobility=None) -> EnFedConfig:
+    return EnFedConfig(
+        desired_accuracy=method.desired_accuracy, max_rounds=method.max_rounds,
+        n_max=method.n_max, battery_threshold=method.battery_threshold,
+        offered_incentive=method.offered_incentive, epochs=method.epochs,
+        batch_size=method.batch_size, encrypt=method.encrypt,
+        contributor_refresh_epochs=method.contributor_refresh_epochs,
+        seed=0, strategy=method.strategy, mobility=mobility)
+
+
+def _assert_session_parity(facade_res, legacy, *, mobility: bool):
+    """Facade requester-0 view == the legacy SessionResult, bit for bit
+    on masks/battery, exactly on params (same code, same inputs)."""
+    s = facade_res.sessions[0]
+    assert facade_res.rounds == legacy.rounds == s.rounds
+    assert facade_res.stop_reason == legacy.stop_reason == s.stop_reason
+    np.testing.assert_array_equal(facade_res.history["battery"],
+                                  legacy.history["battery"])
+    np.testing.assert_array_equal(facade_res.history["accuracy"],
+                                  legacy.history["accuracy"])
+    if mobility:
+        np.testing.assert_array_equal(
+            np.array(facade_res.history["member_mask"]),
+            np.array(legacy.history["member_mask"]))
+    fv, _ = ravel_pytree(facade_res.params)
+    lv, _ = ravel_pytree(legacy.params)
+    np.testing.assert_allclose(np.asarray(fv), np.asarray(lv),
+                               rtol=0.0, atol=0.0)
+
+
+# ---------------------------------------------------------------------------
+# facade vs legacy parity: static + mobility, loop + fleet
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("engine", ["loop", "fleet"])
+def test_facade_matches_legacy_static(problem, engine):
+    task, own_train, own_test, fleet, states = problem
+    res = Experiment(_world(problem), _METHOD,
+                     ExecutionSpec(engine=engine)).run()
+    cfg = _legacy_cfg(_METHOD)
+    if engine == "loop":
+        legacy = EnFedSession(task, own_train, own_test, fleet,
+                              copy.deepcopy(states), cfg).run()
+    else:
+        legacy = run_fleet(task, [RequesterSpec(own_train, own_test, fleet,
+                                                copy.deepcopy(states))],
+                           cfg).sessions[0]
+    assert res.method == "enfed" and res.engine == engine
+    _assert_session_parity(res, legacy, mobility=False)
+
+
+@pytest.mark.parametrize("engine", ["loop", "fleet"])
+def test_facade_matches_legacy_mobility(problem, engine):
+    task, own_train, own_test, fleet, states = problem
+    res = Experiment(_world(problem, mobility=_MOB), _MOB_METHOD,
+                     ExecutionSpec(engine=engine)).run()
+    cfg = _legacy_cfg(_MOB_METHOD, mobility=_MOB)
+    if engine == "loop":
+        legacy = EnFedSession(task, own_train, own_test, fleet,
+                              copy.deepcopy(states), cfg).run()
+    else:
+        legacy = run_fleet(task, [RequesterSpec(own_train, own_test, fleet,
+                                                copy.deepcopy(states))],
+                           cfg).sessions[0]
+    assert res.history["members"]  # the world actually re-negotiates
+    _assert_session_parity(res, legacy, mobility=True)
+
+
+def test_facade_multi_requester_mobility_engine_invariance(problem):
+    """A 3-requester mobility world through BOTH engines: requester i
+    must walk as device requester_id + i in either, so the engine choice
+    never changes which world (masks, rounds, params) a requester sees."""
+    task, own_train, own_test, fleet, states = problem
+    mob = MobilityConfig(radio_range_m=110.0, leg_rounds=2, seed=3)
+
+    def world3():
+        return WorldSpec(task=task, requesters=[
+            RequesterSpec(own_train, own_test, fleet, copy.deepcopy(states))
+            for _ in range(3)], mobility=mob)
+
+    res = {e: Experiment(world3(), _MOB_METHOD, ExecutionSpec(engine=e)).run()
+           for e in ("loop", "fleet")}
+    members = [res["fleet"].sessions[i].history["members"] for i in range(3)]
+    assert any(m != members[0] for m in members), \
+        "requesters should see distinct neighborhoods"
+    for i in range(3):
+        sl, sf = res["loop"].sessions[i], res["fleet"].sessions[i]
+        assert sl.rounds == sf.rounds and sl.stop_reason == sf.stop_reason
+        np.testing.assert_array_equal(np.array(sl.history["member_mask"]),
+                                      np.array(sf.history["member_mask"]))
+        lv, _ = ravel_pytree(sl.params)
+        fv, _ = ravel_pytree(sf.params)
+        np.testing.assert_allclose(np.asarray(fv), np.asarray(lv),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_facade_runs_are_independent(problem):
+    """run() copies the world's mutable state: two runs are identical,
+    and the WorldSpec's contributor params are never trained in place."""
+    world = _world(problem)
+    p_before, _ = ravel_pytree(
+        next(iter(world.requesters[0].contributor_states.values()))["params"])
+    exp = Experiment(world, _METHOD, ExecutionSpec(engine="loop"))
+    a, b = exp.run(), exp.run()
+    av, _ = ravel_pytree(a.params)
+    bv, _ = ravel_pytree(b.params)
+    np.testing.assert_array_equal(np.asarray(av), np.asarray(bv))
+    p_after, _ = ravel_pytree(
+        next(iter(world.requesters[0].contributor_states.values()))["params"])
+    np.testing.assert_array_equal(np.asarray(p_before), np.asarray(p_after))
+
+
+# ---------------------------------------------------------------------------
+# compare(): one world, one seed, ONE cost model
+# ---------------------------------------------------------------------------
+
+
+def test_compare_all_methods_share_one_cost_model(problem):
+    world = _world(problem)
+    cmp = Experiment(world, _METHOD).compare(["enfed", "dfl", "cfl", "cloud"])
+    assert isinstance(cmp, CompareResult)
+    assert list(cmp.results) == ["enfed", "dfl", "cfl", "cloud"]
+    for res in cmp:
+        assert isinstance(res, RunResult)
+        # every method's energy figures come from the SAME CostModel
+        # instance the world declares
+        assert res.cost_model is world.cost_model
+        assert res.sessions and res.report is res.sessions[0].report
+        assert np.isfinite(res.energy_j) and res.energy_j > 0.0
+        assert np.isfinite(res.simulated_s) and res.simulated_s > 0.0
+    row = cmp.reduction("enfed", "dfl")
+    for k in ("time_reduction_pct", "energy_reduction_pct",
+              "t_method_s", "e_baseline_j"):
+        assert np.isfinite(row[k])
+    assert len(cmp.reductions("enfed")) == 3
+    assert "enfed" in cmp.table() and "cloud" in cmp.table()
+
+
+def test_compare_cost_model_actually_flows(problem):
+    """Scaling the device's power profile must scale EVERY method's
+    reported energy — no baseline silently costing through a private
+    default CostModel."""
+    task, own_train, own_test, fleet, states = problem
+    worlds = []
+    for scale in (1.0, 10.0):
+        d = DeviceProfile()
+        dev = dataclasses.replace(d, p_tx=d.p_tx * scale, p_rx=d.p_rx * scale,
+                                  p_train=d.p_train * scale,
+                                  p_agg=d.p_agg * scale,
+                                  p_crypto=d.p_crypto * scale,
+                                  p_init=d.p_init * scale)
+        worlds.append(WorldSpec.single(task, own_train, own_test, fleet,
+                                       copy.deepcopy(states),
+                                       cost_model=CostModel(device=dev)))
+    for m in ("enfed", "dfl", "cfl", "cloud"):
+        e1 = Experiment(worlds[0], _METHOD).run(m).energy_j
+        e10 = Experiment(worlds[1], _METHOD).run(m).energy_j
+        assert e10 > 2.0 * e1, (m, e1, e10)
+
+
+def test_dfl_topologies_coexist_via_labels(problem):
+    cmp = Experiment(_world(problem), _METHOD).compare([
+        dataclasses.replace(_METHOD, name="dfl", topology="mesh",
+                            label="dfl-mesh"),
+        dataclasses.replace(_METHOD, name="dfl", topology="ring",
+                            label="dfl-ring")])
+    assert list(cmp.results) == ["dfl-mesh", "dfl-ring"]
+    # mesh exchanges with all 3 peers, ring with 2 — its (analytic,
+    # deterministic) per-round communication time must be strictly larger
+    assert (cmp["dfl-mesh"].report.times.t_com
+            > cmp["dfl-ring"].report.times.t_com)
+    # coercing a bare name inherits knobs but NOT the base spec's label
+    labeled = dataclasses.replace(_METHOD, name="dfl", label="dfl-mesh")
+    assert MethodSpec.coerce("enfed", like=labeled).key == "enfed"
+
+
+def test_baselines_warn_when_mobility_world_is_dropped(problem):
+    """Only EnFed executes world.mobility; a baseline on a churn world
+    must WARN that the mobility axis is ignored — never silently produce
+    an apples-to-oranges comparison row."""
+    method = dataclasses.replace(_MOB_METHOD, max_rounds=1)
+    with pytest.warns(UserWarning, match="ignores world.mobility"):
+        Experiment(_world(problem, mobility=_MOB), method).run("dfl")
+    import warnings as _w
+
+    with _w.catch_warnings():
+        # static world: no mobility warning (UserWarning only — don't
+        # escalate unrelated toolchain DeprecationWarnings)
+        _w.simplefilter("error", UserWarning)
+        Experiment(_world(problem), method).run("dfl")
+
+
+def test_unknown_method_and_engine_fail_fast(problem):
+    with pytest.raises(ValueError, match="unknown method"):
+        Experiment(_world(problem), "sputnik").run()
+    with pytest.raises(ValueError, match="unknown engine"):
+        ExecutionSpec(engine="warp")
+    assert set(method_names()) >= {"enfed", "dfl", "cfl", "cloud"}
+
+
+# ---------------------------------------------------------------------------
+# engine-knob plumbing (the bug the ExecutionSpec subsumes)
+# ---------------------------------------------------------------------------
+
+
+def test_session_run_threads_engine_knobs_to_kernel(problem, monkeypatch):
+    """Regression: EnFedSession.run(engine="fleet") used to DROP
+    interpret/round_chunk on the floor.  Assert the knobs now reach (a)
+    run_fleet and (b) the aggregation-kernel launch inside the compiled
+    program."""
+    from repro.core import fleet as fleet_mod
+
+    task, own_train, own_test, fleet, states = _build(n_samples=400, seed=3)
+    seen_run_fleet = {}
+    seen_kernel = {}
+    real_run_fleet = fleet_mod.run_fleet
+    real_kernel = fleet_mod.fedavg_flat_batched
+
+    def spy_run_fleet(*args, **kwargs):
+        seen_run_fleet.update(kwargs)
+        return real_run_fleet(*args, **kwargs)
+
+    def spy_kernel(updates, weights, **kwargs):
+        seen_kernel.update(kwargs)
+        return real_kernel(updates, weights, **kwargs)
+
+    monkeypatch.setattr(fleet_mod, "run_fleet", spy_run_fleet)
+    monkeypatch.setattr(fleet_mod, "fedavg_flat_batched", spy_kernel)
+    cfg = _legacy_cfg(dataclasses.replace(_METHOD, max_rounds=1))
+    EnFedSession(task, own_train, own_test, fleet, states, cfg).run(
+        engine="fleet", interpret=True, use_pallas=True, round_chunk=2)
+    assert seen_run_fleet["interpret"] is True
+    assert seen_run_fleet["use_pallas"] is True
+    assert seen_run_fleet["round_chunk"] == 2
+    # resolve_interpret(True) -> True must arrive at the kernel launch
+    assert seen_kernel["interpret"] is True
+    assert seen_kernel["use_pallas"] is True
+
+
+def test_execution_spec_threads_knobs_through_facade(problem, monkeypatch):
+    from repro.core import fleet as fleet_mod
+
+    seen = {}
+    real = fleet_mod.run_fleet
+
+    def spy(*args, **kwargs):
+        seen.update(kwargs)
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(fleet_mod, "run_fleet", spy)
+    Experiment(_world(problem), dataclasses.replace(_METHOD, max_rounds=1),
+               ExecutionSpec(engine="fleet", interpret=True,
+                             round_chunk=3)).run()
+    assert seen["interpret"] is True and seen["round_chunk"] == 3
+
+
+# ---------------------------------------------------------------------------
+# shared-mutable-default regression + export surface
+# ---------------------------------------------------------------------------
+
+
+def test_cfg_default_is_not_shared():
+    """`cfg=EnFedConfig()` as a def-time default was ONE mutable dataclass
+    aliased across all callers; cfg=None must construct per call."""
+    assert inspect.signature(run_fleet).parameters["cfg"].default is None
+    assert inspect.signature(EnFedSession.__init__).parameters["cfg"].default is None
+    s1 = EnFedSession(None, None, None, [], {})
+    s2 = EnFedSession(None, None, None, [], {})
+    assert s1.cfg is not s2.cfg
+    s1.cfg.max_rounds = 777
+    assert s2.cfg.max_rounds != 777
+
+
+def test_core_reexports_facade_and_all():
+    import repro.core as core
+
+    for name in ("Experiment", "WorldSpec", "MethodSpec", "ExecutionSpec",
+                 "RunResult", "CompareResult", "register_method"):
+        assert name in core.__all__
+        assert getattr(core, name) is not None
+    import repro.api as api
+
+    assert core.Experiment is api.Experiment
+    # __all__ is the single consolidated public list: every name resolves
+    for name in core.__all__:
+        assert getattr(core, name) is not None
