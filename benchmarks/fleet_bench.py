@@ -24,21 +24,39 @@ round loop each).  The headline metrics:
   (R, N, n_c, F) block; the deduplicated engine stages each unique
   shard once plus an (R, N) gather index.  Before/after per row.
 
+* **compressed round state** (``results_compress``) — the same sweep
+  with ``EnFedConfig.compress="int8"`` on a tile-amortizing model
+  (the tiny smoke model is padding-limited): staged param bytes and
+  ``device_round_state_bytes`` fp32 vs int8 (>= 3.5x), and warm
+  rounds/s for both so the fused dequant->fedavg path is perf-tracked.
+
 ``--smoke`` additionally runs (a) a 1-session fleet against the
 loop-engine oracle, (b) a CHURN scenario — contributors leave radio
 range mid-session and contracts are re-negotiated — asserting full
-parity including the per-round membership masks, and (c) the
-``--compare`` paper-claim row (below); it exits non-zero on any
-regression — the CI gate.
+parity including the per-round membership masks, (c) the ``--compare``
+paper-claim rows (below), and (d) the PERF GATE: at the largest fleet
+size shared with the committed ``BENCH_fleet.json`` (same config +
+backend), warm rounds/s must not regress more than 25% on the machine
+that committed the baseline; on a different host (fingerprint mismatch)
+the gate compares the host-normalized ``speedup_vs_loop`` instead at a
+looser threshold — nothing else stops a perf cliff merging.  It exits
+non-zero on any regression — the CI gate.
 
-``--compare`` runs ``repro.api.Experiment.compare(["enfed", "dfl"])`` on
-the bench HAR config — both methods on ONE world, seed, and CostModel —
-and writes the paper's Table-style ``enfed_vs_dfl`` reduction row
-(time + energy %) into the JSON, so the comparative claim the paper
-leads with is part of every PR's perf trail.
+``--compare`` runs ``repro.api.Experiment.compare(["enfed", "dfl"])``
+through the one-call facade — both methods on ONE world, seed, and
+CostModel — and writes TWO Table-style reduction rows into the JSON:
+``enfed_vs_dfl`` on the tiny smoke config (a parity/cost-model gate
+ONLY — at that scale the one-time handshake dwarfs a few milliseconds
+of training, so its negative "reductions" say nothing about the paper
+claim) and ``enfed_vs_dfl_paper`` on a paper-shaped world — encrypted
+transport, a model big enough that transport matters, neighbors holding
+WELL-TRAINED models (EnFed's premise), an achievable accuracy target —
+where EnFed's fewer-rounds-to-target advantage shows as positive
+time/energy reductions.
 
   PYTHONPATH=src python -m benchmarks.fleet_bench [--sizes 8,32,128,512]
       [--smoke] [--compare] [--out BENCH_fleet.json]
+      [--perf-baseline PATH]
 """
 
 from __future__ import annotations
@@ -62,10 +80,12 @@ N_CONTRIB = 3
 LOOP_SAMPLE_SESSIONS = 3   # loop engine timed on this many, extrapolated
 
 
-def _build_problem(seed: int = 0):
+def _build_problem(seed: int = 0, hidden=(32,), num_samples: int = 1200,
+                   pretrain_epochs: int = 1):
     """Shared task + contributor population for every requester."""
-    x, y = make_calories_tabular(CaloriesDatasetConfig(num_samples=1200, seed=seed))
-    task = SupervisedTask(MLPClassifier(MLPClassifierConfig(8, (32,), 5)), lr=3e-3)
+    x, y = make_calories_tabular(CaloriesDatasetConfig(num_samples=num_samples,
+                                                       seed=seed))
+    task = SupervisedTask(MLPClassifier(MLPClassifierConfig(8, hidden, 5)), lr=3e-3)
     parts = dirichlet_partition(y, num_clients=N_CONTRIB + 1, alpha=100.0, seed=seed)
     shards = [(x[p], y[p]) for p in parts]
     fleet = make_fleet(N_CONTRIB, seed=seed + 1, p_has_model=1.0)
@@ -73,7 +93,8 @@ def _build_problem(seed: int = 0):
     for i, dev in enumerate(fleet):
         dev.reservation_price = 0.4
         p = task.init(seed=10 + i)
-        p, _ = task.fit(p, shards[i + 1], epochs=1, batch_size=BATCH, seed=i)
+        p, _ = task.fit(p, shards[i + 1], epochs=pretrain_epochs,
+                        batch_size=BATCH, seed=i)
         states[dev.device_id] = {"params": p, "data": shards[i + 1]}
     own_x, own_y = shards[0]
     n = int(len(own_x) * 0.8)
@@ -175,12 +196,157 @@ def _compare_row(task, fleet, states, own_train, own_test,
         all(r.cost_model is world.cost_model for r in cmp)
         and cmp_hot["enfed"].energy_j > 2.0 * cmp["enfed"].energy_j
         and cmp_hot["dfl"].energy_j > 2.0 * cmp["dfl"].energy_j)
+    _finalize_row(row, extra_pass=row["cost_model_flows"],
+                  note="smoke-scale gate config (tiny model, milliseconds "
+                       "of training): the one-time handshake dominates, so "
+                       "the reductions here are NOT the paper claim — see "
+                       "enfed_vs_dfl_paper")
+    return row
+
+
+def _finalize_row(row: dict, *, note: str, extra_pass: bool = True) -> dict:
+    """Shared CI-gate contract for every compare row: all reduction and
+    time/energy figures finite, plus any row-specific condition."""
     vals = [row["time_reduction_pct"], row["energy_reduction_pct"],
             row["t_method_s"], row["t_baseline_s"],
             row["e_method_j"], row["e_baseline_j"]]
-    row["pass"] = bool(row["cost_model_flows"]
+    row["pass"] = bool(extra_pass
                        and all(v is not None and np.isfinite(v) for v in vals))
+    row["note"] = note
     return row
+
+
+def _paper_compare_row() -> dict:
+    """The honest paper-claim row: EnFed vs DFL on a paper-shaped world.
+
+    EnFed's premise is leveraging neighbors that ALREADY hold trained
+    models, with encrypted transport and a model big enough that
+    transmission matters.  On that world EnFed reaches the target in
+    fewer rounds than from-scratch DFL, which is the mechanism behind
+    the paper's Table IV/V reductions; the tiny smoke row above cannot
+    show it (its handshake constant dwarfs everything).  ``pass`` gates
+    on finiteness + a reported-enfed-wins flag kept separate, so the
+    row stays honest if a future change flips the outcome."""
+    from repro.api import Experiment, MethodSpec, WorldSpec
+
+    task, fleet, states, own_train, own_test = _build_problem(
+        hidden=(128, 64), num_samples=2400, pretrain_epochs=8)
+    method = MethodSpec(desired_accuracy=0.5, max_rounds=10, epochs=2,
+                        batch_size=BATCH, encrypt=True,
+                        contributor_refresh_epochs=1)
+    world = WorldSpec.single(task, own_train, own_test, fleet,
+                             copy.deepcopy(states), seed=0)
+    exp = Experiment(world, method)
+    exp.compare(["enfed", "dfl"])        # warm jit: T_loc is semi-empirical
+    cmp = exp.compare(["enfed", "dfl"])
+    row = cmp.reduction("enfed", "dfl")
+    row["rounds_method"] = int(cmp["enfed"].rounds)
+    row["rounds_baseline"] = int(cmp["dfl"].rounds)
+    row["enfed_wins"] = bool(row["time_reduction_pct"] > 0
+                             and row["energy_reduction_pct"] > 0)
+    return _finalize_row(
+        row, note="paper-shaped: encrypted, MLP(128,64), neighbors "
+                  "pre-trained 8 epochs, achievable target 0.5 — EnFed "
+                  "converges in fewer rounds than from-scratch DFL")
+
+
+def _host_fingerprint() -> dict:
+    """Coarse host identity for the perf gate: absolute rounds/s are
+    only comparable on a like-for-like machine, so when the committed
+    baseline came from different hardware (a cpu_count or arch change
+    is the detectable proxy) the gate switches to the host-normalized
+    ``speedup_vs_loop`` metric instead of comparing raw throughput."""
+    import os
+    import platform
+
+    return {"machine": platform.machine(), "cpu_count": os.cpu_count()}
+
+
+def _perf_gate(report: dict, baseline_path: str, threshold: float = 0.75) -> dict:
+    """The CI perf gate: perf at the largest fleet size shared with the
+    COMMITTED ``BENCH_fleet.json`` must be >= ``threshold`` x the
+    committed number, under a matching (config, backend) fingerprint.
+
+    On the machine that committed the baseline (matching host
+    fingerprint) the gate compares absolute warm rounds/s.  On a
+    DIFFERENT host, absolute rounds/s are meaningless, so the gate
+    falls back to ``speedup_vs_loop`` — fleet warm time vs the loop
+    engine extrapolation, both measured in the SAME run on the SAME
+    machine — with a looser threshold (two noisy measurements instead
+    of one).  Either way a real perf cliff (the fleet engine getting
+    slow relative to its own baseline work) cannot merge silently; only
+    a missing/config-mismatched baseline skips the gate."""
+    try:
+        with open(baseline_path) as f:
+            base = json.load(f)
+    except (OSError, ValueError):
+        return {"pass": True, "skipped": f"no readable baseline at {baseline_path}"}
+    if (base.get("config") != report["config"]
+            or base.get("backend") != report["backend"]):
+        return {"pass": True, "skipped": "baseline config/backend mismatch"}
+    same_host = base.get("host") == report["host"]
+    metric = "rounds_per_s" if same_host else "speedup_vs_loop"
+    if not same_host:
+        threshold = 0.6
+    base_rows = {r["R"]: r.get(metric) for r in base.get("results", [])
+                 if r.get(metric)}
+    common = [row["R"] for row in report["results"] if row["R"] in base_rows]
+    if not common:
+        return {"pass": True, "skipped": "no common fleet size with baseline"}
+    R = max(common)
+    cur = next(r[metric] for r in report["results"] if r["R"] == R)
+    ratio = cur / max(base_rows[R], 1e-9)
+    return {"R": R, "metric": metric, "same_host": same_host,
+            "baseline": base_rows[R], "current": cur,
+            "ratio": round(ratio, 3), "threshold": threshold,
+            "pass": bool(ratio >= threshold)}
+
+
+def _compress_sweep(sizes, verbose: bool) -> list:
+    """fp32 vs int8 round state, per fleet size, on a tile-amortizing
+    model (MLP(64,32), P=2821 > 2 quantization tiles).  The smoke
+    model's P=453 fits inside one 1024-wide tile, where padding eats the
+    compression — honest physics, but not the regime the knob exists
+    for, so the byte-reduction claim is measured here instead."""
+    task, fleet, states, own_train, own_test = _build_problem(hidden=(64, 32))
+    rows = []
+    for R in sizes:
+        row = {"R": R}
+        for compress in (None, "int8"):
+            cfg = EnFedConfig(desired_accuracy=0.999, max_rounds=3, epochs=1,
+                              batch_size=BATCH, encrypt=False,
+                              contributor_refresh_epochs=1, compress=compress)
+            # fresh contributor states per run: run_fleet writes
+            # refresh-trained params back, and the fp32 and int8 legs of
+            # one row must measure the SAME world
+            specs = _make_specs(R, own_train, own_test, fleet,
+                                copy.deepcopy(states))
+            run_fleet(task, specs, cfg)                 # compile
+            specs = _make_specs(R, own_train, own_test, fleet,
+                                copy.deepcopy(states))
+            t0 = time.perf_counter()
+            result = run_fleet(task, specs, cfg)
+            wall = time.perf_counter() - t0
+            row["int8" if compress else "fp32"] = {
+                "warm_s": round(wall, 4),
+                "rounds_per_s": round(int(result.rounds.sum()) / wall, 2),
+                "staged_param_bytes": result.staged_param_bytes,
+                "device_round_state_bytes": result.device_round_state_bytes}
+        row["staged_param_reduction_x"] = round(
+            row["fp32"]["staged_param_bytes"]
+            / max(row["int8"]["staged_param_bytes"], 1), 2)
+        row["device_state_reduction_x"] = round(
+            row["fp32"]["device_round_state_bytes"]
+            / max(row["int8"]["device_round_state_bytes"], 1), 2)
+        rows.append(row)
+        if verbose:
+            print(f"[compress R={R:4d}] fp32 {row['fp32']['rounds_per_s']:7.1f} r/s"
+                  f" | int8 {row['int8']['rounds_per_s']:7.1f} r/s | "
+                  f"staged {row['fp32']['staged_param_bytes']} -> "
+                  f"{row['int8']['staged_param_bytes']} B "
+                  f"({row['staged_param_reduction_x']}x), device state "
+                  f"{row['device_state_reduction_x']}x")
+    return rows
 
 
 def _churn_mobility() -> MobilityConfig:
@@ -256,7 +422,8 @@ def _churn_smoke(task, fleet, states, own_train, own_test) -> dict:
 
 
 def run(verbose: bool = True, sizes=(8, 32, 128, 512), smoke: bool = False,
-        compare: bool = False, out: str | None = None):
+        compare: bool = False, out: str | None = None,
+        perf_baseline: str | None = None):
     import jax
 
     task, fleet, states, own_train, own_test = _build_problem()
@@ -265,10 +432,14 @@ def run(verbose: bool = True, sizes=(8, 32, 128, 512), smoke: bool = False,
                       contributor_refresh_epochs=1)
     report = {"backend": jax.default_backend(),
               "config": {"max_rounds": cfg.max_rounds, "epochs": cfg.epochs,
-                         "batch_size": cfg.batch_size, "n_contrib": N_CONTRIB},
+                         "batch_size": cfg.batch_size, "n_contrib": N_CONTRIB,
+                         "model": "mlp8-32-5"},
+              "host": _host_fingerprint(),
               "results": []}
+    # the committed baseline must be read BEFORE --out overwrites it
+    baseline_path = perf_baseline or out
 
-    # the paper-claim comparison row rides with --compare AND with the
+    # the paper-claim comparison rows ride with --compare AND with the
     # --smoke CI gate, so the facade-level claim is regression-checked
     # every PR
     if compare or smoke:
@@ -276,6 +447,9 @@ def run(verbose: bool = True, sizes=(8, 32, 128, 512), smoke: bool = False,
                                               own_test, cfg)
         if verbose:
             print(f"[compare enfed_vs_dfl] {report['enfed_vs_dfl']}")
+        report["enfed_vs_dfl_paper"] = _paper_compare_row()
+        if verbose:
+            print(f"[compare enfed_vs_dfl_paper] {report['enfed_vs_dfl_paper']}")
 
     if smoke:
         smoke_cfg = EnFedConfig(desired_accuracy=0.99, max_rounds=2, epochs=1,
@@ -328,7 +502,11 @@ def run(verbose: bool = True, sizes=(8, 32, 128, 512), smoke: bool = False,
             "staged_shard_bytes_before_dense": result.staged_shard_bytes_dense,
             "shard_bytes_reduction_x": round(
                 result.staged_shard_bytes_dense
-                / max(result.staged_shard_bytes, 1), 1)})
+                / max(result.staged_shard_bytes, 1), 1),
+            "staged_param_bytes": result.staged_param_bytes,
+            "device_round_state_bytes": result.device_round_state_bytes,
+            "refresh_gather_bytes": result.refresh_gather_bytes,
+            "refresh_gather_bytes_dense": result.refresh_gather_bytes_dense})
         rows.append((f"fleet/R={R}", wall_warm * 1e6 / R,
                      f"rounds/s={rps:.1f} E={result.total_energy_j:.1f}J "
                      f"loop_equiv={loop_equiv_s:.1f}s speedup={loop_equiv_s / wall_warm:.1f}x"))
@@ -373,6 +551,10 @@ def run(verbose: bool = True, sizes=(8, 32, 128, 512), smoke: bool = False,
                   f"joins {row['join_events']} leaves {row['leave_events']} "
                   f"empty rounds {row['empty_neighborhood_rounds']}")
 
+    # compressed-round-state sweep: fp32 vs int8 staged/resident bytes
+    # and rounds/s on a model that amortizes the quantization tile
+    report["results_compress"] = _compress_sweep(sizes, verbose)
+
     # early-exit demo: a fleet whose sessions all hit the accuracy target
     # in round 1 executes O(1) round bodies even with a 16-round budget
     # (the PR 1 engine scanned all 16 regardless).
@@ -395,6 +577,13 @@ def run(verbose: bool = True, sizes=(8, 32, 128, 512), smoke: bool = False,
               f"{int(ee.rounds.max())}: {bodies}/{ee_cfg.max_rounds} round "
               f"bodies executed, warm {ee_warm:.2f}s")
 
+    # the perf gate reads the committed baseline (already loaded path);
+    # it must run before the report overwrites that file
+    if smoke:
+        report["perf_gate"] = _perf_gate(report, baseline_path or "")
+        if verbose:
+            print(f"[perf gate] {report['perf_gate']}")
+
     if out:
         with open(out, "w") as f:
             json.dump(report, f, indent=2)
@@ -413,6 +602,17 @@ def run(verbose: bool = True, sizes=(8, 32, 128, 512), smoke: bool = False,
               "longer yields a finite reduction row under one shared "
               "CostModel", file=sys.stderr)
         sys.exit(1)
+    if smoke and not report["enfed_vs_dfl_paper"]["pass"]:
+        print("COMPARE REGRESSION: the paper-shaped enfed_vs_dfl_paper row "
+              "no longer yields finite reductions", file=sys.stderr)
+        sys.exit(1)
+    if smoke and not report["perf_gate"]["pass"]:
+        print(f"PERF REGRESSION: warm rounds/s at R="
+              f"{report['perf_gate'].get('R')} fell to "
+              f"{report['perf_gate'].get('ratio')}x the committed baseline "
+              f"(gate: >= {report['perf_gate'].get('threshold')}x)",
+              file=sys.stderr)
+        sys.exit(1)
     return rows
 
 
@@ -429,9 +629,14 @@ def main() -> None:
                          "into the JSON")
     ap.add_argument("--out", default="BENCH_fleet.json",
                     help="JSON report path ('' disables)")
+    ap.add_argument("--perf-baseline", default=None,
+                    help="committed BENCH_fleet.json to gate warm rounds/s "
+                         "against (default: the --out path, read before "
+                         "overwrite)")
     args = ap.parse_args()
     run(sizes=tuple(int(s) for s in args.sizes.split(",")),
-        smoke=args.smoke, compare=args.compare, out=args.out or None)
+        smoke=args.smoke, compare=args.compare, out=args.out or None,
+        perf_baseline=args.perf_baseline)
 
 
 if __name__ == "__main__":

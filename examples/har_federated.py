@@ -10,7 +10,7 @@ percentages meaningful.
 
   PYTHONPATH=src python examples/har_federated.py [--dataset har|calories]
                                                   [--engine loop|fleet]
-                                                  [--churn]
+                                                  [--churn] [--compress int8]
 
 ``--engine fleet`` runs the EnFed session through the jit-native fleet
 engine (repro.core.fleet) instead of the Python round loop — same
@@ -22,6 +22,12 @@ neighbors walk random-waypoint trajectories, contracts are re-negotiated
 every round as devices enter/leave radio range or hit their battery
 floor, and the walkthrough prints the per-round membership so you can
 watch the requester keep training while its neighborhood churns.
+
+``--compress int8`` adds an ``enfed-int8`` row to the compare table: the
+same world and knobs with the transported updates (and the fleet
+engine's round state) int8-compressed — ~4x fewer wire bytes into
+eq. (4)-(7), so the table shows the transmission/crypto energy delta
+compression buys on the same problem.
 """
 
 import argparse
@@ -119,6 +125,10 @@ def main():
     ap.add_argument("--churn", action="store_true",
                     help="opportunistic-world walkthrough: neighbors enter/"
                          "leave radio range mid-session (repro.core.mobility)")
+    ap.add_argument("--compress", choices=("int8",), default=None,
+                    help="add an enfed-int8 row: same world with the "
+                         "transported updates int8-compressed (shows the "
+                         "eq. (4)-(7) energy delta in the compare table)")
     args = ap.parse_args()
 
     task, shards, own_train, own_test, pooled = build(args.dataset)
@@ -134,19 +144,29 @@ def main():
         method=MethodSpec(desired_accuracy=args.target, epochs=args.epochs,
                           max_rounds=10, batch_size=32),
         execution=ExecutionSpec(engine=args.engine))
-    cmp = exp.compare(["enfed", "cfl",
-                       dataclasses.replace(exp.method, name="dfl",
-                                           topology="mesh", label="dfl-mesh"),
-                       dataclasses.replace(exp.method, name="dfl",
-                                           topology="ring", label="dfl-ring"),
-                       "cloud"])
+    methods = ["enfed", "cfl",
+               dataclasses.replace(exp.method, name="dfl",
+                                   topology="mesh", label="dfl-mesh"),
+               dataclasses.replace(exp.method, name="dfl",
+                                   topology="ring", label="dfl-ring"),
+               "cloud"]
+    if args.compress:
+        methods.insert(1, dataclasses.replace(exp.method,
+                                              compress=args.compress,
+                                              label="enfed-int8"))
+    cmp = exp.compare(methods)
 
     print(f"\n=== {args.dataset} ===")
     print(cmp.table())
     for row in cmp.reductions("enfed"):
-        print(f"EnFed vs {row['baseline']:<6}: "
+        print(f"EnFed vs {row['baseline']:<10}: "
               f"{row['time_reduction_pct']:+.1f}% time, "
               f"{row['energy_reduction_pct']:+.1f}% energy")
+    if args.compress:
+        fp32, q8 = cmp["enfed"].report, cmp["enfed-int8"].report
+        print(f"int8 wire: t_com {fp32.times.t_com:.4f}s -> "
+              f"{q8.times.t_com:.4f}s, E_comm {fp32.e_comm:.3f}J -> "
+              f"{q8.e_comm:.3f}J on the same world")
     print("(cloud T_train is the §IV-G response time: upload + cloud "
           "training + round trip)")
     return 0

@@ -6,7 +6,11 @@ under the shared contract that makes comparisons meaningful:
 * it trains on the world's data/models as-is (``world.fresh_requesters``
   copies keep runs independent),
 * every energy/time figure comes from the world's ONE
-  :class:`repro.core.energy.CostModel`,
+  :class:`repro.core.energy.CostModel`, with ``model_bytes`` priced
+  through the shared :func:`repro.core.energy.update_wire_bytes` helper
+  — so the ``MethodSpec.compress`` knob lowers transmission/crypto
+  energy consistently for enfed AND the dfl/cfl baselines (cloud ships
+  raw data, not model updates, and is unaffected),
 * the protocol knobs are read from the :class:`MethodSpec`'s
   EnFedConfig-shaped surface — the baselines have no private kwargs.
 

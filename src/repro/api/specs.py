@@ -133,6 +133,12 @@ class MethodSpec:
     contributor_refresh_epochs: int = 1
     strategy: Optional[AggregationStrategy] = None
     topology: str = "mesh"               # dfl: "mesh" | "ring"
+    # transported-update compression (None | "int8").  A PROTOCOL knob,
+    # not an execution knob: it changes the simulated outcome (wire
+    # bytes, eq. (4)-(7) energy, quantized params), so it lives here and
+    # every method prices its transport through the same
+    # repro.core.energy.update_wire_bytes helper.
+    compress: Optional[str] = None
     label: Optional[str] = None          # display/compare key (default: name)
 
     @property
@@ -169,6 +175,7 @@ class MethodSpec:
             contributor_refresh_epochs=self.contributor_refresh_epochs,
             seed=world.seed,
             strategy=self.strategy,
+            compress=self.compress,
             mobility=world.mobility)
 
 

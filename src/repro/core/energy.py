@@ -24,6 +24,34 @@ import dataclasses
 from typing import Optional
 
 
+def update_wire_bytes(num_params: int, *, encrypt: bool = True,
+                      compress: Optional[str] = None,
+                      raw_bytes: Optional[int] = None) -> int:
+    """Bytes ONE model update occupies on the wire — the ``model_bytes``
+    every eq. (4)-(7) term is priced from.
+
+    This is the single place the ``EnFedConfig.compress`` protocol knob
+    meets the cost model: under ``compress="int8"`` the update travels
+    as a tile-padded int8 payload plus one fp32 scale per tile (~4x
+    fewer bytes, see ``repro.kernels.quantize.ops.compressed_nbytes``),
+    and AES-CTR preserves length so the count is the same encrypted or
+    not.  Uncompressed, an encrypted update is the serialized fp32
+    stream (``4 * num_params``); a plaintext one is the raw tree bytes
+    when the caller supplies them.  Both engines and the re-plumbed
+    CFL/DFL baselines MUST derive ``model_bytes`` through this helper so
+    their transmission/crypto energies (and therefore battery
+    trajectories) agree bit-exactly under every knob setting.
+    """
+    if compress == "int8":
+        from repro.kernels.quantize.ops import compressed_nbytes
+        return compressed_nbytes(num_params)
+    if compress is not None:
+        raise ValueError(f"unknown compress mode {compress!r} (None|'int8')")
+    if encrypt or raw_bytes is None:
+        return 4 * num_params
+    return raw_bytes
+
+
 @dataclasses.dataclass(frozen=True)
 class DeviceProfile:
     """Per-mode average power draw (W) and compute throughput."""

@@ -22,7 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import aggregation, schedule, topology
-from repro.core.energy import CostModel, EnergyReport
+from repro.core.energy import CostModel, EnergyReport, update_wire_bytes
 from repro.models.classifiers import (accuracy as _accuracy,
                                       masked_cross_entropy_loss)
 from repro.optim import adam, apply_updates
@@ -160,8 +160,19 @@ class CFLLearner:
             history["accuracy"].append(acc)
             if acc >= cfg.desired_accuracy:
                 break
+        # model_bytes through the shared wire helper: the compress knob
+        # prices the baseline's transport exactly like EnFed's, so a
+        # compare() row reflects compression in every method's report.
+        # Cost-domain only: the baseline still trains/aggregates fp32
+        # (no quantization noise in its params), like the fleet engine
+        # models AES in the cost domain — a compressed-vs-compressed
+        # accuracy comparison is EnFed-vs-EnFed, not EnFed-vs-baseline
         report = self.cost.cfl_session(
-            rounds=rounds, num_params=tree_size(params), model_bytes=tree_bytes(params),
+            rounds=rounds, num_params=tree_size(params),
+            model_bytes=update_wire_bytes(
+                tree_size(params), encrypt=False,
+                compress=getattr(cfg, "compress", None),
+                raw_bytes=tree_bytes(params)),
             num_samples=len(self.client_data[0][0]), epochs=cfg.epochs,
             measured_local_time=measured)
         return BaselineResult(accuracy=history["accuracy"][-1], rounds=rounds,
@@ -223,7 +234,11 @@ class DFLLearner:
         p0 = node_params[0]
         report = self.cost.dfl_session(
             rounds=rounds, n_peers=n - 1, num_params=tree_size(p0),
-            model_bytes=tree_bytes(p0), num_samples=len(self.client_data[0][0]),
+            model_bytes=update_wire_bytes(
+                tree_size(p0), encrypt=False,
+                compress=getattr(cfg, "compress", None),
+                raw_bytes=tree_bytes(p0)),
+            num_samples=len(self.client_data[0][0]),
             epochs=cfg.epochs, topology=self.kind, measured_local_time=measured)
         return BaselineResult(accuracy=history["accuracy"][-1], rounds=rounds,
                               report=report, history=history, params=p0)

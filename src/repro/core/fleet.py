@@ -29,13 +29,36 @@ R=512 and beyond:
   shards smaller than one batch (single padded step, zero-weight
   padding).
 
-* **Deduplicated contributor shards.**  Requesters sharing one
-  contributor population used to re-stage the same training shards R
-  times as a dense (R, N, n_c, F) block — the dominant host->device
-  transfer at R=512.  Shards are now staged once into a unique-shard
-  table (U, n_c, F) plus an (R, N) gather index; the program gathers
-  per-lane views on device.  ``FleetResult.staged_shard_bytes`` vs
-  ``staged_shard_bytes_dense`` records the saving.
+* **Compressed round state (``cfg.compress="int8"``).**  The round
+  state is the transported thing, so when the protocol compresses the
+  wire it must compress the state: under the knob the (R, N, P) fp32
+  buffer is carried instead as a tile-padded int8 payload (R, N, Lp)
+  plus per-tile fp32 scales — ~4x less staged host->device traffic and
+  ~4x less device-resident round state
+  (``FleetResult.device_round_state_bytes``).  Aggregation runs the
+  fused dequant->fedavg kernel (``fedavg_flat_batched_q8``) straight on
+  the wire-format buffer (the dequantized fp32 block never
+  materializes); Phase.REFRESH dequantizes per-lane views for training
+  and requantizes the result back into the buffer
+  (``quantize_flat_batched``) in the same launch discipline.  fp32
+  reappears only in per-lane views and the requester's own params.  The
+  loop engine quantizes at the identical protocol points
+  (``EnFedSession._wire_pack``), so the knob keeps full two-engine
+  parity: bitwise on membership masks, allclose (tile-scale bound) on
+  params — see tests/test_compress.py.
+
+* **Deduplicated contributor shards, never re-densified.**  Requesters
+  sharing one contributor population used to re-stage the same training
+  shards R times as a dense (R, N, n_c, F) block — the dominant
+  host->device transfer at R=512.  Shards are now staged once into a
+  unique-shard table (U, n_c, F) plus an (R, N) gather index; and the
+  program must NEVER undo that dedup in device memory: Phase.REFRESH
+  gathers each lane's minibatch straight from the table inside the fit
+  scan ((R·N, B, F) per step) instead of materializing the lane-dense
+  (R·N, n_c, F) block up front.  ``FleetResult.staged_shard_bytes`` vs
+  ``staged_shard_bytes_dense`` records the staging win,
+  ``refresh_gather_bytes`` vs ``refresh_gather_bytes_dense`` the
+  device-memory one.
 
 * **Early-exit rounds, no dead work.**  The round loop is a chunked
   ``lax.while_loop``: after every ``round_chunk`` rounds the program
@@ -89,6 +112,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import hashlib
 from typing import Dict, List, Optional, Sequence
 
 import jax
@@ -98,11 +122,14 @@ import numpy as np
 from repro.core import mobility as mobility_mod
 from repro.core import protocol, schedule, topology
 from repro.core.battery import BatteryState, discharge_level, load_efficiency
-from repro.core.energy import CostModel
+from repro.core.energy import CostModel, update_wire_bytes
 from repro.core.incentive import (NeighborDevice, candidate_pool,
                                   sign_contracts_fleet)
 from repro.core.rounds import EnFedConfig, SessionResult
-from repro.kernels.fedavg.ops import fedavg_flat_batched
+from repro.kernels.fedavg.ops import (fedavg_flat_batched,
+                                      fedavg_flat_batched_q8)
+from repro.kernels.quantize.ops import (dequantize_flat_batched, padded_len,
+                                        quantize_flat_batched)
 from repro.models.classifiers import masked_cross_entropy_loss
 from repro.optim import apply_updates
 from repro.utils.tree import (tree_bytes, tree_ravel, tree_size, tree_unravel,
@@ -139,6 +166,14 @@ class FleetResult:
     staged_index_bytes: int = 0  # subset that is minibatch-schedule metadata
     staged_shard_bytes: int = 0  # contributor-shard table + gather indices
     staged_shard_bytes_dense: int = 0  # what the dense (R, N, ...) form costs
+    staged_param_bytes: int = 0  # contributor-param round state as staged
+                                 # (fp32 (R,N,P), or int8 payload + scales)
+    device_round_state_bytes: int = 0  # device-RESIDENT round state carried
+                                       # through the while_loop (fp32 vs int8)
+    refresh_gather_bytes: int = 0  # per-step refresh minibatch gather
+                                   # footprint ((R*N, B) rows from the table)
+    refresh_gather_bytes_dense: int = 0  # the old re-densified (R*N, n_c, F)
+                                         # block the gather replaces
 
 
 def _pad_stack(arrays, pad_len: int):
@@ -167,11 +202,12 @@ def _stack_trees(trees, template=None):
     static_argnames=("task", "use_pallas", "interpret", "do_refresh", "chunk",
                      "max_rounds", "epochs", "batch", "steps_max",
                      "ref_epochs", "ref_steps", "spec", "mob", "n_max",
-                     "strategy"),
+                     "strategy", "compress", "n_params"),
     donate_argnames=("contrib_flat",))
 def _fleet_program(task, use_pallas, interpret, do_refresh, chunk, max_rounds,
                    epochs, batch, steps_max, ref_epochs, ref_steps, spec,
-                   mob, n_max, strategy, contrib_flat, arrays):
+                   mob, n_max, strategy, compress, n_params, contrib_flat,
+                   arrays):
     """The whole fleet's Algorithm 1 as one compiled program.
 
     Module-level so the jit cache is shared across ``run_fleet`` calls:
@@ -181,7 +217,11 @@ def _fleet_program(task, use_pallas, interpret, do_refresh, chunk, max_rounds,
     (``round_w``, ``e_round``, ``desired_accuracy``...) — reuses the
     compiled executable instead of re-tracing per call.
 
-    ``contrib_flat`` (R, N, P) is the donated flat round state;
+    ``contrib_flat`` is the donated flat round state: (R, N, P) fp32, or
+    — under ``compress="int8"`` — the (R, N, Lp) int8 wire payload whose
+    per-tile fp32 scales arrive as ``arrays["c_scales"]`` and travel in
+    the loop-carried state (refresh rewrites them).  ``n_params`` is the
+    true flat parameter count P (<= Lp, the tile-padded payload length).
     ``spec`` is the static :func:`repro.utils.tree.tree_ravel` spec that
     recovers per-device parameter pytrees from (P,) lane views.  ``mob``
     is the static :class:`repro.core.mobility.MobilityConfig` (None =
@@ -189,20 +229,24 @@ def _fleet_program(task, use_pallas, interpret, do_refresh, chunk, max_rounds,
     candidate pool and membership is re-negotiated on device each round.
     """
     model, opt = task.model, task._opt
-    R, N, P = contrib_flat.shape
+    R, N = contrib_flat.shape[:2]
+    P = n_params
     n_pad = arrays["own_x"].shape[1]
     mobility_on = mob is not None
+    compress_on = compress == "int8"
 
-    def fit_one(flat_p, x, y, idx, w):
+    def _fit_lane(flat_p, get_xy, idx, w):
         """Identical math to SupervisedTask.fit for one device's shard,
-        on a flat (P,) parameter view."""
+        on a flat (P,) parameter view; ``get_xy`` maps a (B,) index row
+        to that step's minibatch (direct shard slice for requesters,
+        unique-table gather for contributor refresh)."""
         E, S, B = idx.shape
         params = tree_unravel(spec, flat_p)
 
         def one_step(carry, sv):
             p, s = carry
             ib, wb = sv
-            xb, yb = x[ib], y[ib]
+            xb, yb = get_xy(ib)
             loss, grads = jax.value_and_grad(
                 lambda pp: masked_cross_entropy_loss(
                     model.forward(pp, xb), yb, wb))(p)
@@ -220,35 +264,71 @@ def _fleet_program(task, use_pallas, interpret, do_refresh, chunk, max_rounds,
         flat_out, _ = tree_ravel(params)
         return flat_out, per_epoch[-1]
 
+    def fit_one(flat_p, x, y, idx, w):
+        return _fit_lane(flat_p, lambda ib: (x[ib], y[ib]), idx, w)
+
     def eval_one(flat_p, x, y, mask):
         logits = model.forward(tree_unravel(spec, flat_p), x)
         correct = (jnp.argmax(logits, axis=-1) == y).astype(jnp.float32)
         return jnp.sum(correct * mask) / jnp.maximum(jnp.sum(mask), 1.0)
 
+    # Static worlds dedup the refresh COMPUTE itself: every active lane
+    # subscribed to the same (device, shard, params) follows the
+    # identical refresh trajectory (refresh is the only mutation of a
+    # contributor lane, and it hits exactly the active lanes each
+    # round), so one "live" row per unique subscription is trained and
+    # scattered to lanes.  Under mobility membership gaps make lanes
+    # diverge (a lane skips refresh in non-member rounds), so the
+    # per-lane path remains.
+    refresh_dedup = do_refresh and not mobility_on
     if do_refresh:
         # Phase.REFRESH schedule is round-invariant (seed = cfg.seed +
         # device_id), so its indices are derived once per program, on
-        # device, and reused every round.  The training shards come from
-        # the deduplicated unique-shard table: one on-device gather
-        # replaces the old dense (R, N, n_c, F) host staging.
+        # device, and reused every round.  Training minibatches come
+        # straight from the deduplicated unique-shard table, gathered
+        # per step INSIDE the fit scan — the dedup is never undone into
+        # an (R*N, n_c, F) lane-dense block in device memory.
         nc_pad = arrays["cx_tab"].shape[1]
-        ref_scores = jax.vmap(jax.vmap(
-            lambda s: schedule.epoch_scores(s, ref_epochs, nc_pad)))(
-            arrays["ref_seeds"])
-        ref_idx, ref_w = jax.vmap(jax.vmap(
-            lambda sc, n: schedule.plan_from_scores(sc, n, batch, ref_steps)))(
-            ref_scores, arrays["ref_n"])
-        cxf = arrays["cx_tab"][arrays["cidx"].reshape(R * N)]
-        cyf = arrays["cy_tab"][arrays["cidx"].reshape(R * N)]
-        ref_idx = ref_idx.reshape(R * N, ref_epochs, ref_steps, batch)
-        ref_w = ref_w.reshape(R * N, ref_epochs, ref_steps, batch)
+        if refresh_dedup:
+            ref_scores = jax.vmap(
+                lambda s: schedule.epoch_scores(s, ref_epochs, nc_pad))(
+                arrays["u_seed"])
+            ref_idx, ref_w = jax.vmap(
+                lambda sc, n: schedule.plan_from_scores(sc, n, batch,
+                                                        ref_steps))(
+                ref_scores, arrays["u_n"])
+            ref_rows = arrays["u_cidx"]
+            uidx_flat = arrays["ref_uidx"].reshape(R * N)
+            # padded contributor slots subscribe to no live row; their
+            # old no-op-refresh contents must survive the scatter
+            lane_valid = arrays["lane_valid"].reshape(R * N, 1)
+        else:
+            ref_scores = jax.vmap(jax.vmap(
+                lambda s: schedule.epoch_scores(s, ref_epochs, nc_pad)))(
+                arrays["ref_seeds"])
+            ref_idx, ref_w = jax.vmap(jax.vmap(
+                lambda sc, n: schedule.plan_from_scores(sc, n, batch,
+                                                        ref_steps)))(
+                ref_scores, arrays["ref_n"])
+            ref_rows = arrays["cidx"].reshape(R * N)
+            ref_idx = ref_idx.reshape(R * N, ref_epochs, ref_steps, batch)
+            ref_w = ref_w.reshape(R * N, ref_epochs, ref_steps, batch)
+
+        def fit_refresh(flat_p, u, idx, w):
+            """One refresh row: minibatch (B, F) rows are gathered from
+            the shard table by (row u, index ib)."""
+            return _fit_lane(
+                flat_p,
+                lambda ib: (arrays["cx_tab"][u, ib], arrays["cy_tab"][u, ib]),
+                idx, w)
 
     def run_round(state, rr):
         """One live round body.  Entered only via lax.cond when at least
         one lane is active and rr < max_rounds (so ``active`` needs no
         extra validity masking inside)."""
-        (contrib, last, level, active, stop_code, rounds_done, clevel,
-         acc_h, loss_h, bat_h, exec_h, body_h, member_h) = state
+        (contrib, cscale, live, live_s, last, level, active, stop_code,
+         rounds_done, clevel, acc_h, loss_h, bat_h, exec_h, body_h,
+         member_h) = state
 
         # Phase.RENEGOTIATE (mobility): release members that walked out
         # of radio range or hit the battery floor, sign in-range
@@ -264,12 +344,20 @@ def _fleet_program(task, use_pallas, interpret, do_refresh, chunk, max_rounds,
             round_w = arrays["round_w"]
 
         # Phase.COLLECT + Phase.AGGREGATE: one batched kernel launch,
-        # directly on the flat (R, N, P) round state; under mobility the
+        # directly on the flat round state; under mobility the
         # membership mask IS the kernel's weight vector, and a lane whose
         # whole neighborhood churned away keeps training on its own
-        # previous params.
-        glob = fedavg_flat_batched(contrib, round_w,
-                                   use_pallas=use_pallas, interpret=interpret)
+        # previous params.  Compressed state runs the fused
+        # dequant->fedavg kernel on the wire-format buffer (the padding
+        # tail dequantizes to zero and is sliced off).
+        if compress_on:
+            glob = fedavg_flat_batched_q8(
+                contrib, cscale, round_w,
+                use_pallas=use_pallas, interpret=interpret)[:, :P]
+        else:
+            glob = fedavg_flat_batched(contrib, round_w,
+                                       use_pallas=use_pallas,
+                                       interpret=interpret)
         if mobility_on:
             glob = jnp.where((count > 0)[:, None], glob, last)
 
@@ -319,19 +407,51 @@ def _fleet_program(task, use_pallas, interpret, do_refresh, chunk, max_rounds,
         # Phase.REFRESH: contributors keep training (frozen once their
         # requester stops; under mobility, only CURRENT members train);
         # skipped entirely — not computed-and-masked — when no lane
-        # survives into the next round.
+        # survives into the next round.  Under compress, each lane's
+        # wire payload is dequantized into its fp32 training view and
+        # the result requantized back — the round state never persists
+        # at full precision.
         if do_refresh:
             rmask = (next_active[:, None] & member) if mobility_on \
                 else next_active[:, None]
 
-            def refresh(c):
-                refreshed, _ = jax.vmap(fit_one)(
-                    c.reshape(R * N, P), cxf, cyf, ref_idx, ref_w)
-                return jnp.where(rmask[..., None],
-                                 refreshed.reshape(R, N, P), c)
+            def refresh(args):
+                lv, lvs, c, sc = args
+                # the training source: the live unique rows (dedup) or
+                # every lane (mobility); compressed state is dequantized
+                # into its fp32 training view here and requantized below
+                if refresh_dedup:
+                    src = (dequantize_flat_batched(lv, lvs)[:, :P]
+                           if compress_on else lv)
+                else:
+                    src = (dequantize_flat_batched(
+                        c.reshape(R * N, -1), sc.reshape(R * N, -1))[:, :P]
+                        if compress_on else c.reshape(R * N, P))
+                refreshed, _ = jax.vmap(fit_refresh)(
+                    src, ref_rows, ref_idx, ref_w)
+                take = jnp.broadcast_to(rmask, (R, N)).reshape(R * N, 1)
+                if refresh_dedup:
+                    take = take & lane_valid
+                if compress_on:
+                    lp = c.shape[-1]
+                    q2, s2 = quantize_flat_batched(
+                        jnp.pad(refreshed, ((0, 0), (0, lp - P))),
+                        use_pallas=use_pallas, interpret=interpret)
+                    q_lane = q2[uidx_flat] if refresh_dedup else q2
+                    s_lane = s2[uidx_flat] if refresh_dedup else s2
+                    return ((q2, s2) if refresh_dedup else (lv, lvs)) + (
+                        jnp.where(take, q_lane, c.reshape(R * N, lp))
+                        .reshape(c.shape),
+                        jnp.where(take, s_lane, sc.reshape(R * N, -1))
+                        .reshape(sc.shape))
+                p_lane = refreshed[uidx_flat] if refresh_dedup else refreshed
+                return ((refreshed if refresh_dedup else lv), lvs,
+                        jnp.where(take[..., None].reshape(R, N, 1),
+                                  p_lane.reshape(R, N, P), c), sc)
 
-            contrib = jax.lax.cond(jnp.any(next_active), refresh,
-                                   lambda c: c, contrib)
+            live, live_s, contrib, cscale = jax.lax.cond(
+                jnp.any(next_active), refresh, lambda a: a,
+                (live, live_s, contrib, cscale))
 
         def put(buf, row):
             return jax.lax.dynamic_update_slice_in_dim(buf, row[None], rr, 0)
@@ -344,13 +464,30 @@ def _fleet_program(task, use_pallas, interpret, do_refresh, chunk, max_rounds,
         if mobility_on:
             member_h = put(member_h,
                            (member & active[:, None]).astype(jnp.float32))
-        return (contrib, last, level, next_active, stop_code, rounds_done,
-                clevel, acc_h, loss_h, bat_h, exec_h, body_h, member_h)
+        return (contrib, cscale, live, live_s, last, level, next_active,
+                stop_code, rounds_done, clevel, acc_h, loss_h, bat_h, exec_h,
+                body_h, member_h)
 
     last0 = (jnp.broadcast_to(arrays["init_flat"], (R, P)) if mobility_on
-             else jnp.zeros((R, P), contrib_flat.dtype))
+             else jnp.zeros((R, P), jnp.float32))
     clevel0 = arrays["clevel0"] if mobility_on else jnp.zeros((R, N), jnp.float32)
+    # per-tile scales travel in the carried state (refresh rewrites
+    # them); fp32 runs carry a token buffer
+    cscale0 = (arrays["c_scales"] if compress_on
+               else jnp.zeros((1, 1, 1), jnp.float32))
+    # the dedup'd refresh trajectories (V unique rows), wire-format under
+    # compress; token buffers when per-lane refresh (mobility) runs
+    if refresh_dedup:
+        live0 = arrays["live_q0"] if compress_on else arrays["live0"]
+        live_s0 = (arrays["live_s0"] if compress_on
+                   else jnp.zeros((1, 1), jnp.float32))
+    else:
+        live0 = jnp.zeros((1, 1), jnp.float32)
+        live_s0 = jnp.zeros((1, 1), jnp.float32)
     state0 = (contrib_flat,
+              cscale0,
+              live0,
+              live_s0,
               last0,
               arrays["level0"],
               jnp.ones((R,), bool),
@@ -370,13 +507,13 @@ def _fleet_program(task, use_pallas, interpret, do_refresh, chunk, max_rounds,
     def maybe_round(i, carry):
         r0, state = carry
         rr = r0 + i
-        state = jax.lax.cond((rr < max_rounds) & jnp.any(state[3]),
+        state = jax.lax.cond((rr < max_rounds) & jnp.any(state[6]),
                              lambda s: run_round(s, rr), lambda s: s, state)
         return r0, state
 
     def while_cond(carry):
         r0, state = carry
-        return (r0 < max_rounds) & jnp.any(state[3])
+        return (r0 < max_rounds) & jnp.any(state[6])
 
     def while_body(carry):
         r0, state = carry
@@ -385,9 +522,9 @@ def _fleet_program(task, use_pallas, interpret, do_refresh, chunk, max_rounds,
 
     _, state = jax.lax.while_loop(while_cond, while_body,
                                   (jnp.int32(0), state0))
-    (contrib, last, level, _, stop_code, rounds_done, clevel,
-     acc_h, loss_h, bat_h, exec_h, body_h, member_h) = state
-    return (contrib, last, level, stop_code, rounds_done,
+    (contrib, cscale, _live, _live_s, last, level, _, stop_code, rounds_done,
+     clevel, acc_h, loss_h, bat_h, exec_h, body_h, member_h) = state
+    return (contrib, cscale, last, level, stop_code, rounds_done,
             (acc_h, loss_h, bat_h, exec_h, body_h, member_h))
 
 
@@ -417,6 +554,13 @@ def run_fleet(task, requesters: Sequence[RequesterSpec],
     kinematics space, so a 1-lane fleet reproduces
     ``EnFedSession.run()`` under the same :class:`MobilityConfig`
     exactly.
+
+    With ``cfg.compress="int8"`` the contributor round state is staged,
+    carried, aggregated (fused dequant->fedavg kernel), and refreshed
+    entirely in wire format — int8 payload + per-tile fp32 scales — so
+    ``staged_param_bytes`` and ``device_round_state_bytes`` drop ~4x on
+    tile-amortizing models, and ``CostModel`` prices the compressed
+    ``model_bytes`` in every eq. (4)-(7) term.
     """
     from repro.kernels.common import resolve_interpret
 
@@ -496,8 +640,13 @@ def run_fleet(task, requesters: Sequence[RequesterSpec],
             ya = np.ascontiguousarray(st["data"][1], np.int32)
             # content identity, not object identity: deep-copied
             # contributor_states (the common RequesterSpec pattern) must
-            # still collapse to one staged shard per device
-            key = (c.device_id, xa.shape, hash(xa.tobytes()), hash(ya.tobytes()))
+            # still collapse to one staged shard per device.  Full
+            # 128-bit digests, not Python hash(): a 64-bit hash over a
+            # long-lived population could silently alias two distinct
+            # shards onto one staged row
+            key = (c.device_id, xa.shape,
+                   hashlib.blake2b(xa.tobytes(), digest_size=16).digest(),
+                   hashlib.blake2b(ya.tobytes(), digest_size=16).digest())
             row = shard_rows.get(key)
             if row is None:
                 row = len(shard_x)
@@ -519,8 +668,29 @@ def run_fleet(task, requesters: Sequence[RequesterSpec],
     contrib_stack = _stack_trees(
         [_stack_trees(row, template) for row in padded_rows])
     # the flat-parameter round state: raveled ONCE here, donated to the
-    # program, carried flat through every round
+    # program, carried flat through every round.  Under compress="int8"
+    # it is quantized ONCE here too — the program is staged (and runs)
+    # entirely on the wire-format payload + per-tile scales.
     contrib_flat, ravel_spec = tree_ravel(contrib_stack, batch_ndim=2)
+    P = contrib_flat.shape[-1]
+    # fp32 lane rows, kept host-side for the refresh-dedup key/live rows
+    # (the donated buffer below may be quantized)
+    contrib_np = (np.asarray(contrib_flat)
+                  if cfg.contributor_refresh_epochs > 0 and mob is None
+                  else None)
+    c_scales = None
+    if cfg.compress == "int8":
+        lp = padded_len(P)
+        q0, s0 = quantize_flat_batched(
+            jnp.pad(contrib_flat, ((0, 0), (0, 0), (0, lp - P)))
+            .reshape(R * N, lp),
+            use_pallas=use_pallas, interpret=interpret)
+        contrib_flat = q0.reshape(R, N, lp)
+        c_scales = s0.reshape(R, N, -1)
+        staged_param_bytes = int(contrib_flat.nbytes + c_scales.nbytes)
+    else:
+        staged_param_bytes = int(contrib_flat.nbytes)
+    device_round_state_bytes = staged_param_bytes
 
     # ---- requester data + derived-schedule metadata -----------------------
     own_x, _ = _pad_stack([np.asarray(s.own_train[0], np.float32) for s in requesters],
@@ -545,7 +715,9 @@ def run_fleet(task, requesters: Sequence[RequesterSpec],
 
     # ---- Phase.ACCOUNT constants (static per requester) -------------------
     num_params = tree_size(template)
-    model_bytes = 4 * num_params if cfg.encrypt else tree_bytes(template)
+    model_bytes = update_wire_bytes(num_params, encrypt=cfg.encrypt,
+                                    compress=cfg.compress,
+                                    raw_bytes=tree_bytes(template))
     batteries = [s.battery or BatteryState() for s in requesters]
     if mob is None:
         e_round = np.array([cost.round_energy(
@@ -598,27 +770,83 @@ def run_fleet(task, requesters: Sequence[RequesterSpec],
                       e_tab=jnp.asarray(e_tab), e_tx=jnp.asarray(e_tx),
                       e_ref=jnp.asarray(e_ref),
                       init_flat=jnp.asarray(init_flat))
+    if c_scales is not None:
+        arrays.update(c_scales=c_scales)
     shard_bytes = shard_bytes_dense = 0
+    gather_bytes = gather_bytes_dense = 0
     index_bytes = int(n_own.nbytes + 4)
     if ref_epochs > 0:
-        arrays.update(cx_tab=jnp.asarray(cx_tab), cy_tab=jnp.asarray(cy_tab),
-                      cidx=jnp.asarray(cidx),
-                      ref_seeds=jnp.asarray(ref_seeds),
-                      ref_n=jnp.asarray(shard_len))
+        arrays.update(cx_tab=jnp.asarray(cx_tab), cy_tab=jnp.asarray(cy_tab))
+        if mob is None:
+            # refresh-COMPUTE dedup: lanes subscribed to the same
+            # (device, shard content, staged params) follow identical
+            # trajectories in a static world, so one live row per unique
+            # subscription is trained and scattered to its lanes
+            ref_map: dict = {}
+            ref_uidx = np.zeros((R, N), np.int32)
+            lane_valid = np.zeros((R, N), bool)
+            u_cidx, u_n, u_seed, rep_i, rep_j = [], [], [], [], []
+            for i, cs in enumerate(lane_devs):
+                for j, c in enumerate(cs):
+                    key = (c.device_id, int(cidx[i, j]),
+                           hashlib.blake2b(contrib_np[i, j].tobytes(),
+                                           digest_size=16).digest())
+                    v = ref_map.get(key)
+                    if v is None:
+                        v = len(u_cidx)
+                        ref_map[key] = v
+                        u_cidx.append(int(cidx[i, j]))
+                        u_n.append(int(shard_len[i, j]))
+                        u_seed.append(cfg.seed + c.device_id)
+                        rep_i.append(i)
+                        rep_j.append(j)
+                    ref_uidx[i, j] = v
+                    lane_valid[i, j] = True
+            V = len(u_cidx)
+            live0 = jnp.asarray(contrib_np[rep_i, rep_j])   # (V, P) fp32
+            arrays.update(u_cidx=jnp.asarray(np.array(u_cidx, np.int32)),
+                          u_n=jnp.asarray(np.array(u_n, np.int32)),
+                          u_seed=jnp.asarray(np.array(u_seed, np.int32)),
+                          ref_uidx=jnp.asarray(ref_uidx),
+                          lane_valid=jnp.asarray(lane_valid))
+            if cfg.compress == "int8":
+                lp = padded_len(P)
+                lq, ls = quantize_flat_batched(
+                    jnp.pad(live0, ((0, 0), (0, lp - P))),
+                    use_pallas=use_pallas, interpret=interpret)
+                arrays.update(live_q0=lq, live_s0=ls)
+            else:
+                arrays.update(live0=live0)
+            ref_lanes = V
+            idx_meta = int(ref_uidx.nbytes + 4 * 3 * V)
+        else:
+            arrays.update(cidx=jnp.asarray(cidx),
+                          ref_seeds=jnp.asarray(ref_seeds),
+                          ref_n=jnp.asarray(shard_len))
+            ref_lanes = R * N
+            idx_meta = int(ref_seeds.nbytes + shard_len.nbytes)
         # shard-table accounting: gather indices live with the shards
-        # (cidx only counts here); schedule metadata is separate
+        # (cidx/ref_uidx only count here); schedule metadata is separate
         shard_bytes = int(cx_tab.nbytes + cy_tab.nbytes + cidx.nbytes)
         shard_bytes_dense = int(R * N * (cx_tab.nbytes + cy_tab.nbytes)
                                 / max(U, 1))
-        index_bytes += int(ref_seeds.nbytes + shard_len.nbytes)
+        index_bytes += idx_meta
+        # refresh device-memory accounting: the per-step (ref_lanes, B)
+        # table gather vs the old lane-dense (R*N, n_c, F) block
+        sample_bytes = int((cx_tab.nbytes + cy_tab.nbytes)
+                           // max(U * n_c_max, 1))
+        gather_bytes = int(ref_lanes * cfg.batch_size * sample_bytes)
+        gather_bytes_dense = shard_bytes_dense
     staged = [contrib_flat] + [v for v in arrays.values() if hasattr(v, "nbytes")]
     staged_bytes = int(sum(int(v.nbytes) for v in staged))
 
-    contrib_final, last_flat, level, stop_code, rounds_done, traces = _fleet_program(
+    (contrib_final, cscale_final, last_flat, level, stop_code, rounds_done,
+     traces) = _fleet_program(
         task, use_pallas, resolve_interpret(interpret), ref_epochs > 0,
         int(round_chunk), cfg.max_rounds, cfg.epochs, cfg.batch_size,
         steps_max, ref_epochs, ref_steps, ravel_spec, mob, cfg.n_max,
-        cfg.strategy if mob is not None else None, contrib_flat, arrays)
+        cfg.strategy if mob is not None else None, cfg.compress, P,
+        contrib_flat, arrays)
     acc_h, loss_h, bat_h, exec_h, body_h, member_h = (np.asarray(t) for t in traces)
     rounds_np = np.asarray(rounds_done)
     codes_np = np.asarray(stop_code)
@@ -628,7 +856,12 @@ def run_fleet(task, requesters: Sequence[RequesterSpec],
     # each requester's contributor_states end up holding that session's
     # final (refresh-trained, frozen-once-stopped) contributor params.
     # Requesters sharing one states dict see the last writer's lanes.
+    # Under compress the final state is wire format — the write-back is
+    # its dequantized image, exactly what the loop engine leaves behind.
     if ref_epochs > 0:
+        if cfg.compress == "int8":
+            contrib_final = dequantize_flat_batched(
+                contrib_final, cscale_final)[..., :P]
         contrib_tree = tree_unravel(ravel_spec, contrib_final)
         for i, (spec, cs) in enumerate(zip(requesters, lane_devs)):
             for j, c in enumerate(cs):
@@ -677,4 +910,8 @@ def run_fleet(task, requesters: Sequence[RequesterSpec],
                  "member": member_h},
         staged_host_bytes=staged_bytes, staged_index_bytes=index_bytes,
         staged_shard_bytes=shard_bytes,
-        staged_shard_bytes_dense=shard_bytes_dense)
+        staged_shard_bytes_dense=shard_bytes_dense,
+        staged_param_bytes=staged_param_bytes,
+        device_round_state_bytes=device_round_state_bytes,
+        refresh_gather_bytes=gather_bytes,
+        refresh_gather_bytes_dense=gather_bytes_dense)

@@ -36,10 +36,12 @@ from typing import Callable, Dict, List, Optional
 
 import numpy as np
 import jax
+import jax.numpy as jnp
 
 from repro.core import aggregation, crypto, mobility, protocol, topology
 from repro.core.battery import BatteryState
-from repro.core.energy import CostModel, EnergyReport
+from repro.core.energy import CostModel, EnergyReport, update_wire_bytes
+from repro.kernels.quantize.ops import compress_update, decompress_update
 from repro.core.incentive import (Contract, NeighborDevice, candidate_pool,
                                   contracts_from_membership,
                                   select_contributors)
@@ -60,6 +62,15 @@ class EnFedConfig:
     encrypt: bool = True
     contributor_refresh_epochs: int = 1  # contributors keep training between rounds
     seed: int = 0
+    # transported-update compression (None = fp32 wire).  "int8": every
+    # model update travels (and the fleet engine's round state persists)
+    # as a tile-padded int8 payload + per-tile fp32 scales — ~4x fewer
+    # bytes into the AES transport and eq. (4)-(7), at a quantization
+    # error bounded per tile by absmax/254.  The first accuracy-affecting
+    # protocol knob: both engines apply the identical
+    # compress/decompress round-trip, parity-tested in
+    # tests/test_compress.py.
+    compress: Optional[str] = None
     # which signed contributors feed eq. (14) each round (None = all, the
     # paper's virtual-server behaviour); see topology.contributor_round_mask
     strategy: Optional[AggregationStrategy] = None
@@ -69,6 +80,11 @@ class EnFedConfig:
     # arrivals undercut weaker members.  None = the static-neighborhood
     # protocol above.
     mobility: Optional[MobilityConfig] = None
+
+    def __post_init__(self):
+        if self.compress not in (None, "int8"):
+            raise ValueError(
+                f"unknown compress mode {self.compress!r} (None|'int8')")
 
 
 @dataclasses.dataclass
@@ -119,11 +135,59 @@ class EnFedSession:
                      for c in contracts}
         self.nonces = {c.device_id: rng.integers(0, 256, 8).astype(np.uint8)
                        for c in contracts}
+        self._wire = {}
+        if self.cfg.compress == "int8":
+            for c in contracts:
+                self._wire_pack(c.device_id,
+                                self.contributor_states[c.device_id]["params"])
         return contracts
 
+    def _wire_pack(self, device_id: int, params):
+        """Under ``compress="int8"`` a contributor's transported state IS
+        wire format: quantize ``params`` into the (q, scales) cache and
+        return the dequantized image of that payload.  This mirrors the
+        fleet engine's int8 round state — both engines quantize at
+        exactly the same protocol points (handshake staging, after every
+        refresh fit) with the same tile math, which is what keeps their
+        params allclose and their write-back contract identical under
+        the knob.
+        """
+        vec, _ = flatten_to_vector(params)
+        q, s, n = compress_update(vec)
+        self._wire[device_id] = (q, s, n)
+        return unflatten_from_vector(decompress_update(q, s, n), params)
+
+    def _wire_image(self, device_id: int, template):
+        """The dequantized fp32 image of a cached wire payload — what
+        the receiver (and the refresh trainer) actually sees."""
+        q, s, n = self._wire[device_id]
+        return unflatten_from_vector(decompress_update(q, s, n), template)
+
     def _collect_update(self, device_id: int):
-        """Phase.COLLECT: contributor -> (encrypt) -> wire -> (decrypt)."""
+        """Phase.COLLECT: contributor -> (compress) -> (encrypt) -> wire
+        -> (decrypt) -> (decompress)."""
         params = self.contributor_states[device_id]["params"]
+        if self.cfg.compress == "int8":
+            # the wire image really is the int8 payload + fp32 scales;
+            # under encryption the AES-CTR round trip runs over exactly
+            # those bytes (CTR preserves length, so model_bytes is the
+            # compressed count either way)
+            q, s, n = self._wire[device_id]
+            if not self.cfg.encrypt:
+                return (self._wire_image(device_id, params),
+                        int(q.shape[0]) + 4 * int(s.shape[0]))
+            payload = jnp.concatenate([
+                jax.lax.bitcast_convert_type(q, jnp.uint8),
+                crypto.float_vector_to_bytes(s)])
+            cipher = crypto.encrypt_bytes(payload, self.keys[device_id],
+                                          self.nonces[device_id])
+            plain = crypto.decrypt_bytes(cipher, self.keys[device_id],
+                                         self.nonces[device_id])
+            qr = jax.lax.bitcast_convert_type(plain[:q.shape[0]], jnp.int8)
+            sr = crypto.bytes_to_float_vector(plain[q.shape[0]:])
+            return (unflatten_from_vector(decompress_update(qr, sr, n),
+                                          params),
+                    int(cipher.shape[0]))
         if not self.cfg.encrypt:
             return params, tree_bytes(params)
         vec, _ = flatten_to_vector(params)
@@ -135,11 +199,18 @@ class EnFedSession:
         """Phase.REFRESH: contributors keep improving between rounds."""
         if self.cfg.contributor_refresh_epochs <= 0:
             return
+        compress = self.cfg.compress == "int8"
         for c in contracts:
             st = self.contributor_states[c.device_id]
-            st["params"], _ = self.task.fit(
-                st["params"], st["data"], self.cfg.contributor_refresh_epochs,
+            # under compress the contributor's working copy is the wire
+            # image (the fleet engine's round state holds nothing else)
+            base = (self._wire_image(c.device_id, st["params"]) if compress
+                    else st["params"])
+            fitted, _ = self.task.fit(
+                base, st["data"], self.cfg.contributor_refresh_epochs,
                 self.cfg.batch_size, seed=self.cfg.seed + c.device_id)
+            st["params"] = (self._wire_pack(c.device_id, fitted) if compress
+                            else fitted)
 
     # -- Algorithm 1 ----------------------------------------------------------
     def run(self, engine: str = "loop", *, use_pallas: bool = True,
@@ -263,6 +334,11 @@ class EnFedSession:
                      for d in cands}
         self.nonces = {d.device_id: rng.integers(0, 256, 8).astype(np.uint8)
                        for d in cands}
+        self._wire = {}
+        if cfg.compress == "int8":
+            for d in cands:
+                self._wire_pack(d.device_id,
+                                self.contributor_states[d.device_id]["params"])
         n_cand = len(cands)
         ids = np.array([d.device_id for d in cands], np.int32)
         max_data = max(d.data_size for d in cands)
@@ -277,7 +353,9 @@ class EnFedSession:
         # first-round update existing — the neighborhood may be empty).
         params = self.task.init(seed=cfg.seed)
         num_params = tree_size(params)
-        model_bytes = 4 * num_params if cfg.encrypt else tree_bytes(params)
+        model_bytes = update_wire_bytes(num_params, encrypt=cfg.encrypt,
+                                        compress=cfg.compress,
+                                        raw_bytes=tree_bytes(params))
         e_tab = np.array(self.cost.round_energy_table(
             max_contrib=n_cand, num_params=num_params, model_bytes=model_bytes,
             num_samples=len(self.own_train[0]), epochs=cfg.epochs,
@@ -361,11 +439,16 @@ class EnFedSession:
             # Phase.REFRESH for current members only
             if cfg.contributor_refresh_epochs > 0:
                 for j in np.nonzero(member)[0]:
-                    st = self.contributor_states[int(ids[j])]
-                    st["params"], _ = self.task.fit(
-                        st["params"], st["data"],
+                    did = int(ids[j])
+                    st = self.contributor_states[did]
+                    base = (self._wire_image(did, st["params"])
+                            if cfg.compress == "int8" else st["params"])
+                    fitted, _ = self.task.fit(
+                        base, st["data"],
                         cfg.contributor_refresh_epochs, cfg.batch_size,
-                        seed=cfg.seed + int(ids[j]))
+                        seed=cfg.seed + did)
+                    st["params"] = (self._wire_pack(did, fitted)
+                                    if cfg.compress == "int8" else fitted)
 
         mean_members = float(np.mean(history["members"])) if rounds else 0.0
         report = self.cost.session(

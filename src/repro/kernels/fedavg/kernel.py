@@ -22,6 +22,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels.common import resolve_interpret
+from repro.kernels.quantize.kernel import TILE as Q_TILE
 
 TILE_L = 2048
 
@@ -36,16 +37,85 @@ def _fedavg_kernel(w_ref, u_ref, o_ref):
 
 
 def _fedavg_batched_kernel(w_ref, u_ref, o_ref):
-    """w_ref: (1, N) fp32; u_ref: (1, N, TILE_L); o_ref: (1, TILE_L).
+    """w_ref: (TR, N) fp32; u_ref: (TR, N, TILE_L); o_ref: (TR, TILE_L).
 
-    One requester session per leading grid step — the fleet engine's
-    aggregation hot path runs every session's eq. (14) in one launch.
+    A TILE of requester sessions per leading grid step — the fleet
+    engine's aggregation hot path runs every session's eq. (14) in one
+    launch.  Tiling R (instead of one session per step) keeps the grid
+    small: interpret mode (the CPU path) walks grid steps serially with
+    per-step overhead, so a (R, L/TILE_L) grid turned the aggregation
+    into the R=512 scaling cliff; (R/TR, L/TILE_L) removes it while the
+    (TR, N, TILE_L) block stays VMEM-bounded on TPU (see _tile_r).
     """
-    w = w_ref[0]
-    u = u_ref[0].astype(jnp.float32)
-    num = jnp.einsum("n,nl->l", w, u)
-    denom = jnp.maximum(jnp.sum(w), 1e-9)
-    o_ref[0] = num / denom
+    w = w_ref[...]
+    u = u_ref[...].astype(jnp.float32)
+    num = jnp.einsum("rn,rnl->rl", w, u)
+    denom = jnp.maximum(jnp.sum(w, axis=1, keepdims=True), 1e-9)
+    o_ref[...] = num / denom
+
+
+def _tile_r(r: int, n: int, tile_l: int, itemsize: int) -> int:
+    """Requester-axis tile: as many sessions per grid step as keep the
+    update block within a ~2 MB VMEM budget (double-buffered well under
+    the ~16 MB/core ceiling), at least 1, at most R."""
+    return max(1, min(r, (2 << 20) // max(n * tile_l * itemsize, 1)))
+
+
+def _fedavg_batched_q8_kernel(w_ref, q_ref, s_ref, o_ref):
+    """w_ref: (TR, N) fp32; q_ref: (TR, N, Q_TILE) int8; s_ref:
+    (TR, N, 1) fp32 per-tile scales; o_ref: (TR, Q_TILE) fp32.
+
+    The compressed round state's hot path: dequantize every
+    contributor's int8 tile (``q * scale``, the exact wire inverse) and
+    reduce it into the masked weighted mean in ONE pass through VMEM —
+    the (N, Q_TILE) fp32 intermediate a separate dequant would write
+    back to HBM at full round-state size never exists.  R is tiled like
+    :func:`_fedavg_batched_kernel` to keep the grid small.
+    """
+    w = w_ref[...]
+    u = q_ref[...].astype(jnp.float32) * s_ref[...]
+    num = jnp.einsum("rn,rnl->rl", w, u)
+    denom = jnp.maximum(jnp.sum(w, axis=1, keepdims=True), 1e-9)
+    o_ref[...] = num / denom
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fedavg_batched_q8_pallas(q, scales, weights, *, interpret=None):
+    """q: (R, N, Lp) int8 wire payload, Lp % Q_TILE == 0; scales:
+    (R, N, Lp/Q_TILE) fp32; weights: (R, N).  Returns (R, Lp) fp32.
+
+    The q8 counterpart of :func:`fedavg_batched_pallas`: grid
+    (R/TR, Lp/Q_TILE) — one quantization tile per trailing grid step so
+    each block sees exactly one scale scalar per contributor — with the
+    dequant fused into the reduction.  Used by ``repro.core.fleet``
+    under ``EnFedConfig.compress="int8"`` to aggregate every concurrent
+    session straight from the compressed round-state buffer.
+    """
+    interpret = resolve_interpret(interpret)
+    r, n, lp = q.shape
+    if lp % Q_TILE:
+        raise ValueError(f"fedavg_batched_q8 needs Lp % {Q_TILE} == 0 "
+                         f"(got {lp}); the wire format is tile-padded")
+    tr = _tile_r(r, n, Q_TILE, 1)
+    pad_r = (-r) % tr
+    if pad_r:
+        q = jnp.pad(q, ((0, pad_r), (0, 0), (0, 0)))
+        scales = jnp.pad(scales, ((0, pad_r), (0, 0), (0, 0)))
+        weights = jnp.pad(weights, ((0, pad_r), (0, 0)))
+    grid = ((r + pad_r) // tr, lp // Q_TILE)
+    out = pl.pallas_call(
+        _fedavg_batched_q8_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tr, n), lambda i, j: (i, 0)),
+            pl.BlockSpec((tr, n, Q_TILE), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((tr, n, 1), lambda i, j: (i, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((tr, Q_TILE), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r + pad_r, lp), jnp.float32),
+        interpret=interpret,
+    )(weights.astype(jnp.float32), q, scales)
+    return out[:r]
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -53,9 +123,9 @@ def fedavg_batched_pallas(updates, weights, *, interpret=None):
     """updates: (R, N, L); weights: (R, N). Returns (R, L) fp32.
 
     The requester-batched form of :func:`fedavg_pallas`: grid
-    (R, L/TILE_L), each step reduces one requester's contributor stack
-    for one parameter tile.  Used by ``repro.core.fleet`` to aggregate
-    every concurrent session in a single kernel launch.
+    (R/TR, L/TILE_L), each step reduces a TILE of requesters' contributor
+    stacks for one parameter tile.  Used by ``repro.core.fleet`` to
+    aggregate every concurrent session in a single kernel launch.
     """
     interpret = resolve_interpret(interpret)
     r, n, l = updates.shape
@@ -63,19 +133,24 @@ def fedavg_batched_pallas(updates, weights, *, interpret=None):
     if pad:
         updates = jnp.pad(updates, ((0, 0), (0, 0), (0, pad)))
     lp = l + pad
-    grid = (r, lp // TILE_L)
+    tr = _tile_r(r, n, TILE_L, 4)
+    pad_r = (-r) % tr
+    if pad_r:
+        updates = jnp.pad(updates, ((0, pad_r), (0, 0), (0, 0)))
+        weights = jnp.pad(weights, ((0, pad_r), (0, 0)))
+    grid = ((r + pad_r) // tr, lp // TILE_L)
     out = pl.pallas_call(
         _fedavg_batched_kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, n), lambda i, j: (i, 0)),
-            pl.BlockSpec((1, n, TILE_L), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((tr, n), lambda i, j: (i, 0)),
+            pl.BlockSpec((tr, n, TILE_L), lambda i, j: (i, 0, j)),
         ],
-        out_specs=pl.BlockSpec((1, TILE_L), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((r, lp), jnp.float32),
+        out_specs=pl.BlockSpec((tr, TILE_L), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r + pad_r, lp), jnp.float32),
         interpret=interpret,
     )(weights.astype(jnp.float32), updates)
-    return out[:, :l]
+    return out[:r, :l]
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

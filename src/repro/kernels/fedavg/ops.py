@@ -13,6 +13,15 @@ flatten: it ravels contributor params once at setup
 (``repro.utils.tree.tree_ravel``) and launches ``fedavg_flat_batched``
 directly on the flat (R, N, P) round-state buffer.  ``fedavg_tree_batched``
 remains for callers that hold a stacked pytree.
+
+``fedavg_flat_batched_q8`` is the same hot path when the round state is
+int8-compressed (``EnFedConfig.compress="int8"``): the decrypt+aggregate
+fuse above extended one stage further — dequantize (``q * scale``, the
+exact wire inverse) and the masked weighted mean run as ONE pass over
+the wire-format buffer, so the fp32 (R, N, P) block a standalone dequant
+would materialize never exists; the refresh-side requantize
+(``repro.kernels.quantize.ops.quantize_flat_batched``) closes the loop
+back into wire format.
 """
 
 from __future__ import annotations
@@ -20,8 +29,11 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.fedavg.kernel import fedavg_batched_pallas, fedavg_pallas
-from repro.kernels.fedavg.ref import fedavg_batched_ref, fedavg_ref
+from repro.kernels.fedavg.kernel import (fedavg_batched_pallas,
+                                         fedavg_batched_q8_pallas,
+                                         fedavg_pallas)
+from repro.kernels.fedavg.ref import (fedavg_batched_q8_ref,
+                                      fedavg_batched_ref, fedavg_ref)
 
 
 def fedavg_flat(updates, weights, *, use_pallas: bool = True, interpret=None):
@@ -45,6 +57,23 @@ def fedavg_flat_batched(updates, weights, *, use_pallas: bool = True,
     if use_pallas:
         return fedavg_batched_pallas(updates, weights, interpret=interpret)
     return fedavg_batched_ref(updates, weights)
+
+
+def fedavg_flat_batched_q8(q, scales, weights, *, use_pallas: bool = True,
+                           interpret=None):
+    """q: (R, N, Lp) int8 wire payload; scales: (R, N, Lp/TILE) fp32;
+    weights: (R, N) -> (R, Lp) fp32 per-session means.
+
+    The fused dequant->fedavg pipeline over the compressed round state.
+    Semantics match ``fedavg_flat_batched(dequantize(q, scales), w)``
+    exactly (same masked mean, same all-zero-row behaviour) without ever
+    materializing the dequantized block; callers slice ``[:, :P]`` to
+    drop the tile padding (which dequantizes to zero by construction).
+    """
+    if use_pallas:
+        return fedavg_batched_q8_pallas(q, scales, weights,
+                                        interpret=interpret)
+    return fedavg_batched_q8_ref(q, scales, weights)
 
 
 def fedavg_tree_batched(stacked_tree, weights, *, use_pallas: bool = True,

@@ -22,3 +22,14 @@ def fedavg_batched_ref(updates, weights):
     w = weights.astype(jnp.float32)
     num = jnp.einsum("rn,rnl->rl", w, updates.astype(jnp.float32))
     return num / jnp.maximum(jnp.sum(w, axis=1, keepdims=True), 1e-9)
+
+
+def fedavg_batched_q8_ref(q, scales, weights):
+    """q: (R, N, Lp) int8; scales: (R, N, Lp/tile) fp32; weights:
+    (R, N).  Dequantize (exact ``q * scale``) then the batched eq. (14)
+    — the oracle for the fused dequant->fedavg kernel."""
+    r, n, lp = q.shape
+    tile = lp // scales.shape[-1]
+    u = (q.astype(jnp.float32).reshape(r, n, -1, tile)
+         * scales[..., None]).reshape(r, n, lp)
+    return fedavg_batched_ref(u, weights)

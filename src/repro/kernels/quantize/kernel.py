@@ -64,6 +64,58 @@ def quantize_pallas(x, *, interpret=None):
     return q, s
 
 
+def _quant_batched_kernel(x_ref, q_ref, s_ref):
+    """x_ref: (TB, TILE) fp32; q_ref: (TB, TILE) int8; s_ref: (TB, 1)
+    fp32.
+
+    A TILE of (batch row, tile) pairs per grid step — the batched form
+    the fleet engine's Phase.REFRESH uses to requantize every lane's
+    freshly-trained params back into the int8 round state in one launch.
+    Per-row tile math is identical to :func:`_quant_kernel` (the absmax
+    reduction stays within a row), so a batched row reproduces the 1-D
+    kernel: bit-equal int8 codes, scales within 1 ulp of codegen.  Rows
+    are tiled (TB per step) to keep the grid small — interpret mode
+    walks grid steps serially.
+    """
+    x = x_ref[...].astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(x), axis=1)
+    scale = jnp.maximum(absmax, 1e-12) / 127.0
+    q_ref[...] = jnp.clip(jnp.round(x / scale[:, None]),
+                          -127, 127).astype(jnp.int8)
+    s_ref[...] = scale[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def quantize_batched_pallas(x, *, interpret=None):
+    """x: (B, Lp) fp32 with Lp % TILE == 0 (wire-format rows are padded
+    by construction) -> (q int8 (B, Lp), scales fp32 (B, Lp/TILE))."""
+    interpret = resolve_interpret(interpret)
+    b, lp = x.shape
+    if lp % TILE:
+        raise ValueError(f"quantize_batched_pallas needs Lp % {TILE} == 0 "
+                         f"(got {lp}); pad the wire buffer first")
+    tb = max(1, min(b, (2 << 20) // (TILE * 4)))
+    pad_b = (-b) % tb
+    if pad_b:
+        x = jnp.pad(x, ((0, pad_b), (0, 0)))
+    grid = ((b + pad_b) // tb, lp // TILE)
+    q, s = pl.pallas_call(
+        _quant_batched_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((tb, TILE), lambda i, j: (i, j))],
+        out_specs=[
+            pl.BlockSpec((tb, TILE), lambda i, j: (i, j)),
+            pl.BlockSpec((tb, 1), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b + pad_b, lp), jnp.int8),
+            jax.ShapeDtypeStruct((b + pad_b, lp // TILE), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)
+    return q[:b], s[:b]
+
+
 @functools.partial(jax.jit, static_argnames=("orig_len", "interpret"))
 def dequantize_pallas(q, scales, orig_len: int, *, interpret=None):
     interpret = resolve_interpret(interpret)

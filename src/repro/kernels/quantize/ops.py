@@ -2,13 +2,40 @@
 
 ``compress_update`` / ``decompress_update`` wrap a flattened fp32 model
 update into (int8 payload, per-tile scales) and back — a 4x cut of the
-bytes entering the AES transport and the aggregation collectives.
+bytes entering the AES transport and the aggregation collectives.  Since
+the ``EnFedConfig.compress="int8"`` protocol knob this is the wire
+format of every transported update AND the fleet engine's round state:
+the (R, N, P) contributor buffer is carried as int8 payload plus
+per-tile fp32 scales, aggregated by the fused dequant->fedavg kernel
+(``repro.kernels.fedavg.ops.fedavg_flat_batched_q8``) and refilled by
+``quantize_flat_batched`` after each Phase.REFRESH.
+
+``compressed_nbytes`` is the wire-format byte count that feeds the
+eq. (4)-(7) cost model (``repro.core.energy.update_wire_bytes``): int8
+payload padded to the quantization tile plus 4 bytes of fp32 scale per
+tile — AES-CTR preserves length, so it is the same encrypted or not.
 """
 
 from __future__ import annotations
 
-from repro.kernels.quantize.kernel import quantize_pallas, dequantize_pallas, TILE
-from repro.kernels.quantize.ref import quantize_ref, dequantize_ref
+from repro.kernels.quantize.kernel import (TILE, dequantize_pallas,
+                                           quantize_batched_pallas,
+                                           quantize_pallas)
+from repro.kernels.quantize.ref import (dequantize_batched_ref,
+                                        dequantize_ref, quantize_batched_ref,
+                                        quantize_ref)
+
+
+def padded_len(orig_len: int) -> int:
+    """Wire-format payload length: ``orig_len`` padded up to TILE."""
+    return orig_len + (-orig_len) % TILE
+
+
+def compressed_nbytes(num_params: int) -> int:
+    """Bytes of one int8-compressed update on the wire: padded int8
+    payload + one fp32 scale per tile."""
+    lp = padded_len(num_params)
+    return lp + 4 * (lp // TILE)
 
 
 def compress_update(vec, *, use_pallas: bool = True, interpret=None):
@@ -27,3 +54,28 @@ def decompress_update(q, scales, orig_len, *, use_pallas: bool = True,
     if use_pallas:
         return dequantize_pallas(q, scales, orig_len, interpret=interpret)
     return dequantize_ref(q, scales)[:orig_len]
+
+
+def quantize_flat_batched(x, *, use_pallas: bool = True, interpret=None):
+    """x: (B, Lp) fp32, Lp % TILE == 0 -> (q int8 (B, Lp), scales fp32
+    (B, Lp/TILE)).
+
+    The fleet engine's requantize leg: after Phase.REFRESH trains each
+    (requester, contributor) lane in fp32, every lane row is snapped
+    back onto the int8 wire grid in one launch so the round state never
+    persists at full precision.  Matches per-row :func:`compress_update`
+    — bit-equal int8 codes, scales within 1 ulp (asserted in
+    tests/test_kernels.py) — which is what keeps the two engines'
+    quantization points aligned.
+    """
+    if use_pallas:
+        return quantize_batched_pallas(x, interpret=interpret)
+    return quantize_batched_ref(x)
+
+
+def dequantize_flat_batched(q, scales):
+    """Elementwise ``q * scale`` over (..., Lp) wire-format rows — the
+    exact dequant every path (loop transport, fleet refresh views,
+    write-back) runs, kept as plain jnp so XLA fuses it into consumers
+    instead of materializing the fp32 block."""
+    return dequantize_batched_ref(q, scales)

@@ -22,3 +22,28 @@ def quantize_ref(x, tile: int = TILE):
 def dequantize_ref(q, scales, tile: int = TILE):
     qt = q.reshape(-1, tile).astype(jnp.float32)
     return (qt * scales[:, None]).reshape(-1)
+
+
+def quantize_batched_ref(x, tile: int = TILE):
+    """x: (..., Lp) fp32, Lp % tile == 0.  Returns (q int8 (..., Lp),
+    scales fp32 (..., Lp/tile)) — per-tile symmetric int8, tiles taken
+    along the trailing parameter axis of each batch element.  Tile math
+    is identical to :func:`quantize_ref`, so a batched row reproduces
+    the 1-D quantization of that row (bit-equal codes; scales within a
+    codegen ulp) — the property that aligns the fleet engine's
+    requantized round state with the loop engine's per-device
+    ``compress_update``."""
+    lead = x.shape[:-1]
+    xt = x.reshape(lead + (-1, tile)).astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(xt), axis=-1)
+    scale = jnp.maximum(absmax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xt / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q.reshape(lead + (-1,)), scale
+
+
+def dequantize_batched_ref(q, scales, tile: int = TILE):
+    """Inverse of :func:`quantize_batched_ref` (exact elementwise
+    ``q * scale`` — the same single multiply every dequant path runs)."""
+    lead = q.shape[:-1]
+    qt = q.reshape(lead + (-1, tile)).astype(jnp.float32)
+    return (qt * scales[..., None]).reshape(lead + (-1,))

@@ -1,0 +1,321 @@
+"""The ``compress="int8"`` protocol knob: quantize⊕fedavg composition,
+wire-format round state, and full two-engine parity.
+
+The knob is the engine's first accuracy-affecting protocol option since
+mobility, so it gets the full parity treatment: the loop engine
+(``EnFedSession`` + ``_wire_pack``/``_wire_image``) and the fleet engine
+(int8 round state + ``fedavg_flat_batched_q8`` + in-program requantize)
+must agree bitwise on membership masks and allclose — at an atol tied to
+the per-tile quantization scale — on params, in static AND mobility
+worlds, encrypted or not.
+"""
+
+import copy
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.flatten_util import ravel_pytree
+
+from repro.core import (EnFedConfig, EnFedSession, MobilityConfig,
+                        RequesterSpec, SupervisedTask, make_fleet, run_fleet)
+from repro.core.energy import CostModel, update_wire_bytes
+from repro.data import (CaloriesDatasetConfig, dirichlet_partition,
+                        make_calories_tabular)
+from repro.models import MLPClassifier, MLPClassifierConfig
+
+RNG = np.random.default_rng(7)
+BATCH = 16
+
+# the documented composition bound: each dequantized weight is within
+# scale/2 = absmax/254 of its fp32 value per tile, and the masked
+# weighted mean is a convex combination, so |q8_fedavg - fp32_fedavg|
+# <= max_tile_scale / 2 (+ fp noise)
+def _tile_bound(scales):
+    return float(jnp.max(scales)) / 2.0 + 1e-6
+
+
+def _build(n_contrib=3, n_samples=600, seed=0):
+    x, y = make_calories_tabular(CaloriesDatasetConfig(num_samples=n_samples))
+    task = SupervisedTask(MLPClassifier(MLPClassifierConfig(8, (16,), 5)), lr=3e-3)
+    parts = dirichlet_partition(y, num_clients=n_contrib + 1, alpha=100.0, seed=seed)
+    shards = [(x[p], y[p]) for p in parts]
+    own_x, own_y = shards[0]
+    n = int(len(own_x) * 0.8)
+    own_train, own_test = (own_x[:n], own_y[:n]), (own_x[n:], own_y[n:])
+    fleet = make_fleet(n_contrib, seed=1, p_has_model=1.0)
+    states = {}
+    for i, dev in enumerate(fleet):
+        dev.reservation_price = 0.4
+        p = task.init(seed=10 + i)
+        p, _ = task.fit(p, shards[i + 1], epochs=1, batch_size=BATCH, seed=i)
+        states[dev.device_id] = {"params": p, "data": shards[i + 1]}
+    return task, own_train, own_test, fleet, states
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return _build()
+
+
+@pytest.fixture(scope="module")
+def problem_big():
+    """A model big enough (P=2821 > 2 tiles) that the int8 wire format
+    amortizes its tile padding — the regime the knob exists for.  The
+    tiny fixture above (P=229 < 1 tile) is padding-limited: int8 can
+    cost MORE bytes there, which is honest physics, not a bug."""
+    x, y = make_calories_tabular(CaloriesDatasetConfig(num_samples=400))
+    task = SupervisedTask(MLPClassifier(MLPClassifierConfig(8, (64, 32), 5)),
+                          lr=3e-3)
+    parts = dirichlet_partition(y, num_clients=3, alpha=100.0, seed=0)
+    shards = [(x[p], y[p]) for p in parts]
+    fleet = make_fleet(2, seed=1, p_has_model=1.0)
+    states = {}
+    for i, dev in enumerate(fleet):
+        dev.reservation_price = 0.4
+        states[dev.device_id] = {"params": task.init(seed=10 + i),
+                                 "data": shards[i + 1]}
+    own_x, own_y = shards[0]
+    return (task, (own_x[:64], own_y[:64]), (own_x[64:96], own_y[64:96]),
+            fleet, states)
+
+
+# ---------------------------------------------------------------------------
+# quantize ⊕ fedavg composition (kernel level)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("r,n,l", [(3, 4, 2048), (2, 1, 1024),   # N=1 lanes
+                                   (5, 3, 453)])                  # off-tile P
+def test_q8_fedavg_composition_error_bound(r, n, l):
+    """Fused dequant->fedavg on quantized updates stays within the
+    per-tile scale bound of the fp32 fedavg on the originals."""
+    from repro.kernels.fedavg.ops import (fedavg_flat_batched,
+                                          fedavg_flat_batched_q8)
+    from repro.kernels.quantize.ops import padded_len, quantize_flat_batched
+
+    u = RNG.normal(size=(r, n, l)).astype(np.float32)
+    lp = padded_len(l)
+    q, s = quantize_flat_batched(
+        jnp.pad(jnp.asarray(u), ((0, 0), (0, 0), (0, lp - l)))
+        .reshape(r * n, lp))
+    q = q.reshape(r, n, lp)
+    s = s.reshape(r, n, -1)
+    w = jnp.asarray(RNG.random((r, n)).astype(np.float32) + 0.05)
+    got = fedavg_flat_batched_q8(q, s, w)[:, :l]
+    want = fedavg_flat_batched(jnp.asarray(u), w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=_tile_bound(s))
+    # and the pallas path agrees with the jnp oracle exactly
+    ref = fedavg_flat_batched_q8(q, s, w, use_pallas=False)[:, :l]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_q8_fedavg_all_zero_weight_rows():
+    """A session whose whole neighborhood churned away: the all-zero
+    weight row returns a zero vector, exactly like the fp32 kernel."""
+    from repro.kernels.fedavg.ops import fedavg_flat_batched_q8
+    from repro.kernels.quantize.ops import quantize_flat_batched
+
+    u = jnp.asarray(RNG.normal(size=(3 * 2, 1024)).astype(np.float32))
+    q, s = quantize_flat_batched(u)
+    q, s = q.reshape(3, 2, -1), s.reshape(3, 2, -1)
+    w = jnp.asarray([[1.0, 0.5], [0.0, 0.0], [0.3, 0.0]], jnp.float32)
+    out = np.asarray(fedavg_flat_batched_q8(q, s, w))
+    assert np.allclose(out[1], 0.0)
+    assert not np.allclose(out[0], 0.0)
+
+
+def test_batched_quantize_rows_match_compress_update():
+    """The fleet's batched requantize matches the loop's per-device
+    compress_update — bit-equal int8 codes, scales within 1 ulp (the
+    /127 division may codegen differently across shapes) — the property
+    that aligns the two engines' quantization points."""
+    from repro.kernels.quantize.ops import compress_update, quantize_flat_batched
+
+    x = jnp.asarray(RNG.normal(size=(5, 2048)).astype(np.float32))
+    qb, sb = quantize_flat_batched(x)
+    for i in range(5):
+        qi, si, _ = compress_update(x[i])
+        np.testing.assert_array_equal(np.asarray(qb[i]), np.asarray(qi))
+        np.testing.assert_allclose(np.asarray(sb[i]), np.asarray(si),
+                                   rtol=2e-7)
+
+
+def test_update_wire_bytes_compression_ratio():
+    """The cost model's wire bytes drop ~4x under int8 for models large
+    enough that tile padding amortizes."""
+    for p in (4096, 10_000, 100_000):
+        fp32 = update_wire_bytes(p, encrypt=True, compress=None)
+        q8 = update_wire_bytes(p, encrypt=True, compress="int8")
+        assert q8 < fp32
+        if p >= 10_000:
+            assert fp32 / q8 > 3.5
+    with pytest.raises(ValueError):
+        update_wire_bytes(100, compress="int4")
+    with pytest.raises(ValueError):
+        EnFedConfig(compress="int4")
+
+
+# ---------------------------------------------------------------------------
+# engine parity under the knob
+# ---------------------------------------------------------------------------
+
+
+def _run_both(problem, cfg, battery_kw=None):
+    task, own_train, own_test, fleet, states = problem
+    from repro.core.battery import BatteryState
+    battery_kw = battery_kw or {}
+    loop = EnFedSession(task, own_train, own_test, fleet, copy.deepcopy(states),
+                        cfg, battery=BatteryState(**battery_kw)).run()
+    spec = RequesterSpec(own_train=own_train, own_test=own_test,
+                         neighborhood=fleet,
+                         contributor_states=copy.deepcopy(states),
+                         battery=BatteryState(**battery_kw))
+    return loop, run_fleet(task, [spec], cfg).sessions[0]
+
+
+def _assert_parity(loop, fl, atol=1e-2):
+    """allclose at the documented tile-scale atol (<= 1e-2): engine fit
+    math differs by ~1e-6, which a quantization boundary can amplify to
+    one scale step."""
+    assert fl.rounds == loop.rounds
+    assert fl.stop_reason == loop.stop_reason
+    np.testing.assert_allclose(fl.history["battery"], loop.history["battery"],
+                               rtol=1e-5, atol=1e-6)
+    lv, _ = ravel_pytree(loop.params)
+    fv, _ = ravel_pytree(fl.params)
+    np.testing.assert_allclose(np.asarray(fv), np.asarray(lv), atol=atol)
+
+
+@pytest.mark.parametrize("encrypt", [False, True], ids=["plain", "encrypted"])
+def test_compress_parity_static(problem, encrypt):
+    cfg = EnFedConfig(desired_accuracy=0.99, max_rounds=3, epochs=2,
+                      batch_size=BATCH, encrypt=encrypt,
+                      contributor_refresh_epochs=1, compress="int8")
+    loop, fl = _run_both(problem, cfg)
+    assert loop.stop_reason == "max_rounds"
+    _assert_parity(loop, fl)
+
+
+def test_compress_parity_mobility(problem):
+    """Churn world + compressed transport: masks bit-identical, params
+    within the tile bound, battery trajectories exact."""
+    cfg = EnFedConfig(desired_accuracy=0.99, max_rounds=6, epochs=1,
+                      batch_size=BATCH, encrypt=False, n_max=2,
+                      contributor_refresh_epochs=1, compress="int8",
+                      mobility=MobilityConfig(radio_range_m=110.0,
+                                              leg_rounds=2, seed=3))
+    loop, fl = _run_both(problem, cfg)
+    _assert_parity(loop, fl)
+    np.testing.assert_array_equal(np.array(loop.history["member_mask"]),
+                                  np.array(fl.history["member_mask"]))
+    assert loop.history["members"] == fl.history["members"]
+
+
+def test_compress_writes_back_wire_image(problem):
+    """Both engines leave the SAME dequantized-from-wire contributor
+    params behind — the compressed analogue of the refresh write-back
+    contract."""
+    task, own_train, own_test, fleet, states = problem
+    cfg = EnFedConfig(desired_accuracy=0.99, max_rounds=2, epochs=1,
+                      batch_size=BATCH, encrypt=False,
+                      contributor_refresh_epochs=1, compress="int8")
+    loop_states = copy.deepcopy(states)
+    EnFedSession(task, own_train, own_test, fleet, loop_states, cfg).run()
+    fleet_states = copy.deepcopy(states)
+    run_fleet(task, [RequesterSpec(own_train, own_test, fleet, fleet_states)], cfg)
+    for dev_id in states:
+        before, _ = ravel_pytree(states[dev_id]["params"])
+        lv, _ = ravel_pytree(loop_states[dev_id]["params"])
+        fv, _ = ravel_pytree(fleet_states[dev_id]["params"])
+        assert not np.allclose(np.asarray(lv), np.asarray(before)), "refresh ran"
+        np.testing.assert_allclose(np.asarray(fv), np.asarray(lv), atol=1e-2)
+
+
+def test_compress_fleet_bytes_shrink(problem_big):
+    """The staged and device-resident param round state drops >= 3.5x
+    under int8 once the model amortizes the quantization tile (a model
+    under one tile is padding-limited and may not shrink — that edge is
+    covered by the ratio helper test above)."""
+    task, own_train, own_test, fleet, states = problem_big
+    results = {}
+    for compress in (None, "int8"):
+        cfg = EnFedConfig(desired_accuracy=0.99, max_rounds=1, epochs=1,
+                          batch_size=BATCH, encrypt=False,
+                          contributor_refresh_epochs=1, compress=compress)
+        results[compress] = run_fleet(
+            task, [RequesterSpec(own_train, own_test, fleet,
+                                 copy.deepcopy(states))], cfg)
+    assert (results[None].staged_param_bytes
+            / results["int8"].staged_param_bytes) >= 3.5
+    assert (results[None].device_round_state_bytes
+            / results["int8"].device_round_state_bytes) >= 3.5
+    # the refresh gather footprint is reported and beats the old dense form
+    for r in results.values():
+        assert 0 < r.refresh_gather_bytes < r.refresh_gather_bytes_dense
+
+
+def test_compress_lowers_transmission_cost(problem_big):
+    """eq. (4)-(7) must SEE the compression: same world, same config
+    except the knob -> strictly lower t_com and communication energy."""
+    task, own_train, own_test, fleet, states = problem_big
+    results = {}
+    for compress in (None, "int8"):
+        cfg = EnFedConfig(desired_accuracy=0.99, max_rounds=2, epochs=1,
+                          batch_size=BATCH, encrypt=True,
+                          contributor_refresh_epochs=0, compress=compress)
+        results[compress] = EnFedSession(
+            task, own_train, own_test, fleet, copy.deepcopy(states), cfg).run()
+    t_fp32, t_q8 = (results[k].report.times for k in (None, "int8"))
+    assert t_q8.t_com < t_fp32.t_com
+    assert t_q8.t_dec < t_fp32.t_dec          # crypto runs over fewer bytes
+    assert (results["int8"].report.e_comm < results[None].report.e_comm)
+
+
+def test_compress_knob_through_facade(problem_big):
+    """MethodSpec.compress threads to both engines through repro.api and
+    ExecutionSpec still cannot change the simulated outcome."""
+    from repro.api import Experiment, ExecutionSpec, MethodSpec, WorldSpec
+
+    task, own_train, own_test, fleet, states = problem_big
+    world = WorldSpec.single(task, own_train, own_test, fleet,
+                             copy.deepcopy(states))
+    method = MethodSpec(desired_accuracy=0.99, max_rounds=2, epochs=1,
+                        batch_size=BATCH, encrypt=False,
+                        contributor_refresh_epochs=1, compress="int8")
+    res = {}
+    for engine in ("loop", "fleet"):
+        res[engine] = Experiment(world, method,
+                                 ExecutionSpec(engine=engine)).run()
+    assert res["loop"].rounds == res["fleet"].rounds
+    lv, _ = ravel_pytree(res["loop"].params)
+    fv, _ = ravel_pytree(res["fleet"].params)
+    np.testing.assert_allclose(np.asarray(fv), np.asarray(lv), atol=1e-2)
+    # the knob reaches the baselines' cost model too
+    cmp = Experiment(world, method).compare(
+        ["enfed", dataclasses.replace(method, name="dfl", label="dfl")])
+    cmp_fp = Experiment(world, dataclasses.replace(method, compress=None)
+                        ).compare(["enfed", "dfl"])
+    assert (cmp["dfl"].report.times.t_com < cmp_fp["dfl"].report.times.t_com)
+
+
+def test_compress_changes_results_vs_fp32(problem):
+    """compress is a PROTOCOL knob: quantization noise must actually
+    reach the trained params (it is not a pure accounting change)."""
+    task, own_train, own_test, fleet, states = problem
+    runs = {}
+    for compress in (None, "int8"):
+        cfg = EnFedConfig(desired_accuracy=0.99, max_rounds=1, epochs=1,
+                          batch_size=BATCH, encrypt=False,
+                          contributor_refresh_epochs=0, compress=compress)
+        runs[compress] = EnFedSession(task, own_train, own_test, fleet,
+                                      copy.deepcopy(states), cfg).run()
+    a, _ = ravel_pytree(runs[None].params)
+    b, _ = ravel_pytree(runs["int8"].params)
+    diff = float(np.abs(np.asarray(a) - np.asarray(b)).max())
+    # nonzero (the noise is real) but small (one fit can amplify the
+    # per-weight absmax/254 wire error by a few optimizer steps)
+    assert 0.0 < diff < 0.1

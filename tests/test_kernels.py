@@ -129,6 +129,48 @@ def test_fedavg_batched_on_preraveled_flat_buffer():
                                        rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.parametrize("r,n,lp", [(1, 1, 1024), (3, 4, 3072), (17, 5, 2048),
+                                    (64, 3, 1024)])
+def test_fedavg_batched_q8_matches_ref(r, n, lp):
+    """The fused dequant->fedavg kernel vs the jnp oracle — including
+    R not a multiple of the requester tile (padded rows) and N=1."""
+    from repro.kernels.fedavg.kernel import fedavg_batched_q8_pallas
+    from repro.kernels.fedavg.ref import fedavg_batched_q8_ref
+    from repro.kernels.quantize.ref import quantize_batched_ref
+    u = jnp.asarray(RNG.normal(size=(r * n, lp)).astype(np.float32))
+    q, s = quantize_batched_ref(u)
+    q, s = q.reshape(r, n, lp), s.reshape(r, n, -1)
+    w = jnp.asarray((RNG.random((r, n)) > 0.3).astype(np.float32)
+                    * RNG.random((r, n)).astype(np.float32))
+    got = fedavg_batched_q8_pallas(q, s, w, interpret=True)
+    want = fedavg_batched_q8_ref(q, s, w)
+    assert got.shape == (r, lp)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_fedavg_batched_q8_rejects_off_tile():
+    from repro.kernels.fedavg.kernel import fedavg_batched_q8_pallas
+    q = jnp.zeros((2, 3, 1000), jnp.int8)
+    s = jnp.ones((2, 3, 1), jnp.float32)
+    with pytest.raises(ValueError):
+        fedavg_batched_q8_pallas(q, s, jnp.ones((2, 3), jnp.float32))
+
+
+def test_fedavg_batched_r_tiling_matches_per_session():
+    """R-tiled batched kernel row i == the single-session kernel on row
+    i, across an R that exercises requester-tile padding."""
+    from repro.kernels.fedavg.kernel import fedavg_batched_pallas, fedavg_pallas
+    r = 7
+    u = jnp.asarray(RNG.normal(size=(r, 3, 513)).astype(np.float32))
+    w = jnp.asarray(RNG.random((r, 3)).astype(np.float32))
+    got = fedavg_batched_pallas(u, w)
+    for i in range(r):
+        np.testing.assert_allclose(np.asarray(got[i]),
+                                   np.asarray(fedavg_pallas(u[i], w[i])),
+                                   rtol=1e-5, atol=1e-5)
+
+
 # ---------------------------------------------------------------------------
 # lstm_cell
 # ---------------------------------------------------------------------------
@@ -205,6 +247,31 @@ def test_quantize_matches_ref_on_non_tile_multiple(l):
     back_r = dequantize_ref(qr, sr)[:l]
     np.testing.assert_allclose(np.asarray(back_k), np.asarray(back_r),
                                rtol=1e-6, atol=1e-7)
+
+
+@pytest.mark.parametrize("b,lp", [(1, 1024), (5, 2048), (33, 1024)])
+def test_quantize_batched_matches_ref_and_rows(b, lp):
+    """Batched quantize (the fleet refresh requantize) == the ref == the
+    1-D kernel per row, bit-exact, including row-tile padding."""
+    from repro.kernels.quantize.kernel import quantize_batched_pallas, quantize_pallas
+    from repro.kernels.quantize.ref import quantize_batched_ref
+    x = jnp.asarray(RNG.normal(size=(b, lp)).astype(np.float32))
+    qk, sk = quantize_batched_pallas(x, interpret=True)
+    qr, sr = quantize_batched_ref(x)
+    np.testing.assert_array_equal(np.asarray(qk), np.asarray(qr))
+    # scales agree to 1 ulp (XLA may codegen the /127 division
+    # differently across shapes/eager-vs-jit); int8 codes are what the
+    # wire carries and they are bit-equal
+    np.testing.assert_allclose(np.asarray(sk), np.asarray(sr), rtol=2e-7)
+    q0, s0 = quantize_pallas(x[0])
+    np.testing.assert_array_equal(np.asarray(qk[0]), np.asarray(q0))
+    np.testing.assert_allclose(np.asarray(sk[0]), np.asarray(s0), rtol=2e-7)
+
+
+def test_quantize_batched_rejects_off_tile():
+    from repro.kernels.quantize.kernel import quantize_batched_pallas
+    with pytest.raises(ValueError):
+        quantize_batched_pallas(jnp.zeros((2, 1000), jnp.float32))
 
 
 # ---------------------------------------------------------------------------
