@@ -105,17 +105,17 @@ def run_enfed(sc: Scenario, n_contrib: int = 5, epochs: int = EPOCHS,
 
 def run_cfl(sc: Scenario, epochs: int = EPOCHS, target: float = TARGET_CFL, seed: int = 0):
     client_data = [sc.own_train] + sc.shards[1:N_CLIENTS]
-    return CFLLearner(sc.task, client_data, sc.global_test).run(
-        target_accuracy=target, max_rounds=MAX_ROUNDS, epochs=epochs,
-        batch_size=BATCH, seed=seed)
+    cfg = EnFedConfig(desired_accuracy=target, max_rounds=MAX_ROUNDS,
+                      epochs=epochs, batch_size=BATCH, seed=seed)
+    return CFLLearner(sc.task, client_data, sc.global_test).run_config(cfg)
 
 
 def run_dfl(sc: Scenario, topology: str, n_nodes: int = N_CLIENTS,
             epochs: int = EPOCHS, target: float = TARGET_DFL, seed: int = 0):
     client_data = ([sc.own_train] + sc.shards[1:N_CLIENTS])[:n_nodes]
-    return DFLLearner(sc.task, client_data, sc.global_test, topology).run(
-        target_accuracy=target, max_rounds=MAX_ROUNDS, epochs=epochs,
-        batch_size=BATCH, seed=seed)
+    cfg = EnFedConfig(desired_accuracy=target, max_rounds=MAX_ROUNDS,
+                      epochs=epochs, batch_size=BATCH, seed=seed)
+    return DFLLearner(sc.task, client_data, sc.global_test, topology).run_config(cfg)
 
 
 def run_cloud(sc: Scenario, epochs: int = EPOCHS, seed: int = 0):

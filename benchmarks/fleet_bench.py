@@ -52,7 +52,14 @@ claim) and ``enfed_vs_dfl_paper`` on a paper-shaped world — encrypted
 transport, a model big enough that transport matters, neighbors holding
 WELL-TRAINED models (EnFed's premise), an achievable accuracy target —
 where EnFed's fewer-rounds-to-target advantage shows as positive
-time/energy reductions.
+time/energy reductions.  The ``enfed_vs_dfl`` row executes with
+``ExecutionSpec(engine="fleet")``: since PR 6 the dfl/cfl baselines are
+traced protocol variants of the same compiled fleet program, so the
+row's baseline figures are SIMULATED at fleet scale, not extrapolated
+from loop sessions.  ``results_compare_fleet`` measures that directly:
+at the largest swept R every method runs as one compiled program and
+reports its own measured warm wall — no ``loop_baseline_s_per_session``
+multiplication anywhere in the row.
 
   PYTHONPATH=src python -m benchmarks.fleet_bench [--sizes 8,32,128,512]
       [--smoke] [--compare] [--out BENCH_fleet.json]
@@ -160,29 +167,33 @@ def _compare_row(task, fleet, states, own_train, own_test,
     """The paper-claim row: EnFed vs DFL through the one-call facade.
 
     Both methods run on the SAME WorldSpec (requester shard, contributor
-    states, seed) and the SAME CostModel instance; the row is the
-    Table-IV-style time/energy reduction.  ``pass`` requires finite
-    reduction percentages AND proof that the world's CostModel actually
-    prices every method: the comparison is re-run on a world whose
-    device profile draws 10x the power, and each method's reported
+    states, seed) and the SAME CostModel instance — and, since PR 6,
+    through the SAME compiled fleet program (``engine="fleet"``): the
+    dfl row is a traced protocol variant, simulated, not an
+    extrapolation.  The row is the Table-IV-style time/energy reduction.
+    ``pass`` requires finite reduction percentages, both rows actually
+    coming off the fleet engine, AND proof that the world's CostModel
+    actually prices every method: the comparison is re-run on a world
+    whose device profile draws 10x the power, and each method's reported
     energy must scale with it — a method silently costing through a
     private default CostModel would not move, and trips the CI gate."""
     import dataclasses
 
-    from repro.api import Experiment, MethodSpec, WorldSpec
+    from repro.api import ExecutionSpec, Experiment, MethodSpec, WorldSpec
     from repro.core import CostModel, DeviceProfile
 
     method = MethodSpec(
         desired_accuracy=cfg.desired_accuracy, max_rounds=cfg.max_rounds,
         epochs=cfg.epochs, batch_size=cfg.batch_size, encrypt=cfg.encrypt,
         contributor_refresh_epochs=cfg.contributor_refresh_epochs)
+    execution = ExecutionSpec(engine="fleet")
     world = WorldSpec.single(task, own_train, own_test, fleet,
                              copy.deepcopy(states), seed=cfg.seed)
-    exp = Experiment(world, method)
-    exp.compare(["enfed", "dfl"])    # warm the jit caches: the methods'
-    cmp = exp.compare(["enfed", "dfl"])  # T_loc is semi-empirical (measured
-    # fit wall-clock), so the reported row must not carry compile time
+    exp = Experiment(world, method, execution)
+    exp.compare(["enfed", "dfl"])        # warm the jit caches
+    cmp = exp.compare(["enfed", "dfl"])
     row = cmp.reduction("enfed", "dfl")
+    row["engines"] = {m: cmp[m].engine for m in ("enfed", "dfl")}
 
     d = DeviceProfile()
     hot = dataclasses.replace(
@@ -191,16 +202,20 @@ def _compare_row(task, fleet, states, own_train, own_test,
     world_hot = WorldSpec.single(task, own_train, own_test, fleet,
                                  copy.deepcopy(states), seed=cfg.seed,
                                  cost_model=CostModel(device=hot))
-    cmp_hot = Experiment(world_hot, method).compare(["enfed", "dfl"])
+    cmp_hot = Experiment(world_hot, method, execution).compare(["enfed", "dfl"])
     row["cost_model_flows"] = bool(
         all(r.cost_model is world.cost_model for r in cmp)
         and cmp_hot["enfed"].energy_j > 2.0 * cmp["enfed"].energy_j
         and cmp_hot["dfl"].energy_j > 2.0 * cmp["dfl"].energy_j)
-    _finalize_row(row, extra_pass=row["cost_model_flows"],
+    _finalize_row(row,
+                  extra_pass=(row["cost_model_flows"]
+                              and all(e == "fleet"
+                                      for e in row["engines"].values())),
                   note="smoke-scale gate config (tiny model, milliseconds "
                        "of training): the one-time handshake dominates, so "
                        "the reductions here are NOT the paper claim — see "
-                       "enfed_vs_dfl_paper")
+                       "enfed_vs_dfl_paper; both rows simulated by the "
+                       "compiled fleet engine")
     return row
 
 
@@ -349,6 +364,124 @@ def _compress_sweep(sizes, verbose: bool) -> list:
     return rows
 
 
+def _baseline_parity_smoke(task, fleet, states, own_train, own_test) -> dict:
+    """dfl-as-a-fleet-lane vs the DFLLearner loop oracle: the CI gate for
+    the method-variant path (``run_fleet(method="dfl")``) that the
+    compare rows now execute through."""
+    from repro.core.federated import DFLLearner
+
+    cfg = EnFedConfig(desired_accuracy=0.99, max_rounds=2, epochs=1,
+                      batch_size=BATCH, seed=0)
+    data = [own_train] + [states[dev.device_id]["data"] for dev in fleet]
+    loop = DFLLearner(task, data, own_test, "mesh").run_config(cfg)
+    fl = run_fleet(task, [RequesterSpec(own_train, own_test, fleet,
+                                        copy.deepcopy(states))],
+                   cfg, method="dfl").sessions[0]
+    out = {"pass": False, "rounds": (loop.rounds, fl.rounds)}
+    if fl.rounds != loop.rounds:
+        return out
+    from jax.flatten_util import ravel_pytree
+    lv, _ = ravel_pytree(loop.params)
+    fv, _ = ravel_pytree(fl.params)
+    out["max_param_diff"] = float(np.abs(np.asarray(lv) - np.asarray(fv)).max())
+    out["max_accuracy_diff"] = float(np.abs(
+        np.asarray(loop.history["accuracy"])
+        - np.asarray(fl.history["accuracy"])).max())
+    out["pass"] = bool(out["max_param_diff"] < 1e-4
+                       and out["max_accuracy_diff"] < 1e-5)
+    return out
+
+
+def _fleet_compare_sweep(task, fleet, states, own_train, own_test,
+                         R: int, verbose: bool) -> dict:
+    """Every method of the comparison as ONE compiled fleet program at
+    the largest swept R — each row's warm wall is MEASURED on that
+    method's own program, never derived from the loop-engine
+    extrapolation (the pre-PR-6 dfl/cfl rows were loop runs, so a
+    512-session comparison was R x one Python session)."""
+    from repro.api import ExecutionSpec, Experiment, MethodSpec, WorldSpec
+
+    method = MethodSpec(desired_accuracy=0.999, max_rounds=3, epochs=1,
+                        batch_size=BATCH, encrypt=False,
+                        contributor_refresh_epochs=1)
+    out = {"R": R, "measured": True, "methods": {}}
+    for name in ("enfed", "dfl", "cfl"):
+        world = WorldSpec(task=task,
+                          requesters=_make_specs(R, own_train, own_test,
+                                                 fleet,
+                                                 copy.deepcopy(states)),
+                          seed=0)
+        exp = Experiment(world, method, ExecutionSpec(engine="fleet"))
+        exp.run(name)                                  # compile
+        t0 = time.perf_counter()
+        res = exp.run(name)
+        wall = time.perf_counter() - t0
+        total_rounds = int(sum(s.rounds for s in res.sessions))
+        out["methods"][name] = {
+            "engine": res.engine,
+            "warm_s": round(wall, 4),
+            "session_rounds": total_rounds,
+            "rounds_per_s": round(total_rounds / wall, 2),
+            "simulated_energy_j": round(res.energy_j * len(res.sessions), 2)
+            if res.raw is None else round(res.raw.total_energy_j, 2)}
+        if verbose:
+            m = out["methods"][name]
+            print(f"[compare-fleet R={R:4d}] {name:5s} warm {m['warm_s']:7.3f}s"
+                  f" | {m['session_rounds']} session-rounds -> "
+                  f"{m['rounds_per_s']:8.1f} rounds/s | "
+                  f"E={m['simulated_energy_j']:.1f}J (measured, engine="
+                  f"{m['engine']})")
+    out["pass"] = bool(all(m["engine"] == "fleet"
+                           and np.isfinite(m["rounds_per_s"])
+                           and np.isfinite(m["simulated_energy_j"])
+                           for m in out["methods"].values()))
+    return out
+
+
+def _fleet_compare_gate(report: dict, baseline_path: str,
+                        threshold: float = 0.75) -> dict:
+    """Perf gate for the method-variant path: the dfl fleet program's
+    warm rounds/s at the compare-sweep R must not regress against the
+    committed baseline.  Skips cleanly when the committed
+    ``BENCH_fleet.json`` predates the ``results_compare_fleet`` section
+    (the gate arms itself on the first post-PR-6 baseline commit), on a
+    config/backend mismatch, or on a different host — where it falls
+    back to the host-normalized dfl/enfed throughput ratio."""
+    try:
+        with open(baseline_path) as f:
+            base = json.load(f)
+    except (OSError, ValueError):
+        return {"pass": True, "skipped": f"no readable baseline at {baseline_path}"}
+    sec = base.get("results_compare_fleet")
+    if not sec:
+        return {"pass": True,
+                "skipped": "baseline predates results_compare_fleet"}
+    if (base.get("config") != report["config"]
+            or base.get("backend") != report["backend"]):
+        return {"pass": True, "skipped": "baseline config/backend mismatch"}
+    cur = report["results_compare_fleet"]
+    if sec.get("R") != cur["R"]:
+        return {"pass": True, "skipped": "compare-sweep R mismatch"}
+    same_host = base.get("host") == report["host"]
+
+    def rel(section):
+        enfed = section["methods"]["enfed"]["rounds_per_s"]
+        return section["methods"]["dfl"]["rounds_per_s"] / max(enfed, 1e-9)
+
+    if same_host:
+        metric, b, c = "dfl_rounds_per_s", \
+            sec["methods"]["dfl"]["rounds_per_s"], \
+            cur["methods"]["dfl"]["rounds_per_s"]
+    else:
+        metric, b, c, threshold = "dfl_vs_enfed_throughput", \
+            rel(sec), rel(cur), 0.6
+    ratio = c / max(b, 1e-9)
+    return {"R": cur["R"], "metric": metric, "same_host": same_host,
+            "baseline": round(b, 2), "current": round(c, 2),
+            "ratio": round(ratio, 3), "threshold": threshold,
+            "pass": bool(ratio >= threshold)}
+
+
 def _churn_mobility() -> MobilityConfig:
     """The benchmark's opportunistic world: devices re-waypoint every
     round inside a 200 m arena with a 95 m radio range — enough motion
@@ -463,6 +596,10 @@ def run(verbose: bool = True, sizes=(8, 32, 128, 512), smoke: bool = False,
                                              own_test)
         if verbose:
             print(f"[churn smoke] {report['churn_smoke']}")
+        report["baseline_parity_smoke"] = _baseline_parity_smoke(
+            task, fleet, states, own_train, own_test)
+        if verbose:
+            print(f"[baseline parity smoke] {report['baseline_parity_smoke']}")
 
     # loop-engine baseline: seconds per session, measured once (cost is
     # per-session linear: one Python dispatch chain per session)
@@ -555,6 +692,11 @@ def run(verbose: bool = True, sizes=(8, 32, 128, 512), smoke: bool = False,
     # and rounds/s on a model that amortizes the quantization tile
     report["results_compress"] = _compress_sweep(sizes, verbose)
 
+    # method-variant sweep: enfed/dfl/cfl each as ONE compiled program at
+    # the largest R, with measured (not extrapolated) baseline walls
+    report["results_compare_fleet"] = _fleet_compare_sweep(
+        task, fleet, states, own_train, own_test, max(sizes), verbose)
+
     # early-exit demo: a fleet whose sessions all hit the accuracy target
     # in round 1 executes O(1) round bodies even with a 16-round budget
     # (the PR 1 engine scanned all 16 regardless).
@@ -583,6 +725,10 @@ def run(verbose: bool = True, sizes=(8, 32, 128, 512), smoke: bool = False,
         report["perf_gate"] = _perf_gate(report, baseline_path or "")
         if verbose:
             print(f"[perf gate] {report['perf_gate']}")
+        report["fleet_compare_gate"] = _fleet_compare_gate(
+            report, baseline_path or "")
+        if verbose:
+            print(f"[fleet compare gate] {report['fleet_compare_gate']}")
 
     if out:
         with open(out, "w") as f:
@@ -611,6 +757,23 @@ def run(verbose: bool = True, sizes=(8, 32, 128, 512), smoke: bool = False,
               f"{report['perf_gate'].get('R')} fell to "
               f"{report['perf_gate'].get('ratio')}x the committed baseline "
               f"(gate: >= {report['perf_gate'].get('threshold')}x)",
+              file=sys.stderr)
+        sys.exit(1)
+    if smoke and not report["baseline_parity_smoke"]["pass"]:
+        print("BASELINE PARITY REGRESSION: the dfl fleet lanes diverged "
+              "from the DFLLearner loop oracle", file=sys.stderr)
+        sys.exit(1)
+    if smoke and not report["results_compare_fleet"]["pass"]:
+        print("COMPARE-FLEET REGRESSION: a method of the fleet-engine "
+              "comparison produced non-finite figures or fell back off "
+              "the compiled engine", file=sys.stderr)
+        sys.exit(1)
+    if smoke and not report["fleet_compare_gate"]["pass"]:
+        print(f"PERF REGRESSION: the dfl fleet program at R="
+              f"{report['fleet_compare_gate'].get('R')} fell to "
+              f"{report['fleet_compare_gate'].get('ratio')}x the committed "
+              f"baseline (gate: >= "
+              f"{report['fleet_compare_gate'].get('threshold')}x)",
               file=sys.stderr)
         sys.exit(1)
     return rows

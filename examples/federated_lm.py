@@ -5,7 +5,7 @@ preset for CPU), simulates an opportunistic client fleet with incentives
 and batteries, and trains with the EnFed neighborhood aggregation —
 delegates to the production launcher.
 
-  PYTHONPATH=src python examples/federated_lm.py --arch recurrentgemma-2b --steps 30
+  PYTHONPATH=src python examples/federated_lm.py --arch debug-dense --steps 30
 """
 
 import argparse
@@ -15,7 +15,7 @@ from repro.launch import train as train_mod
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="xlstm-125m")
+    ap.add_argument("--arch", default="debug-dense")
     ap.add_argument("--steps", type=int, default=30)
     ap.add_argument("--clients", type=int, default=4)
     ap.add_argument("--strategy", default="enfed")

@@ -1,8 +1,7 @@
 """Serve a small model with batched requests (prefill + decode loop).
 
-  PYTHONPATH=src python examples/serve_batched.py --arch deepseek-v3-671b
-(the smoke preset keeps it CPU-sized; --mla-absorbed exercises the
-weight-absorbed MLA decode path from §Perf)
+  PYTHONPATH=src python examples/serve_batched.py --arch debug-moe
+(the smoke preset keeps it CPU-sized)
 """
 
 import argparse
@@ -12,7 +11,7 @@ from repro.launch import serve as serve_mod
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="deepseek-v3-671b")
+    ap.add_argument("--arch", default="debug-moe")
     ap.add_argument("--mla-absorbed", action="store_true")
     args = ap.parse_args()
     argv = ["--arch", args.arch, "--preset", "smoke",

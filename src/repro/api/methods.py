@@ -115,11 +115,34 @@ def run_enfed(world: WorldSpec, method: MethodSpec,
     return RunResult.from_sessions("enfed", "loop", sessions, cost_model=cost)
 
 
+def _run_baseline_fleet(world: WorldSpec, method: MethodSpec,
+                        execution: ExecutionSpec, name: str) -> RunResult:
+    """dfl/cfl as traced protocol variants of the compiled fleet engine
+    (``run_fleet(method=...)``) — the rows a large-R ``compare()`` gets
+    are simulated by the same jit program enfed runs in, not
+    extrapolated from loop sessions.  Baselines re-init node params and
+    write nothing back, so the world's requesters are used read-only."""
+    from repro.core import fleet as fleet_mod
+
+    cfg = method.to_enfed_config(world)
+    cost = world.cost_model
+    fr = fleet_mod.run_fleet(
+        world.task, world.requesters, cfg, cost_model=cost,
+        use_pallas=execution.use_pallas, interpret=execution.interpret,
+        round_chunk=execution.round_chunk, method=name,
+        dfl_topology=method.topology)
+    return RunResult.from_sessions(name, "fleet", fr.sessions,
+                                   cost_model=cost,
+                                   total_energy_j=fr.total_energy_j, raw=fr)
+
+
 @register_method("cfl")
 def run_cfl(world: WorldSpec, method: MethodSpec,
             execution: ExecutionSpec) -> RunResult:
     """Centralized FL baseline, per requesting device (client 0)."""
     _warn_if_mobility_ignored(world, "cfl")
+    if execution.engine == "fleet":
+        return _run_baseline_fleet(world, method, execution, "cfl")
     cfg = method.to_enfed_config(world)
     cost = world.cost_model
     sessions = []
@@ -139,6 +162,8 @@ def run_dfl(world: WorldSpec, method: MethodSpec,
             execution: ExecutionSpec) -> RunResult:
     """Decentralized FL baseline over ``method.topology`` (mesh|ring)."""
     _warn_if_mobility_ignored(world, "dfl")
+    if execution.engine == "fleet":
+        return _run_baseline_fleet(world, method, execution, "dfl")
     cfg = method.to_enfed_config(world)
     cost = world.cost_model
     sessions = []

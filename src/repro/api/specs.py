@@ -133,11 +133,13 @@ class MethodSpec:
     contributor_refresh_epochs: int = 1
     strategy: Optional[AggregationStrategy] = None
     topology: str = "mesh"               # dfl: "mesh" | "ring"
-    # transported-update compression (None | "int8").  A PROTOCOL knob,
-    # not an execution knob: it changes the simulated outcome (wire
-    # bytes, eq. (4)-(7) energy, quantized params), so it lives here and
-    # every method prices its transport through the same
-    # repro.core.energy.update_wire_bytes helper.
+    # transported-update compression (None | "int8" | "auto").  A
+    # PROTOCOL knob, not an execution knob: it changes the simulated
+    # outcome (wire bytes, eq. (4)-(7) energy, quantized params), so it
+    # lives here and every method prices its transport through the same
+    # repro.core.energy.update_wire_bytes helper.  "auto" resolves per
+    # model size via repro.kernels.quantize.ops.resolve_compress — int8
+    # only past the padding-overhead crossover, fp32 below it.
     compress: Optional[str] = None
     label: Optional[str] = None          # display/compare key (default: name)
 
@@ -188,8 +190,11 @@ class ExecutionSpec:
     select the aggregation-kernel path (``interpret=None`` resolves per
     backend via ``repro.kernels.common.resolve_interpret``);
     ``round_chunk`` is the fleet engine's early-exit granularity.
-    Methods without a compiled engine (the host-side baselines) ignore
-    the engine knobs and record ``engine="loop"`` in their result.
+    ``enfed``, ``dfl`` and ``cfl`` honor the engine choice — the
+    baselines run as traced protocol variants of the same fleet program
+    (``run_fleet(method=...)``), parity-tested against their loop
+    learners.  ``cloud`` has no round structure to compile and always
+    records ``engine="loop"``.
     """
 
     engine: str = "loop"                 # "loop" | "fleet"

@@ -1,41 +1,61 @@
 """Architecture registry: ``--arch <id>`` -> ModelConfig.
 
-Ten assigned architectures (each cites its source in its module) plus
-the EnFed paper's own HAR classifiers.
+Two CI-sized debug presets (the only sizes anything in this repo
+actually trains or serves on this CPU toolchain) plus the EnFed paper's
+own HAR classifiers.  The ten full-size LLM preset modules that used to
+live here were dead weight: every engine, test, and driver ran their
+``.smoke()`` reductions, never the billion-parameter specs, so the
+presets below ARE those reductions, kept honest under their own names.
+
+* ``debug-dense`` — dense GQA decoder with QKV bias: the plain
+  attention + SwiGLU path every dense-family code path shares.
+* ``debug-moe``  — 4-expert top-2 MoE.  Its vocab (513) is deliberately
+  odd so it is never divisible by a model axis — the embedding sharding
+  rules must take the d_model-axis fallback (exercised in
+  tests/test_distributed.py).
 """
 
 from __future__ import annotations
 
 from typing import Dict
 
-from repro.models.config import ModelConfig
+from repro.models.config import ModelConfig, MoEConfig
 from repro.models.classifiers import LSTMClassifierConfig, MLPClassifierConfig
 
-from repro.configs.recurrentgemma_2b import CONFIG as RECURRENTGEMMA_2B
-from repro.configs.h2o_danube_1_8b import CONFIG as H2O_DANUBE_1_8B
-from repro.configs.internlm2_20b import CONFIG as INTERNLM2_20B
-from repro.configs.qwen2_5_3b import CONFIG as QWEN2_5_3B
-from repro.configs.xlstm_125m import CONFIG as XLSTM_125M
-from repro.configs.minitron_8b import CONFIG as MINITRON_8B
-from repro.configs.seamless_m4t_large_v2 import CONFIG as SEAMLESS_M4T_LARGE_V2
-from repro.configs.llava_next_mistral_7b import CONFIG as LLAVA_NEXT_MISTRAL_7B
-from repro.configs.deepseek_v3_671b import CONFIG as DEEPSEEK_V3_671B
-from repro.configs.granite_moe_1b_a400m import CONFIG as GRANITE_MOE_1B_A400M
+DEBUG_DENSE = ModelConfig(
+    name="debug-dense",
+    family="dense",
+    citation="debug preset",
+    num_layers=2,
+    d_model=128,
+    num_heads=4,
+    num_kv_heads=2,
+    head_dim=32,
+    d_ff=256,
+    vocab_size=512,
+    block_pattern=("attn",),
+    qkv_bias=True,
+    dtype="float32",
+)
 
-ARCHS: Dict[str, ModelConfig] = {
-    c.name: c for c in [
-        RECURRENTGEMMA_2B,
-        H2O_DANUBE_1_8B,
-        INTERNLM2_20B,
-        QWEN2_5_3B,
-        XLSTM_125M,
-        MINITRON_8B,
-        SEAMLESS_M4T_LARGE_V2,
-        LLAVA_NEXT_MISTRAL_7B,
-        DEEPSEEK_V3_671B,
-        GRANITE_MOE_1B_A400M,
-    ]
-}
+DEBUG_MOE = ModelConfig(
+    name="debug-moe",
+    family="moe",
+    citation="debug preset",
+    num_layers=2,
+    d_model=128,
+    num_heads=4,
+    num_kv_heads=2,
+    head_dim=32,
+    d_ff=256,
+    vocab_size=513,  # odd on purpose: forces the embedding-sharding fallback
+    block_pattern=("attn",),
+    moe=MoEConfig(num_experts=4, num_experts_per_tok=2,
+                  num_shared_experts=0, d_ff_expert=128),
+    dtype="float32",
+)
+
+ARCHS: Dict[str, ModelConfig] = {c.name: c for c in [DEBUG_DENSE, DEBUG_MOE]}
 
 # the EnFed paper's own models (Table III)
 PAPER_LSTM = LSTMClassifierConfig(input_dim=6, seq_len=64, hidden=64, num_classes=6)

@@ -41,12 +41,20 @@ def update_wire_bytes(num_params: int, *, encrypt: bool = True,
     CFL/DFL baselines MUST derive ``model_bytes`` through this helper so
     their transmission/crypto energies (and therefore battery
     trajectories) agree bit-exactly under every knob setting.
+
+    ``compress="auto"`` resolves here through the same
+    :func:`repro.kernels.quantize.ops.resolve_compress` crossover the
+    engines use — the knob can be passed straight down from any config
+    and the pricing still lands on the format actually on the wire.
     """
+    if compress == "auto":
+        from repro.kernels.quantize.ops import resolve_compress
+        compress = resolve_compress("auto", num_params)
     if compress == "int8":
         from repro.kernels.quantize.ops import compressed_nbytes
         return compressed_nbytes(num_params)
     if compress is not None:
-        raise ValueError(f"unknown compress mode {compress!r} (None|'int8')")
+        raise ValueError(f"unknown compress mode {compress!r} (None|'int8'|'auto')")
     if encrypt or raw_bytes is None:
         return 4 * num_params
     return raw_bytes

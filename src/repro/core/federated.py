@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -182,6 +183,10 @@ class CFLLearner:
             batch_size: int, seed: int = 0) -> BaselineResult:
         """Deprecated shim: private-kwarg form of :meth:`run_config`.
         Prefer ``repro.api.Experiment(world, method="cfl").run()``."""
+        warnings.warn(
+            "CFLLearner.run is deprecated; use CFLLearner.run_config "
+            "(shared EnFedConfig surface) or repro.api.Experiment(world, "
+            "method='cfl').run()", DeprecationWarning, stacklevel=2)
         return self.run_config(_as_enfed_config(target_accuracy, max_rounds,
                                                 epochs, batch_size, seed))
 
@@ -247,6 +252,10 @@ class DFLLearner:
             batch_size: int, seed: int = 0) -> BaselineResult:
         """Deprecated shim: private-kwarg form of :meth:`run_config`.
         Prefer ``repro.api.Experiment(world, method="dfl").run()``."""
+        warnings.warn(
+            "DFLLearner.run is deprecated; use DFLLearner.run_config "
+            "(shared EnFedConfig surface) or repro.api.Experiment(world, "
+            "method='dfl').run()", DeprecationWarning, stacklevel=2)
         return self.run_config(_as_enfed_config(target_accuracy, max_rounds,
                                                 epochs, batch_size, seed))
 

@@ -90,6 +90,25 @@ R=512 and beyond:
   concrete round numbers — identical trajectories, masks, params, and
   battery curves by construction.
 
+* **Method as a traced protocol variant.**  ``run_fleet(...,
+  method="dfl"|"cfl")`` runs the paper's baselines as lanes of the SAME
+  jit program (``_fleet_program``'s ``method`` is a static argument):
+  the flat (R, N, P) round state now holds per-client node params, the
+  batched Pallas fedavg kernel performs the aggregation step — gossip
+  mixing rows for dfl (one launch per mixing-matrix row), the
+  server-side data-size-weighted FedAvg for cfl — and the chunked
+  ``lax.while_loop`` gives the baselines the same early exit enfed has.
+  Which protocol steps trace is decided by the per-method phase mask
+  (``protocol.method_phases``): baselines drop RENEGOTIATE / REFRESH /
+  battery accounting, and AGGREGATE moves from requester-side to the
+  client mixing/server step.  The loop learners
+  (``repro.core.federated.CFLLearner`` / ``DFLLearner.run_config``) are
+  the parity oracles — same per-client seeds (``seed + 31r + j`` cfl,
+  ``seed + 77r + j`` dfl), same mixing matrices
+  (``topology.group_mixing_matrix``), same stopping — so
+  ``Experiment.compare`` at R=512 measures every method from one
+  compiled program instead of extrapolating Python-loop sessions.
+
 Phase mapping (vocabulary in ``repro.core.protocol``): handshake stays
 host-side (cheap, deterministic numpy) and emits either the static
 (R, N) contract mask + per-round aggregation weights, or — under
@@ -129,7 +148,8 @@ from repro.core.rounds import EnFedConfig, SessionResult
 from repro.kernels.fedavg.ops import (fedavg_flat_batched,
                                       fedavg_flat_batched_q8)
 from repro.kernels.quantize.ops import (dequantize_flat_batched, padded_len,
-                                        quantize_flat_batched)
+                                        quantize_flat_batched,
+                                        resolve_compress)
 from repro.models.classifiers import masked_cross_entropy_loss
 from repro.optim import apply_updates
 from repro.utils.tree import (tree_bytes, tree_ravel, tree_size, tree_unravel,
@@ -202,12 +222,12 @@ def _stack_trees(trees, template=None):
     static_argnames=("task", "use_pallas", "interpret", "do_refresh", "chunk",
                      "max_rounds", "epochs", "batch", "steps_max",
                      "ref_epochs", "ref_steps", "spec", "mob", "n_max",
-                     "strategy", "compress", "n_params"),
+                     "strategy", "compress", "n_params", "method"),
     donate_argnames=("contrib_flat",))
 def _fleet_program(task, use_pallas, interpret, do_refresh, chunk, max_rounds,
                    epochs, batch, steps_max, ref_epochs, ref_steps, spec,
-                   mob, n_max, strategy, compress, n_params, contrib_flat,
-                   arrays):
+                   mob, n_max, strategy, compress, n_params, method,
+                   contrib_flat, arrays):
     """The whole fleet's Algorithm 1 as one compiled program.
 
     Module-level so the jit cache is shared across ``run_fleet`` calls:
@@ -227,12 +247,22 @@ def _fleet_program(task, use_pallas, interpret, do_refresh, chunk, max_rounds,
     is the static :class:`repro.core.mobility.MobilityConfig` (None =
     static neighborhood); under mobility, contributor lanes are the
     candidate pool and membership is re-negotiated on device each round.
+
+    ``method`` selects the traced protocol variant ("enfed", "dfl",
+    "cfl" — vocabulary in :func:`repro.core.protocol.method_phases`):
+    the per-method phase mask decides at trace time which protocol
+    steps are live.  The baseline variants share this program's flat
+    round state, batched fedavg kernels, and chunked early-exit loop;
+    their round bodies are the loop learners' algorithms phase for
+    phase.
     """
     model, opt = task.model, task._opt
     R, N = contrib_flat.shape[:2]
     P = n_params
-    n_pad = arrays["own_x"].shape[1]
-    mobility_on = mob is not None
+    phases = protocol.method_phases(method)
+    if method == "enfed":
+        n_pad = arrays["own_x"].shape[1]
+    mobility_on = (mob is not None) and (protocol.Phase.RENEGOTIATE in phases)
     compress_on = compress == "int8"
 
     def _fit_lane(flat_p, get_xy, idx, w):
@@ -468,8 +498,114 @@ def _fleet_program(task, use_pallas, interpret, do_refresh, chunk, max_rounds,
                 stop_code, rounds_done, clevel, acc_h, loss_h, bat_h, exec_h,
                 body_h, member_h)
 
-    last0 = (jnp.broadcast_to(arrays["init_flat"], (R, P)) if mobility_on
-             else jnp.zeros((R, P), jnp.float32))
+    # ---- baseline method variants (dfl / cfl) ------------------------------
+    # Same scaffolding — flat (R, N, P) state, batched fedavg kernels,
+    # chunked early-exit while_loop — with the phase mask deciding what
+    # traces: no RENEGOTIATE, no REFRESH, no battery term in ACCOUNT,
+    # and AGGREGATE moves to the client side (dfl gossip mixing) or the
+    # virtual server (cfl data-size FedAvg).  Lane j of requester i is
+    # client j of the loop learners' client_data list (client 0 = the
+    # requester's own shard), so seeds, schedules, mixing weights, and
+    # stopping reproduce CFLLearner/DFLLearner.run_config exactly.
+    if method in ("dfl", "cfl"):
+        assert protocol.Phase.REFRESH not in phases
+        nc_pad = arrays["cx_tab"].shape[1]
+        seed_stride = 31 if method == "cfl" else 77
+        cidx_flat = arrays["cidx"].reshape(R * N)
+        cli_n_flat = arrays["cli_n"].reshape(R * N)
+        lane_j = jnp.arange(R * N, dtype=jnp.int32) % N
+
+        def fit_client(flat_p, u, idx, w):
+            """One client lane: minibatches gathered straight from the
+            deduplicated shard table (never re-densified)."""
+            return _fit_lane(
+                flat_p,
+                lambda ib: (arrays["cx_tab"][u, ib], arrays["cy_tab"][u, ib]),
+                idx, w)
+
+        def run_round(state, rr):
+            (contrib, cscale, live, live_s, last, level, active, stop_code,
+             rounds_done, clevel, acc_h, loss_h, bat_h, exec_h, body_h,
+             member_h) = state
+
+            # Phase.FIT at every client lane.  The loop oracles seed each
+            # client fit with cfg.seed + stride*r + client_index; the
+            # prefix-stable derived schedule reproduces
+            # SupervisedTask.fit's minibatches bit for bit, with padded
+            # lanes (n=0) collapsing to zero-weight no-op steps.
+            scores = jax.vmap(
+                lambda j: schedule.epoch_scores(
+                    arrays["seed0"] + seed_stride * rr + j, epochs, nc_pad))(
+                jnp.arange(N, dtype=jnp.int32))
+            idx, w = jax.vmap(
+                lambda j, n: schedule.plan_from_scores(
+                    scores[j], n, batch, steps_max))(lane_j, cli_n_flat)
+            if method == "cfl":
+                # every client trains FROM THE SHARED GLOBAL (in `last`)
+                src = jnp.broadcast_to(last[:, None], (R, N, P)).reshape(R * N, P)
+            else:
+                # dfl: every node trains from its own params
+                src = contrib.reshape(R * N, P)
+            fitted, fit_loss = jax.vmap(fit_client)(src, cidx_flat, idx, w)
+            fitted = fitted.reshape(R, N, P)
+
+            # Phase.COLLECT + Phase.AGGREGATE on the flat round state:
+            # cfl is one server-side data-size-weighted kernel launch;
+            # dfl applies the row-stochastic mixing matrix as one launch
+            # per output row (rows sum to 1, so the kernel's normalized
+            # weighted mean IS the gossip mix of apply_mixing).
+            if method == "cfl":
+                glob = fedavg_flat_batched(fitted, arrays["cli_w"],
+                                           use_pallas=use_pallas,
+                                           interpret=interpret)
+                new_contrib, new_last = fitted, glob
+            else:
+                mixed = jnp.stack(
+                    [fedavg_flat_batched(fitted, arrays["mix_w"][:, k, :],
+                                         use_pallas=use_pallas,
+                                         interpret=interpret)
+                     for k in range(N)], axis=1)
+                new_contrib, new_last = mixed, mixed[:, 0]
+
+            # Phase.SCORE: the loop oracles evaluate the aggregated
+            # global (cfl) / node 0 after mixing (dfl) on requester_test
+            acc = jax.vmap(eval_one)(new_last, arrays["test_x"],
+                                     arrays["test_y"], arrays["test_mask"])
+
+            # Phase.ACCOUNT without the battery term: the baselines
+            # carry no battery (energy is priced host-side per session
+            # via cfl_session/dfl_session), so stopping is accuracy or
+            # the round budget only.
+            reached = acc >= arrays["desired_accuracy"]
+            stop_code = jnp.where(active & reached, protocol.STOP_ACCURACY,
+                                  stop_code)
+            rounds_done = rounds_done + active.astype(jnp.int32)
+            last = jnp.where(active[:, None], new_last, last)
+            contrib = jnp.where(active[:, None, None], new_contrib, contrib)
+            next_active = active & ~reached
+
+            def put(buf, row):
+                return jax.lax.dynamic_update_slice_in_dim(buf, row[None], rr, 0)
+
+            acc_h = put(acc_h, acc)
+            # requester-lane (client 0) last-epoch fit loss per round
+            loss_h = put(loss_h, fit_loss.reshape(R, N)[:, 0])
+            bat_h = put(bat_h, level)
+            exec_h = put(exec_h, active.astype(jnp.float32))
+            body_h = put(body_h, jnp.float32(1.0))
+            return (contrib, cscale, live, live_s, last, level, next_active,
+                    stop_code, rounds_done, clevel, acc_h, loss_h, bat_h,
+                    exec_h, body_h, member_h)
+
+    if method == "cfl":
+        # the shared global model every client fits from each round
+        last0 = jnp.broadcast_to(arrays["init_flat"], (R, P))
+    elif method == "dfl":
+        # node 0's (the requester's) initial params
+        last0 = contrib_flat[:, 0]
+    else:
+        last0 = (jnp.broadcast_to(arrays["init_flat"], (R, P)) if mobility_on
+                 else jnp.zeros((R, P), jnp.float32))
     clevel0 = arrays["clevel0"] if mobility_on else jnp.zeros((R, N), jnp.float32)
     # per-tile scales travel in the carried state (refresh rewrites
     # them); fp32 runs carry a token buffer
@@ -533,7 +669,9 @@ def run_fleet(task, requesters: Sequence[RequesterSpec],
               cost_model: Optional[CostModel] = None,
               use_pallas: bool = True,
               interpret: Optional[bool] = None,
-              round_chunk: int = 4) -> FleetResult:
+              round_chunk: int = 4,
+              method: str = "enfed",
+              dfl_topology: str = "mesh") -> FleetResult:
     """Run ``len(requesters)`` concurrent EnFed sessions as one jit program.
 
     Note: prefer the :mod:`repro.api` facade
@@ -560,18 +698,38 @@ def run_fleet(task, requesters: Sequence[RequesterSpec],
     entirely in wire format — int8 payload + per-tile fp32 scales — so
     ``staged_param_bytes`` and ``device_round_state_bytes`` drop ~4x on
     tile-amortizing models, and ``CostModel`` prices the compressed
-    ``model_bytes`` in every eq. (4)-(7) term.
+    ``model_bytes`` in every eq. (4)-(7) term.  ``compress="auto"``
+    resolves to int8 or fp32 at the tile-padding crossover
+    (:func:`repro.kernels.quantize.ops.resolve_compress`) before any of
+    that staging happens.
+
+    ``method`` selects the traced protocol variant: ``"enfed"``
+    (default, the full Algorithm 1) or the paper's baselines ``"dfl"``
+    (gossip mixing over ``dfl_topology`` — "mesh" or "ring") and
+    ``"cfl"`` (server-side FedAvg), which run as lanes of the same
+    compiled program with the per-method phase mask
+    (``protocol.method_phases``) deciding which steps trace.  Baseline
+    lanes are the loop learners' client lists (client 0 = the
+    requester's own shard, then every in-range neighbor with data);
+    their ``SessionResult`` views carry ``battery=None`` and
+    ``cfl_session``/``dfl_session`` energy reports, exactly like
+    ``repro.api``'s loop-engine baselines.
     """
     from repro.kernels.common import resolve_interpret
 
     cfg = cfg if cfg is not None else EnFedConfig()
     cost = cost_model or CostModel()
-    mob = cfg.mobility
+    protocol.method_phases(method)     # validate the variant name
     R = len(requesters)
     if R == 0:
         raise ValueError("empty fleet")
     if round_chunk < 1:
         raise ValueError(f"round_chunk must be >= 1 (got {round_chunk})")
+    if method != "enfed":
+        return _run_fleet_baseline(task, requesters, cfg, cost, method,
+                                   dfl_topology, use_pallas, interpret,
+                                   round_chunk)
+    mob = cfg.mobility
 
     # ---- Phase.HANDSHAKE (host-side, static) ------------------------------
     # Static world: sign utility-ranked contracts once.  Mobility: fix the
@@ -673,13 +831,17 @@ def run_fleet(task, requesters: Sequence[RequesterSpec],
     # entirely on the wire-format payload + per-tile scales.
     contrib_flat, ravel_spec = tree_ravel(contrib_stack, batch_ndim=2)
     P = contrib_flat.shape[-1]
+    # "auto" resolves to a concrete wire format here, from the flat
+    # model size — the same resolution EnFedSession and the cost model
+    # apply, so all paths land on one side of the crossover together
+    wire_compress = resolve_compress(cfg.compress, P)
     # fp32 lane rows, kept host-side for the refresh-dedup key/live rows
     # (the donated buffer below may be quantized)
     contrib_np = (np.asarray(contrib_flat)
                   if cfg.contributor_refresh_epochs > 0 and mob is None
                   else None)
     c_scales = None
-    if cfg.compress == "int8":
+    if wire_compress == "int8":
         lp = padded_len(P)
         q0, s0 = quantize_flat_batched(
             jnp.pad(contrib_flat, ((0, 0), (0, 0), (0, lp - P)))
@@ -716,7 +878,7 @@ def run_fleet(task, requesters: Sequence[RequesterSpec],
     # ---- Phase.ACCOUNT constants (static per requester) -------------------
     num_params = tree_size(template)
     model_bytes = update_wire_bytes(num_params, encrypt=cfg.encrypt,
-                                    compress=cfg.compress,
+                                    compress=wire_compress,
                                     raw_bytes=tree_bytes(template))
     batteries = [s.battery or BatteryState() for s in requesters]
     if mob is None:
@@ -809,7 +971,7 @@ def run_fleet(task, requesters: Sequence[RequesterSpec],
                           u_seed=jnp.asarray(np.array(u_seed, np.int32)),
                           ref_uidx=jnp.asarray(ref_uidx),
                           lane_valid=jnp.asarray(lane_valid))
-            if cfg.compress == "int8":
+            if wire_compress == "int8":
                 lp = padded_len(P)
                 lq, ls = quantize_flat_batched(
                     jnp.pad(live0, ((0, 0), (0, lp - P))),
@@ -845,8 +1007,8 @@ def run_fleet(task, requesters: Sequence[RequesterSpec],
         task, use_pallas, resolve_interpret(interpret), ref_epochs > 0,
         int(round_chunk), cfg.max_rounds, cfg.epochs, cfg.batch_size,
         steps_max, ref_epochs, ref_steps, ravel_spec, mob, cfg.n_max,
-        cfg.strategy if mob is not None else None, cfg.compress, P,
-        contrib_flat, arrays)
+        cfg.strategy if mob is not None else None, wire_compress, P,
+        "enfed", contrib_flat, arrays)
     acc_h, loss_h, bat_h, exec_h, body_h, member_h = (np.asarray(t) for t in traces)
     rounds_np = np.asarray(rounds_done)
     codes_np = np.asarray(stop_code)
@@ -859,7 +1021,7 @@ def run_fleet(task, requesters: Sequence[RequesterSpec],
     # Under compress the final state is wire format — the write-back is
     # its dequantized image, exactly what the loop engine leaves behind.
     if ref_epochs > 0:
-        if cfg.compress == "int8":
+        if wire_compress == "int8":
             contrib_final = dequantize_flat_batched(
                 contrib_final, cscale_final)[..., :P]
         contrib_tree = tree_unravel(ravel_spec, contrib_final)
@@ -915,3 +1077,182 @@ def run_fleet(task, requesters: Sequence[RequesterSpec],
         device_round_state_bytes=device_round_state_bytes,
         refresh_gather_bytes=gather_bytes,
         refresh_gather_bytes_dense=gather_bytes_dense)
+
+
+def _run_fleet_baseline(task, requesters: Sequence[RequesterSpec], cfg, cost,
+                        method: str, dfl_topology: str, use_pallas: bool,
+                        interpret, round_chunk: int) -> FleetResult:
+    """Stage and run the dfl/cfl traced protocol variants.
+
+    Client roster of requester i = [own shard] + every in-range neighbor
+    with data, in neighborhood order — exactly ``WorldSpec.client_data``
+    and therefore the loop learners' ``client_data`` list.  Shards are
+    content-deduplicated into the same unique-table + gather-index form
+    the enfed path stages; node params are the flat (R, N, P) round
+    state.  Mobility, refresh, compression-of-state, and battery do not
+    exist for the baselines (their loop oracles have none), so those
+    knobs are stripped before tracing; ``cfg.compress`` still prices the
+    wire in the cost domain, matching the loop learners.
+    """
+    from repro.kernels.common import resolve_interpret
+
+    if dfl_topology not in ("mesh", "ring"):
+        raise ValueError(f"unknown dfl topology {dfl_topology!r} (mesh|ring)")
+    R = len(requesters)
+
+    # ---- client rosters (the loop learners' client_data lists) ------------
+    rosters = []
+    for spec in requesters:
+        shards = [spec.own_train]
+        for dev in spec.neighborhood:
+            st = spec.contributor_states.get(dev.device_id)
+            if st is not None:
+                shards.append(st["data"])
+        rosters.append(shards)
+    N = max(len(s) for s in rosters)
+
+    # ---- deduplicated shard table + per-lane gather indices ---------------
+    shard_rows: dict = {}
+    shard_x, shard_y = [], []
+    cidx = np.zeros((R, N), np.int32)
+    cli_n = np.zeros((R, N), np.int32)
+    for i, shards in enumerate(rosters):
+        for j, (xs, ys) in enumerate(shards):
+            xa = np.ascontiguousarray(xs, np.float32)
+            ya = np.ascontiguousarray(ys, np.int32)
+            key = (xa.shape,
+                   hashlib.blake2b(xa.tobytes(), digest_size=16).digest(),
+                   hashlib.blake2b(ya.tobytes(), digest_size=16).digest())
+            row = shard_rows.get(key)
+            if row is None:
+                row = len(shard_x)
+                shard_rows[key] = row
+                shard_x.append(xa)
+                shard_y.append(ya)
+            cidx[i, j] = row
+            cli_n[i, j] = len(xa)
+    U = len(shard_x)
+    n_c_max = max(len(x) for x in shard_x)
+    cx_tab = np.zeros((U, n_c_max) + shard_x[0].shape[1:], np.float32)
+    cy_tab = np.zeros((U, n_c_max), np.int32)
+    for u, (x, y) in enumerate(zip(shard_x, shard_y)):
+        cx_tab[u, :len(x)] = x
+        cy_tab[u, :len(y)] = y
+
+    # ---- node params: the flat (R, N, P) round state -----------------------
+    template = task.init(seed=cfg.seed)
+    init_flat, ravel_spec = tree_ravel(template)
+    P = int(init_flat.shape[-1])
+    if method == "dfl":
+        # DFLLearner: node j of every requester inits from seed + j
+        node_inits = jnp.stack(
+            [init_flat] + [tree_ravel(task.init(seed=cfg.seed + j))[0]
+                           for j in range(1, N)])
+        contrib_flat = jnp.broadcast_to(node_inits[None], (R, N, P)) + 0.0
+    else:
+        # CFL carries ONE global (in `last`); the lane buffer holds the
+        # current round's fitted client updates
+        contrib_flat = jnp.zeros((R, N, P), jnp.float32)
+
+    # ---- aggregation weights ----------------------------------------------
+    if method == "cfl":
+        # CFLLearner weights clients by shard size; padded lanes weigh 0
+        cli_w = cli_n.astype(np.float32)
+    else:
+        strategy = topology.AggregationStrategy(
+            kind="dfl_mesh" if dfl_topology == "mesh" else "dfl_ring")
+        mix_w = np.zeros((R, N, N), np.float32)
+        for i, shards in enumerate(rosters):
+            n_i = len(shards)
+            mix_w[i, :n_i, :n_i] = topology.group_mixing_matrix(n_i, strategy)
+            for k in range(n_i, N):
+                mix_w[i, k, k] = 1.0    # padded lanes mix with themselves
+
+    # ---- requester test stacks + schedule bounds --------------------------
+    test_x, test_mask = _pad_stack(
+        [np.asarray(s.own_test[0], np.float32) for s in requesters],
+        max(len(s.own_test[0]) for s in requesters))
+    test_y, _ = _pad_stack(
+        [np.asarray(s.own_test[1], np.int32) for s in requesters],
+        test_x.shape[1])
+    steps_max = max(schedule.fit_steps(int(n), cfg.batch_size)
+                    for n in cli_n[cli_n > 0])
+
+    arrays = dict(
+        cx_tab=jnp.asarray(cx_tab), cy_tab=jnp.asarray(cy_tab),
+        cidx=jnp.asarray(cidx), cli_n=jnp.asarray(cli_n),
+        test_x=jnp.asarray(test_x), test_y=jnp.asarray(test_y),
+        test_mask=jnp.asarray(test_mask), seed0=jnp.int32(cfg.seed),
+        desired_accuracy=jnp.float32(cfg.desired_accuracy),
+        level0=jnp.ones((R,), jnp.float32))
+    if method == "cfl":
+        arrays.update(cli_w=jnp.asarray(cli_w), init_flat=init_flat)
+    else:
+        arrays.update(mix_w=jnp.asarray(mix_w))
+    staged_param_bytes = int(contrib_flat.nbytes)
+    shard_bytes = int(cx_tab.nbytes + cy_tab.nbytes + cidx.nbytes)
+    shard_bytes_dense = int(R * N * (cx_tab.nbytes + cy_tab.nbytes)
+                            / max(U, 1))
+    index_bytes = int(cli_n.nbytes + cidx.nbytes + 4)
+    staged = [contrib_flat] + [v for v in arrays.values()
+                               if hasattr(v, "nbytes")]
+    staged_bytes = int(sum(int(v.nbytes) for v in staged))
+
+    (_contrib, _cscale, last_flat, level, stop_code, rounds_done,
+     traces) = _fleet_program(
+        task, use_pallas, resolve_interpret(interpret), False,
+        int(round_chunk), cfg.max_rounds, cfg.epochs, cfg.batch_size,
+        steps_max, 0, 1, ravel_spec, None, cfg.n_max, None, None, P,
+        method, contrib_flat, arrays)
+    acc_h, loss_h, bat_h, exec_h, body_h, member_h = (
+        np.asarray(t) for t in traces)
+    rounds_np = np.asarray(rounds_done)
+    codes_np = np.asarray(stop_code)
+
+    # ---- per-session views (loop-baseline-compatible) ----------------------
+    # Identical pricing to CFLLearner/DFLLearner.run_config, with the
+    # analytic t_local_fit fallback (a compiled fleet has no per-node
+    # host wall clock to measure); battery=None like the loop baselines.
+    num_params = tree_size(template)
+    model_bytes = update_wire_bytes(num_params, encrypt=False,
+                                    compress=getattr(cfg, "compress", None),
+                                    raw_bytes=tree_bytes(template))
+    last_p = tree_unravel(ravel_spec, last_flat)
+    sessions = []
+    total_e = 0.0
+    for i, spec in enumerate(requesters):
+        r_i = int(rounds_np[i])
+        n_cli = len(rosters[i])
+        if method == "cfl":
+            report = cost.cfl_session(
+                rounds=r_i, num_params=num_params, model_bytes=model_bytes,
+                num_samples=len(spec.own_train[0]), epochs=cfg.epochs)
+            history = {"accuracy": [float(a) for a in acc_h[:r_i, i]],
+                       "loss": []}
+        else:
+            report = cost.dfl_session(
+                rounds=r_i, n_peers=n_cli - 1, num_params=num_params,
+                model_bytes=model_bytes,
+                num_samples=len(spec.own_train[0]), epochs=cfg.epochs,
+                topology=dfl_topology)
+            history = {"accuracy": [float(a) for a in acc_h[:r_i, i]]}
+        total_e += report.e_tot
+        sessions.append(SessionResult(
+            accuracy=history["accuracy"][-1] if history["accuracy"] else 0.0,
+            rounds=r_i, n_contributors=n_cli - 1, report=report,
+            battery=None, history=history,
+            stop_reason=protocol.stop_reason_name(codes_np[i]),
+            params=jax.tree_util.tree_map(lambda l: l[i], last_p)))
+    return FleetResult(
+        sessions=sessions, rounds=rounds_np, stop_codes=codes_np,
+        accuracy=np.array([s.accuracy for s in sessions], np.float32),
+        battery_level=np.asarray(level), total_energy_j=float(total_e),
+        history={"accuracy": acc_h, "loss": loss_h, "battery": bat_h,
+                 "executed": exec_h, "round_executed": body_h,
+                 "member": member_h},
+        staged_host_bytes=staged_bytes, staged_index_bytes=index_bytes,
+        staged_shard_bytes=shard_bytes,
+        staged_shard_bytes_dense=shard_bytes_dense,
+        staged_param_bytes=staged_param_bytes,
+        device_round_state_bytes=staged_param_bytes,
+        refresh_gather_bytes=0, refresh_gather_bytes_dense=0)

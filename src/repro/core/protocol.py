@@ -41,6 +41,44 @@ class Phase(enum.Enum):
 ROUND_PHASES = (Phase.RENEGOTIATE, Phase.COLLECT, Phase.AGGREGATE, Phase.FIT,
                 Phase.SCORE, Phase.ACCOUNT, Phase.REFRESH)
 
+# ---------------------------------------------------------------------------
+# Method variants: every method the fleet engine can trace is a subset of
+# the same phase vocabulary.  ``method_phases(name)`` is the per-method
+# phase mask — the fleet engine consults it at trace time (the method is
+# a static jit argument) to decide which protocol steps are live, so
+# "dfl" and "cfl" are literally the enfed round body with phases masked
+# off, not separate programs:
+#
+# * ``enfed`` — the full Algorithm-1 round (requester-side aggregation,
+#   mobility renegotiation, contributor refresh, battery accounting).
+# * ``dfl``   — decentralized FedAvg: every client fits its own shard
+#   from its own params, then gossip-mixes over the mesh/ring topology
+#   (AGGREGATE is the mixing step).  No renegotiate/refresh/battery.
+# * ``cfl``   — centralized FedAvg: every client fits from the shared
+#   global, a server-side data-size-weighted FedAvg replaces it
+#   (AGGREGATE is server-side).  No renegotiate/refresh/battery.
+#
+# The loop learners (``repro.core.federated.CFLLearner`` /
+# ``DFLLearner.run_config``) are the parity oracles for the two baseline
+# variants, exactly as ``EnFedSession`` is for enfed.
+FLEET_METHODS = ("enfed", "dfl", "cfl")
+
+_METHOD_PHASES = {
+    "enfed": ROUND_PHASES,
+    "dfl": (Phase.COLLECT, Phase.AGGREGATE, Phase.FIT, Phase.SCORE,
+            Phase.ACCOUNT),
+    "cfl": (Phase.COLLECT, Phase.AGGREGATE, Phase.FIT, Phase.SCORE,
+            Phase.ACCOUNT),
+}
+
+
+def method_phases(method: str):
+    """The protocol phases live for ``method`` (trace-time phase mask)."""
+    if method not in _METHOD_PHASES:
+        raise ValueError(
+            f"unknown fleet method {method!r}; one of {FLEET_METHODS}")
+    return _METHOD_PHASES[method]
+
 # Stop reasons, encoded as small ints so the fleet engine can carry them
 # as traced per-requester state.  Order encodes check priority: the loop
 # engine tests accuracy before battery, so does the fleet engine.

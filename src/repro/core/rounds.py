@@ -41,7 +41,8 @@ import jax.numpy as jnp
 from repro.core import aggregation, crypto, mobility, protocol, topology
 from repro.core.battery import BatteryState
 from repro.core.energy import CostModel, EnergyReport, update_wire_bytes
-from repro.kernels.quantize.ops import compress_update, decompress_update
+from repro.kernels.quantize.ops import (compress_update, decompress_update,
+                                        resolve_compress)
 from repro.core.incentive import (Contract, NeighborDevice, candidate_pool,
                                   contracts_from_membership,
                                   select_contributors)
@@ -69,7 +70,10 @@ class EnFedConfig:
     # error bounded per tile by absmax/254.  The first accuracy-affecting
     # protocol knob: both engines apply the identical
     # compress/decompress round-trip, parity-tested in
-    # tests/test_compress.py.
+    # tests/test_compress.py.  "auto" resolves to "int8" or None per
+    # model size via repro.kernels.quantize.ops.resolve_compress — below
+    # the tile-padding crossover int8 is strictly worse (bigger wire,
+    # slower simulation), so small models fall back to fp32.
     compress: Optional[str] = None
     # which signed contributors feed eq. (14) each round (None = all, the
     # paper's virtual-server behaviour); see topology.contributor_round_mask
@@ -82,9 +86,9 @@ class EnFedConfig:
     mobility: Optional[MobilityConfig] = None
 
     def __post_init__(self):
-        if self.compress not in (None, "int8"):
+        if self.compress not in (None, "int8", "auto"):
             raise ValueError(
-                f"unknown compress mode {self.compress!r} (None|'int8')")
+                f"unknown compress mode {self.compress!r} (None|'int8'|'auto')")
 
 
 @dataclasses.dataclass
@@ -125,6 +129,14 @@ class EnFedSession:
         self.cfg = cfg if cfg is not None else EnFedConfig()
         self.cost = cost_model or CostModel()
         self.battery = battery or BatteryState()
+        # resolve the compress="auto" crossover ONCE, from the model size;
+        # every wire/refresh/cost read below uses the resolved format so
+        # both engines (run_fleet resolves identically from the same
+        # param count) make the same int8-vs-fp32 call
+        self._compress = self.cfg.compress
+        if self._compress == "auto" and contributor_states:
+            template = next(iter(contributor_states.values()))["params"]
+            self._compress = resolve_compress("auto", tree_size(template))
 
     # -- protocol phases (protocol.Phase.HANDSHAKE) ---------------------------
     def handshake(self) -> List[Contract]:
@@ -136,7 +148,7 @@ class EnFedSession:
         self.nonces = {c.device_id: rng.integers(0, 256, 8).astype(np.uint8)
                        for c in contracts}
         self._wire = {}
-        if self.cfg.compress == "int8":
+        if self._compress == "int8":
             for c in contracts:
                 self._wire_pack(c.device_id,
                                 self.contributor_states[c.device_id]["params"])
@@ -167,7 +179,7 @@ class EnFedSession:
         """Phase.COLLECT: contributor -> (compress) -> (encrypt) -> wire
         -> (decrypt) -> (decompress)."""
         params = self.contributor_states[device_id]["params"]
-        if self.cfg.compress == "int8":
+        if self._compress == "int8":
             # the wire image really is the int8 payload + fp32 scales;
             # under encryption the AES-CTR round trip runs over exactly
             # those bytes (CTR preserves length, so model_bytes is the
@@ -199,7 +211,7 @@ class EnFedSession:
         """Phase.REFRESH: contributors keep improving between rounds."""
         if self.cfg.contributor_refresh_epochs <= 0:
             return
-        compress = self.cfg.compress == "int8"
+        compress = self._compress == "int8"
         for c in contracts:
             st = self.contributor_states[c.device_id]
             # under compress the contributor's working copy is the wire
@@ -335,7 +347,7 @@ class EnFedSession:
         self.nonces = {d.device_id: rng.integers(0, 256, 8).astype(np.uint8)
                        for d in cands}
         self._wire = {}
-        if cfg.compress == "int8":
+        if self._compress == "int8":
             for d in cands:
                 self._wire_pack(d.device_id,
                                 self.contributor_states[d.device_id]["params"])
@@ -354,7 +366,7 @@ class EnFedSession:
         params = self.task.init(seed=cfg.seed)
         num_params = tree_size(params)
         model_bytes = update_wire_bytes(num_params, encrypt=cfg.encrypt,
-                                        compress=cfg.compress,
+                                        compress=self._compress,
                                         raw_bytes=tree_bytes(params))
         e_tab = np.array(self.cost.round_energy_table(
             max_contrib=n_cand, num_params=num_params, model_bytes=model_bytes,
@@ -442,13 +454,13 @@ class EnFedSession:
                     did = int(ids[j])
                     st = self.contributor_states[did]
                     base = (self._wire_image(did, st["params"])
-                            if cfg.compress == "int8" else st["params"])
+                            if self._compress == "int8" else st["params"])
                     fitted, _ = self.task.fit(
                         base, st["data"],
                         cfg.contributor_refresh_epochs, cfg.batch_size,
                         seed=cfg.seed + did)
                     st["params"] = (self._wire_pack(did, fitted)
-                                    if cfg.compress == "int8" else fitted)
+                                    if self._compress == "int8" else fitted)
 
         mean_members = float(np.mean(history["members"])) if rounds else 0.0
         report = self.cost.session(

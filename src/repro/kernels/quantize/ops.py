@@ -38,6 +38,35 @@ def compressed_nbytes(num_params: int) -> int:
     return lp + 4 * (lp // TILE)
 
 
+# ``compress="auto"`` picks int8 only when it actually shrinks the wire
+# by at least this factor vs raw fp32.  Below the crossover (small
+# models, where TILE padding dominates the payload) int8 is BOTH bigger
+# on the wire than the nominal 4x suggests AND slower to simulate —
+# quantize/dequantize launches swamp the tiny fedavg (the documented
+# small-R regression in BENCH_fleet.json ``results_compress``) — so auto
+# falls back to fp32.
+AUTO_COMPRESS_MAX_RATIO = 0.5
+
+
+def resolve_compress(mode, num_params: int):
+    """Resolve a ``compress`` protocol knob to a concrete wire format.
+
+    ``None`` and ``"int8"`` are explicit overrides and pass through
+    unchanged.  ``"auto"`` returns ``"int8"`` iff the tile-padded int8
+    wire image is at most ``AUTO_COMPRESS_MAX_RATIO`` of the raw fp32
+    bytes for a ``num_params``-sized update, else ``None``.  Every
+    engine and the cost model resolve through this one function so the
+    crossover decision is identical everywhere.
+    """
+    if mode is None or mode == "int8":
+        return mode
+    if mode == "auto":
+        if compressed_nbytes(num_params) <= AUTO_COMPRESS_MAX_RATIO * 4 * num_params:
+            return "int8"
+        return None
+    raise ValueError(f"unknown compress mode {mode!r}; one of None, 'int8', 'auto'")
+
+
 def compress_update(vec, *, use_pallas: bool = True, interpret=None):
     """vec: (L,) fp32 -> (q, scales, L)."""
     if use_pallas:

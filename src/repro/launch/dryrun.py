@@ -9,7 +9,7 @@ hardware: a sharding mismatch, an unsupported collective, or an
 inconsistent shard_map spec fails here.
 
 Usage:
-  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-3b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --arch debug-dense --shape train_4k
   PYTHONPATH=src python -m repro.launch.dryrun --all            # full matrix
   PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
 Options:

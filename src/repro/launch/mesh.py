@@ -66,12 +66,12 @@ def client_axes_for(cfg, mesh) -> tuple:
     federate over the pod axis only (cross-silo); everything else
     federates over (pod,) data.
 
-    fsdp + MoE (deepseek-v3) cannot federate at all in THIS environment:
+    fsdp + MoE cannot federate at all in THIS environment:
     the token-local MoE dispatch nested inside a client shard_map trips
     three distinct XLA-CPU SPMD-partitioner CHECK-failures (bisected in
     EXPERIMENTS.md §Dry-run).  It trains as conventional sync DP across
     pods instead; on a real TPU backend the pod-level schedule is the
-    same one internlm2-20b (fsdp, dense) exercises successfully.
+    same one an fsdp dense config exercises successfully.
     """
     names = mesh.axis_names
     if getattr(cfg, "fsdp", False):

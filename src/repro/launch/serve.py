@@ -1,6 +1,6 @@
 """Batched serving driver: prefill a prompt batch, then decode tokens.
 
-  PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b \
+  PYTHONPATH=src python -m repro.launch.serve --arch debug-dense \
       --preset smoke --batch 4 --prompt-len 32 --gen 16
 """
 
@@ -19,7 +19,7 @@ from repro.models import Transformer
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", choices=sorted(ARCHS), default="qwen2.5-3b")
+    ap.add_argument("--arch", choices=sorted(ARCHS), default="debug-dense")
     ap.add_argument("--preset", choices=("full", "smoke"), default="smoke")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)

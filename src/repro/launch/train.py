@@ -7,7 +7,7 @@ client-stacked FederatedTrainer (exact per-client semantics); the
 per-round participation mask comes from the incentive/contract layer,
 and battery/energy accounting per the paper runs alongside.
 
-  PYTHONPATH=src python -m repro.launch.train --arch xlstm-125m \
+  PYTHONPATH=src python -m repro.launch.train --arch debug-dense \
       --preset smoke --steps 50 --strategy enfed --clients 8 --neighborhood 4
 """
 
@@ -37,7 +37,7 @@ from repro.utils.tree import tree_size, tree_bytes
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", choices=sorted(ARCHS), default="xlstm-125m")
+    ap.add_argument("--arch", choices=sorted(ARCHS), default="debug-dense")
     ap.add_argument("--preset", choices=("full", "smoke"), default="smoke")
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--batch", type=int, default=8, help="global batch (tokens rows)")

@@ -106,9 +106,9 @@ class ModelConfig:
     remat: bool = True
 
     # --- distribution ---
-    # ZeRO-3-style FSDP over the data axis. Required where params+Adam
-    # state exceed HBM with tensor-parallel alone (deepseek-v3-671b,
-    # internlm2-20b).  Mutually exclusive with using the data axis as an
+    # ZeRO-3-style FSDP over the data axis. For configs whose params+
+    # Adam state exceed HBM with tensor-parallel alone.  Mutually
+    # exclusive with using the data axis as an
     # EnFed client axis: fsdp configs federate over the pod axis instead
     # (see DESIGN.md §Arch-applicability).
     fsdp: bool = False

@@ -9,8 +9,8 @@ path- and shape-based rules:
   axis on ``model`` (expert parallel) and FSDP the next axis on ``data``;
 * otherwise the last-most axis divisible by the ``model`` axis size is
   tensor-parallel, and the largest remaining axis divisible by the
-  ``data`` axis size is FSDP-sharded (ZeRO-3 style) — required for
-  deepseek-v3-671b's optimizer state to fit 16 GB/chip;
+  ``data`` axis size is FSDP-sharded (ZeRO-3 style) — how
+  billion-parameter optimizer state would fit 16 GB/chip;
 * 1-D leaves (biases, norm scales, RG-LRU ``lam``) stay replicated.
 
 Inputs shard their leading (batch) axis over ``("pod", "data")``.

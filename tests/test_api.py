@@ -259,6 +259,50 @@ def test_baselines_warn_when_mobility_world_is_dropped(problem):
         Experiment(_world(problem), method).run("dfl")
 
 
+def test_baselines_honor_fleet_engine(problem):
+    """With ExecutionSpec(engine="fleet") the dfl/cfl compare rows come
+    from the compiled fleet program — engine recorded as "fleet", raw
+    FleetResult attached, NO loop_baseline extrapolation — and match the
+    loop-engine rows on the same world + seed."""
+    from repro.core.fleet import FleetResult
+
+    results = {e: Experiment(_world(problem), _METHOD,
+                             ExecutionSpec(engine=e)).compare(["dfl", "cfl"])
+               for e in ("loop", "fleet")}
+    for name in ("dfl", "cfl"):
+        rl, rf = results["loop"][name], results["fleet"][name]
+        assert rl.engine == "loop" and rf.engine == "fleet"
+        assert isinstance(rf.raw, FleetResult)
+        assert rf.rounds == rl.rounds
+        assert rf.stop_reason == rl.stop_reason
+        assert rf.sessions[0].battery is None
+        np.testing.assert_allclose(rf.history["accuracy"],
+                                   rl.history["accuracy"],
+                                   rtol=1e-5, atol=1e-6)
+        fv, _ = ravel_pytree(rf.params)
+        lv, _ = ravel_pytree(rl.params)
+        np.testing.assert_allclose(np.asarray(fv), np.asarray(lv),
+                                   rtol=1e-4, atol=1e-5)
+        # the energy figure is simulated through the shared cost model,
+        # not extrapolated: finite and strictly positive
+        assert np.isfinite(rf.energy_j) and rf.energy_j > 0.0
+
+
+def test_deprecated_learner_run_shims_warn(problem):
+    """CFLLearner.run / DFLLearner.run are legacy private-kwarg shims;
+    they must point callers at run_config via DeprecationWarning."""
+    from repro.core.federated import CFLLearner, DFLLearner
+
+    task, own_train, own_test, fleet, states = problem
+    data = [own_train] + [states[d.device_id]["data"] for d in fleet]
+    with pytest.warns(DeprecationWarning, match="run_config"):
+        CFLLearner(task, data, own_test).run(
+            target_accuracy=0.05, max_rounds=1, epochs=1, batch_size=BATCH)
+    with pytest.warns(DeprecationWarning, match="run_config"):
+        DFLLearner(task, data, own_test, "ring").run(
+            target_accuracy=0.05, max_rounds=1, epochs=1, batch_size=BATCH)
+
+
 def test_unknown_method_and_engine_fail_fast(problem):
     with pytest.raises(ValueError, match="unknown method"):
         Experiment(_world(problem), "sputnik").run()

@@ -160,8 +160,71 @@ def test_update_wire_bytes_compression_ratio():
 
 
 # ---------------------------------------------------------------------------
-# engine parity under the knob
+# compress="auto": the padding-overhead crossover
 # ---------------------------------------------------------------------------
+
+
+def test_resolve_compress_crossover():
+    """"auto" picks int8 only past the tile-padding crossover; explicit
+    modes pass through; junk fails fast."""
+    from repro.kernels.quantize.ops import (AUTO_COMPRESS_MAX_RATIO, TILE,
+                                            compressed_nbytes, resolve_compress)
+
+    # explicit overrides are never second-guessed
+    assert resolve_compress(None, 10) is None
+    assert resolve_compress("int8", 10) == "int8"
+    # below one tile the padded int8 image beats half of fp32 only for
+    # big-enough P: the tiny suite model stays fp32, the big one flips
+    assert resolve_compress("auto", 229) is None
+    assert resolve_compress("auto", 2821) == "int8"
+    # the decision IS the documented ratio, at both sides of the boundary
+    for p in (64, 229, 453, 513, 2048, 2821, 100_000):
+        want = ("int8" if compressed_nbytes(p) <= AUTO_COMPRESS_MAX_RATIO * 4 * p
+                else None)
+        assert resolve_compress("auto", p) == want, p
+    # a model of exactly half a tile of fp32 bytes sits right at the
+    # crossover: padded payload + scale > ratio * raw -> fp32
+    assert resolve_compress("auto", TILE // 2) is None
+    with pytest.raises(ValueError):
+        resolve_compress("int4", 10)
+
+
+def test_update_wire_bytes_auto_matches_resolved_mode():
+    from repro.kernels.quantize.ops import resolve_compress
+
+    for p in (229, 2821, 100_000):
+        resolved = resolve_compress("auto", p)
+        assert update_wire_bytes(p, compress="auto") == \
+            update_wire_bytes(p, compress=resolved), p
+    assert EnFedConfig(compress="auto").compress == "auto"  # accepted
+
+
+def test_auto_resolves_per_model_in_both_engines(problem, problem_big):
+    """Under "auto" a sub-crossover model runs EXACTLY the fp32 path and
+    a post-crossover model EXACTLY the int8 path — in both engines."""
+    def run_pair(prob, mode_a, mode_b, big):
+        task, own_train, own_test, fleet, states = prob
+        out = {}
+        for mode in (mode_a, mode_b):
+            cfg = EnFedConfig(desired_accuracy=0.99, max_rounds=1, epochs=1,
+                              batch_size=BATCH, encrypt=False,
+                              contributor_refresh_epochs=1, compress=mode)
+            loop = EnFedSession(task, own_train, own_test, fleet,
+                                copy.deepcopy(states), cfg).run()
+            fl = run_fleet(task, [RequesterSpec(own_train, own_test, fleet,
+                                                copy.deepcopy(states))], cfg)
+            out[mode] = (loop, fl)
+        (la, fa), (lb, fb) = out[mode_a], out[mode_b]
+        for x, y in ((la, lb), (fa.sessions[0], fb.sessions[0])):
+            xv, _ = ravel_pytree(x.params)
+            yv, _ = ravel_pytree(y.params)
+            np.testing.assert_array_equal(np.asarray(xv), np.asarray(yv))
+        # identical wire pricing and round-state footprint
+        assert la.report.times.t_com == lb.report.times.t_com
+        assert fa.staged_param_bytes == fb.staged_param_bytes
+
+    run_pair(problem, "auto", None, big=False)        # tiny: auto == fp32
+    run_pair(problem_big, "auto", "int8", big=True)   # big: auto == int8
 
 
 def _run_both(problem, cfg, battery_kw=None):

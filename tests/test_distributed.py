@@ -70,7 +70,7 @@ def test_federated_train_step_all_strategies():
         from repro.core.topology import AggregationStrategy
         from repro.sharding import use_mesh
         mesh = make_debug_mesh(multi_pod=True)
-        cfg = get_config("granite-moe-1b-a400m").smoke()
+        cfg = get_config("debug-moe")
         model = Transformer(cfg)
         caxes = client_axes_for(cfg, mesh)
         C = num_clients(mesh, caxes)
@@ -109,7 +109,7 @@ def test_dryrun_single_combo_on_debug_scale():
         from repro.launch.steps import make_serve_step
         from repro.sharding import param_specs, use_mesh
         from repro.launch.hlo_stats import collective_bytes, cost_summary
-        cfg = get_config("h2o-danube-1.8b").smoke()
+        cfg = get_config("debug-dense")
         mesh = make_debug_mesh()
         model = Transformer(cfg)
         with use_mesh(mesh):

@@ -399,6 +399,101 @@ def test_session_fleet_engine_flag_with_mobility(problem):
 # ---------------------------------------------------------------------------
 
 
+def _baseline_client_data(own_train, fleet, states):
+    """The roster both engines train for a baseline method: the
+    requester's shard first, then each neighborhood device's shard."""
+    return [own_train] + [states[dev.device_id]["data"] for dev in fleet]
+
+
+def test_fleet_baseline_cfl_matches_loop(problem):
+    """method="cfl" lanes of the fleet program reproduce the CFLLearner
+    oracle: same accuracy trajectory, rounds, stop, aggregated params."""
+    from repro.core.federated import CFLLearner
+
+    task, own_train, own_test, fleet, states = problem
+    cfg = EnFedConfig(desired_accuracy=0.99, max_rounds=3, epochs=2,
+                      batch_size=BATCH, seed=5)
+    loop = CFLLearner(task, _baseline_client_data(own_train, fleet, states),
+                      own_test).run_config(cfg)
+    fl = run_fleet(task, [RequesterSpec(own_train, own_test, fleet,
+                                        copy.deepcopy(states))],
+                   cfg, method="cfl").sessions[0]
+    assert fl.rounds == loop.rounds
+    assert fl.battery is None
+    assert fl.stop_reason == ("accuracy_reached"
+                              if loop.accuracy >= cfg.desired_accuracy
+                              else "max_rounds")
+    np.testing.assert_allclose(fl.history["accuracy"], loop.history["accuracy"],
+                               rtol=1e-5, atol=1e-6)
+    lv, _ = ravel_pytree(loop.params)
+    fv, _ = ravel_pytree(fl.params)
+    np.testing.assert_allclose(np.asarray(fv), np.asarray(lv),
+                               rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("topology", ["mesh", "ring"])
+def test_fleet_baseline_dfl_matches_loop(problem, topology):
+    """method="dfl" lanes (mesh AND ring gossip) reproduce DFLLearner."""
+    from repro.core.federated import DFLLearner
+
+    task, own_train, own_test, fleet, states = problem
+    cfg = EnFedConfig(desired_accuracy=0.99, max_rounds=3, epochs=1,
+                      batch_size=BATCH, seed=5)
+    loop = DFLLearner(task, _baseline_client_data(own_train, fleet, states),
+                      own_test, topology).run_config(cfg)
+    fl = run_fleet(task, [RequesterSpec(own_train, own_test, fleet,
+                                        copy.deepcopy(states))],
+                   cfg, method="dfl", dfl_topology=topology).sessions[0]
+    assert fl.rounds == loop.rounds
+    assert fl.battery is None
+    np.testing.assert_allclose(fl.history["accuracy"], loop.history["accuracy"],
+                               rtol=1e-5, atol=1e-6)
+    lv, _ = ravel_pytree(loop.params)
+    fv, _ = ravel_pytree(fl.params)
+    np.testing.assert_allclose(np.asarray(fv), np.asarray(lv),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_fleet_baseline_multi_lane_matches_per_requester_loops(problem):
+    """Several baseline sessions advance in ONE compiled program; each
+    lane matches the loop oracle run on that lane's own roster."""
+    from repro.core.federated import CFLLearner, DFLLearner
+
+    task, own_train, own_test, fleet, states = problem
+    half = (own_train[0][:len(own_train[0]) // 2],
+            own_train[1][:len(own_train[1]) // 2])
+    cfg = EnFedConfig(desired_accuracy=0.99, max_rounds=2, epochs=1,
+                      batch_size=BATCH, seed=2)
+    specs = [RequesterSpec(sh, own_test, fleet, copy.deepcopy(states))
+             for sh in (own_train, half)]
+    for method, learner in (("cfl", CFLLearner),
+                            ("dfl", lambda t, d, te: DFLLearner(t, d, te, "mesh"))):
+        result = run_fleet(task, specs, cfg, method=method)
+        assert len(result.sessions) == 2
+        for lane, sh in enumerate((own_train, half)):
+            loop = learner(task, _baseline_client_data(sh, fleet, states),
+                           own_test).run_config(cfg)
+            fl = result.sessions[lane]
+            assert fl.rounds == loop.rounds
+            np.testing.assert_allclose(fl.history["accuracy"],
+                                       loop.history["accuracy"],
+                                       rtol=1e-5, atol=1e-6)
+            lv, _ = ravel_pytree(loop.params)
+            fv, _ = ravel_pytree(fl.params)
+            np.testing.assert_allclose(np.asarray(fv), np.asarray(lv),
+                                       rtol=1e-4, atol=1e-5)
+
+
+def test_fleet_baseline_rejects_unknown_method_and_topology(problem):
+    task, own_train, own_test, fleet, states = problem
+    cfg = EnFedConfig(max_rounds=1, epochs=1, batch_size=BATCH)
+    spec = RequesterSpec(own_train, own_test, fleet, states)
+    with pytest.raises(ValueError):
+        run_fleet(task, [spec], cfg, method="fedprox")
+    with pytest.raises(ValueError):
+        run_fleet(task, [spec], cfg, method="dfl", dfl_topology="torus")
+
+
 def test_fleet_early_exit_executes_o_k_round_bodies(problem):
     """Every session stops by round 1 (trivial accuracy target); with
     max_rounds=32 the program must execute only the first round chunk —

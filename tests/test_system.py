@@ -71,7 +71,7 @@ def test_enfed_encrypted_equals_plain_aggregation(har_setup):
 @pytest.mark.slow  # full train driver re-jits a transformer from scratch
 def test_train_driver_end_to_end(tmp_path):
     from repro.launch import train as train_mod
-    rc = train_mod.main(["--arch", "xlstm-125m", "--preset", "smoke",
+    rc = train_mod.main(["--arch", "debug-dense", "--preset", "smoke",
                          "--steps", "8", "--clients", "2", "--batch", "4",
                          "--seq", "32", "--strategy", "enfed",
                          "--ckpt-dir", str(tmp_path / "ckpt"),
@@ -83,6 +83,6 @@ def test_train_driver_end_to_end(tmp_path):
 
 def test_serve_driver_end_to_end():
     from repro.launch import serve as serve_mod
-    rc = serve_mod.main(["--arch", "qwen2.5-3b", "--preset", "smoke",
+    rc = serve_mod.main(["--arch", "debug-dense", "--preset", "smoke",
                          "--batch", "2", "--prompt-len", "8", "--gen", "4"])
     assert rc == 0
