@@ -33,14 +33,29 @@ round loop each).  The headline metrics:
 ``--smoke`` additionally runs (a) a 1-session fleet against the
 loop-engine oracle, (b) a CHURN scenario — contributors leave radio
 range mid-session and contracts are re-negotiated — asserting full
-parity including the per-round membership masks, (c) the ``--compare``
-paper-claim rows (below), and (d) the PERF GATE: at the largest fleet
-size shared with the committed ``BENCH_fleet.json`` (same config +
-backend), warm rounds/s must not regress more than 25% on the machine
-that committed the baseline; on a different host (fingerprint mismatch)
-the gate compares the host-normalized ``speedup_vs_loop`` instead at a
-looser threshold — nothing else stops a perf cliff merging.  It exits
-non-zero on any regression — the CI gate.
+parity including the per-round membership masks, (c) a FAULT scenario —
+unreliable links drop, retry, and deliver stale round-(r-1) wire images
+— asserting bitwise-identical fault masks/counters across engines plus
+matching retry-energy accounting, and proving all three failure modes
+actually fired, (d) a KILL-AND-RESUME gate — a checkpointed fleet run
+is killed after its first chunk's checkpoint and resumed from disk; the
+resumed outcome must be BIT-identical to the uninterrupted run,
+(e) the ``--compare`` paper-claim rows (below), and (f) the PERF GATE:
+at the largest fleet size shared with the committed
+``BENCH_fleet.json`` (same config + backend), warm rounds/s must not
+regress more than 25% on the machine that committed the baseline; on a
+different host (fingerprint mismatch) the gate compares the
+host-normalized ``speedup_vs_loop`` instead at a looser threshold —
+nothing else stops a perf cliff merging.  The same gate runs over the
+``results_faults`` sweep (below), so the fault-world round body is
+perf-tracked too.  It exits non-zero on any regression — the CI gate.
+
+* **faulty-world sweep** (``results_faults``) — the static sweep re-run
+  with an unreliable-link world (drops + bounded retries + stale
+  delivery): warm rounds/s per R, the drop/retry/stale totals, and the
+  retry-energy overhead — extra receive windows priced through the ONE
+  ``CostModel.retry_energy`` — alongside the clean-world energy so the
+  robustness tax is a committed number.
 
 ``--compare`` runs ``repro.api.Experiment.compare(["enfed", "dfl"])``
 through the one-call facade — both methods on ONE world, seed, and
@@ -76,8 +91,9 @@ import time
 
 import numpy as np
 
-from repro.core import (EnFedConfig, EnFedSession, MobilityConfig,
-                        RequesterSpec, SupervisedTask, make_fleet, run_fleet)
+from repro.core import (EnFedConfig, EnFedSession, FaultConfig,
+                        MobilityConfig, RequesterSpec, SupervisedTask,
+                        make_fleet, run_fleet)
 from repro.core import mobility, schedule
 from repro.data import CaloriesDatasetConfig, dirichlet_partition, make_calories_tabular
 from repro.models import MLPClassifier, MLPClassifierConfig
@@ -277,7 +293,8 @@ def _host_fingerprint() -> dict:
     return {"machine": platform.machine(), "cpu_count": os.cpu_count()}
 
 
-def _perf_gate(report: dict, baseline_path: str, threshold: float = 0.75) -> dict:
+def _perf_gate(report: dict, baseline_path: str, threshold: float = 0.75,
+               section: str = "results") -> dict:
     """The CI perf gate: perf at the largest fleet size shared with the
     COMMITTED ``BENCH_fleet.json`` must be >= ``threshold`` x the
     committed number, under a matching (config, backend) fingerprint.
@@ -290,7 +307,12 @@ def _perf_gate(report: dict, baseline_path: str, threshold: float = 0.75) -> dic
     machine — with a looser threshold (two noisy measurements instead
     of one).  Either way a real perf cliff (the fleet engine getting
     slow relative to its own baseline work) cannot merge silently; only
-    a missing/config-mismatched baseline skips the gate."""
+    a missing/config-mismatched baseline skips the gate.
+
+    ``section`` selects which sweep the gate reads (``results`` is the
+    clean static world; ``results_faults`` the unreliable-link world) —
+    a baseline that predates the section skips cleanly, so a new sweep
+    arms its gate on the first baseline commit that carries it."""
     try:
         with open(baseline_path) as f:
             base = json.load(f)
@@ -299,20 +321,22 @@ def _perf_gate(report: dict, baseline_path: str, threshold: float = 0.75) -> dic
     if (base.get("config") != report["config"]
             or base.get("backend") != report["backend"]):
         return {"pass": True, "skipped": "baseline config/backend mismatch"}
+    if base.get(section) is None:
+        return {"pass": True, "skipped": f"baseline predates {section}"}
     same_host = base.get("host") == report["host"]
     metric = "rounds_per_s" if same_host else "speedup_vs_loop"
     if not same_host:
         threshold = 0.6
-    base_rows = {r["R"]: r.get(metric) for r in base.get("results", [])
+    base_rows = {r["R"]: r.get(metric) for r in base.get(section, [])
                  if r.get(metric)}
-    common = [row["R"] for row in report["results"] if row["R"] in base_rows]
+    common = [row["R"] for row in report[section] if row["R"] in base_rows]
     if not common:
         return {"pass": True, "skipped": "no common fleet size with baseline"}
     R = max(common)
-    cur = next(r[metric] for r in report["results"] if r["R"] == R)
+    cur = next(r[metric] for r in report[section] if r["R"] == R)
     ratio = cur / max(base_rows[R], 1e-9)
-    return {"R": R, "metric": metric, "same_host": same_host,
-            "baseline": base_rows[R], "current": cur,
+    return {"R": R, "section": section, "metric": metric,
+            "same_host": same_host, "baseline": base_rows[R], "current": cur,
             "ratio": round(ratio, 3), "threshold": threshold,
             "pass": bool(ratio >= threshold)}
 
@@ -554,6 +578,108 @@ def _churn_smoke(task, fleet, states, own_train, own_test) -> dict:
     return out
 
 
+def _fault_world() -> FaultConfig:
+    """The benchmark's unreliable-link world: 60% per-attempt drop odds
+    with ONE retry (36% of links fail a round outright), 40% of
+    deliveries stale, and a 2-round blocked streak before a link is
+    quarantined — enough weather that drops, retries, AND stale
+    deliveries all fire within a 3-4 round session."""
+    return FaultConfig(p_drop=0.6, p_stale=0.4, max_retries=1,
+                       release_after=2, seed=3)
+
+
+def _fault_parity_smoke(task, fleet, states, own_train, own_test) -> dict:
+    """Fault parity gate: both engines roll the SAME counter-based link
+    weather, so the drop/retry/stale counters and per-round delivered
+    masks must be BITWISE equal, the degraded aggregation must agree on
+    params, and the retry windows must be priced identically through the
+    one CostModel.  The gate also proves the scenario exercises every
+    failure mode — a fault world where nothing fails gates nothing."""
+    cfg = EnFedConfig(desired_accuracy=0.999, max_rounds=4, epochs=1,
+                      batch_size=BATCH, encrypt=False,
+                      contributor_refresh_epochs=1, faults=_fault_world())
+    loop = EnFedSession(task, own_train, own_test, fleet,
+                        copy.deepcopy(states), cfg).run()
+    fl = run_fleet(task, [RequesterSpec(own_train, own_test, fleet,
+                                        copy.deepcopy(states))],
+                   cfg).sessions[0]
+    tot = {k: int(np.sum(loop.history[k]))
+           for k in ("drops", "retries", "stale")}
+    out = {"pass": False, "rounds": (loop.rounds, fl.rounds),
+           "stop": (loop.stop_reason, fl.stop_reason), **tot}
+    if fl.rounds != loop.rounds or fl.stop_reason != loop.stop_reason:
+        return out
+    out["counters_match"] = bool(all(
+        np.array_equal(fl.history[k], loop.history[k])
+        for k in ("drops", "retries", "stale")))
+    lm = np.stack(loop.history["deliver_mask"])
+    fm = np.stack(fl.history["deliver_mask"])
+    out["mask_match"] = bool(np.array_equal(fm[:, :lm.shape[1]], lm)
+                             and not fm[:, lm.shape[1]:].any())
+    from jax.flatten_util import ravel_pytree
+    lv, _ = ravel_pytree(loop.params)
+    fv, _ = ravel_pytree(fl.params)
+    out["max_param_diff"] = float(np.abs(np.asarray(lv) - np.asarray(fv)).max())
+    out["max_ecomm_diff"] = float(abs(fl.report.e_comm - loop.report.e_comm))
+    out["all_modes_fired"] = bool(tot["drops"] > 0 and tot["retries"] > 0
+                                  and tot["stale"] > 0)
+    out["pass"] = bool(out["counters_match"] and out["mask_match"]
+                       and out["all_modes_fired"]
+                       and out["max_param_diff"] < 1e-4
+                       and out["max_ecomm_diff"] < 1e-3)
+    return out
+
+
+def _resume_smoke(task, fleet, states, own_train, own_test) -> dict:
+    """Kill-and-resume gate: a checkpointed fleet run (2-round chunks,
+    checkpoint every chunk) is 'crashed' by deleting every checkpoint
+    past the first, then resumed from disk — and the resumed run must be
+    BIT-identical (params, battery, delivered masks) to an uninterrupted
+    run of the same chunked program."""
+    import glob
+    import os
+    import tempfile
+
+    cfg = EnFedConfig(desired_accuracy=0.999, max_rounds=4, epochs=1,
+                      batch_size=BATCH, encrypt=False,
+                      contributor_refresh_epochs=1, faults=_fault_world())
+
+    def _specs():
+        return [RequesterSpec(own_train, own_test, fleet,
+                              copy.deepcopy(states))]
+
+    with tempfile.TemporaryDirectory() as d:
+        full = run_fleet(task, _specs(), cfg, round_chunk=2,
+                         checkpoint_dir=os.path.join(d, "full"),
+                         checkpoint_every=2)
+        kill_dir = os.path.join(d, "kill")
+        run_fleet(task, _specs(), cfg, round_chunk=2,
+                  checkpoint_dir=kill_dir, checkpoint_every=2)
+        removed = 0
+        for f in glob.glob(os.path.join(kill_dir, "step_*.npz")):
+            if int(os.path.basename(f)[5:13]) > 2:
+                os.remove(f)
+                removed += 1
+        res = run_fleet(task, _specs(), cfg, round_chunk=2,
+                        resume_from=kill_dir)
+    from jax.flatten_util import ravel_pytree
+    fv, _ = ravel_pytree(full.sessions[0].params)
+    rv, _ = ravel_pytree(res.sessions[0].params)
+    out = {"checkpoints_killed": removed,
+           "rounds": (full.sessions[0].rounds, res.sessions[0].rounds),
+           "params_bit_equal": bool(np.array_equal(np.asarray(fv),
+                                                   np.asarray(rv))),
+           "battery_bit_equal": bool(np.array_equal(
+               np.asarray(full.battery_level), np.asarray(res.battery_level))),
+           "deliver_bit_equal": bool(np.array_equal(
+               full.history["deliver"], res.history["deliver"]))}
+    out["pass"] = bool(removed > 0 and out["params_bit_equal"]
+                       and out["battery_bit_equal"]
+                       and out["deliver_bit_equal"]
+                       and res.sessions[0].rounds == full.sessions[0].rounds)
+    return out
+
+
 def run(verbose: bool = True, sizes=(8, 32, 128, 512), smoke: bool = False,
         compare: bool = False, out: str | None = None,
         perf_baseline: str | None = None):
@@ -600,6 +726,14 @@ def run(verbose: bool = True, sizes=(8, 32, 128, 512), smoke: bool = False,
             task, fleet, states, own_train, own_test)
         if verbose:
             print(f"[baseline parity smoke] {report['baseline_parity_smoke']}")
+        report["fault_parity_smoke"] = _fault_parity_smoke(
+            task, fleet, states, own_train, own_test)
+        if verbose:
+            print(f"[fault parity smoke] {report['fault_parity_smoke']}")
+        report["resume_smoke"] = _resume_smoke(task, fleet, states,
+                                               own_train, own_test)
+        if verbose:
+            print(f"[resume smoke] {report['resume_smoke']}")
 
     # loop-engine baseline: seconds per session, measured once (cost is
     # per-session linear: one Python dispatch chain per session)
@@ -688,6 +822,64 @@ def run(verbose: bool = True, sizes=(8, 32, 128, 512), smoke: bool = False,
                   f"joins {row['join_events']} leaves {row['leave_events']} "
                   f"empty rounds {row['empty_neighborhood_rounds']}")
 
+    # faulty-world sweep: the static sweep re-run under unreliable links
+    # (drops + bounded retries + stale delivery).  Per row: warm
+    # rounds/s, the fault totals, and the retry-energy overhead — the
+    # extra receive windows priced by the ONE CostModel.retry_energy —
+    # next to the clean-world energy at the same R.
+    from jax.flatten_util import ravel_pytree as _ravel
+
+    from repro.core.energy import CostModel, update_wire_bytes
+
+    fault_cfg = EnFedConfig(desired_accuracy=0.999, max_rounds=cfg.max_rounds,
+                            epochs=cfg.epochs, batch_size=BATCH, encrypt=False,
+                            contributor_refresh_epochs=1,
+                            faults=_fault_world())
+    num_params = int(_ravel(task.init(seed=0))[0].size)
+    model_bytes = update_wire_bytes(num_params, encrypt=fault_cfg.encrypt,
+                                    compress=fault_cfg.compress)
+    e_rx_retry, _, t_retry = CostModel().retry_energy(
+        model_bytes=model_bytes, encrypt=fault_cfg.encrypt)
+    t0 = time.perf_counter()
+    for spec in _make_specs(LOOP_SAMPLE_SESSIONS, own_train, own_test,
+                            fleet, states, seed=2):
+        EnFedSession(task, spec.own_train, spec.own_test, fleet,
+                     {k: dict(v) for k, v in states.items()},
+                     fault_cfg).run()
+    fault_loop_s = (time.perf_counter() - t0) / LOOP_SAMPLE_SESSIONS
+    clean_e = {r["R"]: r["simulated_energy_j"] for r in report["results"]}
+    report["results_faults"] = []
+    for R in sizes:
+        specs = _make_specs(R, own_train, own_test, fleet, states, seed=2)
+        run_fleet(task, specs, fault_cfg)             # compile
+        specs = _make_specs(R, own_train, own_test, fleet, states, seed=2)
+        t0 = time.perf_counter()
+        result = run_fleet(task, specs, fault_cfg)
+        wall_warm = time.perf_counter() - t0
+        total_rounds = int(result.rounds.sum())
+        rps = total_rounds / wall_warm
+        drops = int(np.sum(result.history["drops"]))
+        retries = int(np.sum(result.history["retries"]))
+        stale = int(np.sum(result.history["stale"]))
+        windows = drops + retries
+        row = {"R": R, "warm_s": round(wall_warm, 4),
+               "session_rounds": total_rounds, "rounds_per_s": round(rps, 2),
+               "speedup_vs_loop": round(fault_loop_s * R / wall_warm, 2),
+               "drops": drops, "retries": retries, "stale_deliveries": stale,
+               "extra_receive_windows": windows,
+               "retry_energy_j": round(windows * e_rx_retry, 4),
+               "retry_time_s": round(windows * t_retry, 4),
+               "simulated_energy_j": round(result.total_energy_j, 2),
+               "clean_energy_j": clean_e.get(R)}
+        report["results_faults"].append(row)
+        if verbose:
+            print(f"[faults R={R:4d}] warm {wall_warm:6.2f}s | "
+                  f"{total_rounds} session-rounds -> {rps:7.1f} rounds/s | "
+                  f"drops {drops} retries {retries} stale {stale} -> "
+                  f"retry overhead {row['retry_energy_j']:.3f}J "
+                  f"(E={row['simulated_energy_j']:.1f}J vs clean "
+                  f"{row['clean_energy_j']}J)")
+
     # compressed-round-state sweep: fp32 vs int8 staged/resident bytes
     # and rounds/s on a model that amortizes the quantization tile
     report["results_compress"] = _compress_sweep(sizes, verbose)
@@ -729,6 +921,10 @@ def run(verbose: bool = True, sizes=(8, 32, 128, 512), smoke: bool = False,
             report, baseline_path or "")
         if verbose:
             print(f"[fleet compare gate] {report['fleet_compare_gate']}")
+        report["faults_perf_gate"] = _perf_gate(report, baseline_path or "",
+                                                section="results_faults")
+        if verbose:
+            print(f"[faults perf gate] {report['faults_perf_gate']}")
 
     if out:
         with open(out, "w") as f:
@@ -757,6 +953,25 @@ def run(verbose: bool = True, sizes=(8, 32, 128, 512), smoke: bool = False,
               f"{report['perf_gate'].get('R')} fell to "
               f"{report['perf_gate'].get('ratio')}x the committed baseline "
               f"(gate: >= {report['perf_gate'].get('threshold')}x)",
+              file=sys.stderr)
+        sys.exit(1)
+    if smoke and not report["fault_parity_smoke"]["pass"]:
+        print("FAULT REGRESSION: the engines no longer agree on the "
+              "unreliable-link world (masks/counters/params/retry "
+              "pricing), or the scenario stopped exercising all three "
+              "failure modes", file=sys.stderr)
+        sys.exit(1)
+    if smoke and not report["resume_smoke"]["pass"]:
+        print("RESUME REGRESSION: a killed-and-resumed fleet run is no "
+              "longer bit-identical to the uninterrupted one",
+              file=sys.stderr)
+        sys.exit(1)
+    if smoke and not report["faults_perf_gate"]["pass"]:
+        print(f"PERF REGRESSION: faulty-world rounds/s at R="
+              f"{report['faults_perf_gate'].get('R')} fell to "
+              f"{report['faults_perf_gate'].get('ratio')}x the committed "
+              f"baseline (gate: >= "
+              f"{report['faults_perf_gate'].get('threshold')}x)",
               file=sys.stderr)
         sys.exit(1)
     if smoke and not report["baseline_parity_smoke"]["pass"]:

@@ -10,7 +10,8 @@ percentages meaningful.
 
   PYTHONPATH=src python examples/har_federated.py [--dataset har|calories]
                                                   [--engine loop|fleet]
-                                                  [--churn] [--compress int8]
+                                                  [--churn] [--faults]
+                                                  [--compress int8]
 
 ``--engine fleet`` runs the EnFed session through the jit-native fleet
 engine (repro.core.fleet) instead of the Python round loop — same
@@ -22,6 +23,16 @@ neighbors walk random-waypoint trajectories, contracts are re-negotiated
 every round as devices enter/leave radio range or hit their battery
 floor, and the walkthrough prints the per-round membership so you can
 watch the requester keep training while its neighborhood churns.
+
+``--faults`` turns on the unreliable-link world (repro.core.faults):
+links drop with bounded retries, exhausted links are zeroed out of the
+round's aggregation (the session degrades gracefully instead of
+stalling), and some deliveries arrive STALE — the contributor's
+round-(r-1) wire image.  The walkthrough prints per-round drop/retry/
+stale counts and the delivered set; the fault world is counter-based
+(like mobility), so ``--engine loop`` and ``--engine fleet`` print the
+identical weather.  Composes with ``--churn``: delivery then requires
+both radio range AND a surviving link.
 
 ``--compress int8`` adds an ``enfed-int8`` row to the compare table: the
 same world and knobs with the transported updates (and the fleet
@@ -36,7 +47,7 @@ import dataclasses
 import numpy as np
 
 from repro.api import Experiment, ExecutionSpec, MethodSpec, WorldSpec
-from repro.core import MobilityConfig, SupervisedTask, make_fleet
+from repro.core import FaultConfig, MobilityConfig, SupervisedTask, make_fleet
 from repro.data import (CaloriesDatasetConfig, HARDatasetConfig,
                         dirichlet_partition, make_calories_tabular,
                         make_har_windows)
@@ -73,43 +84,69 @@ def make_world(task, shards, own_train, own_test, *, fit_epochs: int,
                             pooled_train=pooled, mobility=mobility)
 
 
-def churn_walkthrough(task, shards, own_train, own_test, args):
-    """The opportunistic-world demo: one requester keeps training for the
-    whole round budget while neighbors churn through its radio range.
+def walkthrough(task, shards, own_train, own_test, args):
+    """The simulated-world demo: one requester keeps training for the
+    whole round budget while its world misbehaves.
 
-    Every round the session re-negotiates: contributors that wandered
-    out of the 90 m range (or drained to the battery floor) are
-    released, devices that wandered in are signed, and a higher-utility
-    arrival displaces the weakest member.  Rounds with an EMPTY
-    neighborhood are survivable — the requester trains alone on its own
-    shard.  Both engines derive the identical world; pick with --engine.
+    With ``--churn``, every round the session re-negotiates:
+    contributors that wandered out of the 90 m range (or drained to the
+    battery floor) are released, devices that wandered in are signed,
+    and a higher-utility arrival displaces the weakest member.  Rounds
+    with an EMPTY neighborhood are survivable — the requester trains
+    alone on its own shard.
+
+    With ``--faults``, the links themselves are unreliable: drops with
+    bounded retries (each retry burns an extra priced receive window),
+    exhausted links zeroed out of the aggregation, and stale deliveries
+    replaying the previous round's wire image.  Both engines derive the
+    identical world; pick with --engine.
     """
+    mob = MobilityConfig(arena_m=200.0, radio_range_m=90.0,
+                         leg_rounds=2, seed=5) if args.churn else None
+    faults = FaultConfig(p_drop=0.4, p_stale=0.3, max_retries=1,
+                         release_after=2, seed=7) if args.faults else None
     world = make_world(task, shards, own_train, own_test, fit_epochs=1,
-                       mobility=MobilityConfig(arena_m=200.0, radio_range_m=90.0,
-                                               leg_rounds=2, seed=5))
+                       mobility=mob)
     res = Experiment(
         world,
         method=MethodSpec(desired_accuracy=args.target, epochs=args.epochs,
                           max_rounds=10, n_max=3,
-                          contributor_refresh_epochs=1),
+                          contributor_refresh_epochs=1, faults=faults),
         execution=ExecutionSpec(engine=args.engine)).run()
 
-    print(f"\n=== churn walkthrough ({args.dataset}, engine={res.engine}) ===")
-    print(f"{'round':>5} {'members':>8} {'contract set':<18} {'acc':>6} {'battery':>8}")
+    label = "+".join(n for n, on in (("churn", args.churn),
+                                     ("faults", args.faults)) if on)
+    print(f"\n=== {label} walkthrough ({args.dataset}, engine={res.engine}) ===")
+    head = f"{'round':>5} {'members':>8} {'contract set':<18}"
+    if args.faults:
+        head += f" {'delivered':<12} {'drop':>4} {'rtry':>4} {'stale':>5}"
+    print(head + f" {'acc':>6} {'battery':>8}")
+    mask_key = "member_mask" if args.churn else "deliver_mask"
     prev = None
     for r in range(res.rounds):
-        mask = np.asarray(res.history["member_mask"][r]) > 0
+        mask = np.asarray(res.history[mask_key][r]) > 0
         ids = [d for d, m in enumerate(mask) if m]
+        line = f"{r:>5} {int(mask.sum()):>8} {str(ids):<18}"
+        if args.faults:
+            got = [d for d, m in enumerate(
+                np.asarray(res.history["deliver_mask"][r]) > 0) if m]
+            line += (f" {str(got):<12} {int(res.history['drops'][r]):>4}"
+                     f" {int(res.history['retries'][r]):>4}"
+                     f" {int(res.history['stale'][r]):>5}")
         note = ""
         if prev is not None:
             joined = sorted(set(ids) - set(prev))
             left = sorted(set(prev) - set(ids))
             bits = ([f"+{j}" for j in joined] + [f"-{l}" for l in left])
             note = "  " + " ".join(bits) if bits else ""
-        print(f"{r:>5} {int(mask.sum()):>8} {str(ids):<18} "
-              f"{res.history['accuracy'][r]:6.3f} "
+        print(line + f" {res.history['accuracy'][r]:6.3f} "
               f"{res.history['battery'][r]:8.3f}{note}")
         prev = ids
+    if args.faults:
+        print(f"fault weather: {int(np.sum(res.history['drops']))} drops, "
+              f"{int(np.sum(res.history['retries']))} retries, "
+              f"{int(np.sum(res.history['stale']))} stale deliveries "
+              f"(retry windows priced via CostModel.retry_energy)")
     print(f"requester finished: {res.rounds} rounds, stop={res.stop_reason}, "
           f"final acc {res.accuracy:.3f}")
     return 0
@@ -125,6 +162,10 @@ def main():
     ap.add_argument("--churn", action="store_true",
                     help="opportunistic-world walkthrough: neighbors enter/"
                          "leave radio range mid-session (repro.core.mobility)")
+    ap.add_argument("--faults", action="store_true",
+                    help="unreliable-link walkthrough: per-round drop/retry/"
+                         "stale counts under the counter-based fault world "
+                         "(repro.core.faults); composes with --churn")
     ap.add_argument("--compress", choices=("int8",), default=None,
                     help="add an enfed-int8 row: same world with the "
                          "transported updates int8-compressed (shows the "
@@ -132,8 +173,8 @@ def main():
     args = ap.parse_args()
 
     task, shards, own_train, own_test, pooled = build(args.dataset)
-    if args.churn:
-        return churn_walkthrough(task, shards, own_train, own_test, args)
+    if args.churn or args.faults:
+        return walkthrough(task, shards, own_train, own_test, args)
 
     # one world, N methods: the facade guarantees every method sees the
     # same requesters, contributor states, seed, and cost model

@@ -34,15 +34,23 @@ class Experiment:
     method: Union[str, MethodSpec] = "enfed"
     execution: ExecutionSpec = dataclasses.field(default_factory=ExecutionSpec)
 
-    def run(self, method: Union[str, MethodSpec, None] = None) -> RunResult:
+    def run(self, method: Union[str, MethodSpec, None] = None, *,
+            resume: Union[str, None] = None) -> RunResult:
         """Execute one method (default: ``self.method``) and return the
         unified :class:`RunResult`.  The world's mutable state is copied
-        per run, so repeated calls are independent and identical."""
+        per run, so repeated calls are independent and identical.
+
+        ``resume`` restores enfed round state from a checkpoint
+        directory (shorthand for ``ExecutionSpec.resume_from``): a run
+        killed mid-session and resumed computes the identical outcome
+        the uninterrupted run would have."""
         spec = MethodSpec.coerce(method if method is not None else self.method,
                                  like=MethodSpec.coerce(self.method))
         runner = get_runner(spec.name)
+        execution = (self.execution if resume is None else
+                     dataclasses.replace(self.execution, resume_from=resume))
         t0 = time.perf_counter()
-        result = runner(self.world, spec, self.execution)
+        result = runner(self.world, spec, execution)
         result.wall_s = time.perf_counter() - t0
         result.method = spec.key
         return result

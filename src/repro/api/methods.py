@@ -69,6 +69,18 @@ def _warn_if_mobility_ignored(world: WorldSpec, name: str) -> None:
             "world with static baselines", stacklevel=3)
 
 
+def _warn_if_checkpoint_ignored(execution: ExecutionSpec, name: str) -> None:
+    """Resumable round state is an enfed contract (the baselines' loop
+    oracles have no serialized mid-run state).  Same never-silent rule
+    as the mobility axis: asking a baseline to checkpoint must warn, not
+    quietly do nothing."""
+    if execution.checkpoint_dir or execution.resume_from:
+        warnings.warn(
+            f"method {name!r} ignores ExecutionSpec checkpointing "
+            "(checkpoint_dir/resume_from are enfed-only: baselines have "
+            "no resumable round-state contract)", stacklevel=3)
+
+
 def _baseline_session(res: "federated.BaselineResult", *, target: float,
                       n_contributors: float) -> SessionResult:
     """A BaselineResult in the per-requester SessionResult schema."""
@@ -95,23 +107,47 @@ def run_enfed(world: WorldSpec, method: MethodSpec,
         fr = fleet_mod.run_fleet(
             world.task, reqs, cfg, cost_model=cost,
             use_pallas=execution.use_pallas, interpret=execution.interpret,
-            round_chunk=execution.round_chunk)
+            round_chunk=execution.round_chunk,
+            checkpoint_dir=execution.checkpoint_dir,
+            checkpoint_every=execution.checkpoint_every,
+            resume_from=execution.resume_from)
         return RunResult.from_sessions(
             "enfed", "fleet", fr.sessions, cost_model=cost,
             total_energy_j=fr.total_energy_j, raw=fr)
+
+    def _sub(root, i):
+        # multi-requester loop runs checkpoint per session: requester
+        # i's state lives under <root>/req<i> (a 1-requester world keeps
+        # the bare directory, so loop and fleet runs can share paths)
+        if not root or len(reqs) == 1:
+            return root
+        import os
+        return os.path.join(root, f"req{i}")
+
     sessions = []
     for i, r in enumerate(reqs):
-        # requester i walks as device mobility.requester_id + i — the
-        # fleet engine's lane convention — so ExecutionSpec.engine can
-        # never change which world a requester experiences
-        cfg_i = cfg if (cfg.mobility is None or i == 0) else dataclasses.replace(
-            cfg, mobility=dataclasses.replace(
-                cfg.mobility,
-                requester_id=cfg.mobility.requester_id + i))
-        sessions.append(EnFedSession(world.task, r.own_train, r.own_test,
-                                     r.neighborhood, r.contributor_states,
-                                     cfg_i, cost_model=cost,
-                                     battery=r.battery).run())
+        # requester i walks as device mobility.requester_id + i and rolls
+        # fault dice as faults.requester_id + i — the fleet engine's lane
+        # conventions — so ExecutionSpec.engine can never change which
+        # world a requester experiences
+        cfg_i = cfg
+        if cfg.mobility is not None and i > 0:
+            cfg_i = dataclasses.replace(
+                cfg_i, mobility=dataclasses.replace(
+                    cfg.mobility,
+                    requester_id=cfg.mobility.requester_id + i))
+        if cfg.faults is not None and i > 0:
+            cfg_i = dataclasses.replace(
+                cfg_i, faults=dataclasses.replace(
+                    cfg.faults,
+                    requester_id=cfg.faults.requester_id + i))
+        sessions.append(EnFedSession(
+            world.task, r.own_train, r.own_test,
+            r.neighborhood, r.contributor_states,
+            cfg_i, cost_model=cost, battery=r.battery).run(
+                checkpoint_dir=_sub(execution.checkpoint_dir, i),
+                checkpoint_every=execution.checkpoint_every,
+                resume_from=_sub(execution.resume_from, i)))
     return RunResult.from_sessions("enfed", "loop", sessions, cost_model=cost)
 
 
@@ -141,6 +177,7 @@ def run_cfl(world: WorldSpec, method: MethodSpec,
             execution: ExecutionSpec) -> RunResult:
     """Centralized FL baseline, per requesting device (client 0)."""
     _warn_if_mobility_ignored(world, "cfl")
+    _warn_if_checkpoint_ignored(execution, "cfl")
     if execution.engine == "fleet":
         return _run_baseline_fleet(world, method, execution, "cfl")
     cfg = method.to_enfed_config(world)
@@ -162,6 +199,7 @@ def run_dfl(world: WorldSpec, method: MethodSpec,
             execution: ExecutionSpec) -> RunResult:
     """Decentralized FL baseline over ``method.topology`` (mesh|ring)."""
     _warn_if_mobility_ignored(world, "dfl")
+    _warn_if_checkpoint_ignored(execution, "dfl")
     if execution.engine == "fleet":
         return _run_baseline_fleet(world, method, execution, "dfl")
     cfg = method.to_enfed_config(world)
@@ -183,6 +221,7 @@ def run_cloud(world: WorldSpec, method: MethodSpec,
     """The §IV-G no-FL baseline: ship raw data to the cloud, wait, get
     the result back.  Device-side cost via ``CostModel.cloud_session``."""
     _warn_if_mobility_ignored(world, "cloud")
+    _warn_if_checkpoint_ignored(execution, "cloud")
     cfg = method.to_enfed_config(world)
     cost = world.cost_model
     sessions = []

@@ -29,6 +29,7 @@ import numpy as np
 
 from repro.core.battery import BatteryState
 from repro.core.energy import CostModel
+from repro.core.faults import FaultConfig
 from repro.core.fleet import RequesterSpec
 from repro.core.mobility import MobilityConfig
 from repro.core.rounds import EnFedConfig
@@ -141,6 +142,13 @@ class MethodSpec:
     # model size via repro.kernels.quantize.ops.resolve_compress — int8
     # only past the padding-overhead crossover, fp32 below it.
     compress: Optional[str] = None
+    # unreliable-link world (None = perfect links).  Like ``compress``
+    # this is a PROTOCOL knob: drops/retries/stale delivery change the
+    # simulated outcome for enfed (Phase.DELIVER in both engines) and
+    # re-price the extra transmissions for every method through the same
+    # CostModel.retry_energy term.  Validation is FaultConfig's own
+    # __post_init__ — a bad probability fails at spec construction.
+    faults: Optional[FaultConfig] = None
     label: Optional[str] = None          # display/compare key (default: name)
 
     @property
@@ -178,6 +186,7 @@ class MethodSpec:
             seed=world.seed,
             strategy=self.strategy,
             compress=self.compress,
+            faults=self.faults,
             mobility=world.mobility)
 
 
@@ -201,6 +210,17 @@ class ExecutionSpec:
     use_pallas: bool = True
     interpret: Optional[bool] = None
     round_chunk: int = 4
+    # crash-resumable round state (enfed only; baselines warn-and-ignore).
+    # ``checkpoint_dir`` serializes the flat wire-format round state +
+    # batteries + masks + round clocks via repro.checkpoint every
+    # ``checkpoint_every`` rounds (0 = the engine default: every round
+    # for the loop engine, every round_chunk for the fleet engine);
+    # ``resume_from`` restores the latest checkpoint in a directory and
+    # continues bit-identically.  Execution knobs: a resumed run
+    # computes the same outcome an uninterrupted one does.
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 0
+    resume_from: Optional[str] = None
 
     def __post_init__(self):
         if self.engine not in ("loop", "fleet"):
@@ -208,3 +228,6 @@ class ExecutionSpec:
         if self.round_chunk < 1:
             raise ValueError(
                 f"round_chunk must be >= 1 (got {self.round_chunk})")
+        if self.checkpoint_every < 0:
+            raise ValueError(
+                f"checkpoint_every must be >= 0 (got {self.checkpoint_every})")

@@ -26,19 +26,40 @@ def _flatten_with_paths(tree):
 
 
 def save_checkpoint(directory: str, step: int, state) -> str:
+    """Atomically write ``state`` as ``step_<N>.npz``.
+
+    The tmp name carries the ``.npz`` suffix up front — ``np.savez``
+    appends one to extension-less names, which used to leave the final
+    rename guessing between two candidate tmp paths (a race that could
+    orphan ``.tmp.npz`` files on crash).  Deterministic name, one
+    ``os.replace``: a reader either sees the complete old file or the
+    complete new one, never a torn write.
+    """
     os.makedirs(directory, exist_ok=True)
     path = os.path.join(directory, f"step_{step:08d}.npz")
-    tmp = path + ".tmp"
+    tmp = path + ".tmp.npz"
     np.savez(tmp, **_flatten_with_paths(state))
-    os.replace(tmp + ".npz" if os.path.exists(tmp + ".npz") else tmp, path)
+    os.replace(tmp, path)
     return path
 
 
 def latest_step(directory: str) -> Optional[int]:
     if not os.path.isdir(directory):
         return None
-    steps = [int(m.group(1)) for f in os.listdir(directory)
-             if (m := re.match(r"step_(\d+)\.npz$", f))]
+    steps = []
+    for f in os.listdir(directory):
+        if f.endswith(".tmp.npz"):
+            # a crash between savez and replace leaves the tmp file
+            # behind; sweep it here (the only other writer path) so
+            # stale partial writes never accumulate or get mistaken for
+            # checkpoints
+            try:
+                os.remove(os.path.join(directory, f))
+            except OSError:
+                pass
+            continue
+        if m := re.match(r"step_(\d+)\.npz$", f):
+            steps.append(int(m.group(1)))
     return max(steps) if steps else None
 
 
@@ -57,5 +78,12 @@ def restore_checkpoint(directory: str, template, step: Optional[int] = None):
         arr = data[key]
         if tuple(arr.shape) != tuple(np.shape(leaf)):
             raise ValueError(f"shape mismatch for {key}: ckpt {arr.shape} vs template {np.shape(leaf)}")
-        leaves.append(arr.astype(np.asarray(leaf).dtype))
+        want = np.asarray(leaf).dtype
+        if arr.dtype != want:
+            # no silent downcast: an fp32 checkpoint must not restore
+            # into an int8 wire buffer (or vice versa) — the wire-format
+            # rule says resumable state checkpoints AS its resident dtype
+            raise ValueError(
+                f"dtype mismatch for {key}: ckpt {arr.dtype} vs template {want}")
+        leaves.append(arr)
     return jax.tree_util.tree_unflatten(flat_paths[1], leaves), step

@@ -34,6 +34,7 @@ from repro.core.federated import (
     cloud_only_baseline,
     cloud_only_config,
 )
+from repro.core.faults import FaultConfig
 from repro.core.fleet import FleetResult, RequesterSpec, run_fleet
 from repro.core.mobility import MobilityConfig
 from repro.core.protocol import Phase
@@ -58,7 +59,7 @@ __all__ = [
     "BatteryState", "CostModel", "DeviceProfile", "LinkProfile", "EnergyReport",
     # incentives / world
     "NeighborDevice", "Contract", "select_contributors", "participation_mask",
-    "make_fleet", "MobilityConfig",
+    "make_fleet", "MobilityConfig", "FaultConfig",
     # EnFed engines + protocol vocabulary
     "EnFedConfig", "EnFedSession", "SessionResult",
     "FleetResult", "RequesterSpec", "run_fleet", "Phase",

@@ -229,6 +229,34 @@ class CostModel:
                      * d.p_train if refresh_epochs > 0 else 0.0)
         return e_tx, e_refresh
 
+    def retry_energy(self, *, model_bytes: int, encrypt: bool = True,
+                     rate_bps: Optional[float] = None):
+        """Cost of ONE retransmission of an update, split as
+        ``(e_rx, e_tx, t_xfer_s)``.
+
+        A retry re-prices the SAME wire bytes (``model_bytes`` must come
+        through :func:`update_wire_bytes`, so the ``compress`` knob
+        lowers retry cost exactly like first-attempt cost): the
+        requester burns another receive window at ``p_rx`` plus — when
+        the transport is encrypted — another decrypt pass at
+        ``p_crypto`` (``e_rx``); the contributor re-transmits at
+        ``p_tx`` plus the re-encrypt (``e_tx``); ``t_xfer_s`` is the
+        extra eq. (4) ``t_com`` wall-clock per retransmission.  The
+        fault layer (:mod:`repro.core.faults`) charges these constants
+        per extra attempt in BOTH engines, and the dfl/cfl fleet
+        variants price their retried transport with the same helper
+        (``rate_bps`` overrides the link rate for the CFL WAN path).
+        """
+        rate = rate_bps if rate_bps is not None else self.link.rate_bps
+        t_xfer = 8.0 * model_bytes / rate
+        e_rx = t_xfer * self.device.p_rx
+        e_tx = t_xfer * self.device.p_tx
+        if encrypt:
+            e_crypto = self.t_crypto(model_bytes) * self.device.p_crypto
+            e_rx += e_crypto
+            e_tx += e_crypto
+        return e_rx, e_tx, t_xfer
+
     def _energy(self, t: PhaseTimes) -> EnergyReport:
         d = self.device
         e_comp = (t.t_init * d.p_init + (t.t_enc + t.t_dec) * d.p_crypto

@@ -1,0 +1,200 @@
+"""Unreliable-link world: per-round per-link drops, bounded retries, and
+stale delivery — shared by BOTH EnFed engines.
+
+EnFed's premise is opportunistic collaboration over edge radios, yet the
+simulated transport used to be perfect: every accepted contributor's
+update arrived intact, on time, every round.  This module makes the link
+itself part of the simulated world, with the same design rule as
+:mod:`repro.core.mobility`: fault outcomes are a *closed-form function
+of (seed, round, requester, contributor)* — pure counter-based
+``jax.random.fold_in`` chains, no carried RNG state — so the loop engine
+(concrete round numbers, host-side) and the fleet engine (traced round
+numbers, inside one jit program) derive bit-identical outcomes by
+construction, and any round's faults can be queried without replaying
+earlier rounds.
+
+Three failure modes per (requester, contributor) link per round:
+
+* **Drop** — a transmission attempt fails outright.  Each attempt draws
+  an independent int32 from ``(seed, round, requester, contributor,
+  attempt)`` and fails iff it lands under the ``p_drop`` threshold.
+* **Timeout + bounded retry** — up to ``max_retries`` retransmissions
+  follow a failed attempt.  The update is *delivered* iff any of the
+  ``max_retries + 1`` attempts succeeds; every attempt re-prices the
+  same wire bytes through :meth:`repro.core.energy.CostModel.retry_energy`
+  (extra receive window + decrypt on the requester, extra transmit +
+  encrypt on the contributor), so flaky links visibly burn battery.
+* **Stale delivery** — a delivered update may be the contributor's
+  round-(r-1) wire image instead of the current one (a lagging device
+  answering with its previous payload).  Both engines keep that previous
+  image wire-format-resident: the fleet engine carries a second
+  (R, N, ·) buffer in its loop state, the loop engine a ``_prev`` cache
+  snapshotted at the same protocol point.
+
+Degradation is protocol-level, not an error path: undelivered links are
+zeroed out of the round's fedavg weight mask (``protocol.Phase.DELIVER``
+feeding the existing mask path), an all-links-failed round falls back to
+the requester's own params exactly like the empty-neighborhood case, and
+a link whose previous ``release_after`` rounds ALL failed is *blocked* —
+released at ``Phase.RENEGOTIATE`` as if out of radio range (static
+worlds suspend the link for the round: no attempt, no cost).
+
+Like mobility's kinematics, link quality is WORLD state: the fault draws
+of a round exist whether or not a transmission was attempted that round,
+which is what lets the blocked-streak be closed-form instead of carried
+state (membership depending on faults depending on membership would
+otherwise recurse).
+
+Parity-safety rule (same as mobility): every predicate is an exact
+integer comparison — thresholds are precomputed host-side from the
+static probabilities, draws are int32 — so no float fusion regime can
+flip an outcome between engines.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+# Fault draws live in [0, _DRAW_MAX); a probability p maps to the
+# threshold int(p * _DRAW_MAX), so p=0 never fires and p=1 always does
+# (draws are strictly below _DRAW_MAX).  ~4.7e-10 probability
+# resolution — far below anything the simulation distinguishes.
+_DRAW_MAX = 2**31 - 1
+
+_SALT_DROP = 0x0D
+_SALT_STALE = 0x57
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultConfig:
+    """Unreliable-link world parameters for one simulated session
+    (frozen/hashable => usable as a static arg of the compiled fleet
+    program, exactly like :class:`repro.core.mobility.MobilityConfig`).
+
+    ``requester_id`` is the requesting device's id in the fault
+    hash-space; fleet lanes use ``requester_id + lane`` so concurrent
+    requesters see independent link weather.  The default offset keeps
+    fault-space requester ids clear of contributor ids AND of the
+    mobility kinematics ids.
+    """
+
+    p_drop: float = 0.0        # per-ATTEMPT transmission failure probability
+    p_stale: float = 0.0       # P(delivered update is the round-(r-1) image)
+    max_retries: int = 2       # bounded retransmissions after the first attempt
+    release_after: int = 0     # consecutive fully-failed rounds before the
+                               # member is released at RENEGOTIATE (0 = never)
+    seed: int = 0              # fault hash seed
+    requester_id: int = 1 << 21  # requester lane 0's id in the fault space
+
+    def __post_init__(self):
+        # fail fast at CONSTRUCTION — not as NaN weights deep inside the
+        # jit program (the satellite rule run_fleet/EnFedSession inherit
+        # by constructing/receiving this config)
+        if not 0.0 <= self.p_drop <= 1.0:
+            raise ValueError(
+                f"p_drop must be within [0, 1] (got {self.p_drop})")
+        if not 0.0 <= self.p_stale <= 1.0:
+            raise ValueError(
+                f"p_stale must be within [0, 1] (got {self.p_stale})")
+        if self.max_retries < 0:
+            raise ValueError(
+                f"max_retries must be >= 0 (got {self.max_retries})")
+        if self.release_after < 0:
+            raise ValueError(
+                f"release_after must be >= 0 (got {self.release_after})")
+
+    @property
+    def attempts_max(self) -> int:
+        """Transmission budget per link per round (first try + retries)."""
+        return self.max_retries + 1
+
+
+def _threshold(p: float) -> jnp.int32:
+    """The static int32 threshold a probability compiles to."""
+    return jnp.int32(int(min(max(float(p), 0.0), 1.0) * _DRAW_MAX))
+
+
+def _link_draw(seed: int, salt: int, r, requester_id, cand_id, t):
+    """One int32 fault draw in [0, _DRAW_MAX) hashed from
+    ``(seed, salt, round, requester, contributor, attempt)`` alone —
+    prefix-stable in every argument, traced or concrete."""
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), jnp.uint32(salt))
+    key = jax.random.fold_in(key, jnp.asarray(r, jnp.uint32))
+    key = jax.random.fold_in(key, jnp.asarray(requester_id, jnp.uint32))
+    key = jax.random.fold_in(key, jnp.asarray(cand_id, jnp.uint32))
+    key = jax.random.fold_in(key, jnp.asarray(t, jnp.uint32))
+    return jax.random.randint(key, (), 0, _DRAW_MAX, jnp.int32)
+
+
+def _per_link(fc: FaultConfig, r, req_id, cand_id):
+    """Fault outcome of ONE link at round ``r`` (scalar ids)."""
+    drop_thr = _threshold(fc.p_drop)
+    stale_thr = _threshold(fc.p_stale)
+    draws = jnp.stack([
+        _link_draw(fc.seed, _SALT_DROP, r, req_id, cand_id, t)
+        for t in range(fc.attempts_max)])
+    ok = draws >= drop_thr
+    delivered = jnp.any(ok)
+    first = jnp.argmax(ok).astype(jnp.int32)      # first successful attempt
+    attempts = jnp.where(delivered, first + 1, jnp.int32(fc.attempts_max))
+    stale = delivered & (_link_draw(fc.seed, _SALT_STALE, r, req_id, cand_id,
+                                    0) < stale_thr)
+    return delivered, attempts, stale
+
+
+def link_outcomes(fc: FaultConfig, r, requester_id, cand_ids):
+    """Per-link fault outcomes at round ``r`` — THE shared derivation of
+    both engines (``Phase.DELIVER``).
+
+    Inputs broadcast like :func:`repro.core.mobility.in_range_mask`:
+    ``requester_id`` is scalar or (R,), ``cand_ids`` (N,) or (R, N).
+
+    Returns ``(delivered, attempts, stale)``:
+
+    ``delivered``  (..., N) bool — the update arrived within the
+                   ``max_retries + 1`` attempt budget;
+    ``attempts``   (..., N) int32 — transmissions actually made
+                   (1..attempts_max; an undelivered link exhausts the
+                   whole budget);
+    ``stale``      (..., N) bool — the delivered payload is the
+                   round-(r-1) wire image (only meaningful where
+                   ``delivered``; at round 0 the "previous" image is the
+                   handshake staging, so a stale hit is a no-op there).
+
+    Whether a link *counts* (contract member, not blocked) is the
+    caller's mask — outcomes here are pure world state.
+    """
+    ids = jnp.asarray(cand_ids, jnp.int32)
+    req = jnp.broadcast_to(
+        jnp.asarray(requester_id, jnp.int32)[..., None], ids.shape)
+    d, a, s = jax.vmap(lambda q, c: _per_link(fc, r, q, c))(
+        req.reshape(-1), ids.reshape(-1))
+    return d.reshape(ids.shape), a.reshape(ids.shape), s.reshape(ids.shape)
+
+
+def blocked_mask(fc: FaultConfig, r, requester_id, cand_ids):
+    """(..., N) bool: links whose previous ``release_after`` rounds ALL
+    failed to deliver — the repeatedly-failing members released at
+    ``Phase.RENEGOTIATE`` as if they walked out of range (suspended for
+    the round in static worlds: no attempt, no retry cost).
+
+    Closed-form: re-evaluates :func:`link_outcomes`'s delivered bit for
+    rounds ``r - release_after .. r - 1`` (stateless, so both engines and
+    any resumed run agree without replaying history).  Rounds before 0
+    count as delivered — a session starts with no fault history — so
+    nothing is blocked before round ``release_after``.  Once the trailing
+    window contains a delivered round the link is eligible again, same
+    as a device wandering back into range.
+    """
+    ids = jnp.asarray(cand_ids, jnp.int32)
+    if fc.release_after <= 0:
+        return jnp.zeros(ids.shape, bool)
+    blocked = jnp.ones(ids.shape, bool)
+    for k in range(1, fc.release_after + 1):
+        rk = jnp.asarray(r, jnp.int32) - k
+        d, _, _ = link_outcomes(fc, rk, requester_id, cand_ids)
+        blocked &= ~(d | (rk < 0))
+    return blocked

@@ -138,6 +138,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import faults as faults_mod
 from repro.core import mobility as mobility_mod
 from repro.core import protocol, schedule, topology
 from repro.core.battery import BatteryState, discharge_level, load_efficiency
@@ -217,52 +218,34 @@ def _stack_trees(trees, template=None):
                                   *filled)
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("task", "use_pallas", "interpret", "do_refresh", "chunk",
-                     "max_rounds", "epochs", "batch", "steps_max",
-                     "ref_epochs", "ref_steps", "spec", "mob", "n_max",
-                     "strategy", "compress", "n_params", "method"),
-    donate_argnames=("contrib_flat",))
-def _fleet_program(task, use_pallas, interpret, do_refresh, chunk, max_rounds,
+def _make_round_fn(task, use_pallas, interpret, do_refresh, max_rounds,
                    epochs, batch, steps_max, ref_epochs, ref_steps, spec,
-                   mob, n_max, strategy, compress, n_params, method,
-                   contrib_flat, arrays):
-    """The whole fleet's Algorithm 1 as one compiled program.
+                   mob, n_max, strategy, compress, n_params, method, fc,
+                   n_req, n_lanes, arrays):
+    """Build the traced per-round body shared by BOTH fleet programs.
 
-    Module-level so the jit cache is shared across ``run_fleet`` calls:
-    re-running with the same ``task`` (id-hashed static) and the same
-    array shapes — e.g. parametrized parity tests sweeping strategies,
-    encryption, or stopping thresholds, all of which are traced inputs
-    (``round_w``, ``e_round``, ``desired_accuracy``...) — reuses the
-    compiled executable instead of re-tracing per call.
+    :func:`_fleet_program` (the compiled chunked ``while_loop``) and
+    :func:`_fleet_chunk_program` (one chunk per call, for host-driven
+    checkpoint/resume) trace the SAME ``maybe_round`` returned here, so
+    the two execution paths cannot drift apart — which is what makes
+    killed-at-round-k-and-resumed bit-identical to uninterrupted.
 
-    ``contrib_flat`` is the donated flat round state: (R, N, P) fp32, or
-    — under ``compress="int8"`` — the (R, N, Lp) int8 wire payload whose
-    per-tile fp32 scales arrive as ``arrays["c_scales"]`` and travel in
-    the loop-carried state (refresh rewrites them).  ``n_params`` is the
-    true flat parameter count P (<= Lp, the tile-padded payload length).
-    ``spec`` is the static :func:`repro.utils.tree.tree_ravel` spec that
-    recovers per-device parameter pytrees from (P,) lane views.  ``mob``
-    is the static :class:`repro.core.mobility.MobilityConfig` (None =
-    static neighborhood); under mobility, contributor lanes are the
-    candidate pool and membership is re-negotiated on device each round.
-
-    ``method`` selects the traced protocol variant ("enfed", "dfl",
-    "cfl" — vocabulary in :func:`repro.core.protocol.method_phases`):
-    the per-method phase mask decides at trace time which protocol
-    steps are live.  The baseline variants share this program's flat
-    round state, batched fedavg kernels, and chunked early-exit loop;
-    their round bodies are the loop learners' algorithms phase for
-    phase.
+    ``fc`` is the static :class:`repro.core.faults.FaultConfig` (None =
+    perfect links); under faults every round derives the per-link
+    (delivered, attempts, stale) outcomes from the counter-based fault
+    world (``Phase.DELIVER``), masks undelivered links out of the fedavg
+    weights, aggregates round-(r-1) wire images for stale links (the
+    ``prev`` carry), and re-prices every extra receive window through
+    the staged ``e_retry`` term.
     """
     model, opt = task.model, task._opt
-    R, N = contrib_flat.shape[:2]
+    R, N = n_req, n_lanes
     P = n_params
     phases = protocol.method_phases(method)
     if method == "enfed":
         n_pad = arrays["own_x"].shape[1]
     mobility_on = (mob is not None) and (protocol.Phase.RENEGOTIATE in phases)
+    faults_on = (fc is not None) and (protocol.Phase.DELIVER in phases)
     compress_on = compress == "int8"
 
     def _fit_lane(flat_p, get_xy, idx, w):
@@ -358,20 +341,50 @@ def _fleet_program(task, use_pallas, interpret, do_refresh, chunk, max_rounds,
         extra validity masking inside)."""
         (contrib, cscale, live, live_s, last, level, active, stop_code,
          rounds_done, clevel, acc_h, loss_h, bat_h, exec_h, body_h,
-         member_h) = state
+         member_h, prev, prev_s, drop_h, retry_h, stale_h, deliver_h) = state
 
         # Phase.RENEGOTIATE (mobility): release members that walked out
         # of radio range or hit the battery floor, sign in-range
         # arrivals, let higher-utility arrivals displace weaker members
-        # — all on device, from the traced round number.
+        # — all on device, from the traced round number.  Under faults,
+        # streak-blocked links lose eligibility here too.
         if mobility_on:
+            blocked = (faults_mod.blocked_mask(
+                fc, rr, arrays["freq_ids"], arrays["cand_ids"])
+                if faults_on else None)
             member, rank, _util = mobility_mod.membership_step(
                 mob, rr, arrays["req_ids"], arrays["cand_ids"],
-                arrays["cand_mask"], arrays["base_util"], clevel, n_max)
+                arrays["cand_mask"], arrays["base_util"], clevel, n_max,
+                blocked=blocked)
             round_w = topology.dynamic_round_weights(member, rank, strategy)
             count = jnp.sum(member, axis=1).astype(jnp.int32)
         else:
             round_w = arrays["round_w"]
+
+        # Phase.DELIVER (faults): which attempting links actually landed
+        # an update this round, how many transmissions each burned, and
+        # which delivered the round-(r-1) wire image instead.  The
+        # delivered mask multiplies straight into the fedavg weights —
+        # the kernel's normalized masked mean IS the graceful
+        # degradation.
+        if faults_on:
+            delivered, attempts, stale = faults_mod.link_outcomes(
+                fc, rr, arrays["freq_ids"], arrays["fcand_ids"])
+            if mobility_on:
+                att_mask = member           # members attempt; blocked
+                #   links were already released at RENEGOTIATE
+            else:
+                att_mask = arrays["fsigned"] & ~faults_mod.blocked_mask(
+                    fc, rr, arrays["freq_ids"], arrays["fcand_ids"])
+            delivered = delivered & att_mask
+            dcount = jnp.sum(delivered, axis=1).astype(jnp.int32)
+            round_w = round_w * delivered.astype(round_w.dtype)
+            drops_r = jnp.sum(att_mask & ~delivered, axis=1).astype(
+                jnp.float32)
+            retries_r = jnp.sum(jnp.where(att_mask, attempts - 1, 0),
+                                axis=1).astype(jnp.float32)
+            stale_r = jnp.sum(delivered & stale, axis=1).astype(jnp.float32)
+            stale_sel = (delivered & stale)[:, :, None]
 
         # Phase.COLLECT + Phase.AGGREGATE: one batched kernel launch,
         # directly on the flat round state; under mobility the
@@ -379,17 +392,25 @@ def _fleet_program(task, use_pallas, interpret, do_refresh, chunk, max_rounds,
         # whole neighborhood churned away keeps training on its own
         # previous params.  Compressed state runs the fused
         # dequant->fedavg kernel on the wire-format buffer (the padding
-        # tail dequantizes to zero and is sliced off).
+        # tail dequantizes to zero and is sliced off).  Stale links
+        # substitute the second wire-format-resident buffer (``prev``) —
+        # the fp32 image never materializes either way.
+        src = jnp.where(stale_sel, prev, contrib) if faults_on else contrib
         if compress_on:
+            src_s = (jnp.where(stale_sel, prev_s, cscale) if faults_on
+                     else cscale)
             glob = fedavg_flat_batched_q8(
-                contrib, cscale, round_w,
+                src, src_s, round_w,
                 use_pallas=use_pallas, interpret=interpret)[:, :P]
         else:
-            glob = fedavg_flat_batched(contrib, round_w,
+            glob = fedavg_flat_batched(src, round_w,
                                        use_pallas=use_pallas,
                                        interpret=interpret)
-        if mobility_on:
-            glob = jnp.where((count > 0)[:, None], glob, last)
+        if mobility_on or faults_on:
+            # nothing fed eq. (14) this round: fall back to own params,
+            # exactly like the loop engine's empty-neighborhood case
+            fed_count = dcount if faults_on else count
+            glob = jnp.where((fed_count > 0)[:, None], glob, last)
 
         # Phase.FIT (requesters personalize) + Phase.SCORE.  The round's
         # minibatch indices are derived here, on device, from the traced
@@ -404,14 +425,18 @@ def _fleet_program(task, use_pallas, interpret, do_refresh, chunk, max_rounds,
                                  arrays["test_mask"])
 
         # Phase.ACCOUNT: traced battery discharge for executed rounds;
-        # under mobility the round energy depends on how many members
-        # actually fed eq. (14) — a host-precomputed per-count table,
-        # gathered with the traced count.
-        if mobility_on:
-            e_round = jnp.take_along_axis(arrays["e_tab"], count[:, None],
-                                          axis=1)[:, 0]
+        # under mobility (or faults) the round energy depends on how many
+        # updates actually fed eq. (14) — a host-precomputed per-count
+        # table, gathered with the traced count — and every fault-world
+        # drop or retry burns one MORE receive window (``e_retry``).
+        if mobility_on or faults_on:
+            e_round = jnp.take_along_axis(
+                arrays["e_tab"],
+                (dcount if faults_on else count)[:, None], axis=1)[:, 0]
         else:
             e_round = arrays["e_round"]
+        if faults_on:
+            e_round = e_round + (drops_r + retries_r) * arrays["e_retry"]
         level_new = discharge_level(level, e_round,
                                     arrays["capacity"], arrays["eff"])
         reached = acc >= arrays["desired_accuracy"]
@@ -425,14 +450,24 @@ def _fleet_program(task, use_pallas, interpret, do_refresh, chunk, max_rounds,
         next_active = active & ~reached & ~low
 
         # Contributor-side discharge (mobility): members paid the
-        # transmission term this round; the refresh term only while
-        # their requester's session survives.  Releases at the battery
-        # floor feed back into the NEXT round's membership_step.
+        # transmission term this round — once per ATTEMPT under faults,
+        # the sender's radio burns the same energy whether or not the
+        # update lands; the refresh term only while their requester's
+        # session survives.  Releases at the battery floor feed back
+        # into the NEXT round's membership_step.
         if mobility_on:
+            e_tx_round = (arrays["e_tx"] * attempts.astype(jnp.float32)
+                          if faults_on else arrays["e_tx"])
             clevel = mobility_mod.contributor_discharge(
-                clevel, member & active[:, None], arrays["e_tx"],
+                clevel, member & active[:, None], e_tx_round,
                 arrays["e_ref"], next_active[:, None],
                 mob.contributor_capacity_j)
+
+        # the round-(r-1) image next round's stale links will deliver:
+        # snapshot the PRE-refresh round state (what this round
+        # aggregated), still wire-format resident
+        if faults_on:
+            prev, prev_s = contrib, cscale
 
         # Phase.REFRESH: contributors keep training (frozen once their
         # requester stops; under mobility, only CURRENT members train);
@@ -494,9 +529,17 @@ def _fleet_program(task, use_pallas, interpret, do_refresh, chunk, max_rounds,
         if mobility_on:
             member_h = put(member_h,
                            (member & active[:, None]).astype(jnp.float32))
+        if faults_on:
+            af = active.astype(jnp.float32)
+            drop_h = put(drop_h, drops_r * af)
+            retry_h = put(retry_h, retries_r * af)
+            stale_h = put(stale_h, stale_r * af)
+            deliver_h = put(deliver_h,
+                            (delivered & active[:, None]).astype(jnp.float32))
         return (contrib, cscale, live, live_s, last, level, next_active,
                 stop_code, rounds_done, clevel, acc_h, loss_h, bat_h, exec_h,
-                body_h, member_h)
+                body_h, member_h, prev, prev_s, drop_h, retry_h, stale_h,
+                deliver_h)
 
     # ---- baseline method variants (dfl / cfl) ------------------------------
     # Same scaffolding — flat (R, N, P) state, batched fedavg kernels,
@@ -526,7 +569,8 @@ def _fleet_program(task, use_pallas, interpret, do_refresh, chunk, max_rounds,
         def run_round(state, rr):
             (contrib, cscale, live, live_s, last, level, active, stop_code,
              rounds_done, clevel, acc_h, loss_h, bat_h, exec_h, body_h,
-             member_h) = state
+             member_h, prev, prev_s, drop_h, retry_h, stale_h,
+             deliver_h) = state
 
             # Phase.FIT at every client lane.  The loop oracles seed each
             # client fit with cfg.seed + stride*r + client_index; the
@@ -595,50 +639,8 @@ def _fleet_program(task, use_pallas, interpret, do_refresh, chunk, max_rounds,
             body_h = put(body_h, jnp.float32(1.0))
             return (contrib, cscale, live, live_s, last, level, next_active,
                     stop_code, rounds_done, clevel, acc_h, loss_h, bat_h,
-                    exec_h, body_h, member_h)
-
-    if method == "cfl":
-        # the shared global model every client fits from each round
-        last0 = jnp.broadcast_to(arrays["init_flat"], (R, P))
-    elif method == "dfl":
-        # node 0's (the requester's) initial params
-        last0 = contrib_flat[:, 0]
-    else:
-        last0 = (jnp.broadcast_to(arrays["init_flat"], (R, P)) if mobility_on
-                 else jnp.zeros((R, P), jnp.float32))
-    clevel0 = arrays["clevel0"] if mobility_on else jnp.zeros((R, N), jnp.float32)
-    # per-tile scales travel in the carried state (refresh rewrites
-    # them); fp32 runs carry a token buffer
-    cscale0 = (arrays["c_scales"] if compress_on
-               else jnp.zeros((1, 1, 1), jnp.float32))
-    # the dedup'd refresh trajectories (V unique rows), wire-format under
-    # compress; token buffers when per-lane refresh (mobility) runs
-    if refresh_dedup:
-        live0 = arrays["live_q0"] if compress_on else arrays["live0"]
-        live_s0 = (arrays["live_s0"] if compress_on
-                   else jnp.zeros((1, 1), jnp.float32))
-    else:
-        live0 = jnp.zeros((1, 1), jnp.float32)
-        live_s0 = jnp.zeros((1, 1), jnp.float32)
-    state0 = (contrib_flat,
-              cscale0,
-              live0,
-              live_s0,
-              last0,
-              arrays["level0"],
-              jnp.ones((R,), bool),
-              jnp.full((R,), protocol.STOP_MAX_ROUNDS, jnp.int32),
-              jnp.zeros((R,), jnp.int32),
-              clevel0,
-              jnp.zeros((max_rounds, R), jnp.float32),   # accuracy trace
-              jnp.zeros((max_rounds, R), jnp.float32),   # loss trace
-              jnp.zeros((max_rounds, R), jnp.float32),   # battery trace
-              jnp.zeros((max_rounds, R), jnp.float32),   # active-lane trace
-              jnp.zeros((max_rounds,), jnp.float32),     # body-executed trace
-              # membership trace; static-world runs carry a token buffer
-              # (the mask would just be round_w > 0 replicated per round)
-              jnp.zeros((max_rounds, R, N) if mobility_on else (1, 1, 1),
-                        jnp.float32))
+                    exec_h, body_h, member_h, prev, prev_s, drop_h, retry_h,
+                    stale_h, deliver_h)
 
     def maybe_round(i, carry):
         r0, state = carry
@@ -646,6 +648,148 @@ def _fleet_program(task, use_pallas, interpret, do_refresh, chunk, max_rounds,
         state = jax.lax.cond((rr < max_rounds) & jnp.any(state[6]),
                              lambda s: run_round(s, rr), lambda s: s, state)
         return r0, state
+
+    return maybe_round
+
+
+def _init_state(method, mob, do_refresh, compress, max_rounds, n_params, fc,
+                contrib_flat, arrays):
+    """The fleet loop carry at round 0 — built HOST-SIDE (eagerly) so the
+    checkpoint path can serialize/restore exactly this tuple at chunk
+    boundaries; the compiled programs receive it donated.
+
+    Layout (22 elements — indices matter: ``state[6]`` is the active
+    mask both programs' stop conditions poll):
+    0 contrib, 1 cscale, 2 live, 3 live_s, 4 last, 5 level, 6 active,
+    7 stop_code, 8 rounds_done, 9 clevel, 10-14 acc/loss/bat/exec/body
+    traces, 15 member trace, 16 prev (stale-delivery wire snapshot),
+    17 prev_s, 18-20 drop/retry/stale traces, 21 deliver trace.
+    Token (1, ...) buffers stand in for state a variant doesn't carry.
+    """
+    R, N = contrib_flat.shape[:2]
+    P = n_params
+    phases = protocol.method_phases(method)
+    mobility_on = (mob is not None) and (protocol.Phase.RENEGOTIATE in phases)
+    faults_on = (fc is not None) and (protocol.Phase.DELIVER in phases)
+    compress_on = compress == "int8"
+    refresh_dedup = do_refresh and not mobility_on
+    if method == "cfl":
+        # the shared global model every client fits from each round
+        last0 = jnp.broadcast_to(arrays["init_flat"], (R, P)) + 0.0
+    elif method == "dfl":
+        # node 0's (the requester's) initial params
+        last0 = contrib_flat[:, 0]
+    else:
+        # mobility and fault worlds can aggregate NOTHING in a round
+        # (empty neighborhood / all links failed) — the fallback chain
+        # must bottom out at the requester's own init, like the loop
+        last0 = (jnp.broadcast_to(arrays["init_flat"], (R, P)) + 0.0
+                 if (mobility_on or faults_on)
+                 else jnp.zeros((R, P), jnp.float32))
+    # the carry is DONATED to the programs while ``arrays`` is not — every
+    # staged buffer that seeds a carry element is copied (`+ 0`) so no
+    # donated input aliases a live one
+    clevel0 = (arrays["clevel0"] + 0.0 if mobility_on
+               else jnp.zeros((R, N), jnp.float32))
+    # per-tile scales travel in the carried state (refresh rewrites
+    # them); fp32 runs carry a token buffer
+    cscale0 = (arrays["c_scales"] + 0.0 if compress_on
+               else jnp.zeros((1, 1, 1), jnp.float32))
+    # the dedup'd refresh trajectories (V unique rows), wire-format under
+    # compress; token buffers when per-lane refresh (mobility) runs
+    if refresh_dedup:
+        live0 = (arrays["live_q0"] + 0 if compress_on
+                 else arrays["live0"] + 0.0)
+        live_s0 = (arrays["live_s0"] + 0.0 if compress_on
+                   else jnp.zeros((1, 1), jnp.float32))
+    else:
+        live0 = jnp.zeros((1, 1), jnp.float32)
+        live_s0 = jnp.zeros((1, 1), jnp.float32)
+    # the stale-delivery snapshot starts as the handshake staging itself
+    # (a round-0 stale hit is a no-op by construction, in both engines)
+    if faults_on:
+        prev0 = contrib_flat + 0
+        prev_s0 = cscale0 + 0.0 if compress_on else jnp.zeros(
+            (1, 1, 1), jnp.float32)
+    else:
+        prev0 = jnp.zeros((1, 1, 1), jnp.float32)
+        prev_s0 = jnp.zeros((1, 1, 1), jnp.float32)
+    return (contrib_flat,
+            cscale0,
+            live0,
+            live_s0,
+            last0,
+            arrays["level0"] + 0.0,
+            jnp.ones((R,), bool),
+            jnp.full((R,), protocol.STOP_MAX_ROUNDS, jnp.int32),
+            jnp.zeros((R,), jnp.int32),
+            clevel0,
+            jnp.zeros((max_rounds, R), jnp.float32),   # accuracy trace
+            jnp.zeros((max_rounds, R), jnp.float32),   # loss trace
+            jnp.zeros((max_rounds, R), jnp.float32),   # battery trace
+            jnp.zeros((max_rounds, R), jnp.float32),   # active-lane trace
+            jnp.zeros((max_rounds,), jnp.float32),     # body-executed trace
+            # membership trace; static-world runs carry a token buffer
+            # (the mask would just be round_w > 0 replicated per round)
+            jnp.zeros((max_rounds, R, N) if mobility_on else (1, 1, 1),
+                      jnp.float32),
+            prev0,
+            prev_s0,
+            jnp.zeros((max_rounds, R) if faults_on else (1, 1),
+                      jnp.float32),                    # drop trace
+            jnp.zeros((max_rounds, R) if faults_on else (1, 1),
+                      jnp.float32),                    # retry trace
+            jnp.zeros((max_rounds, R) if faults_on else (1, 1),
+                      jnp.float32),                    # stale trace
+            jnp.zeros((max_rounds, R, N) if faults_on else (1, 1, 1),
+                      jnp.float32))                    # deliver trace
+
+
+_FLEET_STATICS = ("task", "use_pallas", "interpret", "do_refresh", "chunk",
+                  "max_rounds", "epochs", "batch", "steps_max", "ref_epochs",
+                  "ref_steps", "spec", "mob", "n_max", "strategy", "compress",
+                  "n_params", "method", "fc", "n_req", "n_lanes")
+
+
+@functools.partial(jax.jit, static_argnames=_FLEET_STATICS,
+                   donate_argnames=("state",))
+def _fleet_program(task, use_pallas, interpret, do_refresh, chunk, max_rounds,
+                   epochs, batch, steps_max, ref_epochs, ref_steps, spec,
+                   mob, n_max, strategy, compress, n_params, method, fc,
+                   n_req, n_lanes, state, arrays):
+    """The whole fleet's Algorithm 1 as one compiled program.
+
+    Module-level so the jit cache is shared across ``run_fleet`` calls:
+    re-running with the same ``task`` (id-hashed static) and the same
+    array shapes — e.g. parametrized parity tests sweeping strategies,
+    encryption, or stopping thresholds, all of which are traced inputs
+    (``round_w``, ``e_round``, ``desired_accuracy``...) — reuses the
+    compiled executable instead of re-tracing per call.
+
+    ``state`` is the donated 22-element loop carry from
+    :func:`_init_state`; its first element is the flat round state:
+    (R, N, P) fp32, or — under ``compress="int8"`` — the (R, N, Lp) int8
+    wire payload whose per-tile fp32 scales travel as element 1.
+    ``n_params`` is the true flat parameter count P (<= Lp, the
+    tile-padded payload length).  ``spec`` is the static
+    :func:`repro.utils.tree.tree_ravel` spec that recovers per-device
+    parameter pytrees from (P,) lane views.  ``mob`` is the static
+    :class:`repro.core.mobility.MobilityConfig` (None = static
+    neighborhood); ``fc`` the static
+    :class:`repro.core.faults.FaultConfig` (None = perfect links).
+
+    ``method`` selects the traced protocol variant ("enfed", "dfl",
+    "cfl" — vocabulary in :func:`repro.core.protocol.method_phases`):
+    the per-method phase mask decides at trace time which protocol
+    steps are live.  The baseline variants share this program's flat
+    round state, batched fedavg kernels, and chunked early-exit loop;
+    their round bodies are the loop learners' algorithms phase for
+    phase.
+    """
+    maybe_round = _make_round_fn(
+        task, use_pallas, interpret, do_refresh, max_rounds, epochs, batch,
+        steps_max, ref_epochs, ref_steps, spec, mob, n_max, strategy,
+        compress, n_params, method, fc, n_req, n_lanes, arrays)
 
     def while_cond(carry):
         r0, state = carry
@@ -657,11 +801,29 @@ def _fleet_program(task, use_pallas, interpret, do_refresh, chunk, max_rounds,
         return r0 + chunk, state
 
     _, state = jax.lax.while_loop(while_cond, while_body,
-                                  (jnp.int32(0), state0))
-    (contrib, cscale, _live, _live_s, last, level, _, stop_code, rounds_done,
-     clevel, acc_h, loss_h, bat_h, exec_h, body_h, member_h) = state
-    return (contrib, cscale, last, level, stop_code, rounds_done,
-            (acc_h, loss_h, bat_h, exec_h, body_h, member_h))
+                                  (jnp.int32(0), state))
+    return state
+
+
+@functools.partial(jax.jit, static_argnames=_FLEET_STATICS,
+                   donate_argnames=("state",))
+def _fleet_chunk_program(task, use_pallas, interpret, do_refresh, chunk,
+                         max_rounds, epochs, batch, steps_max, ref_epochs,
+                         ref_steps, spec, mob, n_max, strategy, compress,
+                         n_params, method, fc, n_req, n_lanes, r0, state,
+                         arrays):
+    """ONE ``chunk`` of fleet rounds, for the host-driven checkpoint
+    loop: ``run_fleet(checkpoint_dir=...)`` calls this per chunk,
+    serializing the returned carry at checkpoint boundaries
+    (``repro.checkpoint``).  Traces the SAME ``maybe_round`` as
+    :func:`_fleet_program` — only the outer while_loop moves to the
+    host, so a resumed run replays bit-identical round bodies."""
+    maybe_round = _make_round_fn(
+        task, use_pallas, interpret, do_refresh, max_rounds, epochs, batch,
+        steps_max, ref_epochs, ref_steps, spec, mob, n_max, strategy,
+        compress, n_params, method, fc, n_req, n_lanes, arrays)
+    _, state = jax.lax.fori_loop(0, chunk, maybe_round, (r0, state))
+    return state
 
 
 def run_fleet(task, requesters: Sequence[RequesterSpec],
@@ -671,7 +833,10 @@ def run_fleet(task, requesters: Sequence[RequesterSpec],
               interpret: Optional[bool] = None,
               round_chunk: int = 4,
               method: str = "enfed",
-              dfl_topology: str = "mesh") -> FleetResult:
+              dfl_topology: str = "mesh",
+              checkpoint_dir: Optional[str] = None,
+              checkpoint_every: int = 0,
+              resume_from: Optional[str] = None) -> FleetResult:
     """Run ``len(requesters)`` concurrent EnFed sessions as one jit program.
 
     Note: prefer the :mod:`repro.api` facade
@@ -714,6 +879,26 @@ def run_fleet(task, requesters: Sequence[RequesterSpec],
     their ``SessionResult`` views carry ``battery=None`` and
     ``cfl_session``/``dfl_session`` energy reports, exactly like
     ``repro.api``'s loop-engine baselines.
+
+    With ``cfg.faults`` set, ``Phase.DELIVER`` runs inside the program:
+    per-link drop/retry/stale outcomes are derived from the traced round
+    number (``repro.core.faults`` — the exact hash chain the loop engine
+    evaluates host-side), undelivered links are zeroed out of the fedavg
+    weight mask, stale links aggregate the carried round-(r-1) wire
+    image, and every drop or retry prices one extra receive window
+    through ``CostModel.retry_energy``.
+
+    ``checkpoint_dir`` switches the round loop to a host-driven chunk
+    loop that serializes the FULL flat loop carry — wire-format round
+    state, batteries, masks, round clocks — via :mod:`repro.checkpoint`
+    every ``checkpoint_every`` rounds (default: every ``round_chunk``;
+    rounded up to a chunk multiple).  ``resume_from`` restores the
+    latest checkpoint in a directory and continues: a run killed at a
+    checkpoint boundary and resumed is bit-identical to the
+    uninterrupted chunked run (same traced round bodies — only the
+    outer while_loop moves to the host).  Checkpointing is an
+    enfed-only knob (the baselines' loop oracles have no resumable
+    state contract); passing it with ``method != "enfed"`` raises.
     """
     from repro.kernels.common import resolve_interpret
 
@@ -725,11 +910,18 @@ def run_fleet(task, requesters: Sequence[RequesterSpec],
         raise ValueError("empty fleet")
     if round_chunk < 1:
         raise ValueError(f"round_chunk must be >= 1 (got {round_chunk})")
+    if checkpoint_every < 0:
+        raise ValueError(
+            f"checkpoint_every must be >= 0 (got {checkpoint_every})")
+    if (checkpoint_dir or resume_from) and method != "enfed":
+        raise ValueError(
+            f"checkpointing is enfed-only (got method={method!r})")
     if method != "enfed":
         return _run_fleet_baseline(task, requesters, cfg, cost, method,
                                    dfl_topology, use_pallas, interpret,
                                    round_chunk)
     mob = cfg.mobility
+    fc = cfg.faults
 
     # ---- Phase.HANDSHAKE (host-side, static) ------------------------------
     # Static world: sign utility-ranked contracts once.  Mobility: fix the
@@ -881,12 +1073,25 @@ def run_fleet(task, requesters: Sequence[RequesterSpec],
                                     compress=wire_compress,
                                     raw_bytes=tree_bytes(template))
     batteries = [s.battery or BatteryState() for s in requesters]
-    if mob is None:
+    if mob is None and fc is None:
         e_round = np.array([cost.round_energy(
             n_contrib=len(cs), num_params=num_params, model_bytes=model_bytes,
             num_samples=len(spec.own_train[0]), epochs=cfg.epochs,
             n_devices=len(spec.neighborhood), encrypt=cfg.encrypt)
             for spec, cs in zip(requesters, lane_devs)], np.float32)
+    elif mob is None:
+        # static world + faults: the DELIVERED count is traced, so the
+        # round energy becomes the same per-count lookup mobility uses
+        # (table entries are round_energy(n_contrib=j) — independent of
+        # the table width, so they match the loop engine's per-requester
+        # tables entry for entry)
+        e_tab = np.array([cost.round_energy_table(
+            max_contrib=N, num_params=num_params, model_bytes=model_bytes,
+            num_samples=len(spec.own_train[0]), epochs=cfg.epochs,
+            n_devices=len(spec.neighborhood), encrypt=cfg.encrypt)
+            for spec in requesters], np.float32)
+        init_params = task.init(seed=cfg.seed)
+        init_flat, _ = tree_ravel(init_params)
     else:
         # member count is traced -> per-count lookup table, plus the
         # contributor-side per-round energy split (tx / refresh)
@@ -922,7 +1127,12 @@ def run_fleet(task, requesters: Sequence[RequesterSpec],
         desired_accuracy=jnp.float32(cfg.desired_accuracy),
         battery_threshold=jnp.float32(cfg.battery_threshold))
     if mob is None:
-        arrays.update(round_w=jnp.asarray(round_w), e_round=jnp.asarray(e_round))
+        arrays.update(round_w=jnp.asarray(round_w))
+        if fc is None:
+            arrays.update(e_round=jnp.asarray(e_round))
+        else:
+            arrays.update(e_tab=jnp.asarray(e_tab),
+                          init_flat=jnp.asarray(init_flat))
     else:
         arrays.update(req_ids=jnp.asarray(req_ids),
                       cand_ids=jnp.asarray(cand_ids),
@@ -934,6 +1144,25 @@ def run_fleet(task, requesters: Sequence[RequesterSpec],
                       init_flat=jnp.asarray(init_flat))
     if c_scales is not None:
         arrays.update(c_scales=c_scales)
+    if fc is not None:
+        # Phase.DELIVER staging: lane i rolls fault dice as requester
+        # ``fc.requester_id + i`` (the api loop path hands requester i a
+        # config with exactly that id, so engines agree per requester);
+        # links are the signed lanes (static) or the candidate pool
+        # (mobility — membership already masks attempts per round).
+        freq_ids = np.array([fc.requester_id + i for i in range(R)], np.int32)
+        fcand_ids = np.zeros((R, N), np.int32)
+        fsigned = np.zeros((R, N), bool)
+        for i, cs in enumerate(lane_devs):
+            fcand_ids[i, :len(cs)] = [d.device_id for d in cs]
+            fsigned[i, :len(cs)] = True
+        e_rx_retry, _, t_retry = cost.retry_energy(
+            model_bytes=model_bytes, encrypt=cfg.encrypt)
+        arrays.update(freq_ids=jnp.asarray(freq_ids),
+                      fcand_ids=jnp.asarray(fcand_ids),
+                      e_retry=jnp.float32(e_rx_retry))
+        if mob is None:
+            arrays.update(fsigned=jnp.asarray(fsigned))
     shard_bytes = shard_bytes_dense = 0
     gather_bytes = gather_bytes_dense = 0
     index_bytes = int(n_own.nbytes + 4)
@@ -1002,14 +1231,48 @@ def run_fleet(task, requesters: Sequence[RequesterSpec],
     staged = [contrib_flat] + [v for v in arrays.values() if hasattr(v, "nbytes")]
     staged_bytes = int(sum(int(v.nbytes) for v in staged))
 
-    (contrib_final, cscale_final, last_flat, level, stop_code, rounds_done,
-     traces) = _fleet_program(
-        task, use_pallas, resolve_interpret(interpret), ref_epochs > 0,
-        int(round_chunk), cfg.max_rounds, cfg.epochs, cfg.batch_size,
-        steps_max, ref_epochs, ref_steps, ravel_spec, mob, cfg.n_max,
-        cfg.strategy if mob is not None else None, wire_compress, P,
-        "enfed", contrib_flat, arrays)
-    acc_h, loss_h, bat_h, exec_h, body_h, member_h = (np.asarray(t) for t in traces)
+    statics = (task, use_pallas, resolve_interpret(interpret), ref_epochs > 0,
+               int(round_chunk), cfg.max_rounds, cfg.epochs, cfg.batch_size,
+               steps_max, ref_epochs, ref_steps, ravel_spec, mob, cfg.n_max,
+               cfg.strategy if mob is not None else None, wire_compress, P,
+               "enfed", fc, R, N)
+    state = _init_state("enfed", mob, ref_epochs > 0, wire_compress,
+                        cfg.max_rounds, P, fc, contrib_flat, arrays)
+    if checkpoint_dir or resume_from:
+        # host-driven chunk loop: same traced round bodies, the outer
+        # while moves to the host so the carry can be serialized (and a
+        # killed run restarted) at chunk boundaries
+        from repro import checkpoint as ckpt_mod
+        chunk = int(round_chunk)
+        every = checkpoint_every if checkpoint_every > 0 else chunk
+        every = ((every + chunk - 1) // chunk) * chunk   # chunk multiple
+        r0 = 0
+        if resume_from:
+            template = {"r0": np.int64(0),
+                        "state": jax.tree_util.tree_map(np.asarray, state)}
+            pay, _step = ckpt_mod.restore_checkpoint(resume_from, template)
+            r0 = int(pay["r0"])
+            state = jax.tree_util.tree_map(jnp.asarray, pay["state"])
+        while r0 < cfg.max_rounds and bool(np.any(np.asarray(state[6]))):
+            state = _fleet_chunk_program(*statics, jnp.int32(r0), state,
+                                         arrays)
+            r0 += chunk
+            if checkpoint_dir and r0 % every == 0:
+                ckpt_mod.save_checkpoint(
+                    checkpoint_dir, r0,
+                    {"r0": np.int64(r0),
+                     "state": jax.tree_util.tree_map(np.asarray, state)})
+    else:
+        state = _fleet_program(*statics, state, arrays)
+    (contrib_final, cscale_final, _live, _live_s, last_flat, level, _active,
+     stop_code, rounds_done, _clevel, acc_t, loss_t, bat_t, exec_t, body_t,
+     member_t, _prev, _prev_s, drop_t, retry_t, stale_t, deliver_t) = state
+    acc_h, loss_h, bat_h, exec_h, body_h, member_h = (
+        np.asarray(t) for t in (acc_t, loss_t, bat_t, exec_t, body_t,
+                                member_t))
+    if fc is not None:
+        drop_h, retry_h, stale_h, deliver_h = (
+            np.asarray(t) for t in (drop_t, retry_t, stale_t, deliver_t))
     rounds_np = np.asarray(rounds_done)
     codes_np = np.asarray(stop_code)
     level_np = np.asarray(level)
@@ -1048,6 +1311,13 @@ def run_fleet(task, requesters: Sequence[RequesterSpec],
             model_bytes=model_bytes, num_samples=len(spec.own_train[0]),
             epochs=cfg.epochs, n_devices=len(spec.neighborhood),
             encrypt=cfg.encrypt)
+        if fc is not None:
+            # the traces alone reconstruct the fault transport overhead:
+            # every drop or retry burned one extra receive window
+            extra_i = float(drop_h[:r_i, i].sum() + retry_h[:r_i, i].sum())
+            if extra_i:
+                report.times.t_com += extra_i * t_retry
+                report.e_comm += extra_i * e_rx_retry
         total_e += report.e_tot
         battery = dataclasses.replace(b0, level=float(level_np[i]))
         history = {"accuracy": [float(a) for a in acc_h[:r_i, i]],
@@ -1058,18 +1328,28 @@ def run_fleet(task, requesters: Sequence[RequesterSpec],
                                       for r in range(r_i)]
             history["members"] = [float(member_h[r, i].sum())
                                   for r in range(r_i)]
+        if fc is not None:
+            history["drops"] = [float(x) for x in drop_h[:r_i, i]]
+            history["retries"] = [float(x) for x in retry_h[:r_i, i]]
+            history["stale"] = [float(x) for x in stale_h[:r_i, i]]
+            history["deliver_mask"] = [deliver_h[r, i].copy()
+                                       for r in range(r_i)]
         sessions.append(SessionResult(
             accuracy=history["accuracy"][-1] if history["accuracy"] else 0.0,
             rounds=r_i, n_contributors=len(cs), report=report, battery=battery,
             history=history, stop_reason=protocol.stop_reason_name(codes_np[i]),
             params=jax.tree_util.tree_map(lambda l: l[i], last_p)))
+    fleet_hist = {"accuracy": acc_h, "loss": loss_h, "battery": bat_h,
+                  "executed": exec_h, "round_executed": body_h,
+                  "member": member_h}
+    if fc is not None:
+        fleet_hist.update(drops=drop_h, retries=retry_h, stale=stale_h,
+                          deliver=deliver_h)
     return FleetResult(
         sessions=sessions, rounds=rounds_np, stop_codes=codes_np,
         accuracy=np.array([s.accuracy for s in sessions], np.float32),
         battery_level=level_np, total_energy_j=float(total_e),
-        history={"accuracy": acc_h, "loss": loss_h, "battery": bat_h,
-                 "executed": exec_h, "round_executed": body_h,
-                 "member": member_h},
+        history=fleet_hist,
         staged_host_bytes=staged_bytes, staged_index_bytes=index_bytes,
         staged_shard_bytes=shard_bytes,
         staged_shard_bytes_dense=shard_bytes_dense,
@@ -1198,14 +1478,19 @@ def _run_fleet_baseline(task, requesters: Sequence[RequesterSpec], cfg, cost,
                                if hasattr(v, "nbytes")]
     staged_bytes = int(sum(int(v.nbytes) for v in staged))
 
-    (_contrib, _cscale, last_flat, level, stop_code, rounds_done,
-     traces) = _fleet_program(
+    state0 = _init_state(method, None, False, None, cfg.max_rounds, P, None,
+                         contrib_flat, arrays)
+    state = _fleet_program(
         task, use_pallas, resolve_interpret(interpret), False,
         int(round_chunk), cfg.max_rounds, cfg.epochs, cfg.batch_size,
         steps_max, 0, 1, ravel_spec, None, cfg.n_max, None, None, P,
-        method, contrib_flat, arrays)
+        method, None, R, N, state0, arrays)
+    (_contrib, _cscale, _live, _live_s, last_flat, level, _active, stop_code,
+     rounds_done, _clevel, acc_t, loss_t, bat_t, exec_t, body_t, member_t,
+     *_rest) = state
     acc_h, loss_h, bat_h, exec_h, body_h, member_h = (
-        np.asarray(t) for t in traces)
+        np.asarray(t) for t in (acc_t, loss_t, bat_t, exec_t, body_t,
+                                member_t))
     rounds_np = np.asarray(rounds_done)
     codes_np = np.asarray(stop_code)
 
@@ -1218,6 +1503,7 @@ def _run_fleet_baseline(task, requesters: Sequence[RequesterSpec], cfg, cost,
                                     compress=getattr(cfg, "compress", None),
                                     raw_bytes=tree_bytes(template))
     last_p = tree_unravel(ravel_spec, last_flat)
+    fc = getattr(cfg, "faults", None)
     sessions = []
     total_e = 0.0
     for i, spec in enumerate(requesters):
@@ -1236,6 +1522,33 @@ def _run_fleet_baseline(task, requesters: Sequence[RequesterSpec], cfg, cost,
                 num_samples=len(spec.own_train[0]), epochs=cfg.epochs,
                 topology=dfl_topology)
             history = {"accuracy": [float(a) for a in acc_h[:r_i, i]]}
+        if fc is not None and r_i:
+            # the baselines' loop oracles define convergence, so link
+            # faults price in the COST domain only: the same fault world
+            # (requester fc.requester_id + i), rolled over this method's
+            # wire links — the one server uplink (cfl, WAN-rated) or the
+            # gossip fan (dfl) — and every extra transmission re-priced
+            # through the one CostModel, same as the enfed engines
+            if method == "cfl":
+                link_ids = np.array([0], np.int32)
+                _, e_tx_r, t_xfer = cost.retry_energy(
+                    model_bytes=model_bytes, encrypt=False,
+                    rate_bps=cost.link.wan_rate_bps)
+            else:
+                fan = (n_cli - 1 if dfl_topology == "mesh"
+                       else min(2, n_cli - 1))
+                link_ids = np.arange(1, fan + 1, dtype=np.int32)
+                _, e_tx_r, t_xfer = cost.retry_energy(
+                    model_bytes=model_bytes, encrypt=True)
+            extra = 0.0
+            for r in range(r_i):
+                delivered, attempts, _ = faults_mod.link_outcomes(
+                    fc, r, fc.requester_id + i, link_ids)
+                extra += float(np.sum(np.asarray(attempts))
+                               - np.sum(np.asarray(delivered)))
+            report.times.t_com += extra * t_xfer
+            report.e_comm += extra * e_tx_r
+            history["fault_extra_tx"] = extra
         total_e += report.e_tot
         sessions.append(SessionResult(
             accuracy=history["accuracy"][-1] if history["accuracy"] else 0.0,

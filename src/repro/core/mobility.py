@@ -182,7 +182,7 @@ def static_utility_term(staleness, data_size, max_data):
 
 
 def membership_step(mob: MobilityConfig, r, requester_id, cand_ids,
-                    cand_mask, base_util, level, n_max: int):
+                    cand_mask, base_util, level, n_max: int, blocked=None):
     """One round of contract re-negotiation, pure jnp — THE shared
     membership derivation of both engines.
 
@@ -197,7 +197,12 @@ def membership_step(mob: MobilityConfig, r, requester_id, cand_ids,
                      (has_model, reservation <= offer) at session setup;
     ``base_util``    (..., N) fp32 static utility (freshness + data);
     ``level``        (..., N) fp32 contributor battery fraction;
-    ``n_max``        contract slots.
+    ``n_max``        contract slots;
+    ``blocked``      optional (..., N) bool — links suspended by the
+                     fault world (``repro.core.faults.blocked_mask``:
+                     repeatedly-failing members); treated exactly like
+                     being out of radio range, so releases/arrivals and
+                     undercutting compose with the fault streak.
 
     Returns ``(member, rank, util)``: ``member`` (..., N) bool — the
     re-negotiated contract set (in-range, above the battery floor, top
@@ -210,6 +215,8 @@ def membership_step(mob: MobilityConfig, r, requester_id, cand_ids,
     eligible = (cand_mask
                 & in_range_mask(mob, requester_id, cand_ids, r)
                 & (level >= jnp.float32(mob.battery_floor)))
+    if blocked is not None:
+        eligible = eligible & ~jnp.asarray(blocked, bool)
     util = base_util + battery_utility_term(level)
     n = util.shape[-1]
     # rank = how many ELIGIBLE candidates beat me (higher utility, or

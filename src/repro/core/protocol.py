@@ -31,6 +31,10 @@ class Phase(enum.Enum):
     #   (release out-of-range / battery-floored members, sign arrivals;
     #   repro.core.mobility.membership_step, identical in both engines)
     COLLECT = "collect"        # receive (and decrypt) contributor updates
+    DELIVER = "deliver"        # faults: which collected updates actually
+    #   arrived this round (drops / bounded retries / stale images;
+    #   repro.core.faults.link_outcomes, identical in both engines) —
+    #   the delivered mask feeds AGGREGATE's existing weight-mask path
     AGGREGATE = "aggregate"    # eq. (14) masked FedAvg
     FIT = "fit"                # requester personalizes on its own shard
     SCORE = "score"            # evaluate against the desired accuracy A_A
@@ -38,8 +42,9 @@ class Phase(enum.Enum):
     REFRESH = "refresh"        # contributors keep training between rounds
 
 
-ROUND_PHASES = (Phase.RENEGOTIATE, Phase.COLLECT, Phase.AGGREGATE, Phase.FIT,
-                Phase.SCORE, Phase.ACCOUNT, Phase.REFRESH)
+ROUND_PHASES = (Phase.RENEGOTIATE, Phase.COLLECT, Phase.DELIVER,
+                Phase.AGGREGATE, Phase.FIT, Phase.SCORE, Phase.ACCOUNT,
+                Phase.REFRESH)
 
 # ---------------------------------------------------------------------------
 # Method variants: every method the fleet engine can trace is a subset of
@@ -54,6 +59,9 @@ ROUND_PHASES = (Phase.RENEGOTIATE, Phase.COLLECT, Phase.AGGREGATE, Phase.FIT,
 # * ``dfl``   — decentralized FedAvg: every client fits its own shard
 #   from its own params, then gossip-mixes over the mesh/ring topology
 #   (AGGREGATE is the mixing step).  No renegotiate/refresh/battery.
+#   DELIVER is enfed-only: the baselines' loop oracles define their
+#   convergence semantics, so a FaultConfig prices their retry transport
+#   in the cost domain without perturbing aggregation.
 # * ``cfl``   — centralized FedAvg: every client fits from the shared
 #   global, a server-side data-size-weighted FedAvg replaces it
 #   (AGGREGATE is server-side).  No renegotiate/refresh/battery.
@@ -64,7 +72,7 @@ ROUND_PHASES = (Phase.RENEGOTIATE, Phase.COLLECT, Phase.AGGREGATE, Phase.FIT,
 FLEET_METHODS = ("enfed", "dfl", "cfl")
 
 _METHOD_PHASES = {
-    "enfed": ROUND_PHASES,
+    "enfed": ROUND_PHASES,      # includes Phase.DELIVER (fault masking)
     "dfl": (Phase.COLLECT, Phase.AGGREGATE, Phase.FIT, Phase.SCORE,
             Phase.ACCOUNT),
     "cfl": (Phase.COLLECT, Phase.AGGREGATE, Phase.FIT, Phase.SCORE,

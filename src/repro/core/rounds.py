@@ -38,9 +38,11 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import aggregation, crypto, mobility, protocol, topology
+from repro.core import aggregation, crypto, faults as faults_mod
+from repro.core import mobility, protocol, topology
 from repro.core.battery import BatteryState
 from repro.core.energy import CostModel, EnergyReport, update_wire_bytes
+from repro.core.faults import FaultConfig
 from repro.kernels.quantize.ops import (compress_update, decompress_update,
                                         resolve_compress)
 from repro.core.incentive import (Contract, NeighborDevice, candidate_pool,
@@ -84,6 +86,15 @@ class EnFedConfig:
     # arrivals undercut weaker members.  None = the static-neighborhood
     # protocol above.
     mobility: Optional[MobilityConfig] = None
+    # unreliable-link world (repro.core.faults): when set, every
+    # (requester, contributor) link can drop a round's update, retry it
+    # (bounded, each retransmission re-priced through the cost model),
+    # or deliver the round-(r-1) wire image instead; undelivered links
+    # are zeroed out of the round's aggregation mask (Phase.DELIVER) and
+    # an all-links-failed round falls back to the requester's own
+    # params.  Counter-based world state like mobility — both engines
+    # derive bit-identical fault outcomes.  None = perfect links.
+    faults: Optional[FaultConfig] = None
 
     def __post_init__(self):
         if self.compress not in (None, "int8", "auto"):
@@ -175,18 +186,39 @@ class EnFedSession:
         q, s, n = self._wire[device_id]
         return unflatten_from_vector(decompress_update(q, s, n), template)
 
-    def _collect_update(self, device_id: int):
+    def _snap_prev(self, device_ids):
+        """Phase.DELIVER bookkeeping (``cfg.faults``): remember this
+        round's transported images so a lagging link can deliver them
+        NEXT round (stale delivery).  Snapshotted before Phase.REFRESH
+        rebinds the state — reference snapshots, since params/wire
+        payloads are immutable; the fleet engine carries the identical
+        snapshot as a second wire-format (R, N, ·) buffer in its loop
+        state."""
+        if self._compress == "int8":
+            self._prev_wire = {int(d): self._wire[int(d)] for d in device_ids}
+        else:
+            self._prev_params = {
+                int(d): self.contributor_states[int(d)]["params"]
+                for d in device_ids}
+
+    def _collect_update(self, device_id: int, stale: bool = False):
         """Phase.COLLECT: contributor -> (compress) -> (encrypt) -> wire
-        -> (decrypt) -> (decompress)."""
+        -> (decrypt) -> (decompress).  ``stale`` substitutes the
+        round-(r-1) image snapshotted by :meth:`_snap_prev` — the wire
+        bytes (and therefore the pricing) are unchanged, only the
+        payload lags."""
         params = self.contributor_states[device_id]["params"]
+        if stale and self._compress != "int8":
+            params = self._prev_params[device_id]
         if self._compress == "int8":
             # the wire image really is the int8 payload + fp32 scales;
             # under encryption the AES-CTR round trip runs over exactly
             # those bytes (CTR preserves length, so model_bytes is the
             # compressed count either way)
-            q, s, n = self._wire[device_id]
+            q, s, n = (self._prev_wire if stale else self._wire)[device_id]
             if not self.cfg.encrypt:
-                return (self._wire_image(device_id, params),
+                return (unflatten_from_vector(decompress_update(q, s, n),
+                                              params),
                         int(q.shape[0]) + 4 * int(s.shape[0]))
             payload = jnp.concatenate([
                 jax.lax.bitcast_convert_type(q, jnp.uint8),
@@ -224,15 +256,145 @@ class EnFedSession:
             st["params"] = (self._wire_pack(c.device_id, fitted) if compress
                             else fitted)
 
+    # -- checkpointing (repro.checkpoint) -------------------------------------
+    @staticmethod
+    def _hist_pad(vals, n, width=None):
+        """History lists as fixed-shape arrays (zero-padded to the round
+        budget) so a mid-run checkpoint and the pre-loop restore template
+        always agree structurally."""
+        if width is None:
+            out = np.zeros((n,), np.float64)
+            if vals:
+                out[:len(vals)] = np.asarray(vals, np.float64)
+        else:
+            out = np.zeros((n, width), np.float32)
+            if vals:
+                out[:len(vals)] = np.stack(
+                    [np.asarray(v, np.float32) for v in vals])
+        return out
+
+    def _state_payload(self, r_next, device_ids, params, history, rounds,
+                       measured_fit_s, retry_windows, model_bytes=0,
+                       util_rows=None, level=None):
+        """The loop engine's resumable round state as one pytree.
+
+        Design rule (see ROADMAP): anything resumable checkpoints its
+        wire-format RESIDENT form — under ``compress="int8"`` that is the
+        (q, scales) cache itself (and its stale-delivery snapshot), never
+        a re-densified fp32 image.  The fleet engine serializes the very
+        same quantities as its flat (R, N, ·) carry.
+        """
+        cfg = self.cfg
+        n_rounds = cfg.max_rounds
+        ids = [int(d) for d in device_ids]
+        pay = {
+            "r": np.int64(r_next),
+            "rounds": np.int64(rounds),
+            "level": np.float64(self.battery.level),
+            "fit_s": np.float64(measured_fit_s),
+            "retry_windows": np.float64(retry_windows),
+            "model_bytes": np.int64(model_bytes),
+            "params": jax.tree_util.tree_map(np.asarray, params),
+            "acc": self._hist_pad(history["accuracy"], n_rounds),
+            "loss": self._hist_pad(history["loss"], n_rounds),
+            "bat": self._hist_pad(history["battery"], n_rounds),
+            "contrib": {str(d): jax.tree_util.tree_map(
+                np.asarray, self.contributor_states[d]["params"])
+                for d in ids},
+        }
+        if self._compress == "int8":
+            pay["wire"] = {str(d): {"q": np.asarray(self._wire[d][0]),
+                                    "s": np.asarray(self._wire[d][1])}
+                           for d in ids}
+        if cfg.faults is not None:
+            pay["drops"] = self._hist_pad(history["drops"], n_rounds)
+            pay["retries"] = self._hist_pad(history["retries"], n_rounds)
+            pay["stale"] = self._hist_pad(history["stale"], n_rounds)
+            pay["deliver"] = self._hist_pad(history["deliver_mask"],
+                                            n_rounds, len(ids))
+            if self._compress == "int8":
+                pay["prev_wire"] = {
+                    str(d): {"q": np.asarray(self._prev_wire[d][0]),
+                             "s": np.asarray(self._prev_wire[d][1])}
+                    for d in ids}
+            else:
+                pay["prev"] = {str(d): jax.tree_util.tree_map(
+                    np.asarray, self._prev_params[d]) for d in ids}
+        if util_rows is not None:   # mobility world
+            n_cand = len(ids)
+            pay["clevel"] = np.asarray(level, np.float32)
+            pay["members"] = self._hist_pad(history["members"], n_rounds)
+            pay["member_h"] = self._hist_pad(history["member_mask"],
+                                             n_rounds, n_cand)
+            pay["util_h"] = self._hist_pad(util_rows, n_rounds, n_cand)
+        return pay
+
+    def _restore_state(self, resume_from, template):
+        """Restore a :meth:`_state_payload` checkpoint (dtype-strict) and
+        rebind the session-held pieces (battery, contributor params, wire
+        + stale caches).  Returns the payload for the caller to unpack
+        its loop-local scalars/histories from."""
+        from repro.checkpoint import restore_checkpoint
+
+        pay, _ = restore_checkpoint(resume_from, template)
+        self.battery = dataclasses.replace(self.battery,
+                                           level=float(pay["level"]))
+        for key, st in pay["contrib"].items():
+            self.contributor_states[int(key)]["params"] = st
+        if self._compress == "int8":
+            for key, w in pay["wire"].items():
+                did = int(key)
+                n = tree_size(self.contributor_states[did]["params"])
+                self._wire[did] = (jnp.asarray(w["q"]), jnp.asarray(w["s"]), n)
+            if "prev_wire" in pay:
+                for key, w in pay["prev_wire"].items():
+                    did = int(key)
+                    n = tree_size(self.contributor_states[did]["params"])
+                    self._prev_wire[did] = (jnp.asarray(w["q"]),
+                                            jnp.asarray(w["s"]), n)
+        elif "prev" in pay:
+            for key, st in pay["prev"].items():
+                self._prev_params[int(key)] = st
+        return pay
+
+    @staticmethod
+    def _refill_history(history, pay, rounds, faults):
+        history["accuracy"] = [float(v) for v in pay["acc"][:rounds]]
+        history["loss"] = [float(v) for v in pay["loss"][:rounds]]
+        history["battery"] = [float(v) for v in pay["bat"][:rounds]]
+        if faults:
+            history["drops"] = [float(v) for v in pay["drops"][:rounds]]
+            history["retries"] = [float(v) for v in pay["retries"][:rounds]]
+            history["stale"] = [float(v) for v in pay["stale"][:rounds]]
+            history["deliver_mask"] = [row.copy()
+                                       for row in pay["deliver"][:rounds]]
+
+    @staticmethod
+    def _normalize_ckpt(checkpoint_dir, checkpoint_every):
+        if checkpoint_every < 0:
+            raise ValueError(
+                f"checkpoint_every must be >= 0, got {checkpoint_every}")
+        if checkpoint_dir is not None and checkpoint_every == 0:
+            checkpoint_every = 1   # loop engine: every round by default
+        return checkpoint_every
+
     # -- Algorithm 1 ----------------------------------------------------------
     def run(self, engine: str = "loop", *, use_pallas: bool = True,
-            interpret: Optional[bool] = None,
-            round_chunk: int = 4) -> SessionResult:
+            interpret: Optional[bool] = None, round_chunk: int = 4,
+            checkpoint_dir: Optional[str] = None, checkpoint_every: int = 0,
+            resume_from: Optional[str] = None) -> SessionResult:
         """Execute the session.  ``engine="loop"`` (default) runs the
         Python reference loop below; ``engine="fleet"`` compiles this
         session as a 1-requester fleet through ``repro.core.fleet``,
         forwarding the engine knobs (``use_pallas``, ``interpret``,
         ``round_chunk``) to ``run_fleet``.
+
+        Crash resumability: ``checkpoint_dir`` serializes the resumable
+        round state (wire-format resident, see ``repro.checkpoint``)
+        every ``checkpoint_every`` rounds (loop default: 1; fleet
+        default: ``round_chunk``); ``resume_from`` restores the latest
+        checkpoint in that directory such that killed-and-resumed is
+        bit-identical (masks, battery, params) to an uninterrupted run.
 
         Note: prefer the :mod:`repro.api` facade
         (``Experiment(world, method, execution).run()``) — this method
@@ -250,20 +412,30 @@ class EnFedSession:
                                          cost_model=self.cost,
                                          use_pallas=use_pallas,
                                          interpret=interpret,
-                                         round_chunk=round_chunk)
+                                         round_chunk=round_chunk,
+                                         checkpoint_dir=checkpoint_dir,
+                                         checkpoint_every=checkpoint_every,
+                                         resume_from=resume_from)
             self.battery = result.sessions[0].battery
             return result.sessions[0]
         if engine != "loop":
             raise ValueError(f"unknown engine {engine!r} (loop|fleet)")
+        checkpoint_every = self._normalize_ckpt(checkpoint_dir,
+                                                checkpoint_every)
         if self.cfg.mobility is not None:
-            return self._run_mobility()
+            return self._run_mobility(checkpoint_dir=checkpoint_dir,
+                                      checkpoint_every=checkpoint_every,
+                                      resume_from=resume_from)
+        from repro.checkpoint import save_checkpoint
 
         cfg = self.cfg
+        fc = cfg.faults
         contracts = self.handshake()
         if not contracts:
             raise RuntimeError("no nearby device agreed to the incentive (N_d < 1)")
         n_c = len(contracts)
         round_w = protocol.round_weights(n_c, cfg.strategy)
+        ids = np.array([c.device_id for c in contracts], np.int32)
 
         history = {"accuracy": [], "loss": [], "battery": []}
         params = None
@@ -271,17 +443,85 @@ class EnFedSession:
         stop = protocol.STOP_MAX_ROUNDS
         measured_fit_s = 0.0
         model_bytes = 0
+        retry_windows = 0.0
+        e_rx_retry = t_retry = 0.0
 
-        for r in range(cfg.max_rounds):
-            updates = []
-            for c in contracts:
-                upd, nbytes = self._collect_update(c.device_id)
-                model_bytes = max(model_bytes, nbytes)
-                if params is None and not updates:
-                    params = upd  # model init from the first received update
-                updates.append(upd)
-            # Phase.AGGREGATE (eq. 14) then Phase.FIT on own data
-            global_params = aggregation.masked_fedavg(updates, round_w)
+        if fc is not None:
+            history.update(drops=[], retries=[], stale=[], deliver_mask=[])
+            # Under faults the requester owns its model from the start —
+            # an all-links-failed round falls back to it, exactly like
+            # the empty-neighborhood mobility case.
+            params = self.task.init(seed=cfg.seed)
+            num_params = tree_size(params)
+            model_bytes = update_wire_bytes(num_params, encrypt=cfg.encrypt,
+                                            compress=self._compress,
+                                            raw_bytes=tree_bytes(params))
+            e_tab = np.array(self.cost.round_energy_table(
+                max_contrib=n_c, num_params=num_params,
+                model_bytes=model_bytes,
+                num_samples=len(self.own_train[0]), epochs=cfg.epochs,
+                n_devices=len(self.fleet), encrypt=cfg.encrypt), np.float64)
+            # every retransmission is one more receive window, re-priced
+            # through the one cost model (air time + radio + crypto)
+            e_rx_retry, _, t_retry = self.cost.retry_energy(
+                model_bytes=model_bytes, encrypt=cfg.encrypt)
+            self._snap_prev(ids)
+
+        r_start = 0
+        if resume_from is not None:
+            template_params = (params if params is not None
+                               else self.task.init(seed=cfg.seed))
+            pay = self._restore_state(resume_from, self._state_payload(
+                0, ids, template_params, history, 0, 0.0, 0.0,
+                model_bytes=model_bytes))
+            r_start = int(pay["r"])
+            rounds = int(pay["rounds"])
+            params = pay["params"]
+            measured_fit_s = float(pay["fit_s"])
+            retry_windows = float(pay["retry_windows"])
+            model_bytes = int(pay["model_bytes"])
+            self._refill_history(history, pay, rounds, fc is not None)
+
+        for r in range(r_start, cfg.max_rounds):
+            if fc is not None:
+                # Phase.DELIVER: closed-form link outcomes for this round.
+                delivered, attempts, stale = (
+                    np.asarray(v) for v in faults_mod.link_outcomes(
+                        fc, r, fc.requester_id, ids))
+                blocked = np.asarray(faults_mod.blocked_mask(
+                    fc, r, fc.requester_id, ids))
+                attempted = ~blocked   # streak-blocked links sit out
+                delivered = delivered & attempted
+                drops_r = float(np.sum(attempted & ~delivered))
+                retries_r = float(np.sum(np.where(attempted,
+                                                  attempts - 1, 0)))
+                history["drops"].append(drops_r)
+                history["retries"].append(retries_r)
+                history["stale"].append(float(np.sum(delivered & stale)))
+                history["deliver_mask"].append(delivered.astype(np.float32))
+                lanes = np.nonzero(delivered)[0]
+                updates = []
+                for j in lanes:
+                    upd, nbytes = self._collect_update(int(ids[j]),
+                                                       stale=bool(stale[j]))
+                    model_bytes = max(model_bytes, nbytes)
+                    updates.append(upd)
+                dcount = len(updates)
+                if updates:
+                    global_params = aggregation.masked_fedavg(
+                        updates, round_w[lanes])
+                else:
+                    global_params = params   # every link failed this round
+            else:
+                updates = []
+                for c in contracts:
+                    upd, nbytes = self._collect_update(c.device_id)
+                    model_bytes = max(model_bytes, nbytes)
+                    if params is None and not updates:
+                        params = upd  # model init from the first received update
+                    updates.append(upd)
+                # Phase.AGGREGATE (eq. 14) then Phase.FIT on own data
+                global_params = aggregation.masked_fedavg(updates, round_w)
             t0 = time.perf_counter()
             params, losses = self.task.fit(global_params, self.own_train,
                                            cfg.epochs, cfg.batch_size,
@@ -295,10 +535,19 @@ class EnFedSession:
 
             # Phase.ACCOUNT: battery bookkeeping for this round
             num_params = tree_size(params)
-            e_round = self.cost.round_energy(
-                n_contrib=n_c, num_params=num_params, model_bytes=model_bytes,
-                num_samples=len(self.own_train[0]), epochs=cfg.epochs,
-                n_devices=len(self.fleet), encrypt=cfg.encrypt)
+            if fc is not None:
+                # The per-count table prices one receive window per
+                # delivered update; every drop or retry attempt is one
+                # MORE window on the requester's radio.
+                extra = drops_r + retries_r
+                retry_windows += extra
+                e_round = float(e_tab[dcount]) + extra * e_rx_retry
+            else:
+                e_round = self.cost.round_energy(
+                    n_contrib=n_c, num_params=num_params,
+                    model_bytes=model_bytes,
+                    num_samples=len(self.own_train[0]), epochs=cfg.epochs,
+                    n_devices=len(self.fleet), encrypt=cfg.encrypt)
             self.battery = self.battery.discharge(e_round,
                                                   avg_power_w=self.cost.device.p_train)
             history["battery"].append(self.battery.level)
@@ -309,7 +558,13 @@ class EnFedSession:
             if self.battery.below(cfg.battery_threshold):
                 stop = protocol.STOP_BATTERY
                 break
+            if fc is not None:
+                self._snap_prev(ids)   # next round's stale images
             self._refresh_contributors(contracts)
+            if checkpoint_dir is not None and (r + 1) % checkpoint_every == 0:
+                save_checkpoint(checkpoint_dir, r + 1, self._state_payload(
+                    r + 1, ids, params, history, rounds, measured_fit_s,
+                    retry_windows, model_bytes=model_bytes))
 
         num_params = tree_size(params)
         report = self.cost.session(
@@ -317,13 +572,18 @@ class EnFedSession:
             model_bytes=model_bytes, num_samples=len(self.own_train[0]),
             epochs=cfg.epochs, n_devices=len(self.fleet),
             measured_local_time=measured_fit_s, encrypt=cfg.encrypt)
+        if fc is not None and retry_windows:
+            report.times.t_com += retry_windows * t_retry
+            report.e_comm += retry_windows * e_rx_retry
         return SessionResult(
             accuracy=history["accuracy"][-1], rounds=rounds, n_contributors=n_c,
             report=report, battery=self.battery, history=history,
             stop_reason=protocol.stop_reason_name(stop), params=params)
 
     # -- Algorithm 1 in an opportunistic world (repro.core.mobility) ----------
-    def _run_mobility(self) -> SessionResult:
+    def _run_mobility(self, checkpoint_dir: Optional[str] = None,
+                      checkpoint_every: int = 0,
+                      resume_from: Optional[str] = None) -> SessionResult:
         """The churn-aware session loop: Phase.RENEGOTIATE runs every
         round — contributors leave when they walk out of radio range or
         hit the battery floor, in-range arrivals are signed, and a
@@ -384,16 +644,55 @@ class EnFedSession:
 
         history = {"accuracy": [], "loss": [], "battery": [],
                    "members": [], "member_mask": [], "contracts": []}
+        util_rows: List[np.ndarray] = []
         rounds = 0
         stop = protocol.STOP_MAX_ROUNDS
         measured_fit_s = 0.0
+        fc = cfg.faults
+        retry_windows = 0.0
+        e_rx_retry = t_retry = 0.0
+        if fc is not None:
+            history.update(drops=[], retries=[], stale=[], deliver_mask=[])
+            e_rx_retry, _, t_retry = self.cost.retry_energy(
+                model_bytes=model_bytes, encrypt=cfg.encrypt)
+            self._snap_prev(ids)
 
-        for r in range(cfg.max_rounds):
-            # Phase.RENEGOTIATE: release/sign/undercut for this round.
+        from repro.checkpoint import save_checkpoint
+
+        r_start = 0
+        if resume_from is not None:
+            pay = self._restore_state(resume_from, self._state_payload(
+                0, ids, params, history, 0, 0.0, 0.0,
+                util_rows=util_rows, level=level))
+            r_start = int(pay["r"])
+            rounds = int(pay["rounds"])
+            params = pay["params"]
+            measured_fit_s = float(pay["fit_s"])
+            retry_windows = float(pay["retry_windows"])
+            level = np.asarray(pay["clevel"], np.float32)
+            self._refill_history(history, pay, rounds, fc is not None)
+            history["members"] = [float(v) for v in pay["members"][:rounds]]
+            history["member_mask"] = [row.copy()
+                                      for row in pay["member_h"][:rounds]]
+            util_rows = [row.copy() for row in pay["util_h"][:rounds]]
+            # contracts are a pure function of (membership, utility) —
+            # rebuild the per-round contract history from the restored rows
+            history["contracts"] = [
+                contracts_from_membership(cands, pay["member_h"][rr] > 0,
+                                          pay["util_h"][rr],
+                                          cfg.offered_incentive)
+                for rr in range(rounds)]
+
+        for r in range(r_start, cfg.max_rounds):
+            # Phase.RENEGOTIATE: release/sign/undercut for this round —
+            # under faults, streak-blocked links lose eligibility too.
+            blocked = (np.asarray(faults_mod.blocked_mask(
+                fc, r, fc.requester_id, ids)) if fc is not None else None)
             member, rank, util = mobility.membership_step(
                 mob, r, mob.requester_id, ids, cand_mask, base_util, level,
-                cfg.n_max)
+                cfg.n_max, blocked=blocked)
             member = np.asarray(member, bool)
+            util_rows.append(np.asarray(util, np.float32))
             round_w = np.asarray(topology.dynamic_round_weights(
                 member, rank, cfg.strategy), np.float32)
             count = int(member.sum())
@@ -402,12 +701,32 @@ class EnFedSession:
             history["contracts"].append(contracts_from_membership(
                 cands, member, util, cfg.offered_incentive))
 
-            # Phase.COLLECT + Phase.AGGREGATE over the CURRENT members
-            # (lane order, zero-weight lanes dropped — fp32-identical to
-            # the fleet kernel's full-lane masked reduction).
-            if count > 0:
-                lanes = np.nonzero(member)[0]
-                updates = [self._collect_update(int(ids[j]))[0] for j in lanes]
+            # Phase.COLLECT + Phase.DELIVER + Phase.AGGREGATE over the
+            # CURRENT members (lane order, zero-weight lanes dropped —
+            # fp32-identical to the fleet kernel's full-lane masked
+            # reduction).  Under faults only the DELIVERED members feed
+            # eq. (14); drops cost the round without contributing.
+            if fc is not None:
+                delivered, attempts, stale = (
+                    np.asarray(v) for v in faults_mod.link_outcomes(
+                        fc, r, fc.requester_id, ids))
+                delivered = delivered & member
+                drops_r = float(np.sum(member & ~delivered))
+                retries_r = float(np.sum(np.where(member, attempts - 1, 0)))
+                history["drops"].append(drops_r)
+                history["retries"].append(retries_r)
+                history["stale"].append(float(np.sum(delivered & stale)))
+                history["deliver_mask"].append(delivered.astype(np.float32))
+                agg_mask = delivered
+            else:
+                agg_mask = member
+            dcount = int(agg_mask.sum())
+            if dcount > 0:
+                lanes = np.nonzero(agg_mask)[0]
+                updates = [self._collect_update(
+                    int(ids[j]),
+                    stale=bool(stale[j]) if fc is not None else False)[0]
+                    for j in lanes]
                 global_params = aggregation.masked_fedavg(
                     updates, round_w[lanes])
             else:
@@ -425,9 +744,17 @@ class EnFedSession:
             history["loss"].append(float(losses[-1]))
 
             # Phase.ACCOUNT: requester discharge from the member-count
-            # energy table (same table the fleet engine stages).
+            # energy table (same table the fleet engine stages); under
+            # faults the table indexes by DELIVERED count and every
+            # drop/retry adds one re-priced receive window.
+            if fc is not None:
+                extra = drops_r + retries_r
+                retry_windows += extra
+                e_r = float(e_tab[dcount]) + extra * float(e_rx_retry)
+            else:
+                e_r = float(e_tab[count])
             self.battery = self.battery.discharge(
-                float(e_tab[count]), avg_power_w=self.cost.device.p_train)
+                e_r, avg_power_w=self.cost.device.p_train)
             history["battery"].append(self.battery.level)
 
             if acc >= cfg.desired_accuracy:
@@ -440,14 +767,20 @@ class EnFedSession:
             continuing = stop == protocol.STOP_MAX_ROUNDS
 
             # Contributor-side discharge: members paid transmission this
-            # round; the refresh term only while the session survives.
+            # round (once per ATTEMPT under faults — the sender's radio
+            # burns the same energy whether or not the update lands);
+            # the refresh term only while the session survives.
+            e_tx_round = (e_tx * attempts.astype(np.float32)
+                          if fc is not None else e_tx)
             level = np.asarray(mobility.contributor_discharge(
-                level, member, e_tx, e_ref, continuing,
+                level, member, e_tx_round, e_ref, continuing,
                 mob.contributor_capacity_j), np.float32)
 
             if stop != protocol.STOP_MAX_ROUNDS:
                 break
 
+            if fc is not None:
+                self._snap_prev(ids)   # next round's stale images
             # Phase.REFRESH for current members only
             if cfg.contributor_refresh_epochs > 0:
                 for j in np.nonzero(member)[0]:
@@ -462,12 +795,20 @@ class EnFedSession:
                     st["params"] = (self._wire_pack(did, fitted)
                                     if self._compress == "int8" else fitted)
 
+            if checkpoint_dir is not None and (r + 1) % checkpoint_every == 0:
+                save_checkpoint(checkpoint_dir, r + 1, self._state_payload(
+                    r + 1, ids, params, history, rounds, measured_fit_s,
+                    retry_windows, util_rows=util_rows, level=level))
+
         mean_members = float(np.mean(history["members"])) if rounds else 0.0
         report = self.cost.session(
             rounds=rounds, n_contrib=mean_members, num_params=num_params,
             model_bytes=model_bytes, num_samples=len(self.own_train[0]),
             epochs=cfg.epochs, n_devices=len(self.fleet),
             measured_local_time=measured_fit_s, encrypt=cfg.encrypt)
+        if fc is not None and retry_windows:
+            report.times.t_com += retry_windows * float(t_retry)
+            report.e_comm += retry_windows * float(e_rx_retry)
         return SessionResult(
             accuracy=history["accuracy"][-1], rounds=rounds,
             n_contributors=n_cand, report=report, battery=self.battery,

@@ -1,0 +1,203 @@
+"""Unreliable-link world (repro.core.faults): engine parity + semantics.
+
+The fault model is WORLD state — a closed-form function of
+(seed, round, requester, contributor) — so the loop engine (host-side,
+concrete rounds) and the fleet engine (traced rounds inside one jit
+program) must derive bit-identical outcomes: the same delivered masks,
+the same retry/stale counts, the same graceful degradation, the same
+retry-energy accounting through the one CostModel.
+"""
+
+import copy
+
+import numpy as np
+import pytest
+from jax.flatten_util import ravel_pytree
+
+from repro.core import (EnFedConfig, EnFedSession, FaultConfig,
+                        MobilityConfig, RequesterSpec, run_fleet)
+from repro.core.battery import BatteryState
+from repro.core.faults import blocked_mask, link_outcomes
+
+from test_fleet_engine import BATCH, _build
+
+# exercises all three failure modes within 4 rounds of the tiny problem
+FC = FaultConfig(p_drop=0.6, p_stale=0.4, max_retries=1, release_after=2,
+                 seed=3)
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return _build()
+
+
+def _run_both(problem, cfg):
+    task, own_train, own_test, fleet, states = problem
+    loop = EnFedSession(task, own_train, own_test, fleet,
+                        copy.deepcopy(states), cfg,
+                        battery=BatteryState()).run()
+    spec = RequesterSpec(own_train=own_train, own_test=own_test,
+                         neighborhood=fleet,
+                         contributor_states=copy.deepcopy(states),
+                         battery=BatteryState())
+    fl = run_fleet(task, [spec], cfg).sessions[0]
+    return loop, fl
+
+
+def _assert_fault_parity(loop, fl, atol_p=1e-5):
+    assert fl.rounds == loop.rounds
+    assert fl.stop_reason == loop.stop_reason
+    # fault traces are exact integer world state: bitwise equality
+    for k in ("drops", "retries", "stale"):
+        np.testing.assert_array_equal(fl.history[k], loop.history[k])
+    lm = np.stack(loop.history["deliver_mask"])
+    fm = np.stack(fl.history["deliver_mask"])
+    np.testing.assert_array_equal(fm[:, :lm.shape[1]], lm)
+    assert not fm[:, lm.shape[1]:].any()          # padded lanes never deliver
+    np.testing.assert_allclose(fl.history["battery"], loop.history["battery"],
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(fl.history["accuracy"],
+                               loop.history["accuracy"], rtol=1e-5, atol=1e-6)
+    lv, _ = ravel_pytree(loop.params)
+    fv, _ = ravel_pytree(fl.params)
+    np.testing.assert_allclose(np.asarray(fv), np.asarray(lv),
+                               rtol=1e-4, atol=atol_p)
+    # retry-transport accounting lands identically in both reports
+    assert fl.report.e_comm == pytest.approx(loop.report.e_comm, abs=1e-3)
+    assert fl.report.times.t_com == pytest.approx(loop.report.times.t_com,
+                                                  abs=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# config validation (fail fast at construction, not as NaNs mid-program)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kw", [
+    dict(p_drop=-0.1), dict(p_drop=1.5), dict(p_stale=2.0),
+    dict(p_stale=-1e-9), dict(max_retries=-1), dict(release_after=-2),
+])
+def test_fault_config_validation(kw):
+    with pytest.raises(ValueError):
+        FaultConfig(**kw)
+
+
+def test_fault_config_bounds_ok():
+    fc = FaultConfig(p_drop=1.0, p_stale=0.0, max_retries=0)
+    assert fc.attempts_max == 1
+
+
+# ---------------------------------------------------------------------------
+# world-state semantics
+# ---------------------------------------------------------------------------
+
+
+def test_link_outcomes_deterministic_and_counterbased():
+    fc = FaultConfig(p_drop=0.5, p_stale=0.3, max_retries=2, seed=9)
+    ids = np.arange(6, dtype=np.int32)
+    d1, a1, s1 = (np.asarray(v) for v in link_outcomes(fc, 4, 100, ids))
+    d2, a2, s2 = (np.asarray(v) for v in link_outcomes(fc, 4, 100, ids))
+    np.testing.assert_array_equal(d1, d2)      # pure function of the counter
+    np.testing.assert_array_equal(a1, a2)
+    np.testing.assert_array_equal(s1, s2)
+    # attempts: delivered links used 1..attempts_max, failed links exhaust
+    assert np.all(a1[d1] >= 1) and np.all(a1[d1] <= fc.attempts_max)
+    assert np.all(a1[~d1] == fc.attempts_max)
+    # stale only fires on delivered links
+    assert not np.any(s1 & ~d1)
+    # other requesters see independent link weather
+    d3, _, _ = (np.asarray(v) for v in link_outcomes(fc, 4, 101, ids))
+    assert not np.array_equal(d1, d3)
+
+
+def test_blocked_mask_streaks():
+    fc = FaultConfig(p_drop=0.9, max_retries=0, release_after=2, seed=1)
+    ids = np.arange(8, dtype=np.int32)
+    # no fault history before round 0 -> nothing blocked early
+    assert not np.asarray(blocked_mask(fc, 0, 7, ids)).any()
+    assert not np.asarray(blocked_mask(fc, 1, 7, ids)).any()
+    for r in range(2, 6):
+        d1 = np.asarray(link_outcomes(fc, r - 1, 7, ids)[0])
+        d2 = np.asarray(link_outcomes(fc, r - 2, 7, ids)[0])
+        np.testing.assert_array_equal(np.asarray(blocked_mask(fc, r, 7, ids)),
+                                      ~d1 & ~d2)
+    # release_after=0 never blocks
+    fc0 = FaultConfig(p_drop=0.9, max_retries=0, release_after=0, seed=1)
+    assert not np.asarray(blocked_mask(fc0, 5, 7, ids)).any()
+
+
+# ---------------------------------------------------------------------------
+# engine parity under faults
+# ---------------------------------------------------------------------------
+
+
+def test_engines_agree_static_faults(problem):
+    cfg = EnFedConfig(desired_accuracy=0.99, max_rounds=4, epochs=1,
+                      batch_size=BATCH, encrypt=False,
+                      contributor_refresh_epochs=1, faults=FC)
+    loop, fl = _run_both(problem, cfg)
+    _assert_fault_parity(loop, fl)
+    # all three failure modes provably exercised in this world
+    tot = {k: float(np.sum(loop.history[k]))
+           for k in ("drops", "retries", "stale")}
+    assert tot["drops"] > 0 and tot["retries"] > 0 and tot["stale"] > 0, tot
+
+
+def test_engines_agree_int8_wire_faults(problem):
+    """Stale links replay the round-(r-1) WIRE image: under compress the
+    second buffer stays int8-resident in both engines."""
+    cfg = EnFedConfig(desired_accuracy=0.99, max_rounds=4, epochs=1,
+                      batch_size=BATCH, encrypt=False,
+                      contributor_refresh_epochs=1, compress="int8",
+                      faults=FC)
+    loop, fl = _run_both(problem, cfg)
+    _assert_fault_parity(loop, fl, atol_p=2e-2)   # tile-quantization bound
+
+
+def test_engines_agree_mobility_plus_faults(problem):
+    mob = MobilityConfig(arena_m=120.0, radio_range_m=60.0, leg_rounds=2,
+                         seed=5)
+    cfg = EnFedConfig(desired_accuracy=0.99, max_rounds=4, epochs=1,
+                      batch_size=BATCH, encrypt=False,
+                      contributor_refresh_epochs=1, mobility=mob, faults=FC)
+    loop, fl = _run_both(problem, cfg)
+    _assert_fault_parity(loop, fl)
+    # delivery implies membership that round, in both engines
+    mm = np.stack(loop.history["member_mask"])
+    dm = np.stack(loop.history["deliver_mask"])
+    assert not np.any(dm.astype(bool) & ~mm.astype(bool))
+
+
+def test_all_links_failed_falls_back_to_own_params(problem):
+    """p_drop=1: nothing ever delivers — the session degrades to solo
+    training (the empty-neighborhood fallback), identically in both
+    engines, instead of aggregating zeros."""
+    dead = FaultConfig(p_drop=1.0, max_retries=0, seed=0)
+    cfg = EnFedConfig(desired_accuracy=0.99, max_rounds=3, epochs=1,
+                      batch_size=BATCH, encrypt=False,
+                      contributor_refresh_epochs=0, faults=dead)
+    loop, fl = _run_both(problem, cfg)
+    _assert_fault_parity(loop, fl)
+    assert not np.stack(loop.history["deliver_mask"]).any()
+    assert all(v > 0 for v in loop.history["accuracy"])   # still learning
+
+
+def test_retry_energy_overhead_vs_clean_world(problem):
+    """The faulty world costs strictly more transport energy/time than
+    the clean one — drops and retries burn extra receive windows priced
+    by CostModel.retry_energy."""
+    base = EnFedConfig(desired_accuracy=0.99, max_rounds=4, epochs=1,
+                       batch_size=BATCH, encrypt=False,
+                       contributor_refresh_epochs=1)
+    clean, _ = _run_both(problem, base)
+    faulty, faulty_fl = _run_both(
+        problem, EnFedConfig(desired_accuracy=0.99, max_rounds=4, epochs=1,
+                             batch_size=BATCH, encrypt=False,
+                             contributor_refresh_epochs=1, faults=FC))
+    extra = float(np.sum(faulty.history["drops"])
+                  + np.sum(faulty.history["retries"]))
+    assert extra > 0
+    assert faulty.report.e_comm > clean.report.e_comm
+    assert faulty.report.times.t_com > clean.report.times.t_com
+    assert np.isfinite(faulty.report.e_tot)
+    assert faulty_fl.report.e_comm > clean.report.e_comm
