@@ -40,7 +40,12 @@ matching retry-energy accounting, and proving all three failure modes
 actually fired, (d) a KILL-AND-RESUME gate — a checkpointed fleet run
 is killed after its first chunk's checkpoint and resumed from disk; the
 resumed outcome must be BIT-identical to the uninterrupted run,
-(e) the ``--compare`` paper-claim rows (below), and (f) the PERF GATE:
+(e) the ``--compare`` paper-claim rows (below), (f) the TRACE gate —
+a traced run (``repro.telemetry.TraceConfig``) must be BIT-identical to
+the untraced one, its ``events.jsonl`` + ``trace.json`` exports (written
+next to ``--out`` for the CI artifact upload) must round-trip
+schema-valid, and both engines' event streams must agree — and (g) the
+PERF GATE:
 at the largest fleet size shared with the committed
 ``BENCH_fleet.json`` (same config + backend), warm rounds/s must not
 regress more than 25% on the machine that committed the baseline; on a
@@ -76,9 +81,15 @@ at the largest swept R every method runs as one compiled program and
 reports its own measured warm wall — no ``loop_baseline_s_per_session``
 multiplication anywhere in the row.
 
+Each static-sweep row also carries a Timeline-derived ``breakdown``
+(compile_s / warm_s / staging_s / checkpoint_s) from the engine's
+host-side spans (``repro.telemetry.spans``).  Progress and gate
+diagnostics go through stdlib ``logging`` on stderr (``-v`` debug,
+``-q`` errors only); stdout stays machine-clean.
+
   PYTHONPATH=src python -m benchmarks.fleet_bench [--sizes 8,32,128,512]
       [--smoke] [--compare] [--out BENCH_fleet.json]
-      [--perf-baseline PATH]
+      [--perf-baseline PATH] [-v | -q]
 """
 
 from __future__ import annotations
@@ -86,6 +97,7 @@ from __future__ import annotations
 import argparse
 import copy
 import json
+import logging
 import sys
 import time
 
@@ -101,6 +113,21 @@ from repro.models import MLPClassifier, MLPClassifierConfig
 BATCH = 32
 N_CONTRIB = 3
 LOOP_SAMPLE_SESSIONS = 3   # loop engine timed on this many, extrapolated
+
+log = logging.getLogger("repro.bench.fleet")
+
+
+def _setup_logging(verbosity: int) -> None:
+    """Progress/gate logging on STDERR only — stdout stays machine-clean
+    for anyone piping the report (the JSON itself goes to ``--out``).
+    verbosity: -1 = errors only (-q), 0 = progress (default), 1 = -v."""
+    level = (logging.ERROR if verbosity < 0
+             else logging.DEBUG if verbosity > 0 else logging.INFO)
+    handler = logging.StreamHandler(sys.stderr)
+    handler.setFormatter(logging.Formatter("%(message)s"))
+    log.handlers[:] = [handler]
+    log.setLevel(level)
+    log.propagate = False
 
 
 def _build_problem(seed: int = 0, hidden=(32,), num_samples: int = 1200,
@@ -341,7 +368,7 @@ def _perf_gate(report: dict, baseline_path: str, threshold: float = 0.75,
             "pass": bool(ratio >= threshold)}
 
 
-def _compress_sweep(sizes, verbose: bool) -> list:
+def _compress_sweep(sizes) -> list:
     """fp32 vs int8 round state, per fleet size, on a tile-amortizing
     model (MLP(64,32), P=2821 > 2 quantization tiles).  The smoke
     model's P=453 fits inside one 1024-wide tile, where padding eats the
@@ -378,13 +405,12 @@ def _compress_sweep(sizes, verbose: bool) -> list:
             row["fp32"]["device_round_state_bytes"]
             / max(row["int8"]["device_round_state_bytes"], 1), 2)
         rows.append(row)
-        if verbose:
-            print(f"[compress R={R:4d}] fp32 {row['fp32']['rounds_per_s']:7.1f} r/s"
-                  f" | int8 {row['int8']['rounds_per_s']:7.1f} r/s | "
-                  f"staged {row['fp32']['staged_param_bytes']} -> "
-                  f"{row['int8']['staged_param_bytes']} B "
-                  f"({row['staged_param_reduction_x']}x), device state "
-                  f"{row['device_state_reduction_x']}x")
+        log.info(f"[compress R={R:4d}] fp32 {row['fp32']['rounds_per_s']:7.1f} r/s"
+                 f" | int8 {row['int8']['rounds_per_s']:7.1f} r/s | "
+                 f"staged {row['fp32']['staged_param_bytes']} -> "
+                 f"{row['int8']['staged_param_bytes']} B "
+                 f"({row['staged_param_reduction_x']}x), device state "
+                 f"{row['device_state_reduction_x']}x")
     return rows
 
 
@@ -417,7 +443,7 @@ def _baseline_parity_smoke(task, fleet, states, own_train, own_test) -> dict:
 
 
 def _fleet_compare_sweep(task, fleet, states, own_train, own_test,
-                         R: int, verbose: bool) -> dict:
+                         R: int) -> dict:
     """Every method of the comparison as ONE compiled fleet program at
     the largest swept R — each row's warm wall is MEASURED on that
     method's own program, never derived from the loop-engine
@@ -448,13 +474,12 @@ def _fleet_compare_sweep(task, fleet, states, own_train, own_test,
             "rounds_per_s": round(total_rounds / wall, 2),
             "simulated_energy_j": round(res.energy_j * len(res.sessions), 2)
             if res.raw is None else round(res.raw.total_energy_j, 2)}
-        if verbose:
-            m = out["methods"][name]
-            print(f"[compare-fleet R={R:4d}] {name:5s} warm {m['warm_s']:7.3f}s"
-                  f" | {m['session_rounds']} session-rounds -> "
-                  f"{m['rounds_per_s']:8.1f} rounds/s | "
-                  f"E={m['simulated_energy_j']:.1f}J (measured, engine="
-                  f"{m['engine']})")
+        m = out["methods"][name]
+        log.info(f"[compare-fleet R={R:4d}] {name:5s} warm {m['warm_s']:7.3f}s"
+                 f" | {m['session_rounds']} session-rounds -> "
+                 f"{m['rounds_per_s']:8.1f} rounds/s | "
+                 f"E={m['simulated_energy_j']:.1f}J (measured, engine="
+                 f"{m['engine']})")
     out["pass"] = bool(all(m["engine"] == "fleet"
                            and np.isfinite(m["rounds_per_s"])
                            and np.isfinite(m["simulated_energy_j"])
@@ -680,10 +705,81 @@ def _resume_smoke(task, fleet, states, own_train, own_test) -> dict:
     return out
 
 
+def _trace_smoke(task, fleet, states, own_train, own_test,
+                 out_path: str | None) -> dict:
+    """Trace gate: the telemetry house rule, CI-enforced.
+
+    A traced fleet run (event JSONL + Chrome trace exports, on the fault
+    world so delivered masks exist) must be BIT-identical — params,
+    delivered masks, battery trajectory — to the identical run with
+    tracing off; the exported artifacts must round-trip schema-valid;
+    and the loop engine's event stream for the same world must equal the
+    fleet engine's (``compare_event_streams`` = []).  The artifacts land
+    next to ``--out`` so CI uploads them with ``BENCH_fleet.json``."""
+    import os
+
+    from repro.api import (ExecutionSpec, Experiment, MethodSpec,
+                           TraceConfig, WorldSpec)
+    from repro.telemetry import (compare_event_streams, read_events_jsonl,
+                                 validate_events)
+
+    method = MethodSpec(desired_accuracy=0.999, max_rounds=4, epochs=1,
+                        batch_size=BATCH, encrypt=False,
+                        contributor_refresh_epochs=1, faults=_fault_world())
+
+    def _world():
+        return WorldSpec.single(task, own_train, own_test, fleet,
+                                copy.deepcopy(states), seed=0)
+
+    out_dir = (os.path.dirname(os.path.abspath(out_path))
+               if out_path else os.getcwd())
+    ev_path = os.path.join(out_dir, "events.jsonl")
+    tr_path = os.path.join(out_dir, "trace.json")
+    trace = TraceConfig(events_jsonl=ev_path, chrome_trace=tr_path)
+    res_off = Experiment(_world(), method,
+                         ExecutionSpec(engine="fleet")).run()
+    res_on = Experiment(_world(), method,
+                        ExecutionSpec(engine="fleet", trace=trace)).run()
+    res_loop = Experiment(_world(), method,
+                          ExecutionSpec(engine="loop")).run()
+
+    from jax.flatten_util import ravel_pytree
+    ov, _ = ravel_pytree(res_off.params)
+    nv, _ = ravel_pytree(res_on.params)
+    out = {"pass": False, "artifacts": [ev_path, tr_path],
+           "params_bit_equal": bool(np.array_equal(np.asarray(ov),
+                                                   np.asarray(nv))),
+           "deliver_bit_equal": bool(np.array_equal(
+               np.stack(res_off.history["deliver_mask"]),
+               np.stack(res_on.history["deliver_mask"]))),
+           "battery_bit_equal": bool(np.array_equal(
+               np.asarray(res_off.history["battery"]),
+               np.asarray(res_on.history["battery"])))}
+    try:
+        out["events"] = len(validate_events(read_events_jsonl(ev_path)))
+        with open(tr_path) as f:
+            out["trace_events"] = len(json.load(f)["traceEvents"])
+    except (OSError, ValueError, KeyError) as e:
+        out["export_error"] = f"{type(e).__name__}: {e}"
+        return out
+    out["cross_engine_diffs"] = compare_event_streams(res_loop.trace,
+                                                      res_on.trace)
+    out["pass"] = bool(out["params_bit_equal"] and out["deliver_bit_equal"]
+                       and out["battery_bit_equal"] and out["events"] > 0
+                       and out["trace_events"] > 0
+                       and not out["cross_engine_diffs"])
+    return out
+
+
 def run(verbose: bool = True, sizes=(8, 32, 128, 512), smoke: bool = False,
         compare: bool = False, out: str | None = None,
         perf_baseline: str | None = None):
     import jax
+
+    # benchmarks.run calls run(verbose=...) directly (no CLI flags);
+    # self-configure stderr logging unless main() already did
+    if not log.handlers:
+        _setup_logging(0 if verbose else -1)
 
     task, fleet, states, own_train, own_test = _build_problem()
     cfg = EnFedConfig(desired_accuracy=0.999, max_rounds=3, epochs=1,
@@ -704,11 +800,9 @@ def run(verbose: bool = True, sizes=(8, 32, 128, 512), smoke: bool = False,
     if compare or smoke:
         report["enfed_vs_dfl"] = _compare_row(task, fleet, states, own_train,
                                               own_test, cfg)
-        if verbose:
-            print(f"[compare enfed_vs_dfl] {report['enfed_vs_dfl']}")
+        log.info(f"[compare enfed_vs_dfl] {report['enfed_vs_dfl']}")
         report["enfed_vs_dfl_paper"] = _paper_compare_row()
-        if verbose:
-            print(f"[compare enfed_vs_dfl_paper] {report['enfed_vs_dfl_paper']}")
+        log.info(f"[compare enfed_vs_dfl_paper] {report['enfed_vs_dfl_paper']}")
 
     if smoke:
         smoke_cfg = EnFedConfig(desired_accuracy=0.99, max_rounds=2, epochs=1,
@@ -716,24 +810,22 @@ def run(verbose: bool = True, sizes=(8, 32, 128, 512), smoke: bool = False,
                                 contributor_refresh_epochs=1)
         report["parity_smoke"] = _parity_smoke(task, fleet, states, own_train,
                                                own_test, smoke_cfg)
-        if verbose:
-            print(f"[parity smoke] {report['parity_smoke']}")
+        log.info(f"[parity smoke] {report['parity_smoke']}")
         report["churn_smoke"] = _churn_smoke(task, fleet, states, own_train,
                                              own_test)
-        if verbose:
-            print(f"[churn smoke] {report['churn_smoke']}")
+        log.info(f"[churn smoke] {report['churn_smoke']}")
         report["baseline_parity_smoke"] = _baseline_parity_smoke(
             task, fleet, states, own_train, own_test)
-        if verbose:
-            print(f"[baseline parity smoke] {report['baseline_parity_smoke']}")
+        log.info(f"[baseline parity smoke] {report['baseline_parity_smoke']}")
         report["fault_parity_smoke"] = _fault_parity_smoke(
             task, fleet, states, own_train, own_test)
-        if verbose:
-            print(f"[fault parity smoke] {report['fault_parity_smoke']}")
+        log.info(f"[fault parity smoke] {report['fault_parity_smoke']}")
         report["resume_smoke"] = _resume_smoke(task, fleet, states,
                                                own_train, own_test)
-        if verbose:
-            print(f"[resume smoke] {report['resume_smoke']}")
+        log.info(f"[resume smoke] {report['resume_smoke']}")
+        report["trace_smoke"] = _trace_smoke(task, fleet, states,
+                                             own_train, own_test, out)
+        log.info(f"[trace smoke] {report['trace_smoke']}")
 
     # loop-engine baseline: seconds per session, measured once (cost is
     # per-session linear: one Python dispatch chain per session)
@@ -751,15 +843,28 @@ def run(verbose: bool = True, sizes=(8, 32, 128, 512), smoke: bool = False,
         t0 = time.perf_counter()
         result = run_fleet(task, specs, cfg)
         wall = time.perf_counter() - t0          # includes jit compile
+        cold_t = result.timeline.totals()
         t0 = time.perf_counter()
         result = run_fleet(task, specs, cfg)     # steady-state (cached jit)
         wall_warm = time.perf_counter() - t0
+        warm_t = result.timeline.totals()
         total_rounds = int(result.rounds.sum())
         rps = total_rounds / wall_warm
         loop_equiv_s = loop_s_per_session * R
         before_idx = _pr1_index_bytes(cfg, R, specs, states)
+        # Timeline-derived wall-clock breakdown (repro.telemetry.spans):
+        # the cold "program" span includes jit trace+compile, the warm
+        # one is pure execution — their difference is the compile cost
+        breakdown = {
+            "compile_s": round(max(cold_t.get("program", 0.0)
+                                   - warm_t.get("program", 0.0), 0.0), 4),
+            "warm_s": round(warm_t.get("program", 0.0), 4),
+            "staging_s": round(warm_t.get("stage", 0.0), 4),
+            "checkpoint_s": round(warm_t.get("checkpoint_save", 0.0)
+                                  + warm_t.get("checkpoint_restore", 0.0), 4)}
         report["results"].append({
             "R": R, "cold_s": round(wall, 4), "warm_s": round(wall_warm, 4),
+            "breakdown": breakdown,
             "session_rounds": total_rounds, "rounds_per_s": round(rps, 2),
             "simulated_energy_j": round(result.total_energy_j, 2),
             "loop_equiv_s": round(loop_equiv_s, 2),
@@ -781,16 +886,16 @@ def run(verbose: bool = True, sizes=(8, 32, 128, 512), smoke: bool = False,
         rows.append((f"fleet/R={R}", wall_warm * 1e6 / R,
                      f"rounds/s={rps:.1f} E={result.total_energy_j:.1f}J "
                      f"loop_equiv={loop_equiv_s:.1f}s speedup={loop_equiv_s / wall_warm:.1f}x"))
-        if verbose:
-            print(f"[fleet R={R:4d}] warm {wall_warm:6.2f}s (cold {wall:6.2f}s) | "
-                  f"{total_rounds} session-rounds -> {rps:7.1f} rounds/s | "
-                  f"staged {result.staged_host_bytes / 1e6:7.2f} MB "
-                  f"(index bytes {result.staged_index_bytes} vs PR1 {before_idx}) | "
-                  f"loop engine would need ~{loop_equiv_s:6.1f}s "
-                  f"({loop_equiv_s / wall_warm:5.1f}x slower)")
-    if verbose:
-        print(f"[loop baseline] {loop_s_per_session:.2f} s/session "
-              f"({LOOP_SAMPLE_SESSIONS} sessions measured)")
+        log.info(f"[fleet R={R:4d}] warm {wall_warm:6.2f}s (cold {wall:6.2f}s, "
+                 f"compile ~{breakdown['compile_s']:.2f}s, staging "
+                 f"{breakdown['staging_s']:.2f}s) | "
+                 f"{total_rounds} session-rounds -> {rps:7.1f} rounds/s | "
+                 f"staged {result.staged_host_bytes / 1e6:7.2f} MB "
+                 f"(index bytes {result.staged_index_bytes} vs PR1 {before_idx}) | "
+                 f"loop engine would need ~{loop_equiv_s:6.1f}s "
+                 f"({loop_equiv_s / wall_warm:5.1f}x slower)")
+    log.info(f"[loop baseline] {loop_s_per_session:.2f} s/session "
+             f"({LOOP_SAMPLE_SESSIONS} sessions measured)")
 
     # opportunistic-world sweep: the SAME fleet sizes with per-round
     # on-device re-negotiation (mobility kinematics + radio-range masks +
@@ -815,12 +920,11 @@ def run(verbose: bool = True, sizes=(8, 32, 128, 512), smoke: bool = False,
                "simulated_energy_j": round(result.total_energy_j, 2)}
         row.update(_membership_stats(result))
         report["results_mobility"].append(row)
-        if verbose:
-            print(f"[mobility R={R:4d}] warm {wall_warm:6.2f}s | "
-                  f"{total_rounds} session-rounds -> {rps:7.1f} rounds/s | "
-                  f"mean members {row['mean_members_per_round']:.2f} | "
-                  f"joins {row['join_events']} leaves {row['leave_events']} "
-                  f"empty rounds {row['empty_neighborhood_rounds']}")
+        log.info(f"[mobility R={R:4d}] warm {wall_warm:6.2f}s | "
+                 f"{total_rounds} session-rounds -> {rps:7.1f} rounds/s | "
+                 f"mean members {row['mean_members_per_round']:.2f} | "
+                 f"joins {row['join_events']} leaves {row['leave_events']} "
+                 f"empty rounds {row['empty_neighborhood_rounds']}")
 
     # faulty-world sweep: the static sweep re-run under unreliable links
     # (drops + bounded retries + stale delivery).  Per row: warm
@@ -872,22 +976,21 @@ def run(verbose: bool = True, sizes=(8, 32, 128, 512), smoke: bool = False,
                "simulated_energy_j": round(result.total_energy_j, 2),
                "clean_energy_j": clean_e.get(R)}
         report["results_faults"].append(row)
-        if verbose:
-            print(f"[faults R={R:4d}] warm {wall_warm:6.2f}s | "
-                  f"{total_rounds} session-rounds -> {rps:7.1f} rounds/s | "
-                  f"drops {drops} retries {retries} stale {stale} -> "
-                  f"retry overhead {row['retry_energy_j']:.3f}J "
-                  f"(E={row['simulated_energy_j']:.1f}J vs clean "
-                  f"{row['clean_energy_j']}J)")
+        log.info(f"[faults R={R:4d}] warm {wall_warm:6.2f}s | "
+                 f"{total_rounds} session-rounds -> {rps:7.1f} rounds/s | "
+                 f"drops {drops} retries {retries} stale {stale} -> "
+                 f"retry overhead {row['retry_energy_j']:.3f}J "
+                 f"(E={row['simulated_energy_j']:.1f}J vs clean "
+                 f"{row['clean_energy_j']}J)")
 
     # compressed-round-state sweep: fp32 vs int8 staged/resident bytes
     # and rounds/s on a model that amortizes the quantization tile
-    report["results_compress"] = _compress_sweep(sizes, verbose)
+    report["results_compress"] = _compress_sweep(sizes)
 
     # method-variant sweep: enfed/dfl/cfl each as ONE compiled program at
     # the largest R, with measured (not extrapolated) baseline walls
     report["results_compare_fleet"] = _fleet_compare_sweep(
-        task, fleet, states, own_train, own_test, max(sizes), verbose)
+        task, fleet, states, own_train, own_test, max(sizes))
 
     # early-exit demo: a fleet whose sessions all hit the accuracy target
     # in round 1 executes O(1) round bodies even with a 16-round budget
@@ -906,90 +1009,89 @@ def run(verbose: bool = True, sizes=(8, 32, 128, 512), smoke: bool = False,
         "R": R_demo, "max_rounds": ee_cfg.max_rounds,
         "round_bodies_executed": bodies, "warm_s": round(ee_warm, 4),
         "rounds_per_session": int(ee.rounds.max())}
-    if verbose:
-        print(f"[early exit R={R_demo}] all sessions stop in round "
-              f"{int(ee.rounds.max())}: {bodies}/{ee_cfg.max_rounds} round "
-              f"bodies executed, warm {ee_warm:.2f}s")
+    log.info(f"[early exit R={R_demo}] all sessions stop in round "
+             f"{int(ee.rounds.max())}: {bodies}/{ee_cfg.max_rounds} round "
+             f"bodies executed, warm {ee_warm:.2f}s")
 
     # the perf gate reads the committed baseline (already loaded path);
     # it must run before the report overwrites that file
     if smoke:
         report["perf_gate"] = _perf_gate(report, baseline_path or "")
-        if verbose:
-            print(f"[perf gate] {report['perf_gate']}")
+        log.info(f"[perf gate] {report['perf_gate']}")
         report["fleet_compare_gate"] = _fleet_compare_gate(
             report, baseline_path or "")
-        if verbose:
-            print(f"[fleet compare gate] {report['fleet_compare_gate']}")
+        log.info(f"[fleet compare gate] {report['fleet_compare_gate']}")
         report["faults_perf_gate"] = _perf_gate(report, baseline_path or "",
                                                 section="results_faults")
-        if verbose:
-            print(f"[faults perf gate] {report['faults_perf_gate']}")
+        log.info(f"[faults perf gate] {report['faults_perf_gate']}")
 
     if out:
         with open(out, "w") as f:
             json.dump(report, f, indent=2)
-        if verbose:
-            print(f"[bench] wrote {out}")
+        log.info(f"[bench] wrote {out}")
     if smoke and not report["parity_smoke"]["pass"]:
-        print("PARITY REGRESSION: fleet engine diverged from the loop oracle",
-              file=sys.stderr)
+        log.error("PARITY REGRESSION: fleet engine diverged from the loop "
+                  "oracle")
         sys.exit(1)
     if smoke and not report["churn_smoke"]["pass"]:
-        print("CHURN REGRESSION: mobility re-negotiation diverged from the "
-              "loop oracle (or the scenario stopped churning)", file=sys.stderr)
+        log.error("CHURN REGRESSION: mobility re-negotiation diverged from "
+                  "the loop oracle (or the scenario stopped churning)")
         sys.exit(1)
     if smoke and not report["enfed_vs_dfl"]["pass"]:
-        print("COMPARE REGRESSION: Experiment.compare(['enfed','dfl']) no "
-              "longer yields a finite reduction row under one shared "
-              "CostModel", file=sys.stderr)
+        log.error("COMPARE REGRESSION: Experiment.compare(['enfed','dfl']) "
+                  "no longer yields a finite reduction row under one shared "
+                  "CostModel")
         sys.exit(1)
     if smoke and not report["enfed_vs_dfl_paper"]["pass"]:
-        print("COMPARE REGRESSION: the paper-shaped enfed_vs_dfl_paper row "
-              "no longer yields finite reductions", file=sys.stderr)
+        log.error("COMPARE REGRESSION: the paper-shaped enfed_vs_dfl_paper "
+                  "row no longer yields finite reductions")
         sys.exit(1)
     if smoke and not report["perf_gate"]["pass"]:
-        print(f"PERF REGRESSION: warm rounds/s at R="
-              f"{report['perf_gate'].get('R')} fell to "
-              f"{report['perf_gate'].get('ratio')}x the committed baseline "
-              f"(gate: >= {report['perf_gate'].get('threshold')}x)",
-              file=sys.stderr)
+        log.error(f"PERF REGRESSION: warm rounds/s at R="
+                  f"{report['perf_gate'].get('R')} fell to "
+                  f"{report['perf_gate'].get('ratio')}x the committed "
+                  f"baseline (gate: >= "
+                  f"{report['perf_gate'].get('threshold')}x)")
         sys.exit(1)
     if smoke and not report["fault_parity_smoke"]["pass"]:
-        print("FAULT REGRESSION: the engines no longer agree on the "
-              "unreliable-link world (masks/counters/params/retry "
-              "pricing), or the scenario stopped exercising all three "
-              "failure modes", file=sys.stderr)
+        log.error("FAULT REGRESSION: the engines no longer agree on the "
+                  "unreliable-link world (masks/counters/params/retry "
+                  "pricing), or the scenario stopped exercising all three "
+                  "failure modes")
         sys.exit(1)
     if smoke and not report["resume_smoke"]["pass"]:
-        print("RESUME REGRESSION: a killed-and-resumed fleet run is no "
-              "longer bit-identical to the uninterrupted one",
-              file=sys.stderr)
+        log.error("RESUME REGRESSION: a killed-and-resumed fleet run is no "
+                  "longer bit-identical to the uninterrupted one")
+        sys.exit(1)
+    if smoke and not report["trace_smoke"]["pass"]:
+        log.error("TRACE REGRESSION: tracing a run changed its outcome "
+                  "(params/masks/battery no longer bit-identical to the "
+                  "untraced run), the exported events.jsonl/trace.json "
+                  "failed schema validation, or the engines' event "
+                  "streams diverged")
         sys.exit(1)
     if smoke and not report["faults_perf_gate"]["pass"]:
-        print(f"PERF REGRESSION: faulty-world rounds/s at R="
-              f"{report['faults_perf_gate'].get('R')} fell to "
-              f"{report['faults_perf_gate'].get('ratio')}x the committed "
-              f"baseline (gate: >= "
-              f"{report['faults_perf_gate'].get('threshold')}x)",
-              file=sys.stderr)
+        log.error(f"PERF REGRESSION: faulty-world rounds/s at R="
+                  f"{report['faults_perf_gate'].get('R')} fell to "
+                  f"{report['faults_perf_gate'].get('ratio')}x the committed "
+                  f"baseline (gate: >= "
+                  f"{report['faults_perf_gate'].get('threshold')}x)")
         sys.exit(1)
     if smoke and not report["baseline_parity_smoke"]["pass"]:
-        print("BASELINE PARITY REGRESSION: the dfl fleet lanes diverged "
-              "from the DFLLearner loop oracle", file=sys.stderr)
+        log.error("BASELINE PARITY REGRESSION: the dfl fleet lanes diverged "
+                  "from the DFLLearner loop oracle")
         sys.exit(1)
     if smoke and not report["results_compare_fleet"]["pass"]:
-        print("COMPARE-FLEET REGRESSION: a method of the fleet-engine "
-              "comparison produced non-finite figures or fell back off "
-              "the compiled engine", file=sys.stderr)
+        log.error("COMPARE-FLEET REGRESSION: a method of the fleet-engine "
+                  "comparison produced non-finite figures or fell back off "
+                  "the compiled engine")
         sys.exit(1)
     if smoke and not report["fleet_compare_gate"]["pass"]:
-        print(f"PERF REGRESSION: the dfl fleet program at R="
-              f"{report['fleet_compare_gate'].get('R')} fell to "
-              f"{report['fleet_compare_gate'].get('ratio')}x the committed "
-              f"baseline (gate: >= "
-              f"{report['fleet_compare_gate'].get('threshold')}x)",
-              file=sys.stderr)
+        log.error(f"PERF REGRESSION: the dfl fleet program at R="
+                  f"{report['fleet_compare_gate'].get('R')} fell to "
+                  f"{report['fleet_compare_gate'].get('ratio')}x the "
+                  f"committed baseline (gate: >= "
+                  f"{report['fleet_compare_gate'].get('threshold')}x)")
         sys.exit(1)
     return rows
 
@@ -1011,7 +1113,13 @@ def main() -> None:
                     help="committed BENCH_fleet.json to gate warm rounds/s "
                          "against (default: the --out path, read before "
                          "overwrite)")
+    vq = ap.add_mutually_exclusive_group()
+    vq.add_argument("-v", "--verbose", action="store_true",
+                    help="debug-level progress logging (stderr)")
+    vq.add_argument("-q", "--quiet", action="store_true",
+                    help="errors only; progress logging off")
     args = ap.parse_args()
+    _setup_logging(1 if args.verbose else -1 if args.quiet else 0)
     run(sizes=tuple(int(s) for s in args.sizes.split(",")),
         smoke=args.smoke, compare=args.compare, out=args.out or None,
         perf_baseline=args.perf_baseline)

@@ -12,6 +12,11 @@ percentages meaningful.
                                                   [--engine loop|fleet]
                                                   [--churn] [--faults]
                                                   [--compress int8]
+                                                  [-v | -q]
+
+Output goes through stdlib ``logging`` ("repro.example.har", stdout):
+``-q`` keeps errors only, ``-v`` adds the per-run telemetry span
+timings (``RunResult.timings``).
 
 ``--engine fleet`` runs the EnFed session through the jit-native fleet
 engine (repro.core.fleet) instead of the Python round loop — same
@@ -43,6 +48,8 @@ compression buys on the same problem.
 
 import argparse
 import dataclasses
+import logging
+import sys
 
 import numpy as np
 
@@ -53,6 +60,21 @@ from repro.data import (CaloriesDatasetConfig, HARDatasetConfig,
                         make_har_windows)
 from repro.models import (LSTMClassifier, LSTMClassifierConfig, MLPClassifier,
                           MLPClassifierConfig)
+
+log = logging.getLogger("repro.example.har")
+
+
+def _setup_logging(verbosity: int) -> None:
+    """The walkthrough/table output IS the example's product, so it logs
+    to stdout at INFO; ``-q`` silences it (errors only), ``--verbose``
+    adds debug detail."""
+    level = (logging.ERROR if verbosity < 0
+             else logging.DEBUG if verbosity > 0 else logging.INFO)
+    handler = logging.StreamHandler(sys.stdout)
+    handler.setFormatter(logging.Formatter("%(message)s"))
+    log.handlers[:] = [handler]
+    log.setLevel(level)
+    log.propagate = False
 
 
 def build(dataset: str):
@@ -116,11 +138,11 @@ def walkthrough(task, shards, own_train, own_test, args):
 
     label = "+".join(n for n, on in (("churn", args.churn),
                                      ("faults", args.faults)) if on)
-    print(f"\n=== {label} walkthrough ({args.dataset}, engine={res.engine}) ===")
+    log.info(f"\n=== {label} walkthrough ({args.dataset}, engine={res.engine}) ===")
     head = f"{'round':>5} {'members':>8} {'contract set':<18}"
     if args.faults:
         head += f" {'delivered':<12} {'drop':>4} {'rtry':>4} {'stale':>5}"
-    print(head + f" {'acc':>6} {'battery':>8}")
+    log.info(head + f" {'acc':>6} {'battery':>8}")
     mask_key = "member_mask" if args.churn else "deliver_mask"
     prev = None
     for r in range(res.rounds):
@@ -139,16 +161,17 @@ def walkthrough(task, shards, own_train, own_test, args):
             left = sorted(set(prev) - set(ids))
             bits = ([f"+{j}" for j in joined] + [f"-{l}" for l in left])
             note = "  " + " ".join(bits) if bits else ""
-        print(line + f" {res.history['accuracy'][r]:6.3f} "
-              f"{res.history['battery'][r]:8.3f}{note}")
+        log.info(line + f" {res.history['accuracy'][r]:6.3f} "
+                 f"{res.history['battery'][r]:8.3f}{note}")
         prev = ids
     if args.faults:
-        print(f"fault weather: {int(np.sum(res.history['drops']))} drops, "
-              f"{int(np.sum(res.history['retries']))} retries, "
-              f"{int(np.sum(res.history['stale']))} stale deliveries "
-              f"(retry windows priced via CostModel.retry_energy)")
-    print(f"requester finished: {res.rounds} rounds, stop={res.stop_reason}, "
-          f"final acc {res.accuracy:.3f}")
+        log.info(f"fault weather: {int(np.sum(res.history['drops']))} drops, "
+                 f"{int(np.sum(res.history['retries']))} retries, "
+                 f"{int(np.sum(res.history['stale']))} stale deliveries "
+                 f"(retry windows priced via CostModel.retry_energy)")
+    log.info(f"requester finished: {res.rounds} rounds, stop={res.stop_reason}, "
+             f"final acc {res.accuracy:.3f}")
+    log.debug(f"timings: { {k: round(v, 4) for k, v in res.timings.items()} }")
     return 0
 
 
@@ -170,7 +193,13 @@ def main():
                     help="add an enfed-int8 row: same world with the "
                          "transported updates int8-compressed (shows the "
                          "eq. (4)-(7) energy delta in the compare table)")
+    vq = ap.add_mutually_exclusive_group()
+    vq.add_argument("-v", "--verbose", action="store_true",
+                    help="debug logging (adds the per-run span timings)")
+    vq.add_argument("-q", "--quiet", action="store_true",
+                    help="errors only; suppress the table/walkthrough output")
     args = ap.parse_args()
+    _setup_logging(1 if args.verbose else -1 if args.quiet else 0)
 
     task, shards, own_train, own_test, pooled = build(args.dataset)
     if args.churn or args.faults:
@@ -197,19 +226,21 @@ def main():
                                               label="enfed-int8"))
     cmp = exp.compare(methods)
 
-    print(f"\n=== {args.dataset} ===")
-    print(cmp.table())
+    log.info(f"\n=== {args.dataset} ===")
+    log.info(cmp.table())
     for row in cmp.reductions("enfed"):
-        print(f"EnFed vs {row['baseline']:<10}: "
-              f"{row['time_reduction_pct']:+.1f}% time, "
-              f"{row['energy_reduction_pct']:+.1f}% energy")
+        log.info(f"EnFed vs {row['baseline']:<10}: "
+                 f"{row['time_reduction_pct']:+.1f}% time, "
+                 f"{row['energy_reduction_pct']:+.1f}% energy")
     if args.compress:
         fp32, q8 = cmp["enfed"].report, cmp["enfed-int8"].report
-        print(f"int8 wire: t_com {fp32.times.t_com:.4f}s -> "
-              f"{q8.times.t_com:.4f}s, E_comm {fp32.e_comm:.3f}J -> "
-              f"{q8.e_comm:.3f}J on the same world")
-    print("(cloud T_train is the §IV-G response time: upload + cloud "
-          "training + round trip)")
+        log.info(f"int8 wire: t_com {fp32.times.t_com:.4f}s -> "
+                 f"{q8.times.t_com:.4f}s, E_comm {fp32.e_comm:.3f}J -> "
+                 f"{q8.e_comm:.3f}J on the same world")
+    log.info("(cloud T_train is the §IV-G response time: upload + cloud "
+             "training + round trip)")
+    log.debug(f"enfed timings: "
+              f"{ {k: round(v, 4) for k, v in cmp['enfed'].timings.items()} }")
     return 0
 
 

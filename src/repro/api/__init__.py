@@ -19,23 +19,29 @@ ONE shared :class:`~repro.core.energy.CostModel`), :class:`MethodSpec`
 picks a registered method ("enfed" | "dfl" | "cfl" | "cloud", all
 consuming the same EnFedConfig-shaped knobs), and
 :class:`ExecutionSpec` tunes how it executes (loop vs fleet engine,
-Pallas ``interpret``, early-exit ``round_chunk``) without changing the
-simulated outcome.  Every run returns one :class:`RunResult`;
-``Experiment.compare`` returns a :class:`CompareResult` whose
-``reduction()`` rows reproduce the paper's EnFed-vs-baseline time and
-energy savings.  Extend with :func:`register_method`.
+Pallas ``interpret``, early-exit ``round_chunk``, and the
+:class:`~repro.telemetry.TraceConfig` observability knob) without
+changing the simulated outcome.  Every run returns one
+:class:`RunResult` — read ``result.trace`` for the normalized
+round-event stream and ``result.timings`` for the wall-clock breakdown
+(:mod:`repro.telemetry`); ``Experiment.compare`` returns a
+:class:`CompareResult` whose ``reduction()`` rows reproduce the paper's
+EnFed-vs-baseline time and energy savings.  Extend with
+:func:`register_method`.
 """
 
 from repro.api.experiment import DEFAULT_COMPARISON, Experiment
 from repro.api.methods import get_runner, method_names, register_method
 from repro.api.result import CompareResult, RunResult, reduction_row
 from repro.api.specs import ExecutionSpec, MethodSpec, WorldSpec
+from repro.telemetry import TraceConfig
 
 __all__ = [
     "Experiment",
     "WorldSpec",
     "MethodSpec",
     "ExecutionSpec",
+    "TraceConfig",
     "RunResult",
     "CompareResult",
     "DEFAULT_COMPARISON",

@@ -53,6 +53,17 @@ class Experiment:
         result = runner(self.world, spec, execution)
         result.wall_s = time.perf_counter() - t0
         result.method = spec.key
+        # observability exports happen HERE, after the outcome exists —
+        # host-side file I/O only, so tracing can never perturb the run
+        # (the telemetry house rule)
+        tr = execution.trace
+        if tr is not None:
+            from repro.telemetry import write_chrome_trace, write_events_jsonl
+
+            if tr.events_jsonl:
+                write_events_jsonl(result.trace, tr.events_jsonl)
+            if tr.chrome_trace and result.timeline is not None:
+                write_chrome_trace(result.timeline, tr.chrome_trace)
         return result
 
     def compare(self, methods: Sequence[Union[str, MethodSpec]]

@@ -27,7 +27,10 @@ from typing import Callable, Dict, Tuple
 from repro.api.result import RunResult
 from repro.api.specs import ExecutionSpec, MethodSpec, WorldSpec
 from repro.core import federated, protocol
+from repro.core.energy import update_wire_bytes
 from repro.core.rounds import EnFedSession, SessionResult
+from repro.telemetry.spans import Timeline
+from repro.utils.tree import tree_bytes, tree_size
 
 MethodRunner = Callable[[WorldSpec, MethodSpec, ExecutionSpec], RunResult]
 
@@ -81,8 +84,35 @@ def _warn_if_checkpoint_ignored(execution: ExecutionSpec, name: str) -> None:
             "no resumable round-state contract)", stacklevel=3)
 
 
+def _warn_if_trace_fleet_only(execution: ExecutionSpec, name: str) -> None:
+    """``TraceConfig.jax_profiler_dir`` / ``hlo_stats`` instrument THE
+    compiled fleet program — the loop engine (and the host-side
+    baselines) has no such program to profile.  Never-silent rule:
+    asking for them on a loop run warns instead of quietly exporting
+    nothing.  The outcome-neutral selections (events_jsonl,
+    chrome_trace) work on every engine and stay silent."""
+    tr = execution.trace
+    if tr is not None and (getattr(tr, "jax_profiler_dir", None)
+                           or getattr(tr, "hlo_stats", False)):
+        warnings.warn(
+            f"{name} run ignores TraceConfig.jax_profiler_dir/hlo_stats "
+            "(fleet-engine-only: they profile the compiled fleet program); "
+            "event/timeline exports still apply", stacklevel=3)
+
+
+def _baseline_model_bytes(params, cfg) -> int:
+    """One update's wire bytes for a loop cfl/dfl session — the same
+    ``update_wire_bytes`` call ``_run_fleet_baseline`` prices its views
+    with, so the two engines' event streams carry identical
+    ``wire_bytes``."""
+    return update_wire_bytes(tree_size(params), encrypt=False,
+                             compress=getattr(cfg, "compress", None),
+                             raw_bytes=tree_bytes(params))
+
+
 def _baseline_session(res: "federated.BaselineResult", *, target: float,
-                      n_contributors: float) -> SessionResult:
+                      n_contributors: float,
+                      model_bytes: int = 0) -> SessionResult:
     """A BaselineResult in the per-requester SessionResult schema."""
     stopped = res.accuracy >= target
     stop = (protocol.STOP_ACCURACY if stopped else protocol.STOP_MAX_ROUNDS)
@@ -90,7 +120,7 @@ def _baseline_session(res: "federated.BaselineResult", *, target: float,
         accuracy=res.accuracy, rounds=res.rounds,
         n_contributors=n_contributors, report=res.report, battery=None,
         history=res.history, stop_reason=protocol.stop_reason_name(stop),
-        params=res.params)
+        params=res.params, model_bytes=model_bytes)
 
 
 @register_method("enfed")
@@ -103,6 +133,7 @@ def run_enfed(world: WorldSpec, method: MethodSpec,
     cfg = method.to_enfed_config(world)
     cost = world.cost_model
     reqs = world.fresh_requesters()
+    tl = Timeline()
     if execution.engine == "fleet":
         fr = fleet_mod.run_fleet(
             world.task, reqs, cfg, cost_model=cost,
@@ -110,10 +141,13 @@ def run_enfed(world: WorldSpec, method: MethodSpec,
             round_chunk=execution.round_chunk,
             checkpoint_dir=execution.checkpoint_dir,
             checkpoint_every=execution.checkpoint_every,
-            resume_from=execution.resume_from)
+            resume_from=execution.resume_from,
+            timeline=tl, trace=execution.trace)
         return RunResult.from_sessions(
             "enfed", "fleet", fr.sessions, cost_model=cost,
-            total_energy_j=fr.total_energy_j, raw=fr)
+            total_energy_j=fr.total_energy_j, raw=fr,
+            timeline=tl, hlo_stats=fr.hlo_stats)
+    _warn_if_trace_fleet_only(execution, "loop-engine enfed")
 
     def _sub(root, i):
         # multi-requester loop runs checkpoint per session: requester
@@ -147,8 +181,9 @@ def run_enfed(world: WorldSpec, method: MethodSpec,
             cfg_i, cost_model=cost, battery=r.battery).run(
                 checkpoint_dir=_sub(execution.checkpoint_dir, i),
                 checkpoint_every=execution.checkpoint_every,
-                resume_from=_sub(execution.resume_from, i)))
-    return RunResult.from_sessions("enfed", "loop", sessions, cost_model=cost)
+                resume_from=_sub(execution.resume_from, i), timeline=tl))
+    return RunResult.from_sessions("enfed", "loop", sessions, cost_model=cost,
+                                   timeline=tl)
 
 
 def _run_baseline_fleet(world: WorldSpec, method: MethodSpec,
@@ -162,14 +197,17 @@ def _run_baseline_fleet(world: WorldSpec, method: MethodSpec,
 
     cfg = method.to_enfed_config(world)
     cost = world.cost_model
+    tl = Timeline()
     fr = fleet_mod.run_fleet(
         world.task, world.requesters, cfg, cost_model=cost,
         use_pallas=execution.use_pallas, interpret=execution.interpret,
         round_chunk=execution.round_chunk, method=name,
-        dfl_topology=method.topology)
+        dfl_topology=method.topology,
+        timeline=tl, trace=execution.trace)
     return RunResult.from_sessions(name, "fleet", fr.sessions,
                                    cost_model=cost,
-                                   total_energy_j=fr.total_energy_j, raw=fr)
+                                   total_energy_j=fr.total_energy_j, raw=fr,
+                                   timeline=tl, hlo_stats=fr.hlo_stats)
 
 
 @register_method("cfl")
@@ -180,6 +218,7 @@ def run_cfl(world: WorldSpec, method: MethodSpec,
     _warn_if_checkpoint_ignored(execution, "cfl")
     if execution.engine == "fleet":
         return _run_baseline_fleet(world, method, execution, "cfl")
+    _warn_if_trace_fleet_only(execution, "cfl")
     cfg = method.to_enfed_config(world)
     cost = world.cost_model
     sessions = []
@@ -190,8 +229,10 @@ def run_cfl(world: WorldSpec, method: MethodSpec,
         res = federated.CFLLearner(world.task, data, r.own_test,
                                    cost_model=cost).run_config(cfg)
         sessions.append(_baseline_session(
-            res, target=cfg.desired_accuracy, n_contributors=len(data) - 1))
-    return RunResult.from_sessions("cfl", "loop", sessions, cost_model=cost)
+            res, target=cfg.desired_accuracy, n_contributors=len(data) - 1,
+            model_bytes=_baseline_model_bytes(res.params, cfg)))
+    return RunResult.from_sessions("cfl", "loop", sessions, cost_model=cost,
+                                   timeline=Timeline())
 
 
 @register_method("dfl")
@@ -202,6 +243,7 @@ def run_dfl(world: WorldSpec, method: MethodSpec,
     _warn_if_checkpoint_ignored(execution, "dfl")
     if execution.engine == "fleet":
         return _run_baseline_fleet(world, method, execution, "dfl")
+    _warn_if_trace_fleet_only(execution, "dfl")
     cfg = method.to_enfed_config(world)
     cost = world.cost_model
     sessions = []
@@ -211,8 +253,10 @@ def run_dfl(world: WorldSpec, method: MethodSpec,
                                    method.topology,
                                    cost_model=cost).run_config(cfg)
         sessions.append(_baseline_session(
-            res, target=cfg.desired_accuracy, n_contributors=len(data) - 1))
-    return RunResult.from_sessions("dfl", "loop", sessions, cost_model=cost)
+            res, target=cfg.desired_accuracy, n_contributors=len(data) - 1,
+            model_bytes=_baseline_model_bytes(res.params, cfg)))
+    return RunResult.from_sessions("dfl", "loop", sessions, cost_model=cost,
+                                   timeline=Timeline())
 
 
 @register_method("cloud")
@@ -222,12 +266,15 @@ def run_cloud(world: WorldSpec, method: MethodSpec,
     the result back.  Device-side cost via ``CostModel.cloud_session``."""
     _warn_if_mobility_ignored(world, "cloud")
     _warn_if_checkpoint_ignored(execution, "cloud")
+    _warn_if_trace_fleet_only(execution, "cloud")
     cfg = method.to_enfed_config(world)
     cost = world.cost_model
     sessions = []
     for i, r in enumerate(world.requesters):
         res = federated.cloud_only_config(world.task, world.pooled(i),
                                           r.own_test, cfg, cost_model=cost)
+        # cloud ships raw data, not model updates: no per-round wire
         sessions.append(_baseline_session(
             res, target=cfg.desired_accuracy, n_contributors=0.0))
-    return RunResult.from_sessions("cloud", "loop", sessions, cost_model=cost)
+    return RunResult.from_sessions("cloud", "loop", sessions, cost_model=cost,
+                                   timeline=Timeline())

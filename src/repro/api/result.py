@@ -18,6 +18,8 @@ from typing import Dict, List, Optional, Sequence
 from repro.core.battery import BatteryState
 from repro.core.energy import CostModel, EnergyReport
 from repro.core.rounds import SessionResult
+from repro.telemetry.events import RoundEvent, session_events
+from repro.telemetry.spans import Timeline
 
 
 @dataclasses.dataclass
@@ -36,7 +38,9 @@ class RunResult:
     accuracy: float
     rounds: int
     report: EnergyReport               # requester 0's eq. (4)-(7) roll-up
-    history: Dict[str, list]           # requester 0's per-round traces
+    # deprecated view: requester 0's raw per-engine dict-of-lists — new
+    # code should read the normalized event stream (``trace``) instead
+    history: Dict[str, list]
     stop_reason: str
     sessions: List[SessionResult]
     cost_model: Optional[CostModel] = None
@@ -46,6 +50,9 @@ class RunResult:
     total_energy_j: float = 0.0        # summed across all requesters
     wall_s: float = 0.0
     raw: object = None                 # underlying engine result, if any
+    timeline: Optional[Timeline] = None  # host-side wall-clock spans
+    hlo_stats: Optional[dict] = None     # fleet program flops/bytes
+                                         # (TraceConfig.hlo_stats)
 
     @property
     def simulated_s(self) -> float:
@@ -57,12 +64,30 @@ class RunResult:
         """Modeled energy E_tot (eq. 5) of the requesting device."""
         return float(self.report.e_tot)
 
+    @property
+    def trace(self) -> List[RoundEvent]:
+        """The run as one normalized RoundEvent stream — every session's
+        rounds (requester-stamped) plus stop events, identical across
+        engines on the same world (``repro.telemetry.events``)."""
+        events: List[RoundEvent] = []
+        for i, s in enumerate(self.sessions):
+            events.extend(session_events(s, requester=i))
+        return events
+
+    @property
+    def timings(self) -> Dict[str, float]:
+        """Summed seconds per span name (``Timeline.totals()``); empty
+        when no timeline was recorded."""
+        return self.timeline.totals() if self.timeline is not None else {}
+
     @classmethod
     def from_sessions(cls, method: str, engine: str,
                       sessions: Sequence[SessionResult],
                       cost_model: Optional[CostModel] = None,
                       total_energy_j: Optional[float] = None,
-                      raw: object = None) -> "RunResult":
+                      raw: object = None,
+                      timeline: Optional[Timeline] = None,
+                      hlo_stats: Optional[dict] = None) -> "RunResult":
         s0 = sessions[0]
         total = (float(total_energy_j) if total_energy_j is not None
                  else float(sum(s.report.e_tot for s in sessions)))
@@ -71,7 +96,8 @@ class RunResult:
                    stop_reason=s0.stop_reason, sessions=list(sessions),
                    cost_model=cost_model, params=s0.params,
                    n_contributors=float(s0.n_contributors),
-                   battery=s0.battery, total_energy_j=total, raw=raw)
+                   battery=s0.battery, total_energy_j=total, raw=raw,
+                   timeline=timeline, hlo_stats=hlo_stats)
 
 
 def reduction_row(method_res: RunResult, baseline_res: RunResult) -> dict:

@@ -221,6 +221,14 @@ class ExecutionSpec:
     checkpoint_dir: Optional[str] = None
     checkpoint_every: int = 0
     resume_from: Optional[str] = None
+    # observability (repro.telemetry.TraceConfig): which artifacts the
+    # run exports (event JSONL, Chrome trace, jax profiler dump, HLO cost
+    # summary).  The strictest execution knob of all — observation can
+    # never change the simulated outcome; tracing on is bitwise identical
+    # to tracing off (enforced by tests/test_telemetry.py and the bench
+    # trace smoke gate).  Fleet-only selections (jax_profiler_dir,
+    # hlo_stats) warn-and-ignore on the loop engine.
+    trace: Optional[object] = None
 
     def __post_init__(self):
         if self.engine not in ("loop", "fleet"):
@@ -231,3 +239,10 @@ class ExecutionSpec:
         if self.checkpoint_every < 0:
             raise ValueError(
                 f"checkpoint_every must be >= 0 (got {self.checkpoint_every})")
+        if self.trace is not None:
+            from repro.telemetry import TraceConfig
+
+            if not isinstance(self.trace, TraceConfig):
+                raise ValueError(
+                    f"trace must be a repro.telemetry.TraceConfig "
+                    f"(got {type(self.trace).__name__})")

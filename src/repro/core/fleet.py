@@ -153,6 +153,8 @@ from repro.kernels.quantize.ops import (dequantize_flat_batched, padded_len,
                                         resolve_compress)
 from repro.models.classifiers import masked_cross_entropy_loss
 from repro.optim import apply_updates
+from repro.telemetry.profile import jit_hlo_stats, maybe_jax_profiler
+from repro.telemetry.spans import Timeline
 from repro.utils.tree import (tree_bytes, tree_ravel, tree_size, tree_unravel,
                               tree_where)
 
@@ -195,6 +197,10 @@ class FleetResult:
                                    # footprint ((R*N, B) rows from the table)
     refresh_gather_bytes_dense: int = 0  # the old re-densified (R*N, n_c, F)
                                          # block the gather replaces
+    timeline: Optional[Timeline] = None  # host-side wall-clock spans
+                                         # (stage/program/checkpoint/unpack)
+    hlo_stats: Optional[dict] = None     # compiled-program flops/bytes
+                                         # (TraceConfig.hlo_stats only)
 
 
 def _pad_stack(arrays, pad_len: int):
@@ -826,6 +832,24 @@ def _fleet_chunk_program(task, use_pallas, interpret, do_refresh, chunk,
     return state
 
 
+def _jit_cache_size(jit_fn) -> Optional[int]:
+    """Compiled-executable count of a jit wrapper, or None where the
+    (private, version-dependent) introspection is unavailable."""
+    try:
+        return int(jit_fn._cache_size())
+    except Exception:
+        return None
+
+
+def _note_cache_miss(span, jit_fn, before: Optional[int]) -> None:
+    """Annotate a program/chunk span with whether its call compiled
+    (cache grew) or reused a warm executable — the compile-vs-warm split
+    the bench's wall-clock breakdown is built from."""
+    after = _jit_cache_size(jit_fn)
+    if before is not None and after is not None:
+        span.attrs["cache_miss"] = bool(after > before)
+
+
 def run_fleet(task, requesters: Sequence[RequesterSpec],
               cfg: Optional[EnFedConfig] = None,
               cost_model: Optional[CostModel] = None,
@@ -836,7 +860,9 @@ def run_fleet(task, requesters: Sequence[RequesterSpec],
               dfl_topology: str = "mesh",
               checkpoint_dir: Optional[str] = None,
               checkpoint_every: int = 0,
-              resume_from: Optional[str] = None) -> FleetResult:
+              resume_from: Optional[str] = None,
+              timeline: Optional[Timeline] = None,
+              trace=None) -> FleetResult:
     """Run ``len(requesters)`` concurrent EnFed sessions as one jit program.
 
     Note: prefer the :mod:`repro.api` facade
@@ -916,12 +942,17 @@ def run_fleet(task, requesters: Sequence[RequesterSpec],
     if (checkpoint_dir or resume_from) and method != "enfed":
         raise ValueError(
             f"checkpointing is enfed-only (got method={method!r})")
+    # observability: spans are host-side wall clocks only and never feed
+    # back into the program (the telemetry house rule); ``trace`` is the
+    # opt-in TraceConfig selecting the profiler hook / hlo_stats
+    tl = timeline if timeline is not None else Timeline()
     if method != "enfed":
         return _run_fleet_baseline(task, requesters, cfg, cost, method,
                                    dfl_topology, use_pallas, interpret,
-                                   round_chunk)
+                                   round_chunk, timeline=tl, trace=trace)
     mob = cfg.mobility
     fc = cfg.faults
+    _sp_stage = tl.begin("stage")
 
     # ---- Phase.HANDSHAKE (host-side, static) ------------------------------
     # Static world: sign utility-ranked contracts once.  Mobility: fix the
@@ -1035,10 +1066,12 @@ def run_fleet(task, requesters: Sequence[RequesterSpec],
     c_scales = None
     if wire_compress == "int8":
         lp = padded_len(P)
-        q0, s0 = quantize_flat_batched(
-            jnp.pad(contrib_flat, ((0, 0), (0, 0), (0, lp - P)))
-            .reshape(R * N, lp),
-            use_pallas=use_pallas, interpret=interpret)
+        with tl.span("quantize_pack", what="round_state"):
+            q0, s0 = quantize_flat_batched(
+                jnp.pad(contrib_flat, ((0, 0), (0, 0), (0, lp - P)))
+                .reshape(R * N, lp),
+                use_pallas=use_pallas, interpret=interpret)
+            jax.block_until_ready(q0)
         contrib_flat = q0.reshape(R, N, lp)
         c_scales = s0.reshape(R, N, -1)
         staged_param_bytes = int(contrib_flat.nbytes + c_scales.nbytes)
@@ -1202,9 +1235,11 @@ def run_fleet(task, requesters: Sequence[RequesterSpec],
                           lane_valid=jnp.asarray(lane_valid))
             if wire_compress == "int8":
                 lp = padded_len(P)
-                lq, ls = quantize_flat_batched(
-                    jnp.pad(live0, ((0, 0), (0, lp - P))),
-                    use_pallas=use_pallas, interpret=interpret)
+                with tl.span("quantize_pack", what="live_rows"):
+                    lq, ls = quantize_flat_batched(
+                        jnp.pad(live0, ((0, 0), (0, lp - P))),
+                        use_pallas=use_pallas, interpret=interpret)
+                    jax.block_until_ready(lq)
                 arrays.update(live_q0=lq, live_s0=ls)
             else:
                 arrays.update(live0=live0)
@@ -1238,6 +1273,14 @@ def run_fleet(task, requesters: Sequence[RequesterSpec],
                "enfed", fc, R, N)
     state = _init_state("enfed", mob, ref_epochs > 0, wire_compress,
                         cfg.max_rounds, P, fc, contrib_flat, arrays)
+    tl.finish(_sp_stage)
+    hlo = None
+    if trace is not None and getattr(trace, "hlo_stats", False):
+        # AOT lower+compile BEFORE the donating call: lowering only reads
+        # abstract shapes, so the donated carry buffers stay intact
+        with tl.span("hlo_stats"):
+            hlo = jit_hlo_stats(_fleet_program, *statics, state, arrays) or None
+    profiler_dir = getattr(trace, "jax_profiler_dir", None) if trace else None
     if checkpoint_dir or resume_from:
         # host-driven chunk loop: same traced round bodies, the outer
         # while moves to the host so the carry can be serialized (and a
@@ -1248,22 +1291,38 @@ def run_fleet(task, requesters: Sequence[RequesterSpec],
         every = ((every + chunk - 1) // chunk) * chunk   # chunk multiple
         r0 = 0
         if resume_from:
-            template = {"r0": np.int64(0),
-                        "state": jax.tree_util.tree_map(np.asarray, state)}
-            pay, _step = ckpt_mod.restore_checkpoint(resume_from, template)
+            with tl.span("checkpoint_restore"):
+                template = {"r0": np.int64(0),
+                            "state": jax.tree_util.tree_map(np.asarray, state)}
+                pay, _step = ckpt_mod.restore_checkpoint(resume_from, template)
             r0 = int(pay["r0"])
             state = jax.tree_util.tree_map(jnp.asarray, pay["state"])
-        while r0 < cfg.max_rounds and bool(np.any(np.asarray(state[6]))):
-            state = _fleet_chunk_program(*statics, jnp.int32(r0), state,
-                                         arrays)
-            r0 += chunk
-            if checkpoint_dir and r0 % every == 0:
-                ckpt_mod.save_checkpoint(
-                    checkpoint_dir, r0,
-                    {"r0": np.int64(r0),
-                     "state": jax.tree_util.tree_map(np.asarray, state)})
+        with maybe_jax_profiler(profiler_dir):
+            while r0 < cfg.max_rounds and bool(np.any(np.asarray(state[6]))):
+                before = _jit_cache_size(_fleet_chunk_program)
+                _sp = tl.begin("chunk", r0=r0)
+                state = _fleet_chunk_program(*statics, jnp.int32(r0), state,
+                                             arrays)
+                jax.block_until_ready(state)
+                _note_cache_miss(tl.spans[_sp], _fleet_chunk_program, before)
+                tl.finish(_sp)
+                r0 += chunk
+                if checkpoint_dir and r0 % every == 0:
+                    with tl.span("checkpoint_save", r0=r0):
+                        ckpt_mod.save_checkpoint(
+                            checkpoint_dir, r0,
+                            {"r0": np.int64(r0),
+                             "state": jax.tree_util.tree_map(np.asarray,
+                                                             state)})
     else:
-        state = _fleet_program(*statics, state, arrays)
+        before = _jit_cache_size(_fleet_program)
+        _sp = tl.begin("program")
+        with maybe_jax_profiler(profiler_dir):
+            state = _fleet_program(*statics, state, arrays)
+            jax.block_until_ready(state)
+        _note_cache_miss(tl.spans[_sp], _fleet_program, before)
+        tl.finish(_sp)
+    _sp_unpack = tl.begin("unpack")
     (contrib_final, cscale_final, _live, _live_s, last_flat, level, _active,
      stop_code, rounds_done, _clevel, acc_t, loss_t, bat_t, exec_t, body_t,
      member_t, _prev, _prev_s, drop_t, retry_t, stale_t, deliver_t) = state
@@ -1285,8 +1344,10 @@ def run_fleet(task, requesters: Sequence[RequesterSpec],
     # its dequantized image, exactly what the loop engine leaves behind.
     if ref_epochs > 0:
         if wire_compress == "int8":
-            contrib_final = dequantize_flat_batched(
-                contrib_final, cscale_final)[..., :P]
+            with tl.span("dequant_unpack"):
+                contrib_final = dequantize_flat_batched(
+                    contrib_final, cscale_final)[..., :P]
+                jax.block_until_ready(contrib_final)
         contrib_tree = tree_unravel(ravel_spec, contrib_final)
         for i, (spec, cs) in enumerate(zip(requesters, lane_devs)):
             for j, c in enumerate(cs):
@@ -1295,6 +1356,7 @@ def run_fleet(task, requesters: Sequence[RequesterSpec],
 
     # ---- per-session views (loop-engine-compatible SessionResults) --------
     last_p = tree_unravel(ravel_spec, last_flat)
+    tl.finish(_sp_unpack)
     sessions = []
     total_e = 0.0
     for i, (spec, cs, b0) in enumerate(zip(requesters, lane_devs, batteries)):
@@ -1322,7 +1384,8 @@ def run_fleet(task, requesters: Sequence[RequesterSpec],
         battery = dataclasses.replace(b0, level=float(level_np[i]))
         history = {"accuracy": [float(a) for a in acc_h[:r_i, i]],
                    "loss": [float(l) for l in loss_h[:r_i, i]],
-                   "battery": [float(l) for l in bat_h[:r_i, i]]}
+                   "battery": [float(l) for l in bat_h[:r_i, i]],
+                   "round_executed": [float(x) for x in exec_h[:r_i, i]]}
         if mob is not None:
             history["member_mask"] = [member_h[r, i].copy()
                                       for r in range(r_i)]
@@ -1338,7 +1401,8 @@ def run_fleet(task, requesters: Sequence[RequesterSpec],
             accuracy=history["accuracy"][-1] if history["accuracy"] else 0.0,
             rounds=r_i, n_contributors=len(cs), report=report, battery=battery,
             history=history, stop_reason=protocol.stop_reason_name(codes_np[i]),
-            params=jax.tree_util.tree_map(lambda l: l[i], last_p)))
+            params=jax.tree_util.tree_map(lambda l: l[i], last_p),
+            model_bytes=model_bytes))
     fleet_hist = {"accuracy": acc_h, "loss": loss_h, "battery": bat_h,
                   "executed": exec_h, "round_executed": body_h,
                   "member": member_h}
@@ -1356,12 +1420,15 @@ def run_fleet(task, requesters: Sequence[RequesterSpec],
         staged_param_bytes=staged_param_bytes,
         device_round_state_bytes=device_round_state_bytes,
         refresh_gather_bytes=gather_bytes,
-        refresh_gather_bytes_dense=gather_bytes_dense)
+        refresh_gather_bytes_dense=gather_bytes_dense,
+        timeline=tl, hlo_stats=hlo)
 
 
 def _run_fleet_baseline(task, requesters: Sequence[RequesterSpec], cfg, cost,
                         method: str, dfl_topology: str, use_pallas: bool,
-                        interpret, round_chunk: int) -> FleetResult:
+                        interpret, round_chunk: int,
+                        timeline: Optional[Timeline] = None,
+                        trace=None) -> FleetResult:
     """Stage and run the dfl/cfl traced protocol variants.
 
     Client roster of requester i = [own shard] + every in-range neighbor
@@ -1378,6 +1445,8 @@ def _run_fleet_baseline(task, requesters: Sequence[RequesterSpec], cfg, cost,
 
     if dfl_topology not in ("mesh", "ring"):
         raise ValueError(f"unknown dfl topology {dfl_topology!r} (mesh|ring)")
+    tl = timeline if timeline is not None else Timeline()
+    _sp_stage = tl.begin("stage")
     R = len(requesters)
 
     # ---- client rosters (the loop learners' client_data lists) ------------
@@ -1480,11 +1549,24 @@ def _run_fleet_baseline(task, requesters: Sequence[RequesterSpec], cfg, cost,
 
     state0 = _init_state(method, None, False, None, cfg.max_rounds, P, None,
                          contrib_flat, arrays)
-    state = _fleet_program(
-        task, use_pallas, resolve_interpret(interpret), False,
-        int(round_chunk), cfg.max_rounds, cfg.epochs, cfg.batch_size,
-        steps_max, 0, 1, ravel_spec, None, cfg.n_max, None, None, P,
-        method, None, R, N, state0, arrays)
+    statics = (task, use_pallas, resolve_interpret(interpret), False,
+               int(round_chunk), cfg.max_rounds, cfg.epochs, cfg.batch_size,
+               steps_max, 0, 1, ravel_spec, None, cfg.n_max, None, None, P,
+               method, None, R, N)
+    tl.finish(_sp_stage)
+    hlo = None
+    if trace is not None and getattr(trace, "hlo_stats", False):
+        with tl.span("hlo_stats"):
+            hlo = jit_hlo_stats(_fleet_program, *statics, state0, arrays) or None
+    before = _jit_cache_size(_fleet_program)
+    _sp = tl.begin("program")
+    with maybe_jax_profiler(getattr(trace, "jax_profiler_dir", None)
+                            if trace else None):
+        state = _fleet_program(*statics, state0, arrays)
+        jax.block_until_ready(state)
+    _note_cache_miss(tl.spans[_sp], _fleet_program, before)
+    tl.finish(_sp)
+    _sp_unpack = tl.begin("unpack")
     (_contrib, _cscale, _live, _live_s, last_flat, level, _active, stop_code,
      rounds_done, _clevel, acc_t, loss_t, bat_t, exec_t, body_t, member_t,
      *_rest) = state
@@ -1503,6 +1585,7 @@ def _run_fleet_baseline(task, requesters: Sequence[RequesterSpec], cfg, cost,
                                     compress=getattr(cfg, "compress", None),
                                     raw_bytes=tree_bytes(template))
     last_p = tree_unravel(ravel_spec, last_flat)
+    tl.finish(_sp_unpack)
     fc = getattr(cfg, "faults", None)
     sessions = []
     total_e = 0.0
@@ -1555,7 +1638,8 @@ def _run_fleet_baseline(task, requesters: Sequence[RequesterSpec], cfg, cost,
             rounds=r_i, n_contributors=n_cli - 1, report=report,
             battery=None, history=history,
             stop_reason=protocol.stop_reason_name(codes_np[i]),
-            params=jax.tree_util.tree_map(lambda l: l[i], last_p)))
+            params=jax.tree_util.tree_map(lambda l: l[i], last_p),
+            model_bytes=model_bytes))
     return FleetResult(
         sessions=sessions, rounds=rounds_np, stop_codes=codes_np,
         accuracy=np.array([s.accuracy for s in sessions], np.float32),
@@ -1568,4 +1652,5 @@ def _run_fleet_baseline(task, requesters: Sequence[RequesterSpec], cfg, cost,
         staged_shard_bytes_dense=shard_bytes_dense,
         staged_param_bytes=staged_param_bytes,
         device_round_state_bytes=staged_param_bytes,
-        refresh_gather_bytes=0, refresh_gather_bytes_dense=0)
+        refresh_gather_bytes=0, refresh_gather_bytes_dense=0,
+        timeline=tl, hlo_stats=hlo)

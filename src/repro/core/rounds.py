@@ -50,6 +50,7 @@ from repro.core.incentive import (Contract, NeighborDevice, candidate_pool,
                                   select_contributors)
 from repro.core.mobility import MobilityConfig
 from repro.core.topology import AggregationStrategy
+from repro.telemetry.spans import Timeline
 from repro.utils.tree import flatten_to_vector, tree_bytes, tree_size, unflatten_from_vector
 
 
@@ -109,9 +110,20 @@ class SessionResult:
     n_contributors: int
     report: EnergyReport
     battery: BatteryState
+    # deprecated view: prefer the normalized event stream (``trace``) —
+    # the raw per-engine dict-of-lists stays for backward compatibility
     history: Dict[str, List[float]]
     stop_reason: str
     params: object = None
+    model_bytes: int = 0   # one update's wire bytes (feeds event wire_bytes)
+
+    @property
+    def trace(self):
+        """The session as a normalized RoundEvent list (requester 0) —
+        the engine-independent view of ``history``."""
+        from repro.telemetry.events import session_events
+
+        return session_events(self)
 
 
 class EnFedSession:
@@ -362,6 +374,9 @@ class EnFedSession:
         history["accuracy"] = [float(v) for v in pay["acc"][:rounds]]
         history["loss"] = [float(v) for v in pay["loss"][:rounds]]
         history["battery"] = [float(v) for v in pay["bat"][:rounds]]
+        # not serialized — every loop-engine round that reached the
+        # history executed, so the restored view is derivable
+        history["round_executed"] = [1.0] * rounds
         if faults:
             history["drops"] = [float(v) for v in pay["drops"][:rounds]]
             history["retries"] = [float(v) for v in pay["retries"][:rounds]]
@@ -382,7 +397,8 @@ class EnFedSession:
     def run(self, engine: str = "loop", *, use_pallas: bool = True,
             interpret: Optional[bool] = None, round_chunk: int = 4,
             checkpoint_dir: Optional[str] = None, checkpoint_every: int = 0,
-            resume_from: Optional[str] = None) -> SessionResult:
+            resume_from: Optional[str] = None,
+            timeline: Optional[Timeline] = None) -> SessionResult:
         """Execute the session.  ``engine="loop"`` (default) runs the
         Python reference loop below; ``engine="fleet"`` compiles this
         session as a 1-requester fleet through ``repro.core.fleet``,
@@ -415,29 +431,33 @@ class EnFedSession:
                                          round_chunk=round_chunk,
                                          checkpoint_dir=checkpoint_dir,
                                          checkpoint_every=checkpoint_every,
-                                         resume_from=resume_from)
+                                         resume_from=resume_from,
+                                         timeline=timeline)
             self.battery = result.sessions[0].battery
             return result.sessions[0]
         if engine != "loop":
             raise ValueError(f"unknown engine {engine!r} (loop|fleet)")
+        tl = timeline if timeline is not None else Timeline()
         checkpoint_every = self._normalize_ckpt(checkpoint_dir,
                                                 checkpoint_every)
         if self.cfg.mobility is not None:
             return self._run_mobility(checkpoint_dir=checkpoint_dir,
                                       checkpoint_every=checkpoint_every,
-                                      resume_from=resume_from)
+                                      resume_from=resume_from, timeline=tl)
         from repro.checkpoint import save_checkpoint
 
         cfg = self.cfg
         fc = cfg.faults
-        contracts = self.handshake()
+        with tl.span("handshake"):
+            contracts = self.handshake()
         if not contracts:
             raise RuntimeError("no nearby device agreed to the incentive (N_d < 1)")
         n_c = len(contracts)
         round_w = protocol.round_weights(n_c, cfg.strategy)
         ids = np.array([c.device_id for c in contracts], np.int32)
 
-        history = {"accuracy": [], "loss": [], "battery": []}
+        history = {"accuracy": [], "loss": [], "battery": [],
+                   "round_executed": []}
         params = None
         rounds = 0
         stop = protocol.STOP_MAX_ROUNDS
@@ -471,9 +491,10 @@ class EnFedSession:
         if resume_from is not None:
             template_params = (params if params is not None
                                else self.task.init(seed=cfg.seed))
-            pay = self._restore_state(resume_from, self._state_payload(
-                0, ids, template_params, history, 0, 0.0, 0.0,
-                model_bytes=model_bytes))
+            with tl.span("checkpoint_restore"):
+                pay = self._restore_state(resume_from, self._state_payload(
+                    0, ids, template_params, history, 0, 0.0, 0.0,
+                    model_bytes=model_bytes))
             r_start = int(pay["r"])
             rounds = int(pay["rounds"])
             params = pay["params"]
@@ -501,11 +522,13 @@ class EnFedSession:
                 history["deliver_mask"].append(delivered.astype(np.float32))
                 lanes = np.nonzero(delivered)[0]
                 updates = []
+                _sp = tl.begin("transport", round=r)
                 for j in lanes:
                     upd, nbytes = self._collect_update(int(ids[j]),
                                                        stale=bool(stale[j]))
                     model_bytes = max(model_bytes, nbytes)
                     updates.append(upd)
+                tl.finish(_sp)
                 dcount = len(updates)
                 if updates:
                     global_params = aggregation.masked_fedavg(
@@ -514,24 +537,28 @@ class EnFedSession:
                     global_params = params   # every link failed this round
             else:
                 updates = []
+                _sp = tl.begin("transport", round=r)
                 for c in contracts:
                     upd, nbytes = self._collect_update(c.device_id)
                     model_bytes = max(model_bytes, nbytes)
                     if params is None and not updates:
                         params = upd  # model init from the first received update
                     updates.append(upd)
+                tl.finish(_sp)
                 # Phase.AGGREGATE (eq. 14) then Phase.FIT on own data
                 global_params = aggregation.masked_fedavg(updates, round_w)
             t0 = time.perf_counter()
-            params, losses = self.task.fit(global_params, self.own_train,
-                                           cfg.epochs, cfg.batch_size,
-                                           seed=cfg.seed + r)
+            with tl.span("fit", round=r):
+                params, losses = self.task.fit(global_params, self.own_train,
+                                               cfg.epochs, cfg.batch_size,
+                                               seed=cfg.seed + r)
             measured_fit_s += time.perf_counter() - t0
             # Phase.SCORE
             acc = float(self.task.evaluate(params, self.own_test))
             rounds = r + 1
             history["accuracy"].append(acc)
             history["loss"].append(float(losses[-1]))
+            history["round_executed"].append(1.0)
 
             # Phase.ACCOUNT: battery bookkeeping for this round
             num_params = tree_size(params)
@@ -560,11 +587,13 @@ class EnFedSession:
                 break
             if fc is not None:
                 self._snap_prev(ids)   # next round's stale images
-            self._refresh_contributors(contracts)
+            with tl.span("refresh", round=r):
+                self._refresh_contributors(contracts)
             if checkpoint_dir is not None and (r + 1) % checkpoint_every == 0:
-                save_checkpoint(checkpoint_dir, r + 1, self._state_payload(
-                    r + 1, ids, params, history, rounds, measured_fit_s,
-                    retry_windows, model_bytes=model_bytes))
+                with tl.span("checkpoint_save", round=r):
+                    save_checkpoint(checkpoint_dir, r + 1, self._state_payload(
+                        r + 1, ids, params, history, rounds, measured_fit_s,
+                        retry_windows, model_bytes=model_bytes))
 
         num_params = tree_size(params)
         report = self.cost.session(
@@ -578,12 +607,14 @@ class EnFedSession:
         return SessionResult(
             accuracy=history["accuracy"][-1], rounds=rounds, n_contributors=n_c,
             report=report, battery=self.battery, history=history,
-            stop_reason=protocol.stop_reason_name(stop), params=params)
+            stop_reason=protocol.stop_reason_name(stop), params=params,
+            model_bytes=model_bytes)
 
     # -- Algorithm 1 in an opportunistic world (repro.core.mobility) ----------
     def _run_mobility(self, checkpoint_dir: Optional[str] = None,
                       checkpoint_every: int = 0,
-                      resume_from: Optional[str] = None) -> SessionResult:
+                      resume_from: Optional[str] = None,
+                      timeline: Optional[Timeline] = None) -> SessionResult:
         """The churn-aware session loop: Phase.RENEGOTIATE runs every
         round — contributors leave when they walk out of radio range or
         hit the battery floor, in-range arrivals are signed, and a
@@ -594,12 +625,15 @@ class EnFedSession:
         the whole churn trajectory by construction."""
         cfg = self.cfg
         mob = cfg.mobility
+        tl = timeline if timeline is not None else Timeline()
 
         # Phase.HANDSHAKE fixes the candidate POOL (agreeing devices) and
         # exchanges keys with all of them — any candidate may be signed in
         # a later round, when it wanders into range.
+        _sp = tl.begin("handshake")
         cands = candidate_pool(self.fleet, cfg.offered_incentive)
         if not cands:
+            tl.finish(_sp)
             raise RuntimeError("no nearby device agreed to the incentive (N_d < 1)")
         rng = np.random.default_rng(cfg.seed)
         self.keys = {d.device_id: rng.integers(0, 256, 16).astype(np.uint8)
@@ -611,6 +645,7 @@ class EnFedSession:
             for d in cands:
                 self._wire_pack(d.device_id,
                                 self.contributor_states[d.device_id]["params"])
+        tl.finish(_sp)
         n_cand = len(cands)
         ids = np.array([d.device_id for d in cands], np.int32)
         max_data = max(d.data_size for d in cands)
@@ -643,6 +678,7 @@ class EnFedSession:
                 encrypt=cfg.encrypt)
 
         history = {"accuracy": [], "loss": [], "battery": [],
+                   "round_executed": [],
                    "members": [], "member_mask": [], "contracts": []}
         util_rows: List[np.ndarray] = []
         rounds = 0
@@ -661,9 +697,10 @@ class EnFedSession:
 
         r_start = 0
         if resume_from is not None:
-            pay = self._restore_state(resume_from, self._state_payload(
-                0, ids, params, history, 0, 0.0, 0.0,
-                util_rows=util_rows, level=level))
+            with tl.span("checkpoint_restore"):
+                pay = self._restore_state(resume_from, self._state_payload(
+                    0, ids, params, history, 0, 0.0, 0.0,
+                    util_rows=util_rows, level=level))
             r_start = int(pay["r"])
             rounds = int(pay["rounds"])
             params = pay["params"]
@@ -723,10 +760,11 @@ class EnFedSession:
             dcount = int(agg_mask.sum())
             if dcount > 0:
                 lanes = np.nonzero(agg_mask)[0]
-                updates = [self._collect_update(
-                    int(ids[j]),
-                    stale=bool(stale[j]) if fc is not None else False)[0]
-                    for j in lanes]
+                with tl.span("transport", round=r):
+                    updates = [self._collect_update(
+                        int(ids[j]),
+                        stale=bool(stale[j]) if fc is not None else False)[0]
+                        for j in lanes]
                 global_params = aggregation.masked_fedavg(
                     updates, round_w[lanes])
             else:
@@ -734,14 +772,16 @@ class EnFedSession:
 
             # Phase.FIT + Phase.SCORE
             t0 = time.perf_counter()
-            params, losses = self.task.fit(global_params, self.own_train,
-                                           cfg.epochs, cfg.batch_size,
-                                           seed=cfg.seed + r)
+            with tl.span("fit", round=r):
+                params, losses = self.task.fit(global_params, self.own_train,
+                                               cfg.epochs, cfg.batch_size,
+                                               seed=cfg.seed + r)
             measured_fit_s += time.perf_counter() - t0
             acc = float(self.task.evaluate(params, self.own_test))
             rounds = r + 1
             history["accuracy"].append(acc)
             history["loss"].append(float(losses[-1]))
+            history["round_executed"].append(1.0)
 
             # Phase.ACCOUNT: requester discharge from the member-count
             # energy table (same table the fleet engine stages); under
@@ -783,6 +823,7 @@ class EnFedSession:
                 self._snap_prev(ids)   # next round's stale images
             # Phase.REFRESH for current members only
             if cfg.contributor_refresh_epochs > 0:
+                _sp = tl.begin("refresh", round=r)
                 for j in np.nonzero(member)[0]:
                     did = int(ids[j])
                     st = self.contributor_states[did]
@@ -794,11 +835,13 @@ class EnFedSession:
                         seed=cfg.seed + did)
                     st["params"] = (self._wire_pack(did, fitted)
                                     if self._compress == "int8" else fitted)
+                tl.finish(_sp)
 
             if checkpoint_dir is not None and (r + 1) % checkpoint_every == 0:
-                save_checkpoint(checkpoint_dir, r + 1, self._state_payload(
-                    r + 1, ids, params, history, rounds, measured_fit_s,
-                    retry_windows, util_rows=util_rows, level=level))
+                with tl.span("checkpoint_save", round=r):
+                    save_checkpoint(checkpoint_dir, r + 1, self._state_payload(
+                        r + 1, ids, params, history, rounds, measured_fit_s,
+                        retry_windows, util_rows=util_rows, level=level))
 
         mean_members = float(np.mean(history["members"])) if rounds else 0.0
         report = self.cost.session(
@@ -813,4 +856,4 @@ class EnFedSession:
             accuracy=history["accuracy"][-1], rounds=rounds,
             n_contributors=n_cand, report=report, battery=self.battery,
             history=history, stop_reason=protocol.stop_reason_name(stop),
-            params=params)
+            params=params, model_bytes=model_bytes)
