@@ -20,10 +20,10 @@ def run(verbose: bool = True):
                       f"rounds={res.rounds}")
         # Fig 7: loss trajectory with 5 contributors
         res = run_enfed(sc, n_contrib=5)
-        losses = ", ".join(f"{l:.3f}" for l in res.history["loss"])
+        losses = ", ".join(f"{l:.3f}" for l in res.history_raw["loss"])
         if verbose:
             print(f"[fig7/{ds_id}] local-model loss per round: [{losses}]")
-        rows.append((f"fig7/{ds_id}/final_loss", res.history["loss"][-1],
+        rows.append((f"fig7/{ds_id}/final_loss", res.history_raw["loss"][-1],
                      res.report.t_train, res.report.e_tot))
     return rows
 

@@ -40,7 +40,13 @@ matching retry-energy accounting, and proving all three failure modes
 actually fired, (d) a KILL-AND-RESUME gate — a checkpointed fleet run
 is killed after its first chunk's checkpoint and resumed from disk; the
 resumed outcome must be BIT-identical to the uninterrupted run,
-(e) the ``--compare`` paper-claim rows (below), (f) the TRACE gate —
+(e) the ``--compare`` paper-claim rows (below), (e2) the ASYNC gates —
+on the cadence world (``repro.core.cadence`` composed with the fault
+world) both engines must agree bitwise on per-round clocks, idle-step
+counters, and delivered masks (battery/params to the same tolerance the
+churn gate uses) with >= 1 straggler round and >= 1 idle step provably
+exercised, and a killed-and-resumed cadence run must restore the
+per-lane clocks/idle counters bit-identically — (f) the TRACE gate —
 a traced run (``repro.telemetry.TraceConfig``) must be BIT-identical to
 the untraced one, its ``events.jsonl`` + ``trace.json`` exports (written
 next to ``--out`` for the CI artifact upload) must round-trip
@@ -61,6 +67,17 @@ perf-tracked too.  It exits non-zero on any regression — the CI gate.
   retry-energy overhead — extra receive windows priced through the ONE
   ``CostModel.retry_energy`` — alongside the clean-world energy so the
   robustness tax is a committed number.
+
+* **async-cadence sweep** (``results_async``) — the static sweep with
+  the lockstep round barrier broken (``repro.core.cadence``): per-device
+  duty cycles put every lane on its own round clock.  Warm rounds/s per
+  R, the straggler-lag histogram (how many event steps stale the
+  aggregated wire images run), and the idle-step pricing — low-power
+  listen windows through the ONE ``CostModel.idle_energy`` — next to
+  the lockstep energy at the same R.  The ``--smoke`` perf gate covers
+  this sweep too (``async_perf_gate``, same 0.75x threshold,
+  section-parameterized; it arms itself on the first committed baseline
+  that carries the section).
 
 ``--compare`` runs ``repro.api.Experiment.compare(["enfed", "dfl"])``
 through the one-call facade — both methods on ONE world, seed, and
@@ -103,10 +120,11 @@ import time
 
 import numpy as np
 
-from repro.core import (EnFedConfig, EnFedSession, FaultConfig,
-                        MobilityConfig, RequesterSpec, SupervisedTask,
-                        make_fleet, run_fleet)
+from repro.core import (CadenceConfig, EnFedConfig, EnFedSession,
+                        FaultConfig, MobilityConfig, RequesterSpec,
+                        SupervisedTask, make_fleet, run_fleet)
 from repro.core import mobility, schedule
+from repro.core.cadence import tick_mask
 from repro.data import CaloriesDatasetConfig, dirichlet_partition, make_calories_tabular
 from repro.models import MLPClassifier, MLPClassifierConfig
 
@@ -197,8 +215,8 @@ def _parity_smoke(task, fleet, states, own_train, own_test, cfg) -> dict:
     lv, _ = ravel_pytree(loop.params)
     fv, _ = ravel_pytree(fl.params)
     max_diff = float(np.abs(np.asarray(lv) - np.asarray(fv)).max())
-    acc_diff = float(np.abs(np.asarray(loop.history["accuracy"])
-                            - np.asarray(fl.history["accuracy"])).max())
+    acc_diff = float(np.abs(np.asarray(loop.history_raw["accuracy"])
+                            - np.asarray(fl.history_raw["accuracy"])).max())
     ok = max_diff < 1e-4 and acc_diff < 1e-5
     return {"pass": bool(ok), "rounds": (loop.rounds, fl.rounds),
             "stop": (loop.stop_reason, fl.stop_reason),
@@ -435,8 +453,8 @@ def _baseline_parity_smoke(task, fleet, states, own_train, own_test) -> dict:
     fv, _ = ravel_pytree(fl.params)
     out["max_param_diff"] = float(np.abs(np.asarray(lv) - np.asarray(fv)).max())
     out["max_accuracy_diff"] = float(np.abs(
-        np.asarray(loop.history["accuracy"])
-        - np.asarray(fl.history["accuracy"])).max())
+        np.asarray(loop.history_raw["accuracy"])
+        - np.asarray(fl.history_raw["accuracy"])).max())
     out["pass"] = bool(out["max_param_diff"] < 1e-4
                        and out["max_accuracy_diff"] < 1e-5)
     return out
@@ -546,8 +564,8 @@ def _membership_stats(result) -> dict:
     Join/leave transitions only count between rounds a lane actually
     EXECUTED — a session stopping (or the fleet early-exiting) zeroes
     its trailing trace rows, which is termination, not radio churn."""
-    member = result.history["member"] > 0            # (T, R, N)
-    executed = result.history["executed"] > 0        # (T, R)
+    member = result.history_raw["member"] > 0            # (T, R, N)
+    executed = result.history_raw["executed"] > 0        # (T, R)
     both = (executed[1:] & executed[:-1])[..., None]
     diff = member[1:].astype(np.int8) - member[:-1].astype(np.int8)
     joins = int(((diff > 0) & both).sum())
@@ -578,12 +596,12 @@ def _churn_smoke(task, fleet, states, own_train, own_test) -> dict:
     fl = res.sessions[0]
     out = {"pass": False, "rounds": (loop.rounds, fl.rounds),
            "stop": (loop.stop_reason, fl.stop_reason),
-           "loop_members": loop.history["members"],
-           "fleet_members": fl.history["members"]}
+           "loop_members": loop.history_raw["members"],
+           "fleet_members": fl.history_raw["members"]}
     if fl.rounds != loop.rounds or fl.stop_reason != loop.stop_reason:
         return out
-    masks_l = np.array(loop.history["member_mask"])
-    masks_f = np.array(fl.history["member_mask"])
+    masks_l = np.array(loop.history_raw["member_mask"])
+    masks_f = np.array(fl.history_raw["member_mask"])
     out["mask_match"] = bool((masks_l == masks_f).all())
     joins, leaves = mobility.membership_events(masks_l)
     out["join_events"], out["leave_events"] = joins, leaves
@@ -595,8 +613,8 @@ def _churn_smoke(task, fleet, states, own_train, own_test) -> dict:
     fv, _ = ravel_pytree(fl.params)
     out["max_param_diff"] = float(np.abs(np.asarray(lv) - np.asarray(fv)).max())
     out["max_battery_diff"] = float(np.abs(
-        np.asarray(loop.history["battery"])
-        - np.asarray(fl.history["battery"])).max())
+        np.asarray(loop.history_raw["battery"])
+        - np.asarray(fl.history_raw["battery"])).max())
     out["pass"] = bool(out["mask_match"] and out["churned"]
                        and out["max_param_diff"] < 1e-4
                        and out["max_battery_diff"] < 1e-5)
@@ -628,17 +646,17 @@ def _fault_parity_smoke(task, fleet, states, own_train, own_test) -> dict:
     fl = run_fleet(task, [RequesterSpec(own_train, own_test, fleet,
                                         copy.deepcopy(states))],
                    cfg).sessions[0]
-    tot = {k: int(np.sum(loop.history[k]))
+    tot = {k: int(np.sum(loop.history_raw[k]))
            for k in ("drops", "retries", "stale")}
     out = {"pass": False, "rounds": (loop.rounds, fl.rounds),
            "stop": (loop.stop_reason, fl.stop_reason), **tot}
     if fl.rounds != loop.rounds or fl.stop_reason != loop.stop_reason:
         return out
     out["counters_match"] = bool(all(
-        np.array_equal(fl.history[k], loop.history[k])
+        np.array_equal(fl.history_raw[k], loop.history_raw[k])
         for k in ("drops", "retries", "stale")))
-    lm = np.stack(loop.history["deliver_mask"])
-    fm = np.stack(fl.history["deliver_mask"])
+    lm = np.stack(loop.history_raw["deliver_mask"])
+    fm = np.stack(fl.history_raw["deliver_mask"])
     out["mask_match"] = bool(np.array_equal(fm[:, :lm.shape[1]], lm)
                              and not fm[:, lm.shape[1]:].any())
     from jax.flatten_util import ravel_pytree
@@ -652,6 +670,150 @@ def _fault_parity_smoke(task, fleet, states, own_train, own_test) -> dict:
                        and out["all_modes_fired"]
                        and out["max_param_diff"] < 1e-4
                        and out["max_ecomm_diff"] < 1e-3)
+    return out
+
+
+def _async_cadence() -> CadenceConfig:
+    """The benchmark's async world: two speed classes, seed 0 — on this
+    fleet the requester draws stride 2 (every other global event step is
+    a priced idle step) and one contributor draws stride 2 on the
+    OPPOSITE phase, so it never ticks on an executed step: every
+    aggregation consumes its resident (straggler) wire image."""
+    return CadenceConfig(n_speed_classes=2, seed=0)
+
+
+def _straggler_lag_hist(result, cc, device_ids) -> dict:
+    """{lag: count} over every (lane, executed round, contributor).
+
+    A contributor's lag at an executed round is the round's global event
+    step minus the contributor's last tick step at or before it — 0
+    means it refreshed for this round, lag > 0 means the aggregation
+    consumed a wire image that many event steps stale (the straggler
+    path).  The cadence is counter-based, so the histogram is exactly
+    recomputable host-side from ``tick_mask``."""
+    clock_h = np.asarray(result.history_raw["round_clock"])    # (T, R)
+    rounds = np.asarray(result.rounds)
+    max_t = int(clock_h.max(initial=0))
+    ticks = np.stack([np.asarray(tick_mask(cc, t, device_ids), bool)
+                      for t in range(max_t + 1)])              # (S, N)
+    steps = np.arange(max_t + 1)[:, None]
+    last = np.maximum.accumulate(np.where(ticks, steps, -1), axis=0)
+    lags = []
+    for i in range(clock_h.shape[1]):
+        for t in clock_h[:int(rounds[i]), i]:
+            lags.extend((int(t) - last[int(t)]).tolist())
+    vals, counts = np.unique(np.asarray(lags, int), return_counts=True)
+    return {str(int(v)): int(c) for v, c in zip(vals, counts)}
+
+
+def _async_parity_smoke(task, fleet, states, own_train, own_test) -> dict:
+    """Async-cadence parity gate: on the cadence world (composed with
+    the fault world so delivered masks exist) both engines must agree
+    BITWISE on the per-round clocks, idle-step counters, and delivered
+    masks, to float tolerance on battery/params (the engines' long-
+    standing f32-vs-f64 energy-staging gap, same bound the churn gate
+    uses), with identical idle-time pricing — and the scenario must
+    provably exercise >= 1 straggler round AND >= 1 idle step, else the
+    gate gates nothing."""
+    cc = _async_cadence()
+    cfg = EnFedConfig(desired_accuracy=0.999, max_rounds=4, epochs=1,
+                      batch_size=BATCH, encrypt=False,
+                      contributor_refresh_epochs=1, faults=_fault_world(),
+                      cadence=cc)
+    loop = EnFedSession(task, own_train, own_test, fleet,
+                        copy.deepcopy(states), cfg).run()
+    fl = run_fleet(task, [RequesterSpec(own_train, own_test, fleet,
+                                        copy.deepcopy(states))],
+                   cfg).sessions[0]
+    out = {"pass": False, "rounds": (loop.rounds, fl.rounds),
+           "stop": (loop.stop_reason, fl.stop_reason)}
+    if fl.rounds != loop.rounds or fl.stop_reason != loop.stop_reason:
+        return out
+    out["clocks_bit_equal"] = bool(list(loop.history_raw["round_clock"])
+                                   == list(fl.history_raw["round_clock"]))
+    out["idle_bit_equal"] = bool(list(loop.history_raw["idle_steps"])
+                                 == list(fl.history_raw["idle_steps"]))
+    lm = np.stack(loop.history_raw["deliver_mask"])
+    fm = np.stack(fl.history_raw["deliver_mask"])
+    out["mask_bit_equal"] = bool(np.array_equal(fm[:, :lm.shape[1]], lm)
+                                 and not fm[:, lm.shape[1]:].any())
+    out["max_battery_diff"] = float(np.abs(
+        np.asarray(loop.history_raw["battery"])
+        - np.asarray(fl.history_raw["battery"])).max())
+    from jax.flatten_util import ravel_pytree
+    lv, _ = ravel_pytree(loop.params)
+    fv, _ = ravel_pytree(fl.params)
+    out["max_param_diff"] = float(np.abs(np.asarray(lv) - np.asarray(fv)).max())
+    out["max_tcom_diff"] = float(abs(fl.report.times.t_com
+                                     - loop.report.times.t_com))
+    ids = np.array([d.device_id for d in fleet], np.int32)
+    out["straggler_rounds"] = int(sum(
+        int((~np.asarray(tick_mask(cc, t, ids))).sum())
+        for t in loop.history_raw["round_clock"]))
+    out["idle_steps"] = int(np.sum(loop.history_raw["idle_steps"]))
+    out["pass"] = bool(out["clocks_bit_equal"] and out["idle_bit_equal"]
+                       and out["mask_bit_equal"]
+                       and out["straggler_rounds"] >= 1
+                       and out["idle_steps"] >= 1
+                       and out["max_param_diff"] < 1e-4
+                       and out["max_battery_diff"] < 1e-5
+                       and out["max_tcom_diff"] < 1e-9)
+    return out
+
+
+def _async_resume_smoke(task, fleet, states, own_train, own_test) -> dict:
+    """Kill-and-resume gate with the cadence ON: checkpoints land at
+    EVENT-step boundaries under the async world, and the resumed run
+    must restore the per-lane round clocks and idle counters — not just
+    params/battery/masks — bit-identically to the uninterrupted run."""
+    import glob
+    import os
+    import tempfile
+
+    cfg = EnFedConfig(desired_accuracy=0.999, max_rounds=4, epochs=1,
+                      batch_size=BATCH, encrypt=False,
+                      contributor_refresh_epochs=1, faults=_fault_world(),
+                      cadence=_async_cadence())
+
+    def _specs():
+        return [RequesterSpec(own_train, own_test, fleet,
+                              copy.deepcopy(states))]
+
+    with tempfile.TemporaryDirectory() as d:
+        full = run_fleet(task, _specs(), cfg, round_chunk=2,
+                         checkpoint_dir=os.path.join(d, "full"),
+                         checkpoint_every=2)
+        kill_dir = os.path.join(d, "kill")
+        run_fleet(task, _specs(), cfg, round_chunk=2,
+                  checkpoint_dir=kill_dir, checkpoint_every=2)
+        removed = 0
+        for f in glob.glob(os.path.join(kill_dir, "step_*.npz")):
+            if int(os.path.basename(f)[5:13]) > 2:
+                os.remove(f)
+                removed += 1
+        res = run_fleet(task, _specs(), cfg, round_chunk=2,
+                        resume_from=kill_dir)
+    from jax.flatten_util import ravel_pytree
+    fv, _ = ravel_pytree(full.sessions[0].params)
+    rv, _ = ravel_pytree(res.sessions[0].params)
+    fh, rh = full.sessions[0].history_raw, res.sessions[0].history_raw
+    out = {"checkpoints_killed": removed,
+           "rounds": (full.sessions[0].rounds, res.sessions[0].rounds),
+           "params_bit_equal": bool(np.array_equal(np.asarray(fv),
+                                                   np.asarray(rv))),
+           "battery_bit_equal": bool(np.array_equal(
+               np.asarray(full.battery_level), np.asarray(res.battery_level))),
+           "deliver_bit_equal": bool(np.array_equal(
+               full.history_raw["deliver"], res.history_raw["deliver"])),
+           "clocks_bit_equal": bool(list(fh["round_clock"])
+                                    == list(rh["round_clock"])),
+           "idle_bit_equal": bool(list(fh["idle_steps"])
+                                  == list(rh["idle_steps"]))}
+    out["pass"] = bool(removed > 0 and out["params_bit_equal"]
+                       and out["battery_bit_equal"]
+                       and out["deliver_bit_equal"]
+                       and out["clocks_bit_equal"] and out["idle_bit_equal"]
+                       and res.sessions[0].rounds == full.sessions[0].rounds)
     return out
 
 
@@ -697,7 +859,7 @@ def _resume_smoke(task, fleet, states, own_train, own_test) -> dict:
            "battery_bit_equal": bool(np.array_equal(
                np.asarray(full.battery_level), np.asarray(res.battery_level))),
            "deliver_bit_equal": bool(np.array_equal(
-               full.history["deliver"], res.history["deliver"]))}
+               full.history_raw["deliver"], res.history_raw["deliver"]))}
     out["pass"] = bool(removed > 0 and out["params_bit_equal"]
                        and out["battery_bit_equal"]
                        and out["deliver_bit_equal"]
@@ -750,11 +912,11 @@ def _trace_smoke(task, fleet, states, own_train, own_test,
            "params_bit_equal": bool(np.array_equal(np.asarray(ov),
                                                    np.asarray(nv))),
            "deliver_bit_equal": bool(np.array_equal(
-               np.stack(res_off.history["deliver_mask"]),
-               np.stack(res_on.history["deliver_mask"]))),
+               np.stack(res_off.history_raw["deliver_mask"]),
+               np.stack(res_on.history_raw["deliver_mask"]))),
            "battery_bit_equal": bool(np.array_equal(
-               np.asarray(res_off.history["battery"]),
-               np.asarray(res_on.history["battery"])))}
+               np.asarray(res_off.history_raw["battery"]),
+               np.asarray(res_on.history_raw["battery"])))}
     try:
         out["events"] = len(validate_events(read_events_jsonl(ev_path)))
         with open(tr_path) as f:
@@ -823,6 +985,12 @@ def run(verbose: bool = True, sizes=(8, 32, 128, 512), smoke: bool = False,
         report["resume_smoke"] = _resume_smoke(task, fleet, states,
                                                own_train, own_test)
         log.info(f"[resume smoke] {report['resume_smoke']}")
+        report["async_parity_smoke"] = _async_parity_smoke(
+            task, fleet, states, own_train, own_test)
+        log.info(f"[async parity smoke] {report['async_parity_smoke']}")
+        report["async_resume_smoke"] = _async_resume_smoke(
+            task, fleet, states, own_train, own_test)
+        log.info(f"[async resume smoke] {report['async_resume_smoke']}")
         report["trace_smoke"] = _trace_smoke(task, fleet, states,
                                              own_train, own_test, out)
         log.info(f"[trace smoke] {report['trace_smoke']}")
@@ -962,9 +1130,9 @@ def run(verbose: bool = True, sizes=(8, 32, 128, 512), smoke: bool = False,
         wall_warm = time.perf_counter() - t0
         total_rounds = int(result.rounds.sum())
         rps = total_rounds / wall_warm
-        drops = int(np.sum(result.history["drops"]))
-        retries = int(np.sum(result.history["retries"]))
-        stale = int(np.sum(result.history["stale"]))
+        drops = int(np.sum(result.history_raw["drops"]))
+        retries = int(np.sum(result.history_raw["retries"]))
+        stale = int(np.sum(result.history_raw["stale"]))
         windows = drops + retries
         row = {"R": R, "warm_s": round(wall_warm, 4),
                "session_rounds": total_rounds, "rounds_per_s": round(rps, 2),
@@ -982,6 +1150,60 @@ def run(verbose: bool = True, sizes=(8, 32, 128, 512), smoke: bool = False,
                  f"retry overhead {row['retry_energy_j']:.3f}J "
                  f"(E={row['simulated_energy_j']:.1f}J vs clean "
                  f"{row['clean_energy_j']}J)")
+
+    # async-cadence sweep: the static sweep re-run with the lockstep
+    # round barrier broken (repro.core.cadence) — per-device duty cycles
+    # put every lane on its own round clock.  Per row: warm rounds/s,
+    # the straggler-lag histogram (how stale the aggregated wire images
+    # run), and the idle-step pricing next to the lockstep energy at the
+    # same R, so the asynchrony tax is a committed number.
+    async_cc = _async_cadence()
+    async_cfg = EnFedConfig(desired_accuracy=0.999, max_rounds=cfg.max_rounds,
+                            epochs=cfg.epochs, batch_size=BATCH,
+                            encrypt=False, contributor_refresh_epochs=1,
+                            cadence=async_cc)
+    device_ids = np.array([d.device_id for d in fleet], np.int32)
+    t0 = time.perf_counter()
+    for spec in _make_specs(LOOP_SAMPLE_SESSIONS, own_train, own_test,
+                            fleet, states, seed=3):
+        EnFedSession(task, spec.own_train, spec.own_test, fleet,
+                     {k: dict(v) for k, v in states.items()},
+                     async_cfg).run()
+    async_loop_s = (time.perf_counter() - t0) / LOOP_SAMPLE_SESSIONS
+    report["results_async"] = []
+    for R in sizes:
+        specs = _make_specs(R, own_train, own_test, fleet, states, seed=3)
+        run_fleet(task, specs, async_cfg)             # compile
+        specs = _make_specs(R, own_train, own_test, fleet, states, seed=3)
+        t0 = time.perf_counter()
+        result = run_fleet(task, specs, async_cfg)
+        wall_warm = time.perf_counter() - t0
+        total_rounds = int(result.rounds.sum())
+        rps = total_rounds / wall_warm
+        # idle steps between executed rounds, priced through the ONE
+        # CostModel.idle_energy (residual idle after a lane's last round
+        # is priced in the engines but not re-derived here)
+        total_idle = int(np.sum(result.history_raw["idle_steps"]))
+        e_idle, t_idle = CostModel().idle_energy(
+            idle_steps=total_idle, idle_step_s=async_cc.idle_step_s)
+        hist = _straggler_lag_hist(result, async_cc, device_ids)
+        row = {"R": R, "warm_s": round(wall_warm, 4),
+               "session_rounds": total_rounds, "rounds_per_s": round(rps, 2),
+               "speedup_vs_loop": round(async_loop_s * R / wall_warm, 2),
+               "idle_steps": total_idle,
+               "idle_energy_j": round(e_idle, 4),
+               "idle_time_s": round(t_idle, 4),
+               "straggler_lag_hist": hist,
+               "straggler_rounds": sum(c for lag, c in hist.items()
+                                       if int(lag) > 0),
+               "simulated_energy_j": round(result.total_energy_j, 2),
+               "lockstep_energy_j": clean_e.get(R)}
+        report["results_async"].append(row)
+        log.info(f"[async R={R:4d}] warm {wall_warm:6.2f}s | "
+                 f"{total_rounds} session-rounds -> {rps:7.1f} rounds/s | "
+                 f"idle {total_idle} steps -> {row['idle_energy_j']:.3f}J | "
+                 f"lag hist {hist} | E={row['simulated_energy_j']:.1f}J vs "
+                 f"lockstep {row['lockstep_energy_j']}J")
 
     # compressed-round-state sweep: fp32 vs int8 staged/resident bytes
     # and rounds/s on a model that amortizes the quantization tile
@@ -1004,7 +1226,7 @@ def run(verbose: bool = True, sizes=(8, 32, 128, 512), smoke: bool = False,
     t0 = time.perf_counter()
     ee = run_fleet(task, ee_specs, ee_cfg)
     ee_warm = time.perf_counter() - t0
-    bodies = int(ee.history["round_executed"].sum())
+    bodies = int(ee.history_raw["round_executed"].sum())
     report["early_exit_demo"] = {
         "R": R_demo, "max_rounds": ee_cfg.max_rounds,
         "round_bodies_executed": bodies, "warm_s": round(ee_warm, 4),
@@ -1024,6 +1246,9 @@ def run(verbose: bool = True, sizes=(8, 32, 128, 512), smoke: bool = False,
         report["faults_perf_gate"] = _perf_gate(report, baseline_path or "",
                                                 section="results_faults")
         log.info(f"[faults perf gate] {report['faults_perf_gate']}")
+        report["async_perf_gate"] = _perf_gate(report, baseline_path or "",
+                                               section="results_async")
+        log.info(f"[async perf gate] {report['async_perf_gate']}")
 
     if out:
         with open(out, "w") as f:
@@ -1076,6 +1301,24 @@ def run(verbose: bool = True, sizes=(8, 32, 128, 512), smoke: bool = False,
                   f"{report['faults_perf_gate'].get('ratio')}x the committed "
                   f"baseline (gate: >= "
                   f"{report['faults_perf_gate'].get('threshold')}x)")
+        sys.exit(1)
+    if smoke and not report["async_parity_smoke"]["pass"]:
+        log.error("ASYNC REGRESSION: the engines no longer agree on the "
+                  "cadence world (clocks/idle/masks bitwise, battery/params "
+                  "to tolerance, idle pricing), or the scenario stopped "
+                  "exercising straggler rounds / idle steps")
+        sys.exit(1)
+    if smoke and not report["async_resume_smoke"]["pass"]:
+        log.error("ASYNC RESUME REGRESSION: a killed-and-resumed cadence "
+                  "run no longer restores the per-lane round clocks and "
+                  "idle counters bit-identically")
+        sys.exit(1)
+    if smoke and not report["async_perf_gate"]["pass"]:
+        log.error(f"PERF REGRESSION: async-cadence rounds/s at R="
+                  f"{report['async_perf_gate'].get('R')} fell to "
+                  f"{report['async_perf_gate'].get('ratio')}x the committed "
+                  f"baseline (gate: >= "
+                  f"{report['async_perf_gate'].get('threshold')}x)")
         sys.exit(1)
     if smoke and not report["baseline_parity_smoke"]["pass"]:
         log.error("BASELINE PARITY REGRESSION: the dfl fleet lanes diverged "

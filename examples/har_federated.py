@@ -11,6 +11,7 @@ percentages meaningful.
   PYTHONPATH=src python examples/har_federated.py [--dataset har|calories]
                                                   [--engine loop|fleet]
                                                   [--churn] [--faults]
+                                                  [--cadence]
                                                   [--compress int8]
                                                   [-v | -q]
 
@@ -39,6 +40,16 @@ stale counts and the delivered set; the fault world is counter-based
 identical weather.  Composes with ``--churn``: delivery then requires
 both radio range AND a surviving link.
 
+``--cadence`` breaks the lockstep round barrier (repro.core.cadence):
+devices advance on their own counter-based duty cycles, so the
+requester's round clock skips global event steps (idle steps priced via
+``CostModel.idle_energy``) and slow contributors become STRAGGLERS whose
+resident wire image is aggregated as-is.  The walkthrough prints each
+round's global clock step, the idle steps burned since the previous
+round, and the straggler set; the cadence world is counter-based, so
+``--engine loop`` and ``--engine fleet`` print the identical clocks and
+straggler deliveries.  Composes with ``--churn``/``--faults``.
+
 ``--compress int8`` adds an ``enfed-int8`` row to the compare table: the
 same world and knobs with the transported updates (and the fleet
 engine's round state) int8-compressed — ~4x fewer wire bytes into
@@ -54,7 +65,9 @@ import sys
 import numpy as np
 
 from repro.api import Experiment, ExecutionSpec, MethodSpec, WorldSpec
-from repro.core import FaultConfig, MobilityConfig, SupervisedTask, make_fleet
+from repro.core import (CadenceConfig, FaultConfig, MobilityConfig,
+                        SupervisedTask, make_fleet)
+from repro.core.cadence import tick_mask
 from repro.data import (CaloriesDatasetConfig, HARDatasetConfig,
                         dirichlet_partition, make_calories_tabular,
                         make_har_windows)
@@ -120,55 +133,102 @@ def walkthrough(task, shards, own_train, own_test, args):
     With ``--faults``, the links themselves are unreliable: drops with
     bounded retries (each retry burns an extra priced receive window),
     exhausted links zeroed out of the aggregation, and stale deliveries
-    replaying the previous round's wire image.  Both engines derive the
-    identical world; pick with --engine.
+    replaying the previous round's wire image.
+
+    With ``--cadence``, the lockstep barrier is gone: the requester's
+    own duty cycle makes its round clock skip global event steps, and
+    misphased contributors never tick on the requester's steps — their
+    resident wire images are aggregated as-is every round (the
+    straggler path).  All three worlds are counter-based, so both
+    engines derive the identical weather; pick with --engine.
     """
     mob = MobilityConfig(arena_m=200.0, radio_range_m=90.0,
                          leg_rounds=2, seed=5) if args.churn else None
     faults = FaultConfig(p_drop=0.4, p_stale=0.3, max_retries=1,
                          release_after=2, seed=7) if args.faults else None
+    # seed 0 on the two-speed world: the requester lands on stride 2
+    # (every other global step is an idle step), and two neighbors land
+    # on stride 2 with the opposite phase — permanent stragglers
+    cadence = (CadenceConfig(n_speed_classes=2, seed=0)
+               if args.cadence else None)
     world = make_world(task, shards, own_train, own_test, fit_epochs=1,
                        mobility=mob)
     res = Experiment(
         world,
         method=MethodSpec(desired_accuracy=args.target, epochs=args.epochs,
                           max_rounds=10, n_max=3,
-                          contributor_refresh_epochs=1, faults=faults),
+                          contributor_refresh_epochs=1, faults=faults,
+                          cadence=cadence),
         execution=ExecutionSpec(engine=args.engine)).run()
 
     label = "+".join(n for n, on in (("churn", args.churn),
-                                     ("faults", args.faults)) if on)
+                                     ("faults", args.faults),
+                                     ("cadence", args.cadence)) if on)
     log.info(f"\n=== {label} walkthrough ({args.dataset}, engine={res.engine}) ===")
-    head = f"{'round':>5} {'members':>8} {'contract set':<18}"
+    # with neither churn nor faults there is no membership history: the
+    # contract set is static, so the set column shows who is AWAKE on
+    # the round's clock step instead (everyone, absent a cadence)
+    have_mask = args.churn or args.faults
+    set_head = "contract set" if have_mask else "awake set"
+    head = f"{'round':>5}"
+    if args.cadence:
+        head += f" {'clock':>5} {'idle':>4}"
+    head += f" {'members':>8} {set_head:<18}"
     if args.faults:
         head += f" {'delivered':<12} {'drop':>4} {'rtry':>4} {'stale':>5}"
+    if args.cadence:
+        head += f" {'stragglers':<12}"
     log.info(head + f" {'acc':>6} {'battery':>8}")
     mask_key = "member_mask" if args.churn else "deliver_mask"
+    lane_ids = np.arange(len(world.requesters[0].neighborhood))
+    device_ids = np.array(
+        [d.device_id for d in world.requesters[0].neighborhood], np.int32)
     prev = None
     for r in range(res.rounds):
-        mask = np.asarray(res.history[mask_key][r]) > 0
+        clock = (int(res.history_raw["round_clock"][r])
+                 if args.cadence else r)
+        awake = (np.asarray(tick_mask(cadence, clock, device_ids))
+                 if args.cadence else np.ones(len(device_ids), bool))
+        if have_mask:
+            mask = np.asarray(res.history_raw[mask_key][r]) > 0
+        else:
+            mask = awake
         ids = [d for d, m in enumerate(mask) if m]
-        line = f"{r:>5} {int(mask.sum()):>8} {str(ids):<18}"
+        line = f"{r:>5}"
+        if args.cadence:
+            line += (f" {clock:>5}"
+                     f" {int(res.history_raw['idle_steps'][r]):>4}")
+        line += f" {int(mask.sum()):>8} {str(ids):<18}"
         if args.faults:
             got = [d for d, m in enumerate(
-                np.asarray(res.history["deliver_mask"][r]) > 0) if m]
-            line += (f" {str(got):<12} {int(res.history['drops'][r]):>4}"
-                     f" {int(res.history['retries'][r]):>4}"
-                     f" {int(res.history['stale'][r]):>5}")
+                np.asarray(res.history_raw["deliver_mask"][r]) > 0) if m]
+            line += (f" {str(got):<12} {int(res.history_raw['drops'][r]):>4}"
+                     f" {int(res.history_raw['retries'][r]):>4}"
+                     f" {int(res.history_raw['stale'][r]):>5}")
+        if args.cadence:
+            lagging = [int(d) for d, aw in zip(lane_ids, awake) if not aw]
+            line += f" {str(lagging):<12}"
         note = ""
         if prev is not None:
             joined = sorted(set(ids) - set(prev))
             left = sorted(set(prev) - set(ids))
             bits = ([f"+{j}" for j in joined] + [f"-{l}" for l in left])
             note = "  " + " ".join(bits) if bits else ""
-        log.info(line + f" {res.history['accuracy'][r]:6.3f} "
-                 f"{res.history['battery'][r]:8.3f}{note}")
+        log.info(line + f" {res.history_raw['accuracy'][r]:6.3f} "
+                 f"{res.history_raw['battery'][r]:8.3f}{note}")
         prev = ids
     if args.faults:
-        log.info(f"fault weather: {int(np.sum(res.history['drops']))} drops, "
-                 f"{int(np.sum(res.history['retries']))} retries, "
-                 f"{int(np.sum(res.history['stale']))} stale deliveries "
+        log.info(f"fault weather: {int(np.sum(res.history_raw['drops']))} drops, "
+                 f"{int(np.sum(res.history_raw['retries']))} retries, "
+                 f"{int(np.sum(res.history_raw['stale']))} stale deliveries "
                  f"(retry windows priced via CostModel.retry_energy)")
+    if args.cadence:
+        clocks = [int(c) for c in res.history_raw["round_clock"]]
+        idle = int(np.sum(res.history_raw["idle_steps"]))
+        log.info(f"cadence: {res.rounds} rounds over {clocks[-1] + 1} global "
+                 f"event steps, {idle} idle steps priced via "
+                 f"CostModel.idle_energy; stragglers' resident wire images "
+                 f"aggregated as-is (both engines print this identically)")
     log.info(f"requester finished: {res.rounds} rounds, stop={res.stop_reason}, "
              f"final acc {res.accuracy:.3f}")
     log.debug(f"timings: { {k: round(v, 4) for k, v in res.timings.items()} }")
@@ -189,6 +249,12 @@ def main():
                     help="unreliable-link walkthrough: per-round drop/retry/"
                          "stale counts under the counter-based fault world "
                          "(repro.core.faults); composes with --churn")
+    ap.add_argument("--cadence", action="store_true",
+                    help="async walkthrough: per-device duty cycles end the "
+                         "lockstep barrier (repro.core.cadence) — prints "
+                         "per-round clock steps, priced idle steps, and the "
+                         "straggler set, identical in both engines; composes "
+                         "with --churn/--faults")
     ap.add_argument("--compress", choices=("int8",), default=None,
                     help="add an enfed-int8 row: same world with the "
                          "transported updates int8-compressed (shows the "
@@ -202,7 +268,7 @@ def main():
     _setup_logging(1 if args.verbose else -1 if args.quiet else 0)
 
     task, shards, own_train, own_test, pooled = build(args.dataset)
-    if args.churn or args.faults:
+    if args.churn or args.faults or args.cadence:
         return walkthrough(task, shards, own_train, own_test, args)
 
     # one world, N methods: the facade guarantees every method sees the

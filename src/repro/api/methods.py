@@ -72,6 +72,26 @@ def _warn_if_mobility_ignored(world: WorldSpec, name: str) -> None:
             "world with static baselines", stacklevel=3)
 
 
+def _warn_if_cadence_ignored(method: MethodSpec, name: str) -> None:
+    """The baselines have no per-device round clock — dfl/cfl sweep
+    every node each round and cloud has no rounds at all.  Same
+    never-silent rule as the mobility axis: asking a baseline to run an
+    async-cadence world warns, and the knob is stripped before the run
+    (the fleet engine refuses cadence for non-enfed methods)."""
+    if method.cadence is not None:
+        warnings.warn(
+            f"method {name!r} ignores MethodSpec.cadence (async device "
+            "round clocks are enfed-only: baselines sweep their full "
+            "client set every round); comparing against EnFed-under-"
+            "cadence mixes an async world with lockstep baselines",
+            stacklevel=3)
+
+
+def _strip_cadence(method: MethodSpec) -> MethodSpec:
+    return (dataclasses.replace(method, cadence=None)
+            if method.cadence is not None else method)
+
+
 def _warn_if_checkpoint_ignored(execution: ExecutionSpec, name: str) -> None:
     """Resumable round state is an enfed contract (the baselines' loop
     oracles have no serialized mid-run state).  Same never-silent rule
@@ -175,6 +195,11 @@ def run_enfed(world: WorldSpec, method: MethodSpec,
                 cfg_i, faults=dataclasses.replace(
                     cfg.faults,
                     requester_id=cfg.faults.requester_id + i))
+        if cfg.cadence is not None and i > 0:
+            cfg_i = dataclasses.replace(
+                cfg_i, cadence=dataclasses.replace(
+                    cfg.cadence,
+                    requester_id=cfg.cadence.requester_id + i))
         sessions.append(EnFedSession(
             world.task, r.own_train, r.own_test,
             r.neighborhood, r.contributor_states,
@@ -216,6 +241,8 @@ def run_cfl(world: WorldSpec, method: MethodSpec,
     """Centralized FL baseline, per requesting device (client 0)."""
     _warn_if_mobility_ignored(world, "cfl")
     _warn_if_checkpoint_ignored(execution, "cfl")
+    _warn_if_cadence_ignored(method, "cfl")
+    method = _strip_cadence(method)
     if execution.engine == "fleet":
         return _run_baseline_fleet(world, method, execution, "cfl")
     _warn_if_trace_fleet_only(execution, "cfl")
@@ -241,6 +268,8 @@ def run_dfl(world: WorldSpec, method: MethodSpec,
     """Decentralized FL baseline over ``method.topology`` (mesh|ring)."""
     _warn_if_mobility_ignored(world, "dfl")
     _warn_if_checkpoint_ignored(execution, "dfl")
+    _warn_if_cadence_ignored(method, "dfl")
+    method = _strip_cadence(method)
     if execution.engine == "fleet":
         return _run_baseline_fleet(world, method, execution, "dfl")
     _warn_if_trace_fleet_only(execution, "dfl")
@@ -266,6 +295,8 @@ def run_cloud(world: WorldSpec, method: MethodSpec,
     the result back.  Device-side cost via ``CostModel.cloud_session``."""
     _warn_if_mobility_ignored(world, "cloud")
     _warn_if_checkpoint_ignored(execution, "cloud")
+    _warn_if_cadence_ignored(method, "cloud")
+    method = _strip_cadence(method)
     _warn_if_trace_fleet_only(execution, "cloud")
     cfg = method.to_enfed_config(world)
     cost = world.cost_model

@@ -13,6 +13,7 @@ Table-style time/energy reduction rows.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Dict, List, Optional, Sequence
 
 from repro.core.battery import BatteryState
@@ -38,9 +39,11 @@ class RunResult:
     accuracy: float
     rounds: int
     report: EnergyReport               # requester 0's eq. (4)-(7) roll-up
-    # deprecated view: requester 0's raw per-engine dict-of-lists — new
-    # code should read the normalized event stream (``trace``) instead
-    history: Dict[str, list]
+    # DEPRECATED view: requester 0's raw per-engine dict-of-lists —
+    # attribute access warns (property attached below the class); new
+    # code reads the normalized event stream (``trace``) or, for the raw
+    # buffers, ``history_raw``
+    history: Dict[str, list] = dataclasses.field(repr=False, compare=False)
     stop_reason: str
     sessions: List[SessionResult]
     cost_model: Optional[CostModel] = None
@@ -53,6 +56,12 @@ class RunResult:
     timeline: Optional[Timeline] = None  # host-side wall-clock spans
     hlo_stats: Optional[dict] = None     # fleet program flops/bytes
                                          # (TraceConfig.hlo_stats)
+
+    @property
+    def history_raw(self) -> Dict[str, list]:
+        """Requester 0's raw per-engine dict-of-lists, without the
+        deprecation warning — the internal surface."""
+        return self.__dict__["_history_raw"]
 
     @property
     def simulated_s(self) -> float:
@@ -92,12 +101,29 @@ class RunResult:
         total = (float(total_energy_j) if total_energy_j is not None
                  else float(sum(s.report.e_tot for s in sessions)))
         return cls(method=method, engine=engine, accuracy=s0.accuracy,
-                   rounds=s0.rounds, report=s0.report, history=s0.history,
+                   rounds=s0.rounds, report=s0.report,
+                   history=s0.history_raw,
                    stop_reason=s0.stop_reason, sessions=list(sessions),
                    cost_model=cost_model, params=s0.params,
                    n_contributors=float(s0.n_contributors),
                    battery=s0.battery, total_energy_j=total, raw=raw,
                    timeline=timeline, hlo_stats=hlo_stats)
+
+
+def _run_history_get(self):
+    warnings.warn(
+        "RunResult.history is deprecated; use .trace (normalized "
+        "RoundEvent stream) or .history_raw for the raw buffers",
+        DeprecationWarning, stacklevel=2)
+    return self.__dict__["_history_raw"]
+
+
+def _run_history_set(self, value):
+    # dataclass __init__ assigns through here — store raw, never warn
+    self.__dict__["_history_raw"] = value
+
+
+RunResult.history = property(_run_history_get, _run_history_set)
 
 
 def reduction_row(method_res: RunResult, baseline_res: RunResult) -> dict:

@@ -28,6 +28,7 @@ from typing import Dict, List, Optional, Union
 import numpy as np
 
 from repro.core.battery import BatteryState
+from repro.core.cadence import CadenceConfig
 from repro.core.energy import CostModel
 from repro.core.faults import FaultConfig
 from repro.core.fleet import RequesterSpec
@@ -149,6 +150,15 @@ class MethodSpec:
     # CostModel.retry_energy term.  Validation is FaultConfig's own
     # __post_init__ — a bad probability fails at spec construction.
     faults: Optional[FaultConfig] = None
+    # asynchronous-cadence world (None = lockstep round barrier).  A
+    # PROTOCOL knob like ``faults``: per-device speed classes, duty
+    # cycles, transient offline windows and battery pacing desynchronize
+    # the engines' round clocks (global event steps, straggler wire
+    # images aggregated as-is) and price the idle windows through
+    # CostModel.idle_energy.  enfed-only: the host-side baselines have
+    # no per-device round clock — they warn-and-ignore, and the fleet
+    # baselines refuse.  Validation is CadenceConfig's __post_init__.
+    cadence: Optional[CadenceConfig] = None
     label: Optional[str] = None          # display/compare key (default: name)
 
     @property
@@ -187,6 +197,7 @@ class MethodSpec:
             strategy=self.strategy,
             compress=self.compress,
             faults=self.faults,
+            cadence=self.cadence,
             mobility=world.mobility)
 
 

@@ -34,6 +34,7 @@ from repro.core.federated import (
     cloud_only_baseline,
     cloud_only_config,
 )
+from repro.core.cadence import CadenceConfig
 from repro.core.faults import FaultConfig
 from repro.core.fleet import FleetResult, RequesterSpec, run_fleet
 from repro.core.mobility import MobilityConfig
@@ -59,7 +60,7 @@ __all__ = [
     "BatteryState", "CostModel", "DeviceProfile", "LinkProfile", "EnergyReport",
     # incentives / world
     "NeighborDevice", "Contract", "select_contributors", "participation_mask",
-    "make_fleet", "MobilityConfig", "FaultConfig",
+    "make_fleet", "MobilityConfig", "FaultConfig", "CadenceConfig",
     # EnFed engines + protocol vocabulary
     "EnFedConfig", "EnFedSession", "SessionResult",
     "FleetResult", "RequesterSpec", "run_fleet", "Phase",

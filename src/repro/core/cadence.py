@@ -1,0 +1,225 @@
+"""Device cadence world: per-device availability, duty-cycle windows and
+compute-speed classes — the counter-based clock that ends the lockstep
+round barrier, shared by BOTH EnFed engines.
+
+A production fleet of battery-constrained mobile devices does not tick
+on one global round clock: devices differ in compute speed, sleep their
+radios on duty cycles, and drop offline for stretches.  This module
+makes that cadence part of the simulated world, with the same design
+rule as :mod:`repro.core.mobility` and :mod:`repro.core.faults`: whether
+a device *ticks* (advances its own round clock) at global event step
+``t`` is a closed-form function of ``(seed, step, device)`` — pure
+counter-based ``jax.random.fold_in`` chains and exact int32
+comparisons, no carried RNG — so the loop engine (host-side, concrete
+steps) and the fleet engine (traced steps inside one jit program)
+derive bit-identical cadence by construction, and any step's tick set
+can be queried without replaying earlier steps.
+
+A device's tick rule composes three independent counter-based gates:
+
+* **Speed class** — each device hashes to a round *stride* in
+  ``1..n_speed_classes`` (stride 1 = fastest); the device ticks only on
+  steps where ``(t + phase) % stride == 0``, with a per-device hashed
+  phase so classes desynchronize instead of herding.
+* **Duty cycle** — with ``duty_cycle > 0`` the device's radio is awake
+  only ``duty_on`` steps out of every ``duty_cycle`` window (per-device
+  hashed window offset); asleep steps never tick.
+* **Transient offline** — each ``(step, device)`` draws an independent
+  int32 and the device is offline iff it lands under the ``p_offline``
+  threshold, exactly the faults-module drop arithmetic.
+
+On top of the closed-form gates sits the one *state-coupled* rule,
+battery-aware pacing: when the device's battery fraction is below
+``pace_battery_threshold`` its effective stride multiplies by
+``pace_factor`` (a drained device slows its own round clock to stretch
+what charge remains — the 2208.04505 policy).  Battery levels are
+carried state, but both engines carry bitwise-identical levels, and the
+comparison is performed in float32 on both sides, so pacing decisions
+cannot diverge between engines.
+
+Under cadence the engines loop over *global event steps* rather than
+rounds: world state (mobility kinematics, fault weather) is keyed on
+the step counter, each requester lane carries its own round clock that
+advances only on its ticks, and a contributor that does not tick simply
+skips its REFRESH — its wire image stays resident and faster neighbors
+aggregate it as-is (the straggler path; composes with the stale/int8
+prev-wire buffers, never a staged fp32 shadow).  ``cadence=None`` keeps
+today's lockstep loop: one step per round, every device ticks every
+step, bit-for-bit.
+
+Parity-safety rule (same as mobility/faults): every predicate is an
+exact integer comparison — thresholds precomputed host-side from the
+static probabilities, draws and modular arithmetic in int32 — except
+the battery-pacing compare, which is float32-exact on bitwise-equal
+operands.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+# Offline draws live in [0, _DRAW_MAX); a probability p maps to the
+# threshold int(p * _DRAW_MAX) — identical arithmetic to repro.core.faults.
+_DRAW_MAX = 2**31 - 1
+
+_SALT_SPEED = 0x5C    # per-device compute-speed class
+_SALT_PHASE = 0xB1    # per-device stride phase offset
+_SALT_DUTY = 0xD2     # per-device duty-window offset
+_SALT_OFFLINE = 0x0F  # per-(step, device) transient availability
+
+
+@dataclasses.dataclass(frozen=True)
+class CadenceConfig:
+    """Device-cadence world parameters for one simulated session
+    (frozen/hashable => usable as a static arg of the compiled fleet
+    program, exactly like :class:`repro.core.faults.FaultConfig`).
+
+    ``requester_id`` is the requesting device's id in the cadence
+    hash-space; fleet lanes use ``requester_id + lane`` so concurrent
+    requesters draw independent clocks.  The default offset keeps
+    cadence-space requester ids clear of contributor ids AND of the
+    mobility/fault id spaces.  Contributors tick by their real device
+    ids — their cadence is a property of the device, not of any one
+    session observing it.
+    """
+
+    n_speed_classes: int = 1      # strides hash into 1..n_speed_classes
+    duty_cycle: int = 0           # radio duty window length (0 = always on)
+    duty_on: int = 1              # awake steps per duty window
+    p_offline: float = 0.0        # per-step transient-offline probability
+    pace_battery_threshold: float = 0.0   # below this battery fraction...
+    pace_factor: int = 1          # ...the stride multiplies by this
+    idle_step_s: float = 0.05     # wall seconds one idle event step costs
+    max_events: int = 0           # global event-step budget (0 = derive
+                                  # from max_rounds via events_budget)
+    seed: int = 0                 # cadence hash seed
+    requester_id: int = 1 << 22   # requester lane 0's id in cadence space
+
+    def __post_init__(self):
+        # fail fast at CONSTRUCTION — not as a silent never-ticking lane
+        # deep inside the jit program (the satellite rule FaultConfig set)
+        if self.n_speed_classes < 1:
+            raise ValueError(
+                f"n_speed_classes must be >= 1 (got {self.n_speed_classes})")
+        if self.duty_cycle < 0:
+            raise ValueError(
+                f"duty_cycle must be >= 0 (got {self.duty_cycle})")
+        if self.duty_cycle > 0 and not 1 <= self.duty_on <= self.duty_cycle:
+            raise ValueError(
+                f"duty_on must be within [1, duty_cycle] "
+                f"(got {self.duty_on} of {self.duty_cycle})")
+        if not 0.0 <= self.p_offline < 1.0:
+            raise ValueError(
+                f"p_offline must be within [0, 1) (got {self.p_offline})")
+        if not 0.0 <= self.pace_battery_threshold <= 1.0:
+            raise ValueError(
+                f"pace_battery_threshold must be within [0, 1] "
+                f"(got {self.pace_battery_threshold})")
+        if self.pace_factor < 1:
+            raise ValueError(
+                f"pace_factor must be >= 1 (got {self.pace_factor})")
+        if self.idle_step_s < 0.0:
+            raise ValueError(
+                f"idle_step_s must be >= 0 (got {self.idle_step_s})")
+        if self.max_events < 0:
+            raise ValueError(
+                f"max_events must be >= 0 (got {self.max_events})")
+
+
+def _threshold(p: float) -> jnp.int32:
+    """The static int32 threshold a probability compiles to."""
+    return jnp.int32(int(min(max(float(p), 0.0), 1.0) * _DRAW_MAX))
+
+
+def _device_draw(seed: int, salt: int, device_id, t):
+    """One int32 draw in [0, _DRAW_MAX) hashed from ``(seed, salt,
+    device, step)`` alone — prefix-stable in every argument, traced or
+    concrete.  Per-device constants pass ``t=0``."""
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), jnp.uint32(salt))
+    key = jax.random.fold_in(key, jnp.asarray(device_id, jnp.uint32))
+    key = jax.random.fold_in(key, jnp.asarray(t, jnp.uint32))
+    return jax.random.randint(key, (), 0, _DRAW_MAX, jnp.int32)
+
+
+def speed_stride(cc: CadenceConfig, device_ids):
+    """(...,) int32 base round stride per device, in 1..n_speed_classes.
+
+    Stride 1 devices tick every step; stride k devices every k-th step.
+    Hashed once per device — a device's speed class is a property of the
+    device, constant for the whole session.
+    """
+    ids = jnp.asarray(device_ids, jnp.int32)
+    draw = jax.vmap(lambda d: _device_draw(cc.seed, _SALT_SPEED, d, 0))(
+        ids.reshape(-1)).reshape(ids.shape)
+    return jnp.int32(1) + jnp.remainder(draw, jnp.int32(cc.n_speed_classes))
+
+
+def effective_stride(cc: CadenceConfig, device_ids, level=None):
+    """Per-device stride after battery-aware pacing.
+
+    ``level`` (matching ``device_ids``' shape, or None) is the battery
+    fraction; below ``pace_battery_threshold`` the stride multiplies by
+    ``pace_factor``.  The compare is float32 on both operands — battery
+    levels are bitwise-identical across engines, so the paced set is too.
+    """
+    stride = speed_stride(cc, device_ids)
+    if level is None or cc.pace_factor <= 1 or cc.pace_battery_threshold <= 0:
+        return stride
+    paced = (jnp.asarray(level, jnp.float32)
+             < jnp.float32(cc.pace_battery_threshold))
+    return jnp.where(paced, stride * jnp.int32(cc.pace_factor), stride)
+
+
+def tick_mask(cc: CadenceConfig, t, device_ids, level=None):
+    """(...,) bool: which devices tick at global event step ``t`` — THE
+    shared derivation of both engines.
+
+    ``t`` is scalar (python int or traced); ``device_ids`` any shape;
+    ``level`` optional battery fractions (enables pacing).  A ticking
+    device executes its next protocol round this step; a non-ticking
+    device idles (requester) or skips its refresh, leaving its resident
+    wire image for faster neighbors to aggregate as-is (contributor).
+    """
+    ids = jnp.asarray(device_ids, jnp.int32)
+    ts = jnp.asarray(t, jnp.int32)
+    stride = effective_stride(cc, ids, level)
+    phase_draw = jax.vmap(lambda d: _device_draw(cc.seed, _SALT_PHASE, d, 0))(
+        ids.reshape(-1)).reshape(ids.shape)
+    phase = jnp.remainder(phase_draw, stride)
+    on = jnp.remainder(ts + phase, stride) == 0
+    if cc.duty_cycle > 0:
+        duty_draw = jax.vmap(
+            lambda d: _device_draw(cc.seed, _SALT_DUTY, d, 0))(
+            ids.reshape(-1)).reshape(ids.shape)
+        duty_phase = jnp.remainder(duty_draw, jnp.int32(cc.duty_cycle))
+        on &= (jnp.remainder(ts + duty_phase, jnp.int32(cc.duty_cycle))
+               < jnp.int32(cc.duty_on))
+    if cc.p_offline > 0.0:
+        thr = _threshold(cc.p_offline)
+        off_draw = jax.vmap(
+            lambda d: _device_draw(cc.seed, _SALT_OFFLINE, d, ts))(
+            ids.reshape(-1)).reshape(ids.shape)
+        on &= off_draw >= thr
+    return on
+
+
+def events_budget(cc: CadenceConfig, max_rounds: int) -> int:
+    """The global event-step budget a session loops over (static, host).
+
+    ``max_events`` when set; otherwise derived so the *slowest possible*
+    device (worst speed class, battery-paced, worst duty window) can
+    still complete ``max_rounds`` rounds, with a 2x allowance for
+    transient-offline streaks.  A lane that exhausts the budget mid-run
+    simply stops with fewer rounds (stop reason ``max_rounds``) —
+    exactly how the lockstep loop treats its round budget.
+    """
+    if cc.max_events > 0:
+        return int(cc.max_events)
+    stride_max = cc.n_speed_classes * max(cc.pace_factor, 1)
+    duty_factor = (-(-cc.duty_cycle // cc.duty_on)
+                   if cc.duty_cycle > 0 else 1)
+    offline_factor = 2 if cc.p_offline > 0.0 else 1
+    return int(max_rounds) * stride_max * duty_factor * offline_factor

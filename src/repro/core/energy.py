@@ -71,6 +71,8 @@ class DeviceProfile:
     p_crypto: float = 1.0        # E_c: AES encrypt/decrypt
     p_agg: float = 1.5           # E_ca: aggregation
     p_train: float = 5.0         # E_cl: local training (paper: 5 W average)
+    p_idle: float = 0.05         # low-power listen draw while waiting out
+                                 # cadence idle / duty-cycle-off windows
     flops: float = 8e9           # sustained training FLOP/s of the device
     crypto_bytes_per_s: float = 80e6   # AES-128 throughput
     agg_params_per_s: float = 400e6    # aggregation throughput (params/s)
@@ -256,6 +258,25 @@ class CostModel:
             e_rx += e_crypto
             e_tx += e_crypto
         return e_rx, e_tx, t_xfer
+
+    def idle_energy(self, *, idle_steps: int, idle_step_s: float):
+        """Cost of sitting out ``idle_steps`` cadence event steps, split
+        as ``(e_idle, t_idle_s)``.
+
+        Under an asynchronous cadence (:mod:`repro.core.cadence`) a
+        requester spends global event steps *not* executing a round —
+        its own stride skipped the step, its duty window was asleep, or
+        it drew a transient-offline step.  Those windows are priced at
+        the low-power listen draw ``p_idle`` and land post-hoc in the
+        report's ``t_com``/``e_comm`` (the retry-pricing pattern), in
+        BOTH engines through this one helper.  Idle never drains the
+        simulated battery: the discharge trajectory stays a function of
+        executed rounds only, which is what keeps battery levels
+        bitwise identical between the engines and across cadence knobs
+        that change only the waiting, not the work.
+        """
+        t_idle = float(idle_steps) * float(idle_step_s)
+        return t_idle * self.device.p_idle, t_idle
 
     def _energy(self, t: PhaseTimes) -> EnergyReport:
         d = self.device

@@ -109,6 +109,13 @@ class BaselineResult:
     history: Dict[str, List[float]]
     params: object = None
 
+    @property
+    def history_raw(self) -> Dict[str, List[float]]:
+        """Alias for ``history`` — baseline traces are not deprecated,
+        but the alias keeps call sites uniform with SessionResult/
+        RunResult, whose raw access goes through ``history_raw``."""
+        return self.history
+
 
 def _as_enfed_config(target_accuracy: float, max_rounds: int, epochs: int,
                      batch_size: int, seed: int):

@@ -132,12 +132,13 @@ from __future__ import annotations
 import dataclasses
 import functools
 import hashlib
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import cadence as cadence_mod
 from repro.core import faults as faults_mod
 from repro.core import mobility as mobility_mod
 from repro.core import protocol, schedule, topology
@@ -202,6 +203,13 @@ class FleetResult:
     hlo_stats: Optional[dict] = None     # compiled-program flops/bytes
                                          # (TraceConfig.hlo_stats only)
 
+    @property
+    def history_raw(self) -> Dict[str, np.ndarray]:
+        """Alias for ``history`` — fleet-level traces are not deprecated,
+        but the alias keeps call sites uniform with SessionResult/
+        RunResult, whose raw access goes through ``history_raw``."""
+        return self.history
+
 
 def _pad_stack(arrays, pad_len: int):
     """Stack ragged leading-axis arrays into (R, pad_len, ...) + mask."""
@@ -224,10 +232,62 @@ def _stack_trees(trees, template=None):
                                   *filled)
 
 
+class FleetCarry(NamedTuple):
+    """The fleet loop carry, by name.
+
+    A ``typing.NamedTuple`` is a registered JAX pytree, so it rides
+    ``lax.while_loop`` / ``fori_loop`` / donation unchanged — and the
+    checkpoint path (``repro.checkpoint`` flattens with key paths)
+    serializes each field under its NAME (``state/.contrib`` ...), so a
+    restored ``.npz`` stays dtype-strict AND self-describing.  Token
+    ``(1, ...)`` buffers stand in for state a variant doesn't carry.
+
+    The per-lane cadence clock fields at the tail are what the
+    asynchronous fleet adds: ``clock`` is each requester lane's OWN
+    round number (advanced only on its cadence ticks), ``idle`` the
+    event steps it has idled since its last executed round, and
+    ``clock_h``/``idle_h`` the per-executed-round traces of both
+    (which global step each round ran at / how long the lane waited
+    for it) — token buffers in lockstep runs.
+    """
+
+    contrib: jnp.ndarray      # (R, N, P|Lp) flat round state (int8 wire
+                              # payload under compress)
+    cscale: jnp.ndarray       # (R, N, T) per-tile scales | token
+    live: jnp.ndarray         # (V, P|Lp) dedup'd refresh rows | token
+    live_s: jnp.ndarray       # (V, T) their scales | token
+    last: jnp.ndarray         # (R, P) requester params
+    level: jnp.ndarray        # (R,) requester battery fraction
+    active: jnp.ndarray       # (R,) bool — BOTH programs' stop poll
+    stop_code: jnp.ndarray    # (R,) protocol.STOP_* codes
+    rounds_done: jnp.ndarray  # (R,) executed rounds per lane
+    clevel: jnp.ndarray       # (R, N) contributor batteries | token
+    acc_h: jnp.ndarray        # (max_rounds, R) accuracy trace
+    loss_h: jnp.ndarray       # (max_rounds, R) loss trace
+    bat_h: jnp.ndarray        # (max_rounds, R) battery trace
+    exec_h: jnp.ndarray       # (max_rounds, R) executed-lane trace
+    body_h: jnp.ndarray       # (max_events,) round-body-ran trace
+    member_h: jnp.ndarray     # (max_rounds, R, N) membership | token
+    prev: jnp.ndarray         # (R, N, P|Lp) stale-delivery wire
+                              # snapshot | token
+    prev_s: jnp.ndarray       # (R, N, T) its scales | token
+    drop_h: jnp.ndarray       # (max_rounds, R) fault drops | token
+    retry_h: jnp.ndarray      # (max_rounds, R) fault retries | token
+    stale_h: jnp.ndarray      # (max_rounds, R) stale deliveries | token
+    deliver_h: jnp.ndarray    # (max_rounds, R, N) deliver mask | token
+    clock: jnp.ndarray        # (R,) int32 per-lane round clock | token
+    idle: jnp.ndarray         # (R,) int32 idle steps since the lane's
+                              # last executed round | token
+    clock_h: jnp.ndarray      # (max_rounds, R) int32 global step each
+                              # round executed at | token
+    idle_h: jnp.ndarray       # (max_rounds, R) int32 idle-steps-before
+                              # trace | token
+
+
 def _make_round_fn(task, use_pallas, interpret, do_refresh, max_rounds,
-                   epochs, batch, steps_max, ref_epochs, ref_steps, spec,
-                   mob, n_max, strategy, compress, n_params, method, fc,
-                   n_req, n_lanes, arrays):
+                   max_events, epochs, batch, steps_max, ref_epochs,
+                   ref_steps, spec, mob, n_max, strategy, compress, n_params,
+                   method, fc, cc, n_req, n_lanes, arrays):
     """Build the traced per-round body shared by BOTH fleet programs.
 
     :func:`_fleet_program` (the compiled chunked ``while_loop``) and
@@ -243,6 +303,18 @@ def _make_round_fn(task, use_pallas, interpret, do_refresh, max_rounds,
     weights, aggregates round-(r-1) wire images for stale links (the
     ``prev`` carry), and re-prices every extra receive window through
     the staged ``e_retry`` term.
+
+    ``cc`` is the static :class:`repro.core.cadence.CadenceConfig` (None
+    = lockstep).  Under cadence ``maybe_round`` iterates GLOBAL EVENT
+    STEPS, not rounds: world state (mobility kinematics, fault weather)
+    is keyed on the step counter ``rr``, while each requester lane
+    carries its own round ``clock`` that advances only on the lane's
+    cadence ticks — a step where no lane ticks costs one idle increment
+    and no compute (``lax.cond``, the early-exit skip machinery), and a
+    lane that doesn't tick while others execute keeps its wire image
+    resident for them to aggregate as-is (the straggler path).  With
+    ``cc=None``, ``max_events == max_rounds`` and every lane ticks every
+    step, so the traced program is today's lockstep loop bit for bit.
     """
     model, opt = task.model, task._opt
     R, N = n_req, n_lanes
@@ -253,6 +325,7 @@ def _make_round_fn(task, use_pallas, interpret, do_refresh, max_rounds,
     mobility_on = (mob is not None) and (protocol.Phase.RENEGOTIATE in phases)
     faults_on = (fc is not None) and (protocol.Phase.DELIVER in phases)
     compress_on = compress == "int8"
+    cadence_on = cc is not None
 
     def _fit_lane(flat_p, get_xy, idx, w):
         """Identical math to SupervisedTask.fit for one device's shard,
@@ -298,8 +371,9 @@ def _make_round_fn(task, use_pallas, interpret, do_refresh, max_rounds,
     # round), so one "live" row per unique subscription is trained and
     # scattered to lanes.  Under mobility membership gaps make lanes
     # diverge (a lane skips refresh in non-member rounds), so the
-    # per-lane path remains.
-    refresh_dedup = do_refresh and not mobility_on
+    # per-lane path remains — and cadence gaps (a contributor that
+    # doesn't tick skips its refresh) desynchronize lanes the same way.
+    refresh_dedup = do_refresh and not mobility_on and not cadence_on
     if do_refresh:
         # Phase.REFRESH schedule is round-invariant (seed = cfg.seed +
         # device_id), so its indices are derived once per program, on
@@ -341,13 +415,37 @@ def _make_round_fn(task, use_pallas, interpret, do_refresh, max_rounds,
                 lambda ib: (arrays["cx_tab"][u, ib], arrays["cy_tab"][u, ib]),
                 idx, w)
 
-    def run_round(state, rr):
+    def run_round(state, rr, tick=None):
         """One live round body.  Entered only via lax.cond when at least
-        one lane is active and rr < max_rounds (so ``active`` needs no
-        extra validity masking inside)."""
+        one lane is active and rr < max_events (so ``active`` needs no
+        extra validity masking inside).  Under cadence ``tick`` is the
+        (R,) bool of lanes executing THIS event step (already masked by
+        ``active``); lockstep passes None and every active lane
+        executes."""
         (contrib, cscale, live, live_s, last, level, active, stop_code,
          rounds_done, clevel, acc_h, loss_h, bat_h, exec_h, body_h,
-         member_h, prev, prev_s, drop_h, retry_h, stale_h, deliver_h) = state
+         member_h, prev, prev_s, drop_h, retry_h, stale_h, deliver_h,
+         clock, idle, clock_h, idle_h) = state
+        # which lanes execute a protocol round at this event step; under
+        # cadence the rest idle in place (their whole ACCOUNT/history
+        # update is masked out below)
+        exec_mask = tick if cadence_on else active
+        if cadence_on:
+            # contributor ticks gate Phase.REFRESH only — a straggler's
+            # wire image stays resident and is aggregated as-is by the
+            # lanes that did tick
+            ctick = cadence_mod.tick_mask(cc, rr, arrays["cad_cand_ids"])
+            # each executing lane writes history at ITS OWN round row
+            row = jnp.clip(clock, 0, max_rounds - 1)
+            lanes = jnp.arange(R)
+
+            def put_lane(buf, vals):
+                cur = buf[row, lanes]
+                if vals.ndim == 2:      # (R, N) membership-shaped rows
+                    return buf.at[row, lanes].set(
+                        jnp.where(exec_mask[:, None], vals, cur))
+                return buf.at[row, lanes].set(
+                    jnp.where(exec_mask, vals, cur))
 
         # Phase.RENEGOTIATE (mobility): release members that walked out
         # of radio range or hit the battery floor, sign in-range
@@ -420,11 +518,25 @@ def _make_round_fn(task, use_pallas, interpret, do_refresh, max_rounds,
 
         # Phase.FIT (requesters personalize) + Phase.SCORE.  The round's
         # minibatch indices are derived here, on device, from the traced
-        # round number — nothing was staged from the host.
-        scores = schedule.epoch_scores(arrays["seed0"] + rr, epochs, n_pad)
-        idx, w = jax.vmap(
-            lambda n: schedule.plan_from_scores(scores, n, batch, steps_max))(
-            arrays["n_own"])
+        # round number — nothing was staged from the host.  Under
+        # cadence the fit seed is the LANE'S OWN round clock, not the
+        # global step, so a straggler lane draws the same minibatches
+        # the loop oracle draws for its r-th round.
+        if cadence_on:
+            lane_scores = jax.vmap(
+                lambda c: schedule.epoch_scores(arrays["seed0"] + c, epochs,
+                                                n_pad))(clock)
+            idx, w = jax.vmap(
+                lambda sc, n: schedule.plan_from_scores(sc, n, batch,
+                                                        steps_max))(
+                lane_scores, arrays["n_own"])
+        else:
+            scores = schedule.epoch_scores(arrays["seed0"] + rr, epochs,
+                                           n_pad)
+            idx, w = jax.vmap(
+                lambda n: schedule.plan_from_scores(scores, n, batch,
+                                                    steps_max))(
+                arrays["n_own"])
         new_flat, last_loss = jax.vmap(fit_one)(
             glob, arrays["own_x"], arrays["own_y"], idx, w)
         acc = jax.vmap(eval_one)(new_flat, arrays["test_x"], arrays["test_y"],
@@ -447,13 +559,33 @@ def _make_round_fn(task, use_pallas, interpret, do_refresh, max_rounds,
                                     arrays["capacity"], arrays["eff"])
         reached = acc >= arrays["desired_accuracy"]
         low = level_new < arrays["battery_threshold"]
-        stop_code = jnp.where(active & reached, protocol.STOP_ACCURACY,
-                              jnp.where(active & ~reached & low,
-                                        protocol.STOP_BATTERY, stop_code))
-        level = jnp.where(active, level_new, level)
-        rounds_done = rounds_done + active.astype(jnp.int32)
-        last = jnp.where(active[:, None], new_flat, last)
-        next_active = active & ~reached & ~low
+        if cadence_on:
+            # only executing lanes pay the round, advance their clocks,
+            # or may stop; ``cont`` (survives the round) still gates the
+            # final-round refresh even when the clock hits the budget —
+            # matching the loop oracle, whose last executed round still
+            # refreshes before the budget break
+            stop_code = jnp.where(exec_mask & reached,
+                                  protocol.STOP_ACCURACY,
+                                  jnp.where(exec_mask & ~reached & low,
+                                            protocol.STOP_BATTERY,
+                                            stop_code))
+            level = jnp.where(exec_mask, level_new, level)
+            rounds_done = rounds_done + exec_mask.astype(jnp.int32)
+            last = jnp.where(exec_mask[:, None], new_flat, last)
+            cont = active & ~(exec_mask & (reached | low))
+            clock_new = clock + exec_mask.astype(jnp.int32)
+            next_active = cont & (clock_new < max_rounds)
+        else:
+            stop_code = jnp.where(active & reached, protocol.STOP_ACCURACY,
+                                  jnp.where(active & ~reached & low,
+                                            protocol.STOP_BATTERY,
+                                            stop_code))
+            level = jnp.where(active, level_new, level)
+            rounds_done = rounds_done + active.astype(jnp.int32)
+            last = jnp.where(active[:, None], new_flat, last)
+            cont = next_active = active & ~reached & ~low
+            clock_new = clock
 
         # Contributor-side discharge (mobility): members paid the
         # transmission term this round — once per ATTEMPT under faults,
@@ -464,16 +596,29 @@ def _make_round_fn(task, use_pallas, interpret, do_refresh, max_rounds,
         if mobility_on:
             e_tx_round = (arrays["e_tx"] * attempts.astype(jnp.float32)
                           if faults_on else arrays["e_tx"])
+            # under cadence only members of EXECUTING lanes paid a
+            # transmission this step, and the refresh term additionally
+            # requires the contributor's own tick
+            refresh_on = (cont[:, None] & exec_mask[:, None] & ctick
+                          if cadence_on else next_active[:, None])
             clevel = mobility_mod.contributor_discharge(
-                clevel, member & active[:, None], e_tx_round,
-                arrays["e_ref"], next_active[:, None],
+                clevel, member & exec_mask[:, None], e_tx_round,
+                arrays["e_ref"], refresh_on,
                 mob.contributor_capacity_j)
 
         # the round-(r-1) image next round's stale links will deliver:
         # snapshot the PRE-refresh round state (what this round
-        # aggregated), still wire-format resident
+        # aggregated), still wire-format resident; under cadence only
+        # the lanes that executed re-snapshot — a straggler's "previous
+        # round" stays whatever its own last round aggregated
         if faults_on:
-            prev, prev_s = contrib, cscale
+            if cadence_on:
+                prev = jnp.where(exec_mask[:, None, None], contrib, prev)
+                if compress_on:
+                    prev_s = jnp.where(exec_mask[:, None, None], cscale,
+                                       prev_s)
+            else:
+                prev, prev_s = contrib, cscale
 
         # Phase.REFRESH: contributors keep training (frozen once their
         # requester stops; under mobility, only CURRENT members train);
@@ -483,8 +628,17 @@ def _make_round_fn(task, use_pallas, interpret, do_refresh, max_rounds,
         # the result requantized back — the round state never persists
         # at full precision.
         if do_refresh:
-            rmask = (next_active[:, None] & member) if mobility_on \
-                else next_active[:, None]
+            if cadence_on:
+                # a contributor refreshes when its requester's lane
+                # executed AND survives AND the contributor itself
+                # ticked this step; signed-lane validity replaces the
+                # dedup path's lane_valid in static worlds
+                rmask = cont[:, None] & exec_mask[:, None] & ctick
+                rmask = rmask & (member if mobility_on
+                                 else arrays["cad_signed"])
+            else:
+                rmask = (next_active[:, None] & member) if mobility_on \
+                    else next_active[:, None]
 
             def refresh(args):
                 lv, lvs, c, sc = args
@@ -521,31 +675,62 @@ def _make_round_fn(task, use_pallas, interpret, do_refresh, max_rounds,
                                   p_lane.reshape(R, N, P), c), sc)
 
             live, live_s, contrib, cscale = jax.lax.cond(
-                jnp.any(next_active), refresh, lambda a: a,
-                (live, live_s, contrib, cscale))
+                jnp.any(rmask) if cadence_on else jnp.any(next_active),
+                refresh, lambda a: a, (live, live_s, contrib, cscale))
 
         def put(buf, row):
             return jax.lax.dynamic_update_slice_in_dim(buf, row[None], rr, 0)
 
-        acc_h = put(acc_h, acc)
-        loss_h = put(loss_h, last_loss)
-        bat_h = put(bat_h, level)
-        exec_h = put(exec_h, active.astype(jnp.float32))
-        body_h = put(body_h, jnp.float32(1.0))
-        if mobility_on:
-            member_h = put(member_h,
-                           (member & active[:, None]).astype(jnp.float32))
-        if faults_on:
-            af = active.astype(jnp.float32)
-            drop_h = put(drop_h, drops_r * af)
-            retry_h = put(retry_h, retries_r * af)
-            stale_h = put(stale_h, stale_r * af)
-            deliver_h = put(deliver_h,
-                            (delivered & active[:, None]).astype(jnp.float32))
-        return (contrib, cscale, live, live_s, last, level, next_active,
-                stop_code, rounds_done, clevel, acc_h, loss_h, bat_h, exec_h,
-                body_h, member_h, prev, prev_s, drop_h, retry_h, stale_h,
-                deliver_h)
+        if cadence_on:
+            # each executing lane lands at its OWN round row (masked
+            # scatter); the (max_events,) body trace still records this
+            # global step's body running
+            acc_h = put_lane(acc_h, acc)
+            loss_h = put_lane(loss_h, last_loss)
+            bat_h = put_lane(bat_h, level)
+            exec_h = put_lane(exec_h, exec_mask.astype(jnp.float32))
+            clock_h = put_lane(clock_h,
+                               jnp.broadcast_to(jnp.asarray(rr, jnp.int32),
+                                                (R,)))
+            idle_h = put_lane(idle_h, idle)
+            idle = jnp.where(exec_mask, 0,
+                             idle + (active & ~exec_mask).astype(jnp.int32))
+            clock = clock_new
+            body_h = put(body_h, jnp.float32(1.0))
+            if mobility_on:
+                member_h = put_lane(
+                    member_h,
+                    (member & exec_mask[:, None]).astype(jnp.float32))
+            if faults_on:
+                af = exec_mask.astype(jnp.float32)
+                drop_h = put_lane(drop_h, drops_r * af)
+                retry_h = put_lane(retry_h, retries_r * af)
+                stale_h = put_lane(stale_h, stale_r * af)
+                deliver_h = put_lane(
+                    deliver_h,
+                    (delivered & exec_mask[:, None]).astype(jnp.float32))
+        else:
+            acc_h = put(acc_h, acc)
+            loss_h = put(loss_h, last_loss)
+            bat_h = put(bat_h, level)
+            exec_h = put(exec_h, active.astype(jnp.float32))
+            body_h = put(body_h, jnp.float32(1.0))
+            if mobility_on:
+                member_h = put(member_h,
+                               (member & active[:, None]).astype(jnp.float32))
+            if faults_on:
+                af = active.astype(jnp.float32)
+                drop_h = put(drop_h, drops_r * af)
+                retry_h = put(retry_h, retries_r * af)
+                stale_h = put(stale_h, stale_r * af)
+                deliver_h = put(deliver_h,
+                                (delivered
+                                 & active[:, None]).astype(jnp.float32))
+        return FleetCarry(contrib, cscale, live, live_s, last, level,
+                          next_active, stop_code, rounds_done, clevel, acc_h,
+                          loss_h, bat_h, exec_h, body_h, member_h, prev,
+                          prev_s, drop_h, retry_h, stale_h, deliver_h,
+                          clock, idle, clock_h, idle_h)
 
     # ---- baseline method variants (dfl / cfl) ------------------------------
     # Same scaffolding — flat (R, N, P) state, batched fedavg kernels,
@@ -572,11 +757,11 @@ def _make_round_fn(task, use_pallas, interpret, do_refresh, max_rounds,
                 lambda ib: (arrays["cx_tab"][u, ib], arrays["cy_tab"][u, ib]),
                 idx, w)
 
-        def run_round(state, rr):
+        def run_round(state, rr, tick=None):
             (contrib, cscale, live, live_s, last, level, active, stop_code,
              rounds_done, clevel, acc_h, loss_h, bat_h, exec_h, body_h,
-             member_h, prev, prev_s, drop_h, retry_h, stale_h,
-             deliver_h) = state
+             member_h, prev, prev_s, drop_h, retry_h, stale_h, deliver_h,
+             clock, idle, clock_h, idle_h) = state
 
             # Phase.FIT at every client lane.  The loop oracles seed each
             # client fit with cfg.seed + stride*r + client_index; the
@@ -643,34 +828,52 @@ def _make_round_fn(task, use_pallas, interpret, do_refresh, max_rounds,
             bat_h = put(bat_h, level)
             exec_h = put(exec_h, active.astype(jnp.float32))
             body_h = put(body_h, jnp.float32(1.0))
-            return (contrib, cscale, live, live_s, last, level, next_active,
-                    stop_code, rounds_done, clevel, acc_h, loss_h, bat_h,
-                    exec_h, body_h, member_h, prev, prev_s, drop_h, retry_h,
-                    stale_h, deliver_h)
+            return FleetCarry(contrib, cscale, live, live_s, last, level,
+                              next_active, stop_code, rounds_done, clevel,
+                              acc_h, loss_h, bat_h, exec_h, body_h, member_h,
+                              prev, prev_s, drop_h, retry_h, stale_h,
+                              deliver_h, clock, idle, clock_h, idle_h)
 
     def maybe_round(i, carry):
         r0, state = carry
         rr = r0 + i
-        state = jax.lax.cond((rr < max_rounds) & jnp.any(state[6]),
-                             lambda s: run_round(s, rr), lambda s: s, state)
+        if not cadence_on:
+            state = jax.lax.cond((rr < max_rounds) & jnp.any(state.active),
+                                 lambda s: run_round(s, rr), lambda s: s,
+                                 state)
+            return r0, state
+        # cadence: rr is a GLOBAL EVENT STEP.  Which lanes tick is the
+        # shared counter-based derivation (battery-paced on the carried
+        # levels); a step where nobody ticks only advances the idle
+        # counters — the fit/aggregate compute is skipped, not
+        # computed-and-discarded, same as the early-exit machinery.
+        tick = cadence_mod.tick_mask(cc, rr, arrays["cad_req_ids"],
+                                     level=state.level) & state.active
+
+        def step(s):
+            return jax.lax.cond(
+                jnp.any(tick),
+                lambda t: run_round(t, rr, tick),
+                lambda t: t._replace(
+                    idle=t.idle + (t.active & ~tick).astype(jnp.int32)),
+                s)
+
+        state = jax.lax.cond((rr < max_events) & jnp.any(state.active),
+                             step, lambda s: s, state)
         return r0, state
 
     return maybe_round
 
 
-def _init_state(method, mob, do_refresh, compress, max_rounds, n_params, fc,
-                contrib_flat, arrays):
-    """The fleet loop carry at round 0 — built HOST-SIDE (eagerly) so the
-    checkpoint path can serialize/restore exactly this tuple at chunk
-    boundaries; the compiled programs receive it donated.
+def _init_state(method, mob, do_refresh, compress, max_rounds, max_events,
+                n_params, fc, cc, contrib_flat, arrays):
+    """The :class:`FleetCarry` at round 0 — built HOST-SIDE (eagerly) so
+    the checkpoint path can serialize/restore exactly this pytree at
+    chunk boundaries (field-named ``.npz`` keys, dtype-strict); the
+    compiled programs receive it donated.
 
-    Layout (22 elements — indices matter: ``state[6]`` is the active
-    mask both programs' stop conditions poll):
-    0 contrib, 1 cscale, 2 live, 3 live_s, 4 last, 5 level, 6 active,
-    7 stop_code, 8 rounds_done, 9 clevel, 10-14 acc/loss/bat/exec/body
-    traces, 15 member trace, 16 prev (stale-delivery wire snapshot),
-    17 prev_s, 18-20 drop/retry/stale traces, 21 deliver trace.
-    Token (1, ...) buffers stand in for state a variant doesn't carry.
+    Token (1, ...) buffers stand in for state a variant doesn't carry —
+    including the per-lane cadence clock fields when ``cc`` is None.
     """
     R, N = contrib_flat.shape[:2]
     P = n_params
@@ -678,7 +881,8 @@ def _init_state(method, mob, do_refresh, compress, max_rounds, n_params, fc,
     mobility_on = (mob is not None) and (protocol.Phase.RENEGOTIATE in phases)
     faults_on = (fc is not None) and (protocol.Phase.DELIVER in phases)
     compress_on = compress == "int8"
-    refresh_dedup = do_refresh and not mobility_on
+    cadence_on = cc is not None
+    refresh_dedup = do_refresh and not mobility_on and not cadence_on
     if method == "cfl":
         # the shared global model every client fits from each round
         last0 = jnp.broadcast_to(arrays["init_flat"], (R, P)) + 0.0
@@ -720,49 +924,58 @@ def _init_state(method, mob, do_refresh, compress, max_rounds, n_params, fc,
     else:
         prev0 = jnp.zeros((1, 1, 1), jnp.float32)
         prev_s0 = jnp.zeros((1, 1, 1), jnp.float32)
-    return (contrib_flat,
-            cscale0,
-            live0,
-            live_s0,
-            last0,
-            arrays["level0"] + 0.0,
-            jnp.ones((R,), bool),
-            jnp.full((R,), protocol.STOP_MAX_ROUNDS, jnp.int32),
-            jnp.zeros((R,), jnp.int32),
-            clevel0,
-            jnp.zeros((max_rounds, R), jnp.float32),   # accuracy trace
-            jnp.zeros((max_rounds, R), jnp.float32),   # loss trace
-            jnp.zeros((max_rounds, R), jnp.float32),   # battery trace
-            jnp.zeros((max_rounds, R), jnp.float32),   # active-lane trace
-            jnp.zeros((max_rounds,), jnp.float32),     # body-executed trace
-            # membership trace; static-world runs carry a token buffer
-            # (the mask would just be round_w > 0 replicated per round)
-            jnp.zeros((max_rounds, R, N) if mobility_on else (1, 1, 1),
-                      jnp.float32),
-            prev0,
-            prev_s0,
-            jnp.zeros((max_rounds, R) if faults_on else (1, 1),
-                      jnp.float32),                    # drop trace
-            jnp.zeros((max_rounds, R) if faults_on else (1, 1),
-                      jnp.float32),                    # retry trace
-            jnp.zeros((max_rounds, R) if faults_on else (1, 1),
-                      jnp.float32),                    # stale trace
-            jnp.zeros((max_rounds, R, N) if faults_on else (1, 1, 1),
-                      jnp.float32))                    # deliver trace
+    return FleetCarry(
+        contrib=contrib_flat,
+        cscale=cscale0,
+        live=live0,
+        live_s=live_s0,
+        last=last0,
+        level=arrays["level0"] + 0.0,
+        active=jnp.ones((R,), bool),
+        stop_code=jnp.full((R,), protocol.STOP_MAX_ROUNDS, jnp.int32),
+        rounds_done=jnp.zeros((R,), jnp.int32),
+        clevel=clevel0,
+        acc_h=jnp.zeros((max_rounds, R), jnp.float32),
+        loss_h=jnp.zeros((max_rounds, R), jnp.float32),
+        bat_h=jnp.zeros((max_rounds, R), jnp.float32),
+        exec_h=jnp.zeros((max_rounds, R), jnp.float32),
+        # the body trace is per EVENT STEP (== per round in lockstep)
+        body_h=jnp.zeros((max_events,), jnp.float32),
+        # membership trace; static-world runs carry a token buffer
+        # (the mask would just be round_w > 0 replicated per round)
+        member_h=jnp.zeros((max_rounds, R, N) if mobility_on else (1, 1, 1),
+                           jnp.float32),
+        prev=prev0,
+        prev_s=prev_s0,
+        drop_h=jnp.zeros((max_rounds, R) if faults_on else (1, 1),
+                         jnp.float32),
+        retry_h=jnp.zeros((max_rounds, R) if faults_on else (1, 1),
+                          jnp.float32),
+        stale_h=jnp.zeros((max_rounds, R) if faults_on else (1, 1),
+                          jnp.float32),
+        deliver_h=jnp.zeros((max_rounds, R, N) if faults_on else (1, 1, 1),
+                            jnp.float32),
+        clock=jnp.zeros((R,) if cadence_on else (1,), jnp.int32),
+        idle=jnp.zeros((R,) if cadence_on else (1,), jnp.int32),
+        clock_h=jnp.zeros((max_rounds, R) if cadence_on else (1, 1),
+                          jnp.int32),
+        idle_h=jnp.zeros((max_rounds, R) if cadence_on else (1, 1),
+                         jnp.int32))
 
 
 _FLEET_STATICS = ("task", "use_pallas", "interpret", "do_refresh", "chunk",
-                  "max_rounds", "epochs", "batch", "steps_max", "ref_epochs",
-                  "ref_steps", "spec", "mob", "n_max", "strategy", "compress",
-                  "n_params", "method", "fc", "n_req", "n_lanes")
+                  "max_rounds", "max_events", "epochs", "batch", "steps_max",
+                  "ref_epochs", "ref_steps", "spec", "mob", "n_max",
+                  "strategy", "compress", "n_params", "method", "fc", "cc",
+                  "n_req", "n_lanes")
 
 
 @functools.partial(jax.jit, static_argnames=_FLEET_STATICS,
                    donate_argnames=("state",))
 def _fleet_program(task, use_pallas, interpret, do_refresh, chunk, max_rounds,
-                   epochs, batch, steps_max, ref_epochs, ref_steps, spec,
-                   mob, n_max, strategy, compress, n_params, method, fc,
-                   n_req, n_lanes, state, arrays):
+                   max_events, epochs, batch, steps_max, ref_epochs,
+                   ref_steps, spec, mob, n_max, strategy, compress, n_params,
+                   method, fc, cc, n_req, n_lanes, state, arrays):
     """The whole fleet's Algorithm 1 as one compiled program.
 
     Module-level so the jit cache is shared across ``run_fleet`` calls:
@@ -772,10 +985,10 @@ def _fleet_program(task, use_pallas, interpret, do_refresh, chunk, max_rounds,
     (``round_w``, ``e_round``, ``desired_accuracy``...) — reuses the
     compiled executable instead of re-tracing per call.
 
-    ``state`` is the donated 22-element loop carry from
-    :func:`_init_state`; its first element is the flat round state:
+    ``state`` is the donated :class:`FleetCarry` from
+    :func:`_init_state`; its ``contrib`` field is the flat round state:
     (R, N, P) fp32, or — under ``compress="int8"`` — the (R, N, Lp) int8
-    wire payload whose per-tile fp32 scales travel as element 1.
+    wire payload whose per-tile fp32 scales travel as ``cscale``.
     ``n_params`` is the true flat parameter count P (<= Lp, the
     tile-padded payload length).  ``spec`` is the static
     :func:`repro.utils.tree.tree_ravel` spec that recovers per-device
@@ -793,13 +1006,13 @@ def _fleet_program(task, use_pallas, interpret, do_refresh, chunk, max_rounds,
     phase.
     """
     maybe_round = _make_round_fn(
-        task, use_pallas, interpret, do_refresh, max_rounds, epochs, batch,
-        steps_max, ref_epochs, ref_steps, spec, mob, n_max, strategy,
-        compress, n_params, method, fc, n_req, n_lanes, arrays)
+        task, use_pallas, interpret, do_refresh, max_rounds, max_events,
+        epochs, batch, steps_max, ref_epochs, ref_steps, spec, mob, n_max,
+        strategy, compress, n_params, method, fc, cc, n_req, n_lanes, arrays)
 
     def while_cond(carry):
         r0, state = carry
-        return (r0 < max_rounds) & jnp.any(state[6])
+        return (r0 < max_events) & jnp.any(state.active)
 
     def while_body(carry):
         r0, state = carry
@@ -814,20 +1027,20 @@ def _fleet_program(task, use_pallas, interpret, do_refresh, chunk, max_rounds,
 @functools.partial(jax.jit, static_argnames=_FLEET_STATICS,
                    donate_argnames=("state",))
 def _fleet_chunk_program(task, use_pallas, interpret, do_refresh, chunk,
-                         max_rounds, epochs, batch, steps_max, ref_epochs,
-                         ref_steps, spec, mob, n_max, strategy, compress,
-                         n_params, method, fc, n_req, n_lanes, r0, state,
-                         arrays):
-    """ONE ``chunk`` of fleet rounds, for the host-driven checkpoint
-    loop: ``run_fleet(checkpoint_dir=...)`` calls this per chunk,
-    serializing the returned carry at checkpoint boundaries
-    (``repro.checkpoint``).  Traces the SAME ``maybe_round`` as
-    :func:`_fleet_program` — only the outer while_loop moves to the
+                         max_rounds, max_events, epochs, batch, steps_max,
+                         ref_epochs, ref_steps, spec, mob, n_max, strategy,
+                         compress, n_params, method, fc, cc, n_req, n_lanes,
+                         r0, state, arrays):
+    """ONE ``chunk`` of fleet rounds (event steps under cadence), for
+    the host-driven checkpoint loop: ``run_fleet(checkpoint_dir=...)``
+    calls this per chunk, serializing the returned carry at checkpoint
+    boundaries (``repro.checkpoint``).  Traces the SAME ``maybe_round``
+    as :func:`_fleet_program` — only the outer while_loop moves to the
     host, so a resumed run replays bit-identical round bodies."""
     maybe_round = _make_round_fn(
-        task, use_pallas, interpret, do_refresh, max_rounds, epochs, batch,
-        steps_max, ref_epochs, ref_steps, spec, mob, n_max, strategy,
-        compress, n_params, method, fc, n_req, n_lanes, arrays)
+        task, use_pallas, interpret, do_refresh, max_rounds, max_events,
+        epochs, batch, steps_max, ref_epochs, ref_steps, spec, mob, n_max,
+        strategy, compress, n_params, method, fc, cc, n_req, n_lanes, arrays)
     _, state = jax.lax.fori_loop(0, chunk, maybe_round, (r0, state))
     return state
 
@@ -942,6 +1155,10 @@ def run_fleet(task, requesters: Sequence[RequesterSpec],
     if (checkpoint_dir or resume_from) and method != "enfed":
         raise ValueError(
             f"checkpointing is enfed-only (got method={method!r})")
+    if getattr(cfg, "cadence", None) is not None and method != "enfed":
+        raise ValueError(
+            f"cadence is enfed-only (got method={method!r}) — the "
+            "baselines' loop oracles tick on one global round clock")
     # observability: spans are host-side wall clocks only and never feed
     # back into the program (the telemetry house rule); ``trace`` is the
     # opt-in TraceConfig selecting the profiler hook / hlo_stats
@@ -952,6 +1169,11 @@ def run_fleet(task, requesters: Sequence[RequesterSpec],
                                    round_chunk, timeline=tl, trace=trace)
     mob = cfg.mobility
     fc = cfg.faults
+    cc = getattr(cfg, "cadence", None)
+    # the global event-step budget the program loops over; lockstep is
+    # the special case max_events == max_rounds (one step per round)
+    max_events = (cadence_mod.events_budget(cc, cfg.max_rounds)
+                  if cc is not None else cfg.max_rounds)
     _sp_stage = tl.begin("stage")
 
     # ---- Phase.HANDSHAKE (host-side, static) ------------------------------
@@ -1059,9 +1281,11 @@ def run_fleet(task, requesters: Sequence[RequesterSpec],
     # apply, so all paths land on one side of the crossover together
     wire_compress = resolve_compress(cfg.compress, P)
     # fp32 lane rows, kept host-side for the refresh-dedup key/live rows
-    # (the donated buffer below may be quantized)
+    # (the donated buffer below may be quantized); cadence runs keep the
+    # per-lane refresh path — contributor ticks desynchronize lanes
     contrib_np = (np.asarray(contrib_flat)
-                  if cfg.contributor_refresh_epochs > 0 and mob is None
+                  if (cfg.contributor_refresh_epochs > 0 and mob is None
+                      and cc is None)
                   else None)
     c_scales = None
     if wire_compress == "int8":
@@ -1196,12 +1420,29 @@ def run_fleet(task, requesters: Sequence[RequesterSpec],
                       e_retry=jnp.float32(e_rx_retry))
         if mob is None:
             arrays.update(fsigned=jnp.asarray(fsigned))
+    if cc is not None:
+        # cadence staging: lane i's requester ticks as device
+        # ``cc.requester_id + i`` (the api loop path hands requester i a
+        # config with exactly that id); contributors tick by their REAL
+        # device ids — a device's cadence is a property of the device,
+        # not of the session observing it.  ``cad_signed`` masks padded
+        # contributor slots out of the refresh gate in static worlds.
+        cad_req_ids = np.array([cc.requester_id + i for i in range(R)],
+                               np.int32)
+        cad_cand_ids = np.zeros((R, N), np.int32)
+        cad_signed = np.zeros((R, N), bool)
+        for i, cs in enumerate(lane_devs):
+            cad_cand_ids[i, :len(cs)] = [d.device_id for d in cs]
+            cad_signed[i, :len(cs)] = True
+        arrays.update(cad_req_ids=jnp.asarray(cad_req_ids),
+                      cad_cand_ids=jnp.asarray(cad_cand_ids),
+                      cad_signed=jnp.asarray(cad_signed))
     shard_bytes = shard_bytes_dense = 0
     gather_bytes = gather_bytes_dense = 0
     index_bytes = int(n_own.nbytes + 4)
     if ref_epochs > 0:
         arrays.update(cx_tab=jnp.asarray(cx_tab), cy_tab=jnp.asarray(cy_tab))
-        if mob is None:
+        if mob is None and cc is None:
             # refresh-COMPUTE dedup: lanes subscribed to the same
             # (device, shard content, staged params) follow identical
             # trajectories in a static world, so one live row per unique
@@ -1267,12 +1508,13 @@ def run_fleet(task, requesters: Sequence[RequesterSpec],
     staged_bytes = int(sum(int(v.nbytes) for v in staged))
 
     statics = (task, use_pallas, resolve_interpret(interpret), ref_epochs > 0,
-               int(round_chunk), cfg.max_rounds, cfg.epochs, cfg.batch_size,
-               steps_max, ref_epochs, ref_steps, ravel_spec, mob, cfg.n_max,
-               cfg.strategy if mob is not None else None, wire_compress, P,
-               "enfed", fc, R, N)
+               int(round_chunk), cfg.max_rounds, max_events, cfg.epochs,
+               cfg.batch_size, steps_max, ref_epochs, ref_steps, ravel_spec,
+               mob, cfg.n_max, cfg.strategy if mob is not None else None,
+               wire_compress, P, "enfed", fc, cc, R, N)
     state = _init_state("enfed", mob, ref_epochs > 0, wire_compress,
-                        cfg.max_rounds, P, fc, contrib_flat, arrays)
+                        cfg.max_rounds, max_events, P, fc, cc, contrib_flat,
+                        arrays)
     tl.finish(_sp_stage)
     hlo = None
     if trace is not None and getattr(trace, "hlo_stats", False):
@@ -1298,7 +1540,7 @@ def run_fleet(task, requesters: Sequence[RequesterSpec],
             r0 = int(pay["r0"])
             state = jax.tree_util.tree_map(jnp.asarray, pay["state"])
         with maybe_jax_profiler(profiler_dir):
-            while r0 < cfg.max_rounds and bool(np.any(np.asarray(state[6]))):
+            while r0 < max_events and bool(np.any(np.asarray(state.active))):
                 before = _jit_cache_size(_fleet_chunk_program)
                 _sp = tl.begin("chunk", r0=r0)
                 state = _fleet_chunk_program(*statics, jnp.int32(r0), state,
@@ -1323,18 +1565,22 @@ def run_fleet(task, requesters: Sequence[RequesterSpec],
         _note_cache_miss(tl.spans[_sp], _fleet_program, before)
         tl.finish(_sp)
     _sp_unpack = tl.begin("unpack")
-    (contrib_final, cscale_final, _live, _live_s, last_flat, level, _active,
-     stop_code, rounds_done, _clevel, acc_t, loss_t, bat_t, exec_t, body_t,
-     member_t, _prev, _prev_s, drop_t, retry_t, stale_t, deliver_t) = state
+    contrib_final, cscale_final = state.contrib, state.cscale
+    last_flat = state.last
     acc_h, loss_h, bat_h, exec_h, body_h, member_h = (
-        np.asarray(t) for t in (acc_t, loss_t, bat_t, exec_t, body_t,
-                                member_t))
+        np.asarray(t) for t in (state.acc_h, state.loss_h, state.bat_h,
+                                state.exec_h, state.body_h, state.member_h))
     if fc is not None:
         drop_h, retry_h, stale_h, deliver_h = (
-            np.asarray(t) for t in (drop_t, retry_t, stale_t, deliver_t))
-    rounds_np = np.asarray(rounds_done)
-    codes_np = np.asarray(stop_code)
-    level_np = np.asarray(level)
+            np.asarray(t) for t in (state.drop_h, state.retry_h,
+                                    state.stale_h, state.deliver_h))
+    if cc is not None:
+        clock_h = np.asarray(state.clock_h)
+        idle_h = np.asarray(state.idle_h)
+        idle_fin = np.asarray(state.idle)
+    rounds_np = np.asarray(state.rounds_done)
+    codes_np = np.asarray(state.stop_code)
+    level_np = np.asarray(state.level)
 
     # contributor write-back: like the loop engine's in-place refresh,
     # each requester's contributor_states end up holding that session's
@@ -1380,6 +1626,17 @@ def run_fleet(task, requesters: Sequence[RequesterSpec],
             if extra_i:
                 report.times.t_com += extra_i * t_retry
                 report.e_comm += extra_i * e_rx_retry
+        if cc is not None:
+            # idle/duty-cycle windows priced through the one shared
+            # helper, post-hoc like the retry windows: per-round waits
+            # from the trace plus the trailing idle of a lane that never
+            # finished.  Idle never drains the simulated battery.
+            total_idle_i = int(idle_h[:r_i, i].sum()) + int(idle_fin[i])
+            if total_idle_i:
+                e_idle, t_idle = cost.idle_energy(
+                    idle_steps=total_idle_i, idle_step_s=cc.idle_step_s)
+                report.times.t_com += t_idle
+                report.e_comm += e_idle
         total_e += report.e_tot
         battery = dataclasses.replace(b0, level=float(level_np[i]))
         history = {"accuracy": [float(a) for a in acc_h[:r_i, i]],
@@ -1397,6 +1654,9 @@ def run_fleet(task, requesters: Sequence[RequesterSpec],
             history["stale"] = [float(x) for x in stale_h[:r_i, i]]
             history["deliver_mask"] = [deliver_h[r, i].copy()
                                        for r in range(r_i)]
+        if cc is not None:
+            history["round_clock"] = [int(x) for x in clock_h[:r_i, i]]
+            history["idle_steps"] = [int(x) for x in idle_h[:r_i, i]]
         sessions.append(SessionResult(
             accuracy=history["accuracy"][-1] if history["accuracy"] else 0.0,
             rounds=r_i, n_contributors=len(cs), report=report, battery=battery,
@@ -1409,6 +1669,8 @@ def run_fleet(task, requesters: Sequence[RequesterSpec],
     if fc is not None:
         fleet_hist.update(drops=drop_h, retries=retry_h, stale=stale_h,
                           deliver=deliver_h)
+    if cc is not None:
+        fleet_hist.update(round_clock=clock_h, idle_steps=idle_h)
     return FleetResult(
         sessions=sessions, rounds=rounds_np, stop_codes=codes_np,
         accuracy=np.array([s.accuracy for s in sessions], np.float32),
@@ -1547,12 +1809,12 @@ def _run_fleet_baseline(task, requesters: Sequence[RequesterSpec], cfg, cost,
                                if hasattr(v, "nbytes")]
     staged_bytes = int(sum(int(v.nbytes) for v in staged))
 
-    state0 = _init_state(method, None, False, None, cfg.max_rounds, P, None,
-                         contrib_flat, arrays)
+    state0 = _init_state(method, None, False, None, cfg.max_rounds,
+                         cfg.max_rounds, P, None, None, contrib_flat, arrays)
     statics = (task, use_pallas, resolve_interpret(interpret), False,
-               int(round_chunk), cfg.max_rounds, cfg.epochs, cfg.batch_size,
-               steps_max, 0, 1, ravel_spec, None, cfg.n_max, None, None, P,
-               method, None, R, N)
+               int(round_chunk), cfg.max_rounds, cfg.max_rounds, cfg.epochs,
+               cfg.batch_size, steps_max, 0, 1, ravel_spec, None, cfg.n_max,
+               None, None, P, method, None, None, R, N)
     tl.finish(_sp_stage)
     hlo = None
     if trace is not None and getattr(trace, "hlo_stats", False):
@@ -1567,14 +1829,12 @@ def _run_fleet_baseline(task, requesters: Sequence[RequesterSpec], cfg, cost,
     _note_cache_miss(tl.spans[_sp], _fleet_program, before)
     tl.finish(_sp)
     _sp_unpack = tl.begin("unpack")
-    (_contrib, _cscale, _live, _live_s, last_flat, level, _active, stop_code,
-     rounds_done, _clevel, acc_t, loss_t, bat_t, exec_t, body_t, member_t,
-     *_rest) = state
+    last_flat, level = state.last, state.level
     acc_h, loss_h, bat_h, exec_h, body_h, member_h = (
-        np.asarray(t) for t in (acc_t, loss_t, bat_t, exec_t, body_t,
-                                member_t))
-    rounds_np = np.asarray(rounds_done)
-    codes_np = np.asarray(stop_code)
+        np.asarray(t) for t in (state.acc_h, state.loss_h, state.bat_h,
+                                state.exec_h, state.body_h, state.member_h))
+    rounds_np = np.asarray(state.rounds_done)
+    codes_np = np.asarray(state.stop_code)
 
     # ---- per-session views (loop-baseline-compatible) ----------------------
     # Identical pricing to CFLLearner/DFLLearner.run_config, with the

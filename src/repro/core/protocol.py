@@ -13,6 +13,16 @@ Keeping the phase names, stop reasons, and per-round aggregation weights
 in one module is what makes the two engines provably equivalent: the
 parity tests in ``tests/test_fleet_engine.py`` assert the fleet engine
 reproduces the loop engine phase for phase.
+
+Under an async-cadence world (``repro.core.cadence``) the engines loop
+over GLOBAL EVENT STEPS rather than rounds: the world-keyed phases
+(RENEGOTIATE's mobility kinematics, DELIVER's fault weather) derive
+their counter-based state from the event step, while the protocol-keyed
+phases (FIT's minibatch schedule, the round budget) key on the lane's
+own round clock, which advances only on its tick steps.  A contributor
+that does not tick skips REFRESH — its resident wire image is collected
+and aggregated as-is (the straggler path).  ``cadence=None`` collapses
+event step == round everywhere, bit-for-bit.
 """
 
 from __future__ import annotations

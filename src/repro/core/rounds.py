@@ -32,6 +32,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Callable, Dict, List, Optional
 
 import numpy as np
@@ -39,8 +40,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import aggregation, crypto, faults as faults_mod
+from repro.core import cadence as cadence_mod
 from repro.core import mobility, protocol, topology
 from repro.core.battery import BatteryState
+from repro.core.cadence import CadenceConfig
 from repro.core.energy import CostModel, EnergyReport, update_wire_bytes
 from repro.core.faults import FaultConfig
 from repro.kernels.quantize.ops import (compress_update, decompress_update,
@@ -96,6 +99,17 @@ class EnFedConfig:
     # params.  Counter-based world state like mobility — both engines
     # derive bit-identical fault outcomes.  None = perfect links.
     faults: Optional[FaultConfig] = None
+    # asynchronous-cadence world (repro.core.cadence): when set, the
+    # engines loop over GLOBAL EVENT STEPS instead of rounds — the
+    # requester's own round clock advances only on steps where its
+    # counter-based tick fires (speed class / duty cycle / transient
+    # offline / battery pacing), world state (mobility kinematics, fault
+    # weather) keys on the step counter, and contributors that do not
+    # tick skip their refresh, leaving their resident wire image for the
+    # requester to aggregate as-is (the straggler path).  Counter-based
+    # world state like mobility/faults — both engines derive bit-identical
+    # tick sets.  None = today's lockstep loop, bit-for-bit.
+    cadence: Optional[CadenceConfig] = None
 
     def __post_init__(self):
         if self.compress not in (None, "int8", "auto"):
@@ -110,12 +124,20 @@ class SessionResult:
     n_contributors: int
     report: EnergyReport
     battery: BatteryState
-    # deprecated view: prefer the normalized event stream (``trace``) —
-    # the raw per-engine dict-of-lists stays for backward compatibility
-    history: Dict[str, List[float]]
+    # DEPRECATED view: prefer the normalized event stream (``trace``) —
+    # attribute access warns (DeprecationWarning) via the property
+    # attached below the class; internal consumers read ``history_raw``
+    history: Dict[str, List[float]] = dataclasses.field(
+        repr=False, compare=False)
     stop_reason: str
     params: object = None
     model_bytes: int = 0   # one update's wire bytes (feeds event wire_bytes)
+
+    @property
+    def history_raw(self) -> Dict[str, List[float]]:
+        """The raw per-engine dict-of-lists, without the deprecation
+        warning — the internal surface (telemetry adapter, aggregation)."""
+        return self.__dict__["_history_raw"]
 
     @property
     def trace(self):
@@ -124,6 +146,26 @@ class SessionResult:
         from repro.telemetry.events import session_events
 
         return session_events(self)
+
+
+def _history_deprecated_get(self):
+    warnings.warn(
+        "SessionResult.history is deprecated; use .trace (normalized "
+        "RoundEvent stream) or .history_raw for the raw buffers",
+        DeprecationWarning, stacklevel=2)
+    return self.__dict__["_history_raw"]
+
+
+def _history_deprecated_set(self, value):
+    # dataclass __init__ assigns through here — store raw, never warn
+    # on construction
+    self.__dict__["_history_raw"] = value
+
+
+# attached after the dataclass decorator ran, so the generated __init__
+# keeps its `history` parameter but access goes through the property
+SessionResult.history = property(_history_deprecated_get,
+                                 _history_deprecated_set)
 
 
 class EnFedSession:
@@ -251,12 +293,20 @@ class EnFedSession:
         plain = crypto.decrypt_update(cipher, self.keys[device_id], self.nonces[device_id])
         return unflatten_from_vector(plain, params), int(cipher.shape[0])
 
-    def _refresh_contributors(self, contracts: List[Contract]):
-        """Phase.REFRESH: contributors keep improving between rounds."""
+    def _refresh_contributors(self, contracts: List[Contract],
+                              tick: Optional[Dict[int, bool]] = None):
+        """Phase.REFRESH: contributors keep improving between rounds.
+
+        ``tick`` (cadence world) maps device_id -> does this contributor
+        tick at the current event step; a non-ticking contributor skips
+        its refresh — its resident wire image stays put and the next
+        aggregation consumes it as-is (the straggler path)."""
         if self.cfg.contributor_refresh_epochs <= 0:
             return
         compress = self._compress == "int8"
         for c in contracts:
+            if tick is not None and not tick.get(c.device_id, True):
+                continue
             st = self.contributor_states[c.device_id]
             # under compress the contributor's working copy is the wire
             # image (the fleet engine's round state holds nothing else)
@@ -287,7 +337,7 @@ class EnFedSession:
 
     def _state_payload(self, r_next, device_ids, params, history, rounds,
                        measured_fit_s, retry_windows, model_bytes=0,
-                       util_rows=None, level=None):
+                       util_rows=None, level=None, t_next=0, idle_run=0):
         """The loop engine's resumable round state as one pytree.
 
         Design rule (see ROADMAP): anything resumable checkpoints its
@@ -339,6 +389,11 @@ class EnFedSession:
             pay["member_h"] = self._hist_pad(history["member_mask"],
                                              n_rounds, n_cand)
             pay["util_h"] = self._hist_pad(util_rows, n_rounds, n_cand)
+        if cfg.cadence is not None:   # async-cadence world: event clock
+            pay["t"] = np.int64(t_next)
+            pay["idle_run"] = np.int64(idle_run)
+            pay["clock_h"] = self._hist_pad(history["round_clock"], n_rounds)
+            pay["idle_h"] = self._hist_pad(history["idle_steps"], n_rounds)
         return pay
 
     def _restore_state(self, resume_from, template):
@@ -370,13 +425,16 @@ class EnFedSession:
         return pay
 
     @staticmethod
-    def _refill_history(history, pay, rounds, faults):
+    def _refill_history(history, pay, rounds, faults, cadence=False):
         history["accuracy"] = [float(v) for v in pay["acc"][:rounds]]
         history["loss"] = [float(v) for v in pay["loss"][:rounds]]
         history["battery"] = [float(v) for v in pay["bat"][:rounds]]
         # not serialized — every loop-engine round that reached the
         # history executed, so the restored view is derivable
         history["round_executed"] = [1.0] * rounds
+        if cadence:
+            history["round_clock"] = [int(v) for v in pay["clock_h"][:rounds]]
+            history["idle_steps"] = [int(v) for v in pay["idle_h"][:rounds]]
         if faults:
             history["drops"] = [float(v) for v in pay["drops"][:rounds]]
             history["retries"] = [float(v) for v in pay["retries"][:rounds]]
@@ -487,7 +545,18 @@ class EnFedSession:
                 model_bytes=model_bytes, encrypt=cfg.encrypt)
             self._snap_prev(ids)
 
-        r_start = 0
+        # Async cadence: the session loops over GLOBAL EVENT STEPS t; the
+        # requester's round clock r advances only on its tick steps.
+        # World state (fault weather) keys on t, protocol state (fit
+        # seed, round budget) on r.  cadence=None keeps t == r exactly.
+        cc = cfg.cadence
+        total_events = (cadence_mod.events_budget(cc, cfg.max_rounds)
+                        if cc is not None else cfg.max_rounds)
+        if cc is not None:
+            history.update(round_clock=[], idle_steps=[])
+        idle_run = 0   # idle event steps since the last executed round
+
+        r_start = t_start = 0
         if resume_from is not None:
             template_params = (params if params is not None
                                else self.task.init(seed=cfg.seed))
@@ -495,22 +564,43 @@ class EnFedSession:
                 pay = self._restore_state(resume_from, self._state_payload(
                     0, ids, template_params, history, 0, 0.0, 0.0,
                     model_bytes=model_bytes))
-            r_start = int(pay["r"])
+            r_start = t_start = int(pay["r"])
             rounds = int(pay["rounds"])
             params = pay["params"]
             measured_fit_s = float(pay["fit_s"])
             retry_windows = float(pay["retry_windows"])
             model_bytes = int(pay["model_bytes"])
-            self._refill_history(history, pay, rounds, fc is not None)
+            self._refill_history(history, pay, rounds, fc is not None,
+                                 cadence=cc is not None)
+            if cc is not None:
+                t_start = int(pay["t"])
+                idle_run = int(pay["idle_run"])
 
-        for r in range(r_start, cfg.max_rounds):
+        r = r_start
+        for t in range(t_start, total_events):
+            if cc is None:
+                r = t   # lockstep: the event step IS the round
+            elif r >= cfg.max_rounds:
+                break   # round budget done; stop idling immediately
+            elif not bool(np.asarray(cadence_mod.tick_mask(
+                    cc, t, cc.requester_id,
+                    level=np.float32(self.battery.level)))):
+                # the requester's clock is silent this step: one idle
+                # event, no protocol round
+                idle_run += 1
+                continue
+            tick_map = None
+            if cc is not None:
+                ctick = np.asarray(cadence_mod.tick_mask(cc, t, ids), bool)
+                tick_map = {int(ids[j]): bool(ctick[j])
+                            for j in range(len(ids))}
             if fc is not None:
-                # Phase.DELIVER: closed-form link outcomes for this round.
+                # Phase.DELIVER: closed-form link outcomes for this step.
                 delivered, attempts, stale = (
                     np.asarray(v) for v in faults_mod.link_outcomes(
-                        fc, r, fc.requester_id, ids))
+                        fc, t, fc.requester_id, ids))
                 blocked = np.asarray(faults_mod.blocked_mask(
-                    fc, r, fc.requester_id, ids))
+                    fc, t, fc.requester_id, ids))
                 attempted = ~blocked   # streak-blocked links sit out
                 delivered = delivered & attempted
                 drops_r = float(np.sum(attempted & ~delivered))
@@ -559,6 +649,10 @@ class EnFedSession:
             history["accuracy"].append(acc)
             history["loss"].append(float(losses[-1]))
             history["round_executed"].append(1.0)
+            if cc is not None:
+                history["round_clock"].append(t)
+                history["idle_steps"].append(idle_run)
+                idle_run = 0
 
             # Phase.ACCOUNT: battery bookkeeping for this round
             num_params = tree_size(params)
@@ -588,12 +682,14 @@ class EnFedSession:
             if fc is not None:
                 self._snap_prev(ids)   # next round's stale images
             with tl.span("refresh", round=r):
-                self._refresh_contributors(contracts)
+                self._refresh_contributors(contracts, tick=tick_map)
             if checkpoint_dir is not None and (r + 1) % checkpoint_every == 0:
                 with tl.span("checkpoint_save", round=r):
                     save_checkpoint(checkpoint_dir, r + 1, self._state_payload(
                         r + 1, ids, params, history, rounds, measured_fit_s,
-                        retry_windows, model_bytes=model_bytes))
+                        retry_windows, model_bytes=model_bytes,
+                        t_next=t + 1, idle_run=idle_run))
+            r += 1   # this lane's round clock (lockstep: rebound from t)
 
         num_params = tree_size(params)
         report = self.cost.session(
@@ -604,6 +700,16 @@ class EnFedSession:
         if fc is not None and retry_windows:
             report.times.t_com += retry_windows * t_retry
             report.e_comm += retry_windows * e_rx_retry
+        if cc is not None:
+            # idle/duty-cycle windows priced through the ONE shared helper
+            # (never drains the simulated battery — a sleeping radio costs
+            # wall time and standby energy, not protocol charge)
+            total_idle = int(sum(history["idle_steps"])) + idle_run
+            if total_idle:
+                e_idle, t_idle = self.cost.idle_energy(
+                    idle_steps=total_idle, idle_step_s=cc.idle_step_s)
+                report.times.t_com += t_idle
+                report.e_comm += e_idle
         return SessionResult(
             accuracy=history["accuracy"][-1], rounds=rounds, n_contributors=n_c,
             report=report, battery=self.battery, history=history,
@@ -692,22 +798,34 @@ class EnFedSession:
             e_rx_retry, _, t_retry = self.cost.retry_energy(
                 model_bytes=model_bytes, encrypt=cfg.encrypt)
             self._snap_prev(ids)
+        # async cadence (see run()): world state keys on the global event
+        # step t, the requester's round clock r advances on its ticks
+        cc = cfg.cadence
+        total_events = (cadence_mod.events_budget(cc, cfg.max_rounds)
+                        if cc is not None else cfg.max_rounds)
+        if cc is not None:
+            history.update(round_clock=[], idle_steps=[])
+        idle_run = 0
 
         from repro.checkpoint import save_checkpoint
 
-        r_start = 0
+        r_start = t_start = 0
         if resume_from is not None:
             with tl.span("checkpoint_restore"):
                 pay = self._restore_state(resume_from, self._state_payload(
                     0, ids, params, history, 0, 0.0, 0.0,
                     util_rows=util_rows, level=level))
-            r_start = int(pay["r"])
+            r_start = t_start = int(pay["r"])
             rounds = int(pay["rounds"])
             params = pay["params"]
             measured_fit_s = float(pay["fit_s"])
             retry_windows = float(pay["retry_windows"])
             level = np.asarray(pay["clevel"], np.float32)
-            self._refill_history(history, pay, rounds, fc is not None)
+            self._refill_history(history, pay, rounds, fc is not None,
+                                 cadence=cc is not None)
+            if cc is not None:
+                t_start = int(pay["t"])
+                idle_run = int(pay["idle_run"])
             history["members"] = [float(v) for v in pay["members"][:rounds]]
             history["member_mask"] = [row.copy()
                                       for row in pay["member_h"][:rounds]]
@@ -720,13 +838,25 @@ class EnFedSession:
                                           cfg.offered_incentive)
                 for rr in range(rounds)]
 
-        for r in range(r_start, cfg.max_rounds):
-            # Phase.RENEGOTIATE: release/sign/undercut for this round —
+        r = r_start
+        for t in range(t_start, total_events):
+            if cc is None:
+                r = t   # lockstep: the event step IS the round
+            elif r >= cfg.max_rounds:
+                break
+            elif not bool(np.asarray(cadence_mod.tick_mask(
+                    cc, t, cc.requester_id,
+                    level=np.float32(self.battery.level)))):
+                idle_run += 1
+                continue
+            ctick = (np.asarray(cadence_mod.tick_mask(cc, t, ids), bool)
+                     if cc is not None else None)
+            # Phase.RENEGOTIATE: release/sign/undercut for this step —
             # under faults, streak-blocked links lose eligibility too.
             blocked = (np.asarray(faults_mod.blocked_mask(
-                fc, r, fc.requester_id, ids)) if fc is not None else None)
+                fc, t, fc.requester_id, ids)) if fc is not None else None)
             member, rank, util = mobility.membership_step(
-                mob, r, mob.requester_id, ids, cand_mask, base_util, level,
+                mob, t, mob.requester_id, ids, cand_mask, base_util, level,
                 cfg.n_max, blocked=blocked)
             member = np.asarray(member, bool)
             util_rows.append(np.asarray(util, np.float32))
@@ -746,7 +876,7 @@ class EnFedSession:
             if fc is not None:
                 delivered, attempts, stale = (
                     np.asarray(v) for v in faults_mod.link_outcomes(
-                        fc, r, fc.requester_id, ids))
+                        fc, t, fc.requester_id, ids))
                 delivered = delivered & member
                 drops_r = float(np.sum(member & ~delivered))
                 retries_r = float(np.sum(np.where(member, attempts - 1, 0)))
@@ -782,6 +912,10 @@ class EnFedSession:
             history["accuracy"].append(acc)
             history["loss"].append(float(losses[-1]))
             history["round_executed"].append(1.0)
+            if cc is not None:
+                history["round_clock"].append(t)
+                history["idle_steps"].append(idle_run)
+                idle_run = 0
 
             # Phase.ACCOUNT: requester discharge from the member-count
             # energy table (same table the fleet engine stages); under
@@ -812,8 +946,12 @@ class EnFedSession:
             # the refresh term only while the session survives.
             e_tx_round = (e_tx * attempts.astype(np.float32)
                           if fc is not None else e_tx)
+            # under cadence only TICKING members pay the refresh term —
+            # a straggler's radio still transmitted, but it skips its fit
+            refresh_on = (continuing & ctick if cc is not None
+                          else continuing)
             level = np.asarray(mobility.contributor_discharge(
-                level, member, e_tx_round, e_ref, continuing,
+                level, member, e_tx_round, e_ref, refresh_on,
                 mob.contributor_capacity_j), np.float32)
 
             if stop != protocol.STOP_MAX_ROUNDS:
@@ -821,10 +959,12 @@ class EnFedSession:
 
             if fc is not None:
                 self._snap_prev(ids)   # next round's stale images
-            # Phase.REFRESH for current members only
+            # Phase.REFRESH for current members only (cadence: only the
+            # ticking members — stragglers' wire images stay resident)
             if cfg.contributor_refresh_epochs > 0:
                 _sp = tl.begin("refresh", round=r)
-                for j in np.nonzero(member)[0]:
+                sel = member & ctick if cc is not None else member
+                for j in np.nonzero(sel)[0]:
                     did = int(ids[j])
                     st = self.contributor_states[did]
                     base = (self._wire_image(did, st["params"])
@@ -841,7 +981,9 @@ class EnFedSession:
                 with tl.span("checkpoint_save", round=r):
                     save_checkpoint(checkpoint_dir, r + 1, self._state_payload(
                         r + 1, ids, params, history, rounds, measured_fit_s,
-                        retry_windows, util_rows=util_rows, level=level))
+                        retry_windows, util_rows=util_rows, level=level,
+                        t_next=t + 1, idle_run=idle_run))
+            r += 1   # this lane's round clock (lockstep: rebound from t)
 
         mean_members = float(np.mean(history["members"])) if rounds else 0.0
         report = self.cost.session(
@@ -852,6 +994,13 @@ class EnFedSession:
         if fc is not None and retry_windows:
             report.times.t_com += retry_windows * float(t_retry)
             report.e_comm += retry_windows * float(e_rx_retry)
+        if cc is not None:
+            total_idle = int(sum(history["idle_steps"])) + idle_run
+            if total_idle:
+                e_idle, t_idle = self.cost.idle_energy(
+                    idle_steps=total_idle, idle_step_s=cc.idle_step_s)
+                report.times.t_com += t_idle
+                report.e_comm += e_idle
         return SessionResult(
             accuracy=history["accuracy"][-1], rounds=rounds,
             n_contributors=n_cand, report=report, battery=self.battery,

@@ -61,6 +61,13 @@ class RoundEvent:
     energy_j: Optional[float]     # battery-derived joules spent this
                                   # round (None for round 0 / no battery)
     stop_reason: Optional[str]    # protocol stop reason (stop phase only)
+    # async-cadence observability (repro.core.cadence; None = lockstep
+    # world).  Mapped HERE from the engines' round_clock/idle_steps
+    # history buffers — the house rule stands: engines write history,
+    # only this adapter emits events.
+    clock: Optional[int] = None   # global event step this round ran at
+    idle: Optional[float] = None  # idle event steps since the previous
+                                  # executed round
 
 
 # name -> (allowed value types, allows None).  bool before int: a bool IS
@@ -82,13 +89,16 @@ ROUND_EVENT_FIELDS: Dict[str, tuple] = {
     "wire_bytes": ((int,), False),
     "energy_j": ((float,), True),
     "stop_reason": ((str,), True),
+    "clock": ((int,), True),
+    "idle": ((float,), True),
 }
 
 # Fields compared exactly across engines; the rest are float metrics
-# compared to tolerance (see compare_event_streams).
+# compared to tolerance (see compare_event_streams).  Lane clocks are
+# exact by construction (counter-based cadence), so any drift is a bug.
 _EXACT_FIELDS = ("round", "requester", "phase", "executed", "members",
                  "member_set", "delivered", "drops", "retries", "stale",
-                 "wire_bytes", "stop_reason")
+                 "wire_bytes", "stop_reason", "clock")
 
 
 def _mask_to_set(row) -> Tuple[int, ...]:
@@ -103,7 +113,8 @@ def session_events(session, *, requester: int = 0) -> List[RoundEvent]:
     ``requester`` is the lane index stamped on every event (the session
     itself does not know its position in the fleet).
     """
-    history = session.history or {}
+    history = (session.history_raw if hasattr(session, "history_raw")
+               else session.history) or {}
     acc = [float(a) for a in history.get("accuracy", [])]
     rounds = len(acc)
     loss = history.get("loss")
@@ -115,6 +126,8 @@ def session_events(session, *, requester: int = 0) -> List[RoundEvent]:
     drops = history.get("drops")
     retries = history.get("retries")
     stale = history.get("stale")
+    clock_h = history.get("round_clock")
+    idle_h = history.get("idle_steps")
     model_bytes = int(getattr(session, "model_bytes", 0) or 0)
     capacity = (float(session.battery.capacity_j)
                 if getattr(session, "battery", None) is not None else None)
@@ -156,7 +169,9 @@ def session_events(session, *, requester: int = 0) -> List[RoundEvent]:
             battery=level, accuracy=acc[r],
             loss=float(loss[r]) if loss else None,
             wire_bytes=model_bytes * n_recv, energy_j=energy,
-            stop_reason=None))
+            stop_reason=None,
+            clock=int(clock_h[r]) if clock_h is not None else None,
+            idle=float(idle_h[r]) if idle_h is not None else None))
     events.append(RoundEvent(
         round=rounds, requester=requester, phase="stop", executed=True,
         members=None, member_set=None, delivered=None,
@@ -236,7 +251,7 @@ def compare_event_streams(a: Sequence[RoundEvent], b: Sequence[RoundEvent],
             va, vb = getattr(ea, name), getattr(eb, name)
             if va != vb:
                 diffs.append(f"event {k}: {name} {va!r} != {vb!r}")
-        for name in ("accuracy", "loss", "battery"):
+        for name in ("accuracy", "loss", "battery", "idle"):
             if not _close(getattr(ea, name), getattr(eb, name), atol):
                 diffs.append(f"event {k}: {name} {getattr(ea, name)} !~ "
                              f"{getattr(eb, name)} (atol={atol})")

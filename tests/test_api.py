@@ -82,14 +82,14 @@ def _assert_session_parity(facade_res, legacy, *, mobility: bool):
     s = facade_res.sessions[0]
     assert facade_res.rounds == legacy.rounds == s.rounds
     assert facade_res.stop_reason == legacy.stop_reason == s.stop_reason
-    np.testing.assert_array_equal(facade_res.history["battery"],
-                                  legacy.history["battery"])
-    np.testing.assert_array_equal(facade_res.history["accuracy"],
-                                  legacy.history["accuracy"])
+    np.testing.assert_array_equal(facade_res.history_raw["battery"],
+                                  legacy.history_raw["battery"])
+    np.testing.assert_array_equal(facade_res.history_raw["accuracy"],
+                                  legacy.history_raw["accuracy"])
     if mobility:
         np.testing.assert_array_equal(
-            np.array(facade_res.history["member_mask"]),
-            np.array(legacy.history["member_mask"]))
+            np.array(facade_res.history_raw["member_mask"]),
+            np.array(legacy.history_raw["member_mask"]))
     fv, _ = ravel_pytree(facade_res.params)
     lv, _ = ravel_pytree(legacy.params)
     np.testing.assert_allclose(np.asarray(fv), np.asarray(lv),
@@ -131,7 +131,7 @@ def test_facade_matches_legacy_mobility(problem, engine):
         legacy = run_fleet(task, [RequesterSpec(own_train, own_test, fleet,
                                                 copy.deepcopy(states))],
                            cfg).sessions[0]
-    assert res.history["members"]  # the world actually re-negotiates
+    assert res.history_raw["members"]  # the world actually re-negotiates
     _assert_session_parity(res, legacy, mobility=True)
 
 
@@ -149,14 +149,14 @@ def test_facade_multi_requester_mobility_engine_invariance(problem):
 
     res = {e: Experiment(world3(), _MOB_METHOD, ExecutionSpec(engine=e)).run()
            for e in ("loop", "fleet")}
-    members = [res["fleet"].sessions[i].history["members"] for i in range(3)]
+    members = [res["fleet"].sessions[i].history_raw["members"] for i in range(3)]
     assert any(m != members[0] for m in members), \
         "requesters should see distinct neighborhoods"
     for i in range(3):
         sl, sf = res["loop"].sessions[i], res["fleet"].sessions[i]
         assert sl.rounds == sf.rounds and sl.stop_reason == sf.stop_reason
-        np.testing.assert_array_equal(np.array(sl.history["member_mask"]),
-                                      np.array(sf.history["member_mask"]))
+        np.testing.assert_array_equal(np.array(sl.history_raw["member_mask"]),
+                                      np.array(sf.history_raw["member_mask"]))
         lv, _ = ravel_pytree(sl.params)
         fv, _ = ravel_pytree(sf.params)
         np.testing.assert_allclose(np.asarray(fv), np.asarray(lv),
@@ -276,8 +276,8 @@ def test_baselines_honor_fleet_engine(problem):
         assert rf.rounds == rl.rounds
         assert rf.stop_reason == rl.stop_reason
         assert rf.sessions[0].battery is None
-        np.testing.assert_allclose(rf.history["accuracy"],
-                                   rl.history["accuracy"],
+        np.testing.assert_allclose(rf.history_raw["accuracy"],
+                                   rl.history_raw["accuracy"],
                                    rtol=1e-5, atol=1e-6)
         fv, _ = ravel_pytree(rf.params)
         lv, _ = ravel_pytree(rl.params)

@@ -58,13 +58,13 @@ def _assert_identical(full, res, *, mask_key=None):
         "resumed params differ from uninterrupted run"
     assert res.rounds == full.rounds
     assert res.stop_reason == full.stop_reason
-    np.testing.assert_array_equal(full.history["battery"],
-                                  res.history["battery"])
-    np.testing.assert_array_equal(full.history["accuracy"],
-                                  res.history["accuracy"])
+    np.testing.assert_array_equal(full.history_raw["battery"],
+                                  res.history_raw["battery"])
+    np.testing.assert_array_equal(full.history_raw["accuracy"],
+                                  res.history_raw["accuracy"])
     if mask_key:
-        np.testing.assert_array_equal(np.stack(full.history[mask_key]),
-                                      np.stack(res.history[mask_key]))
+        np.testing.assert_array_equal(np.stack(full.history_raw[mask_key]),
+                                      np.stack(res.history_raw[mask_key]))
 
 
 # ---------------------------------------------------------------------------
@@ -156,8 +156,8 @@ def test_fleet_chunked_matches_while_loop_path(problem):
     cv, _ = ravel_pytree(chunked.sessions[0].params)
     np.testing.assert_allclose(np.asarray(cv), np.asarray(pv),
                                rtol=1e-5, atol=1e-6)
-    np.testing.assert_array_equal(plain.history["deliver"],
-                                  chunked.history["deliver"])
+    np.testing.assert_array_equal(plain.history_raw["deliver"],
+                                  chunked.history_raw["deliver"])
 
 
 def test_fleet_checkpoint_rejected_for_baselines(problem):

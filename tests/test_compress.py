@@ -246,7 +246,7 @@ def _assert_parity(loop, fl, atol=1e-2):
     one scale step."""
     assert fl.rounds == loop.rounds
     assert fl.stop_reason == loop.stop_reason
-    np.testing.assert_allclose(fl.history["battery"], loop.history["battery"],
+    np.testing.assert_allclose(fl.history_raw["battery"], loop.history_raw["battery"],
                                rtol=1e-5, atol=1e-6)
     lv, _ = ravel_pytree(loop.params)
     fv, _ = ravel_pytree(fl.params)
@@ -273,9 +273,9 @@ def test_compress_parity_mobility(problem):
                                               leg_rounds=2, seed=3))
     loop, fl = _run_both(problem, cfg)
     _assert_parity(loop, fl)
-    np.testing.assert_array_equal(np.array(loop.history["member_mask"]),
-                                  np.array(fl.history["member_mask"]))
-    assert loop.history["members"] == fl.history["members"]
+    np.testing.assert_array_equal(np.array(loop.history_raw["member_mask"]),
+                                  np.array(fl.history_raw["member_mask"]))
+    assert loop.history_raw["members"] == fl.history_raw["members"]
 
 
 def test_compress_writes_back_wire_image(problem):

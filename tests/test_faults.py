@@ -49,15 +49,15 @@ def _assert_fault_parity(loop, fl, atol_p=1e-5):
     assert fl.stop_reason == loop.stop_reason
     # fault traces are exact integer world state: bitwise equality
     for k in ("drops", "retries", "stale"):
-        np.testing.assert_array_equal(fl.history[k], loop.history[k])
-    lm = np.stack(loop.history["deliver_mask"])
-    fm = np.stack(fl.history["deliver_mask"])
+        np.testing.assert_array_equal(fl.history_raw[k], loop.history_raw[k])
+    lm = np.stack(loop.history_raw["deliver_mask"])
+    fm = np.stack(fl.history_raw["deliver_mask"])
     np.testing.assert_array_equal(fm[:, :lm.shape[1]], lm)
     assert not fm[:, lm.shape[1]:].any()          # padded lanes never deliver
-    np.testing.assert_allclose(fl.history["battery"], loop.history["battery"],
+    np.testing.assert_allclose(fl.history_raw["battery"], loop.history_raw["battery"],
                                rtol=1e-5, atol=1e-6)
-    np.testing.assert_allclose(fl.history["accuracy"],
-                               loop.history["accuracy"], rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(fl.history_raw["accuracy"],
+                               loop.history_raw["accuracy"], rtol=1e-5, atol=1e-6)
     lv, _ = ravel_pytree(loop.params)
     fv, _ = ravel_pytree(fl.params)
     np.testing.assert_allclose(np.asarray(fv), np.asarray(lv),
@@ -138,7 +138,7 @@ def test_engines_agree_static_faults(problem):
     loop, fl = _run_both(problem, cfg)
     _assert_fault_parity(loop, fl)
     # all three failure modes provably exercised in this world
-    tot = {k: float(np.sum(loop.history[k]))
+    tot = {k: float(np.sum(loop.history_raw[k]))
            for k in ("drops", "retries", "stale")}
     assert tot["drops"] > 0 and tot["retries"] > 0 and tot["stale"] > 0, tot
 
@@ -163,8 +163,8 @@ def test_engines_agree_mobility_plus_faults(problem):
     loop, fl = _run_both(problem, cfg)
     _assert_fault_parity(loop, fl)
     # delivery implies membership that round, in both engines
-    mm = np.stack(loop.history["member_mask"])
-    dm = np.stack(loop.history["deliver_mask"])
+    mm = np.stack(loop.history_raw["member_mask"])
+    dm = np.stack(loop.history_raw["deliver_mask"])
     assert not np.any(dm.astype(bool) & ~mm.astype(bool))
 
 
@@ -178,8 +178,8 @@ def test_all_links_failed_falls_back_to_own_params(problem):
                       contributor_refresh_epochs=0, faults=dead)
     loop, fl = _run_both(problem, cfg)
     _assert_fault_parity(loop, fl)
-    assert not np.stack(loop.history["deliver_mask"]).any()
-    assert all(v > 0 for v in loop.history["accuracy"])   # still learning
+    assert not np.stack(loop.history_raw["deliver_mask"]).any()
+    assert all(v > 0 for v in loop.history_raw["accuracy"])   # still learning
 
 
 def test_retry_energy_overhead_vs_clean_world(problem):
@@ -194,8 +194,8 @@ def test_retry_energy_overhead_vs_clean_world(problem):
         problem, EnFedConfig(desired_accuracy=0.99, max_rounds=4, epochs=1,
                              batch_size=BATCH, encrypt=False,
                              contributor_refresh_epochs=1, faults=FC))
-    extra = float(np.sum(faulty.history["drops"])
-                  + np.sum(faulty.history["retries"]))
+    extra = float(np.sum(faulty.history_raw["drops"])
+                  + np.sum(faulty.history_raw["retries"]))
     assert extra > 0
     assert faulty.report.e_comm > clean.report.e_comm
     assert faulty.report.times.t_com > clean.report.times.t_com

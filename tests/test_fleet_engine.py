@@ -69,9 +69,9 @@ def _assert_parity(loop, fl):
     assert fl.rounds == loop.rounds
     assert fl.stop_reason == loop.stop_reason
     assert fl.n_contributors == loop.n_contributors
-    np.testing.assert_allclose(fl.history["accuracy"], loop.history["accuracy"],
+    np.testing.assert_allclose(fl.history_raw["accuracy"], loop.history_raw["accuracy"],
                                rtol=1e-5, atol=1e-6)
-    np.testing.assert_allclose(fl.history["battery"], loop.history["battery"],
+    np.testing.assert_allclose(fl.history_raw["battery"], loop.history_raw["battery"],
                                rtol=1e-5, atol=1e-6)
     lv, _ = ravel_pytree(loop.params)
     fv, _ = ravel_pytree(fl.params)
@@ -184,7 +184,7 @@ def test_fleet_runs_64_concurrent_sessions(problem):
     result = run_fleet(task, specs, cfg)
     assert len(result.sessions) == R
     assert result.rounds.shape == (R,) and (result.rounds == 1).all()
-    assert result.history["accuracy"].shape == (cfg.max_rounds, R)
+    assert result.history_raw["accuracy"].shape == (cfg.max_rounds, R)
     assert result.total_energy_j > 0
 
     for lane in (0, R - 1):
@@ -192,7 +192,7 @@ def test_fleet_runs_64_concurrent_sessions(problem):
                             own_test, fleet, copy.deepcopy(states), cfg).run()
         fl = result.sessions[lane]
         assert fl.rounds == loop.rounds and fl.stop_reason == loop.stop_reason
-        np.testing.assert_allclose(fl.history["accuracy"], loop.history["accuracy"],
+        np.testing.assert_allclose(fl.history_raw["accuracy"], loop.history_raw["accuracy"],
                                    rtol=1e-5, atol=1e-6)
         lv, _ = ravel_pytree(loop.params)
         fv, _ = ravel_pytree(fl.params)
@@ -265,9 +265,9 @@ def _assert_churn_parity(loop, fl):
     """Static parity PLUS the mobility surface: per-round membership
     masks and member counts must be bit-identical."""
     _assert_parity(loop, fl)
-    np.testing.assert_array_equal(np.array(loop.history["member_mask"]),
-                                  np.array(fl.history["member_mask"]))
-    assert loop.history["members"] == fl.history["members"]
+    np.testing.assert_array_equal(np.array(loop.history_raw["member_mask"]),
+                                  np.array(fl.history_raw["member_mask"]))
+    assert loop.history_raw["members"] == fl.history_raw["members"]
 
 
 @pytest.mark.parametrize("mob_kw,cfg_kw", [
@@ -302,7 +302,7 @@ def test_mobility_renegotiation_actually_churns(problem):
                                               leg_rounds=2, seed=3))
     loop, fl = _run_both(problem, cfg)
     _assert_churn_parity(loop, fl)
-    masks = np.array(loop.history["member_mask"])
+    masks = np.array(loop.history_raw["member_mask"])
     assert (masks != masks[0]).any(), "membership must change mid-session"
 
 
@@ -345,7 +345,7 @@ def test_mobility_multi_lane_fleet_matches_per_lane_loops(problem):
              for _ in range(R)]
     result = run_fleet(task, specs, cfg)
     saw_different_worlds = False
-    ref_members = result.sessions[0].history["members"]
+    ref_members = result.sessions[0].history_raw["members"]
     for lane in range(R):
         lane_cfg = dataclasses.replace(
             cfg, mobility=dataclasses.replace(
@@ -353,7 +353,7 @@ def test_mobility_multi_lane_fleet_matches_per_lane_loops(problem):
         loop = EnFedSession(task, own_train, own_test, fleet,
                             copy.deepcopy(states), lane_cfg).run()
         _assert_churn_parity(loop, result.sessions[lane])
-        if result.sessions[lane].history["members"] != ref_members:
+        if result.sessions[lane].history_raw["members"] != ref_members:
             saw_different_worlds = True
     assert saw_different_worlds, "lanes should see distinct neighborhoods"
 
@@ -423,7 +423,7 @@ def test_fleet_baseline_cfl_matches_loop(problem):
     assert fl.stop_reason == ("accuracy_reached"
                               if loop.accuracy >= cfg.desired_accuracy
                               else "max_rounds")
-    np.testing.assert_allclose(fl.history["accuracy"], loop.history["accuracy"],
+    np.testing.assert_allclose(fl.history_raw["accuracy"], loop.history_raw["accuracy"],
                                rtol=1e-5, atol=1e-6)
     lv, _ = ravel_pytree(loop.params)
     fv, _ = ravel_pytree(fl.params)
@@ -446,7 +446,7 @@ def test_fleet_baseline_dfl_matches_loop(problem, topology):
                    cfg, method="dfl", dfl_topology=topology).sessions[0]
     assert fl.rounds == loop.rounds
     assert fl.battery is None
-    np.testing.assert_allclose(fl.history["accuracy"], loop.history["accuracy"],
+    np.testing.assert_allclose(fl.history_raw["accuracy"], loop.history_raw["accuracy"],
                                rtol=1e-5, atol=1e-6)
     lv, _ = ravel_pytree(loop.params)
     fv, _ = ravel_pytree(fl.params)
@@ -475,8 +475,8 @@ def test_fleet_baseline_multi_lane_matches_per_requester_loops(problem):
                            own_test).run_config(cfg)
             fl = result.sessions[lane]
             assert fl.rounds == loop.rounds
-            np.testing.assert_allclose(fl.history["accuracy"],
-                                       loop.history["accuracy"],
+            np.testing.assert_allclose(fl.history_raw["accuracy"],
+                                       loop.history_raw["accuracy"],
                                        rtol=1e-5, atol=1e-6)
             lv, _ = ravel_pytree(loop.params)
             fv, _ = ravel_pytree(fl.params)
@@ -508,14 +508,14 @@ def test_fleet_early_exit_executes_o_k_round_bodies(problem):
                        cfg, round_chunk=4)
     assert (result.rounds == 1).all()
     assert (result.stop_codes == 1).all()  # protocol.STOP_ACCURACY
-    body = result.history["round_executed"]
+    body = result.history_raw["round_executed"]
     assert body.shape == (cfg.max_rounds,)
     # O(k): at most one chunk of bodies ran, nothing near max_rounds
     assert body.sum() <= 4
     assert body[0] == 1.0 and (body[4:] == 0.0).all()
     # per-lane active mask agrees: only round 0 had a live lane
-    assert result.history["executed"][0].all()
-    assert (result.history["executed"][1:] == 0.0).all()
+    assert result.history_raw["executed"][0].all()
+    assert (result.history_raw["executed"][1:] == 0.0).all()
 
 
 def test_fleet_round_chunk_does_not_change_results(problem):
@@ -532,7 +532,7 @@ def test_fleet_round_chunk_does_not_change_results(problem):
     for res in results[1:]:
         fl = res.sessions[0]
         assert fl.rounds == ref.rounds and fl.stop_reason == ref.stop_reason
-        np.testing.assert_allclose(fl.history["accuracy"], ref.history["accuracy"],
+        np.testing.assert_allclose(fl.history_raw["accuracy"], ref.history_raw["accuracy"],
                                    rtol=1e-6)
         lv, _ = ravel_pytree(ref.params)
         fv, _ = ravel_pytree(fl.params)

@@ -198,8 +198,8 @@ def test_fleet_mobility_round_chunk_invariance():
                          cfg, round_chunk=c) for c in (1, 3, 8)]
     ref = results[0]
     for res in results[1:]:
-        np.testing.assert_array_equal(res.history["member"],
-                                      ref.history["member"])
+        np.testing.assert_array_equal(res.history_raw["member"],
+                                      ref.history_raw["member"])
         assert res.sessions[0].rounds == ref.sessions[0].rounds
         rv, _ = ravel_pytree(ref.sessions[0].params)
         fv, _ = ravel_pytree(res.sessions[0].params)
@@ -222,9 +222,9 @@ def test_loop_and_fleet_derive_identical_world():
     fl = run_fleet(task, [RequesterSpec(own_train, own_test, fleet,
                                         copy.deepcopy(states))], cfg).sessions[0]
     assert fl.rounds == loop.rounds
-    np.testing.assert_array_equal(np.array(loop.history["member_mask"]),
-                                  np.array(fl.history["member_mask"]))
-    np.testing.assert_allclose(fl.history["battery"], loop.history["battery"],
+    np.testing.assert_array_equal(np.array(loop.history_raw["member_mask"]),
+                                  np.array(fl.history_raw["member_mask"]))
+    np.testing.assert_allclose(fl.history_raw["battery"], loop.history_raw["battery"],
                                rtol=1e-5, atol=1e-6)
 
 

@@ -65,7 +65,7 @@ def test_enfed_encrypted_equals_plain_aggregation(har_setup):
     cfg2 = EnFedConfig(desired_accuracy=0.999, epochs=2, max_rounds=2,
                        contributor_refresh_epochs=0, encrypt=False)
     r2 = EnFedSession(task, own_train, own_test, fleet, states2, cfg2).run()
-    np.testing.assert_allclose(r1.history["accuracy"], r2.history["accuracy"], atol=1e-3)
+    np.testing.assert_allclose(r1.history_raw["accuracy"], r2.history_raw["accuracy"], atol=1e-3)
 
 
 @pytest.mark.slow  # full train driver re-jits a transformer from scratch

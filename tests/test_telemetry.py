@@ -18,7 +18,8 @@ import pytest
 from jax.flatten_util import ravel_pytree
 
 from repro.api import ExecutionSpec, Experiment, MethodSpec, WorldSpec
-from repro.core import FaultConfig, MobilityConfig, SupervisedTask, make_fleet
+from repro.core import (CadenceConfig, FaultConfig, MobilityConfig,
+                        SupervisedTask, make_fleet)
 from repro.data import (CaloriesDatasetConfig, dirichlet_partition,
                         make_calories_tabular)
 from repro.models import MLPClassifier, MLPClassifierConfig
@@ -59,15 +60,20 @@ _METHOD = MethodSpec(desired_accuracy=0.99, max_rounds=2, epochs=1,
 _MOB = MobilityConfig(radio_range_m=95.0, leg_rounds=1, seed=5)
 _FAULTS = FaultConfig(p_drop=0.6, p_stale=0.4, max_retries=1,
                       release_after=2, seed=3)
+# seed 0 puts the requester on stride 2 of 2 — real idle steps between
+# rounds, so the async observability fields carry non-trivial values
+_CADENCE = CadenceConfig(n_speed_classes=2, seed=0)
 
-# world name -> (mobility, method) — the three weather regimes the house
-# rule is enforced on
+# world name -> (mobility, method) — the weather regimes the house rule
+# is enforced on (cadence = the async event-step world of PR 9)
 _WORLDS = {
     "static": (None, _METHOD),
     "mobility": (_MOB, dataclasses.replace(_METHOD, desired_accuracy=0.999,
                                            max_rounds=4, n_max=2)),
     "faults": (None, dataclasses.replace(_METHOD, desired_accuracy=0.999,
                                          max_rounds=4, faults=_FAULTS)),
+    "cadence": (None, dataclasses.replace(_METHOD, desired_accuracy=0.999,
+                                          max_rounds=3, cadence=_CADENCE)),
 }
 
 
@@ -85,9 +91,9 @@ def _assert_outcome_bitwise(a, b):
     av, _ = ravel_pytree(a.params)
     bv, _ = ravel_pytree(b.params)
     np.testing.assert_array_equal(np.asarray(av), np.asarray(bv))
-    assert set(a.history) == set(b.history)
-    for k in a.history:
-        ha, hb = a.history[k], b.history[k]
+    assert set(a.history_raw) == set(b.history_raw)
+    for k in a.history_raw:
+        ha, hb = a.history_raw[k], b.history_raw[k]
         assert len(ha) == len(hb), f"history[{k!r}] length"
         # row-wise: mobility histories hold per-round mask rows whose
         # width varies with the candidate pool
@@ -157,6 +163,36 @@ def test_fault_world_events_carry_the_weather(problem):
     assert all(e.wire_bytes == mb * len(e.delivered) for e in rounds)
     stops = [e for e in res.trace if e.phase == "stop"]
     assert len(stops) == 1 and stops[0].stop_reason == res.stop_reason
+
+
+@pytest.mark.parametrize("engine", ["loop", "fleet"])
+def test_cadence_world_events_carry_lane_clocks(problem, engine):
+    """Async-cadence observability rides the ONE adapter: the per-event
+    clock/idle fields are mapped from the engines' round_clock/idle_steps
+    history buffers, never emitted from engine code — and lockstep worlds
+    leave them None (absence, not zero)."""
+    _, method = _WORLDS["cadence"]
+    res = Experiment(_world(problem), method,
+                     ExecutionSpec(engine=engine)).run()
+    rounds = [e for e in res.trace if e.phase == "round"]
+    clock_h = res.sessions[0].history_raw["round_clock"]
+    idle_h = res.sessions[0].history_raw["idle_steps"]
+    assert [e.clock for e in rounds] == [int(c) for c in clock_h]
+    assert [e.idle for e in rounds] == [float(i) for i in idle_h]
+    assert all(isinstance(e.clock, int) for e in rounds)
+    assert all(isinstance(e.idle, float) for e in rounds)
+    # requester stride 2 of 2: clocks advance on the global event
+    # counter, strictly faster than the round index, with real idle gaps
+    assert all(b > a for a, b in zip([e.clock for e in rounds],
+                                     [e.clock for e in rounds][1:]))
+    assert rounds[-1].clock > rounds[-1].round
+    assert sum(e.idle for e in rounds) > 0
+    stop = [e for e in res.trace if e.phase == "stop"]
+    assert len(stop) == 1 and stop[0].clock is None and stop[0].idle is None
+    # lockstep world: no cadence concept, so the fields stay None
+    lock = Experiment(_world(problem), _METHOD,
+                      ExecutionSpec(engine=engine)).run()
+    assert all(e.clock is None and e.idle is None for e in lock.trace)
 
 
 # ---------------------------------------------------------------------------
