@@ -11,7 +11,7 @@ percentages meaningful.
   PYTHONPATH=src python examples/har_federated.py [--dataset har|calories]
                                                   [--engine loop|fleet]
                                                   [--churn] [--faults]
-                                                  [--cadence]
+                                                  [--cadence] [--byzantine]
                                                   [--compress int8]
                                                   [-v | -q]
 
@@ -50,6 +50,18 @@ round, and the straggler set; the cadence world is counter-based, so
 ``--engine loop`` and ``--engine fleet`` print the identical clocks and
 straggler deliveries.  Composes with ``--churn``/``--faults``.
 
+``--byzantine`` turns on the adversarial world (repro.core.adversary):
+30% of contributor links deliver a corrupted wire image each round (a
+25x scale attack), and the session defends with ``robust="clip"`` —
+per-coordinate norm clipping at the masked median norm
+(repro.kernels.robust), its screening pass priced via
+``CostModel.screening_energy``.  The walkthrough prints each round's
+CORRUPTED set (which links the counter-based draws poisoned) and
+CLIPPED set (which contributors the defense throttled); corruption is
+counter-keyed like mobility/faults/cadence, so ``--engine loop`` and
+``--engine fleet`` print the identical sets.  Composes with
+``--churn``/``--faults``/``--cadence``.
+
 ``--compress int8`` adds an ``enfed-int8`` row to the compare table: the
 same world and knobs with the transported updates (and the fleet
 engine's round state) int8-compressed — ~4x fewer wire bytes into
@@ -65,8 +77,8 @@ import sys
 import numpy as np
 
 from repro.api import Experiment, ExecutionSpec, MethodSpec, WorldSpec
-from repro.core import (CadenceConfig, FaultConfig, MobilityConfig,
-                        SupervisedTask, make_fleet)
+from repro.core import (AdversaryConfig, CadenceConfig, FaultConfig,
+                        MobilityConfig, SupervisedTask, make_fleet)
 from repro.core.cadence import tick_mask
 from repro.data import (CaloriesDatasetConfig, HARDatasetConfig,
                         dirichlet_partition, make_calories_tabular,
@@ -139,8 +151,14 @@ def walkthrough(task, shards, own_train, own_test, args):
     own duty cycle makes its round clock skip global event steps, and
     misphased contributors never tick on the requester's steps — their
     resident wire images are aggregated as-is every round (the
-    straggler path).  All three worlds are counter-based, so both
-    engines derive the identical weather; pick with --engine.
+    straggler path).
+
+    With ``--byzantine``, some links are adversarial: counter-based
+    draws pick the round's corrupted set, each corrupted link delivers
+    a 25x-scaled wire image, and the ``robust="clip"`` defense clips
+    outlier-norm contributions at the masked median norm before the
+    aggregate.  All four worlds are counter-based, so both engines
+    derive the identical weather; pick with --engine.
     """
     mob = MobilityConfig(arena_m=200.0, radio_range_m=90.0,
                          leg_rounds=2, seed=5) if args.churn else None
@@ -151,6 +169,9 @@ def walkthrough(task, shards, own_train, own_test, args):
     # on stride 2 with the opposite phase — permanent stragglers
     cadence = (CadenceConfig(n_speed_classes=2, seed=0)
                if args.cadence else None)
+    adversary = (AdversaryConfig(p_byzantine=0.3, attack="scale",
+                                 scale=25.0, seed=9)
+                 if args.byzantine else None)
     world = make_world(task, shards, own_train, own_test, fit_epochs=1,
                        mobility=mob)
     res = Experiment(
@@ -158,12 +179,14 @@ def walkthrough(task, shards, own_train, own_test, args):
         method=MethodSpec(desired_accuracy=args.target, epochs=args.epochs,
                           max_rounds=10, n_max=3,
                           contributor_refresh_epochs=1, faults=faults,
-                          cadence=cadence),
+                          cadence=cadence, adversary=adversary,
+                          robust="clip" if args.byzantine else "none"),
         execution=ExecutionSpec(engine=args.engine)).run()
 
     label = "+".join(n for n, on in (("churn", args.churn),
                                      ("faults", args.faults),
-                                     ("cadence", args.cadence)) if on)
+                                     ("cadence", args.cadence),
+                                     ("byzantine", args.byzantine)) if on)
     log.info(f"\n=== {label} walkthrough ({args.dataset}, engine={res.engine}) ===")
     # with neither churn nor faults there is no membership history: the
     # contract set is static, so the set column shows who is AWAKE on
@@ -178,6 +201,8 @@ def walkthrough(task, shards, own_train, own_test, args):
         head += f" {'delivered':<12} {'drop':>4} {'rtry':>4} {'stale':>5}"
     if args.cadence:
         head += f" {'stragglers':<12}"
+    if args.byzantine:
+        head += f" {'corrupted':<12} {'clipped':<12}"
     log.info(head + f" {'acc':>6} {'battery':>8}")
     mask_key = "member_mask" if args.churn else "deliver_mask"
     lane_ids = np.arange(len(world.requesters[0].neighborhood))
@@ -208,6 +233,12 @@ def walkthrough(task, shards, own_train, own_test, args):
         if args.cadence:
             lagging = [int(d) for d, aw in zip(lane_ids, awake) if not aw]
             line += f" {str(lagging):<12}"
+        if args.byzantine:
+            bad = [d for d, m in enumerate(np.asarray(
+                res.history_raw["corrupted_mask"][r]) > 0) if m]
+            cl = [d for d, m in enumerate(np.asarray(
+                res.history_raw["clipped_mask"][r]) > 0) if m]
+            line += f" {str(bad):<12} {str(cl):<12}"
         note = ""
         if prev is not None:
             joined = sorted(set(ids) - set(prev))
@@ -229,6 +260,16 @@ def walkthrough(task, shards, own_train, own_test, args):
                  f"event steps, {idle} idle steps priced via "
                  f"CostModel.idle_energy; stragglers' resident wire images "
                  f"aggregated as-is (both engines print this identically)")
+    if args.byzantine:
+        corrupted = int(np.sum([np.sum(np.asarray(m) > 0)
+                                for m in res.history_raw["corrupted_mask"]]))
+        clipped = int(np.sum([np.sum(np.asarray(m) > 0)
+                              for m in res.history_raw["clipped_mask"]]))
+        log.info(f"byzantine weather: {corrupted} corrupted deliveries "
+                 f"(counter-keyed 25x scale attack), {clipped} clipped by "
+                 f"the robust='clip' screen (masked-median-norm threshold, "
+                 f"priced via CostModel.screening_energy); both engines "
+                 f"print the identical sets")
     log.info(f"requester finished: {res.rounds} rounds, stop={res.stop_reason}, "
              f"final acc {res.accuracy:.3f}")
     log.debug(f"timings: { {k: round(v, 4) for k, v in res.timings.items()} }")
@@ -255,6 +296,14 @@ def main():
                          "per-round clock steps, priced idle steps, and the "
                          "straggler set, identical in both engines; composes "
                          "with --churn/--faults")
+    ap.add_argument("--byzantine", action="store_true",
+                    help="adversarial walkthrough: counter-based Byzantine "
+                         "links deliver 25x-scaled wire images and the "
+                         "robust='clip' screen throttles them "
+                         "(repro.core.adversary + repro.kernels.robust) — "
+                         "prints per-round corrupted/clipped sets, identical "
+                         "in both engines; composes with "
+                         "--churn/--faults/--cadence")
     ap.add_argument("--compress", choices=("int8",), default=None,
                     help="add an enfed-int8 row: same world with the "
                          "transported updates int8-compressed (shows the "
@@ -268,7 +317,7 @@ def main():
     _setup_logging(1 if args.verbose else -1 if args.quiet else 0)
 
     task, shards, own_train, own_test, pooled = build(args.dataset)
-    if args.churn or args.faults or args.cadence:
+    if args.churn or args.faults or args.cadence or args.byzantine:
         return walkthrough(task, shards, own_train, own_test, args)
 
     # one world, N methods: the facade guarantees every method sees the

@@ -92,6 +92,31 @@ def _strip_cadence(method: MethodSpec) -> MethodSpec:
             if method.cadence is not None else method)
 
 
+def _warn_if_adversary_ignored(method: MethodSpec, name: str) -> None:
+    """Byzantine contributors, the robust aggregation statistic, and
+    staleness decay are enfed protocol knobs (Phase.DELIVER/AGGREGATE);
+    the baselines' loop oracles define their aggregation semantics
+    without them.  Same never-silent rule as the mobility/cadence axes:
+    asking a baseline to run a Byzantine world warns, and the knobs are
+    stripped before the run (the fleet baselines refuse them)."""
+    if (method.adversary is not None or method.robust != "none"
+            or method.staleness_gamma != 1.0):
+        warnings.warn(
+            f"method {name!r} ignores MethodSpec.adversary/robust/"
+            "staleness_gamma (Byzantine contributors and robust "
+            "aggregation are enfed-only); comparing against "
+            "EnFed-under-attack mixes an adversarial world with honest "
+            "baselines", stacklevel=3)
+
+
+def _strip_adversary(method: MethodSpec) -> MethodSpec:
+    if (method.adversary is None and method.robust == "none"
+            and method.staleness_gamma == 1.0):
+        return method
+    return dataclasses.replace(method, adversary=None, robust="none",
+                               staleness_gamma=1.0)
+
+
 def _warn_if_checkpoint_ignored(execution: ExecutionSpec, name: str) -> None:
     """Resumable round state is an enfed contract (the baselines' loop
     oracles have no serialized mid-run state).  Same never-silent rule
@@ -200,6 +225,11 @@ def run_enfed(world: WorldSpec, method: MethodSpec,
                 cfg_i, cadence=dataclasses.replace(
                     cfg.cadence,
                     requester_id=cfg.cadence.requester_id + i))
+        if cfg.adversary is not None and i > 0:
+            cfg_i = dataclasses.replace(
+                cfg_i, adversary=dataclasses.replace(
+                    cfg.adversary,
+                    requester_id=cfg.adversary.requester_id + i))
         sessions.append(EnFedSession(
             world.task, r.own_train, r.own_test,
             r.neighborhood, r.contributor_states,
@@ -243,6 +273,8 @@ def run_cfl(world: WorldSpec, method: MethodSpec,
     _warn_if_checkpoint_ignored(execution, "cfl")
     _warn_if_cadence_ignored(method, "cfl")
     method = _strip_cadence(method)
+    _warn_if_adversary_ignored(method, "cfl")
+    method = _strip_adversary(method)
     if execution.engine == "fleet":
         return _run_baseline_fleet(world, method, execution, "cfl")
     _warn_if_trace_fleet_only(execution, "cfl")
@@ -270,6 +302,8 @@ def run_dfl(world: WorldSpec, method: MethodSpec,
     _warn_if_checkpoint_ignored(execution, "dfl")
     _warn_if_cadence_ignored(method, "dfl")
     method = _strip_cadence(method)
+    _warn_if_adversary_ignored(method, "dfl")
+    method = _strip_adversary(method)
     if execution.engine == "fleet":
         return _run_baseline_fleet(world, method, execution, "dfl")
     _warn_if_trace_fleet_only(execution, "dfl")
@@ -297,6 +331,8 @@ def run_cloud(world: WorldSpec, method: MethodSpec,
     _warn_if_checkpoint_ignored(execution, "cloud")
     _warn_if_cadence_ignored(method, "cloud")
     method = _strip_cadence(method)
+    _warn_if_adversary_ignored(method, "cloud")
+    method = _strip_adversary(method)
     _warn_if_trace_fleet_only(execution, "cloud")
     cfg = method.to_enfed_config(world)
     cost = world.cost_model

@@ -84,6 +84,26 @@ class RunResult:
         return events
 
     @property
+    def corruption_summary(self) -> Optional[Dict[str, float]]:
+        """Fleet-wide Byzantine roll-up from the normalized trace:
+        total corrupted deliveries and robust-clipped links across every
+        requester's executed rounds.  ``None`` on honest worlds (no
+        ``MethodSpec.adversary`` — absence stays distinguishable from an
+        observed 0, same rule as the RoundEvent fields)."""
+        events = [e for e in self.trace if e.phase == "round"]
+        if not any(e.corrupted is not None or e.clipped is not None
+                   for e in events):
+            return None
+        corrupted = sum(len(e.corrupted or ()) for e in events)
+        clipped = sum(len(e.clipped or ()) for e in events)
+        rounds = len(events)
+        return {"corrupted_links": float(corrupted),
+                "clipped_links": float(clipped),
+                "rounds": float(rounds),
+                "corrupted_per_round": (corrupted / rounds if rounds
+                                        else 0.0)}
+
+    @property
     def timings(self) -> Dict[str, float]:
         """Summed seconds per span name (``Timeline.totals()``); empty
         when no timeline was recorded."""

@@ -27,6 +27,7 @@ from typing import Dict, List, Optional, Union
 
 import numpy as np
 
+from repro.core.adversary import AdversaryConfig
 from repro.core.battery import BatteryState
 from repro.core.cadence import CadenceConfig
 from repro.core.energy import CostModel
@@ -159,6 +160,20 @@ class MethodSpec:
     # no per-device round clock — they warn-and-ignore, and the fleet
     # baselines refuse.  Validation is CadenceConfig's __post_init__.
     cadence: Optional[CadenceConfig] = None
+    # Byzantine-contributor world (None = every contributor honest).  A
+    # PROTOCOL knob like ``faults``/``cadence``: which links corrupt
+    # their delivered wire image each round is counter-based world
+    # state (repro.core.adversary), derived identically by both
+    # engines.  enfed-only: the baselines' loop oracles define their
+    # aggregation semantics without Phase.DELIVER — they warn-and-
+    # ignore, and the fleet baselines refuse.
+    adversary: Optional[AdversaryConfig] = None
+    # Byzantine-robust Phase.AGGREGATE statistic ("none" | "clip" |
+    # "trimmed_mean" | "median" — repro.kernels.robust), and the
+    # staleness decay gamma on the aggregation weights (1.0 = none).
+    # Both are enfed-only protocol knobs like ``adversary``.
+    robust: str = "none"
+    staleness_gamma: float = 1.0
     label: Optional[str] = None          # display/compare key (default: name)
 
     @property
@@ -198,6 +213,9 @@ class MethodSpec:
             compress=self.compress,
             faults=self.faults,
             cadence=self.cadence,
+            adversary=self.adversary,
+            robust=self.robust,
+            staleness_gamma=self.staleness_gamma,
             mobility=world.mobility)
 
 

@@ -34,6 +34,7 @@ from repro.core.federated import (
     cloud_only_baseline,
     cloud_only_config,
 )
+from repro.core.adversary import AdversaryConfig
 from repro.core.cadence import CadenceConfig
 from repro.core.faults import FaultConfig
 from repro.core.fleet import FleetResult, RequesterSpec, run_fleet
@@ -61,6 +62,7 @@ __all__ = [
     # incentives / world
     "NeighborDevice", "Contract", "select_contributors", "participation_mask",
     "make_fleet", "MobilityConfig", "FaultConfig", "CadenceConfig",
+    "AdversaryConfig",
     # EnFed engines + protocol vocabulary
     "EnFedConfig", "EnFedSession", "SessionResult",
     "FleetResult", "RequesterSpec", "run_fleet", "Phase",

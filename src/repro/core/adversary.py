@@ -1,0 +1,277 @@
+"""Byzantine-contributor world: per-round per-link payload corruption —
+shared by BOTH EnFed engines.
+
+The paper assumes honest contributors: every delivered update is the
+sender's true wire image.  A real opportunistic fleet contains devices
+that send corrupted, poisoned, or garbage payloads — *delivered but
+wrong*, which the fault world (:mod:`repro.core.faults`) cannot express.
+This module makes the adversary part of the simulated world, with the
+same design rule as mobility/faults/cadence: whether a delivered payload
+is corrupted — and, for the randomized attack, *what* the corruption is
+— is a closed-form function of ``(seed, round, requester, contributor)``
+— pure counter-based ``jax.random.fold_in`` chains, no carried RNG — so
+the loop engine (host-side, concrete rounds) and the fleet engine
+(traced rounds inside one jit program) derive bit-identical attacks by
+construction, and any round's corruption set can be queried without
+replaying earlier rounds.
+
+Four attack modes, applied to the WIRE image at the protocol's transport
+point (``Phase.COLLECT``/``Phase.DELIVER`` boundary — the loop engine
+corrupts the payload inside ``_collect_update``, the fleet engine
+corrupts the delivered ``(R, N, ·)`` buffer in its round body):
+
+* **signflip** — the payload is negated (gradient-ascent poisoning).
+  int8 wire: the quantized codes negate exactly (codes live in
+  [-127, 127], so no overflow) and the scales pass through.
+* **scale**  — the payload is multiplied by ``scale`` (an amplified
+  update that drags the average).  int8 wire: only the per-tile scales
+  multiply — the codes never re-densify.
+* **noise**  — the payload is REPLACED by counter-keyed garbage of
+  magnitude ``scale`` (a device answering with junk).  Dense wire:
+  ``scale * N(0, 1)`` per coordinate; int8 wire: uniform codes in
+  [-127, 127] with constant per-tile scale ``scale / 127``.
+* **zero**   — the payload (codes AND scales) zeroes out: a free-riding
+  contributor that sends nothing useful while collecting the incentive.
+
+Corruption is transport-level: the contributor's resident wire image is
+NEVER modified — only the copy the requester aggregates this round —
+so a corrupted round leaves no residue in later rounds' deliveries.
+
+Ordering pin (fault x adversary): stale-delivery substitution happens
+FIRST, corruption draws are keyed on the DELIVERING round and applied to
+whatever image is actually delivered.  A stale corrupted image and a
+corrupted stale image therefore cannot diverge between engines — see
+``protocol.py``'s COLLECT/DELIVER notes and the pinning test in
+``tests/test_adversary.py``.
+
+Parity-safety rule (same as mobility/faults/cadence): the corruption
+predicate is an exact integer comparison — the threshold is precomputed
+host-side from the static probability, draws are int32 — so no float
+fusion regime can flip a corruption outcome between engines.  The
+attack *payloads* are either exact elementwise transforms (negate, zero,
+multiply) or counter-keyed generation with identical keys and shapes in
+both engines, hence bit-identical by construction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+# Corruption draws live in [0, _DRAW_MAX); a probability p maps to the
+# threshold int(p * _DRAW_MAX) — identical arithmetic to repro.core.faults.
+_DRAW_MAX = 2**31 - 1
+
+_SALT_BYZ = 0xB7    # per-(round, link) corruption predicate
+_SALT_NOISE = 0xA6  # per-(round, link) noise payload
+
+# The attack vocabulary (static jit argument via the frozen config).
+ATTACKS = ("signflip", "scale", "noise", "zero")
+
+
+@dataclasses.dataclass(frozen=True)
+class AdversaryConfig:
+    """Byzantine-contributor world parameters for one simulated session
+    (frozen/hashable => usable as a static arg of the compiled fleet
+    program, exactly like :class:`repro.core.faults.FaultConfig`).
+
+    ``requester_id`` is the requesting device's id in the adversary
+    hash-space; fleet lanes use ``requester_id + lane`` so concurrent
+    requesters see independent corruption weather.  The default offset
+    keeps adversary-space requester ids clear of contributor ids AND of
+    the mobility/fault/cadence id spaces.
+    """
+
+    p_byzantine: float = 0.0   # per-(round, link) corruption probability
+    attack: str = "signflip"   # one of ATTACKS
+    scale: float = 10.0        # magnitude knob for "scale" / "noise"
+    seed: int = 0              # adversary hash seed
+    requester_id: int = 1 << 23  # requester lane 0's id in adversary space
+
+    def __post_init__(self):
+        # fail fast at CONSTRUCTION — not as silent clean rounds deep
+        # inside the jit program (the satellite rule FaultConfig set)
+        if not 0.0 <= self.p_byzantine <= 1.0:
+            raise ValueError(
+                f"p_byzantine must be within [0, 1] (got {self.p_byzantine})")
+        if self.attack not in ATTACKS:
+            raise ValueError(
+                f"attack must be one of {ATTACKS} (got {self.attack!r})")
+        if self.scale <= 0.0:
+            raise ValueError(
+                f"scale must be > 0 (got {self.scale})")
+
+
+def _threshold(p: float) -> jnp.int32:
+    """The static int32 threshold a probability compiles to."""
+    return jnp.int32(int(min(max(float(p), 0.0), 1.0) * _DRAW_MAX))
+
+
+def _link_draw(seed: int, salt: int, r, requester_id, cand_id):
+    """One int32 draw in [0, _DRAW_MAX) hashed from ``(seed, salt,
+    round, requester, contributor)`` alone — prefix-stable in every
+    argument, traced or concrete."""
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), jnp.uint32(salt))
+    key = jax.random.fold_in(key, jnp.asarray(r, jnp.uint32))
+    key = jax.random.fold_in(key, jnp.asarray(requester_id, jnp.uint32))
+    key = jax.random.fold_in(key, jnp.asarray(cand_id, jnp.uint32))
+    return jax.random.randint(key, (), 0, _DRAW_MAX, jnp.int32)
+
+
+def _noise_key(seed: int, r, requester_id, cand_id):
+    """The PRNG key the "noise" attack payload derives from — the same
+    fold_in chain as the predicate draw under a different salt, so the
+    garbage a corrupted link delivers is itself closed-form world state."""
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), jnp.uint32(_SALT_NOISE))
+    key = jax.random.fold_in(key, jnp.asarray(r, jnp.uint32))
+    key = jax.random.fold_in(key, jnp.asarray(requester_id, jnp.uint32))
+    key = jax.random.fold_in(key, jnp.asarray(cand_id, jnp.uint32))
+    return key
+
+
+def corruption_mask(ac: AdversaryConfig, r, requester_id, cand_ids):
+    """(..., N) bool: which delivered payloads are corrupted at round
+    ``r`` — THE shared derivation of both engines.
+
+    Inputs broadcast like :func:`repro.core.faults.link_outcomes`:
+    ``requester_id`` is scalar or (R,), ``cand_ids`` (N,) or (R, N).
+    ``r`` is the DELIVERING round (the round the requester aggregates
+    the payload, not the round the image was trained) — the fault x
+    adversary ordering pin.
+
+    Whether a link *counts* (contract member, delivered) is the caller's
+    mask — corruption here is pure world state: the draw of a round
+    exists whether or not that link transmitted.
+    """
+    ids = jnp.asarray(cand_ids, jnp.int32)
+    req = jnp.broadcast_to(
+        jnp.asarray(requester_id, jnp.int32)[..., None], ids.shape)
+    thr = _threshold(ac.p_byzantine)
+    draws = jax.vmap(lambda q, c: _link_draw(ac.seed, _SALT_BYZ, r, q, c))(
+        req.reshape(-1), ids.reshape(-1))
+    return (draws < thr).reshape(ids.shape)
+
+
+def noise_vector(ac: AdversaryConfig, r, requester_id, cand_id, length: int):
+    """(length,) fp32 garbage payload of the "noise" attack for ONE link
+    (dense wire format): ``scale * N(0, 1)``, counter-keyed."""
+    key = _noise_key(ac.seed, r, requester_id, cand_id)
+    return jnp.float32(ac.scale) * jax.random.normal(
+        key, (int(length),), jnp.float32)
+
+
+def noise_codes(ac: AdversaryConfig, r, requester_id, cand_id, length: int):
+    """(length,) int8 garbage codes of the "noise" attack for ONE link
+    (int8 wire format): uniform in [-127, 127], counter-keyed.  Pairs
+    with the constant per-tile scale ``scale / 127`` so the dequantized
+    garbage has magnitude ~``scale``."""
+    key = _noise_key(ac.seed, r, requester_id, cand_id)
+    return jax.random.randint(
+        key, (int(length),), -127, 128, jnp.int32).astype(jnp.int8)
+
+
+def noise_scale(ac: AdversaryConfig) -> jnp.float32:
+    """The constant per-tile quantization scale of int8 noise payloads."""
+    return jnp.float32(float(ac.scale) / 127.0)
+
+
+def corrupt_dense(ac: AdversaryConfig, u, corrupt, r, requester_id, cand_id):
+    """Apply the configured attack to ONE dense wire payload.
+
+    ``u`` (L,) fp32, ``corrupt`` scalar bool (from
+    :func:`corruption_mask`).  Returns the payload the requester actually
+    receives; the contributor's resident image is untouched.
+    """
+    u = jnp.asarray(u, jnp.float32)
+    if ac.attack == "signflip":
+        bad = -u
+    elif ac.attack == "scale":
+        bad = jnp.float32(ac.scale) * u
+    elif ac.attack == "zero":
+        bad = jnp.zeros_like(u)
+    else:  # noise
+        bad = noise_vector(ac, r, requester_id, cand_id, u.shape[-1])
+    return jnp.where(corrupt, bad, u)
+
+
+def corrupt_wire(ac: AdversaryConfig, q, scales, corrupt, r, requester_id,
+                 cand_id):
+    """Apply the configured attack to ONE int8 wire payload — codes and
+    per-tile scales, never the densified fp32 vector (the
+    never-re-densify rule).
+
+    ``q`` (Lp,) int8 codes, ``scales`` (Lp / Q_TILE,) fp32 per-tile
+    scales, ``corrupt`` scalar bool.  Returns ``(q', scales')``.
+    """
+    q = jnp.asarray(q, jnp.int8)
+    scales = jnp.asarray(scales, jnp.float32)
+    if ac.attack == "signflip":
+        bad_q, bad_s = -q, scales  # codes in [-127, 127]: exact negation
+    elif ac.attack == "scale":
+        bad_q, bad_s = q, jnp.float32(ac.scale) * scales
+    elif ac.attack == "zero":
+        bad_q, bad_s = jnp.zeros_like(q), jnp.zeros_like(scales)
+    else:  # noise
+        bad_q = noise_codes(ac, r, requester_id, cand_id, q.shape[-1])
+        bad_s = jnp.full_like(scales, noise_scale(ac))
+    return jnp.where(corrupt, bad_q, q), jnp.where(corrupt, bad_s, scales)
+
+
+def corrupt_dense_batched(ac: AdversaryConfig, u, corrupt, r, requester_ids,
+                          cand_ids):
+    """The fleet engine's vectorized :func:`corrupt_dense`.
+
+    ``u`` (R, N, L) fp32 delivered buffer, ``corrupt`` (R, N) bool,
+    ``requester_ids`` (R,) adversary-space lane ids, ``cand_ids`` (N,)
+    or (R, N).  The noise payload vmaps the SAME per-link keys and
+    shapes the loop engine draws, hence bit-identical garbage.
+    """
+    u = jnp.asarray(u, jnp.float32)
+    corrupt = jnp.asarray(corrupt, bool)
+    if ac.attack == "noise":
+        ids = jnp.broadcast_to(jnp.asarray(cand_ids, jnp.int32),
+                               corrupt.shape)
+        req = jnp.broadcast_to(
+            jnp.asarray(requester_ids, jnp.int32)[..., None], corrupt.shape)
+        bad = jax.vmap(
+            lambda q_, c_: noise_vector(ac, r, q_, c_, u.shape[-1]))(
+            req.reshape(-1), ids.reshape(-1)).reshape(u.shape)
+    elif ac.attack == "signflip":
+        bad = -u
+    elif ac.attack == "scale":
+        bad = jnp.float32(ac.scale) * u
+    else:  # zero
+        bad = jnp.zeros_like(u)
+    return jnp.where(corrupt[..., None], bad, u)
+
+
+def corrupt_wire_batched(ac: AdversaryConfig, q, scales, corrupt, r,
+                         requester_ids, cand_ids):
+    """The fleet engine's vectorized :func:`corrupt_wire`.
+
+    ``q`` (R, N, Lp) int8 codes, ``scales`` (R, N, Lp / Q_TILE) fp32,
+    ``corrupt`` (R, N) bool.  Returns ``(q', scales')`` — the codes stay
+    int8-resident throughout (the never-re-densify rule).
+    """
+    q = jnp.asarray(q, jnp.int8)
+    scales = jnp.asarray(scales, jnp.float32)
+    corrupt = jnp.asarray(corrupt, bool)
+    if ac.attack == "noise":
+        ids = jnp.broadcast_to(jnp.asarray(cand_ids, jnp.int32),
+                               corrupt.shape)
+        req = jnp.broadcast_to(
+            jnp.asarray(requester_ids, jnp.int32)[..., None], corrupt.shape)
+        bad_q = jax.vmap(
+            lambda q_, c_: noise_codes(ac, r, q_, c_, q.shape[-1]))(
+            req.reshape(-1), ids.reshape(-1)).reshape(q.shape)
+        bad_s = jnp.full_like(scales, noise_scale(ac))
+    elif ac.attack == "signflip":
+        bad_q, bad_s = -q, scales
+    elif ac.attack == "scale":
+        bad_q, bad_s = q, jnp.float32(ac.scale) * scales
+    else:  # zero
+        bad_q, bad_s = jnp.zeros_like(q), jnp.zeros_like(scales)
+    return (jnp.where(corrupt[..., None], bad_q, q),
+            jnp.where(corrupt[..., None], bad_s, scales))

@@ -206,6 +206,37 @@ def tick_mask(cc: CadenceConfig, t, device_ids, level=None):
     return on
 
 
+def image_lag(cc: CadenceConfig, t, device_ids):
+    """(...,) int32: event steps since each device's wire image was last
+    refreshed, as seen by an aggregate at step ``t`` — the closed-form
+    staleness clock behind ``EnFedConfig.staleness_gamma``.
+
+    A stride-``s`` device with hashed phase ``phi`` ticks on steps where
+    ``(t + phi) % s == 0``; its REFRESH publishes the image the NEXT
+    step consumes, so at step ``t`` the image dates from the latest tick
+    at or before ``t - 1`` and the lag is ``(t - 1 + phi) % s``.  A
+    stride-1 device therefore always shows lag 0 and (with the fault
+    module's +1 for stale delivery) ``gamma == 1`` reproduces today's
+    weights bit-for-bit.
+
+    Deliberately derived from the UNPACED base stride and phase only —
+    the same schedule the refresh gate uses — so the lag is a pure
+    ``(seed, step, device)`` closed form shared verbatim by both
+    engines.  Duty-cycle sleep, transient offline draws and
+    battery-aware pacing can delay the actual refresh beyond this bound;
+    those gates deepen staleness without deepening the *decay*, a
+    documented approximation that keeps the weight schedule
+    state-free.
+    """
+    ids = jnp.asarray(device_ids, jnp.int32)
+    ts = jnp.asarray(t, jnp.int32)
+    stride = speed_stride(cc, ids)
+    phase_draw = jax.vmap(lambda d: _device_draw(cc.seed, _SALT_PHASE, d, 0))(
+        ids.reshape(-1)).reshape(ids.shape)
+    phase = jnp.remainder(phase_draw, stride)
+    return jnp.remainder(ts - jnp.int32(1) + phase, stride)
+
+
 def events_budget(cc: CadenceConfig, max_rounds: int) -> int:
     """The global event-step budget a session loops over (static, host).
 

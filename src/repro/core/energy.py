@@ -278,6 +278,26 @@ class CostModel:
         t_idle = float(idle_steps) * float(idle_step_s)
         return t_idle * self.device.p_idle, t_idle
 
+    def screening_energy(self, *, n_contrib: int, num_params: int):
+        """Cost of ONE round's Byzantine-robust screening pass, split as
+        ``(e_screen, t_screen_s)``.
+
+        Under ``robust != "none"`` (:mod:`repro.kernels.robust`) the
+        requester runs one extra pass over the ``n_contrib x num_params``
+        delivered buffer — order statistics or the norm reduction —
+        before the aggregate.  That compute is never free: it is priced
+        at the aggregation throughput/power of the one device profile
+        and lands post-hoc in the report's ``t_agg``/``e_comp`` (the
+        retry/idle-pricing pattern), in BOTH engines through this one
+        helper.  Screening never drains the simulated battery: the
+        discharge trajectory stays a function of executed rounds only,
+        which keeps battery levels bitwise identical between a defended
+        and an undefended run of the same world — the property the
+        robust-recovery bench comparison relies on.
+        """
+        t_screen = self.t_aggregate(n_contrib, num_params)
+        return t_screen * self.device.p_agg, t_screen
+
     def _energy(self, t: PhaseTimes) -> EnergyReport:
         d = self.device
         e_comp = (t.t_init * d.p_init + (t.t_enc + t.t_dec) * d.p_crypto

@@ -138,6 +138,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import adversary as adversary_mod
 from repro.core import cadence as cadence_mod
 from repro.core import faults as faults_mod
 from repro.core import mobility as mobility_mod
@@ -149,6 +150,7 @@ from repro.core.incentive import (NeighborDevice, candidate_pool,
 from repro.core.rounds import EnFedConfig, SessionResult
 from repro.kernels.fedavg.ops import (fedavg_flat_batched,
                                       fedavg_flat_batched_q8)
+from repro.kernels.robust.ops import robust_aggregate, robust_aggregate_q8
 from repro.kernels.quantize.ops import (dequantize_flat_batched, padded_len,
                                         quantize_flat_batched,
                                         resolve_compress)
@@ -282,12 +284,16 @@ class FleetCarry(NamedTuple):
                               # round executed at | token
     idle_h: jnp.ndarray       # (max_rounds, R) int32 idle-steps-before
                               # trace | token
+    corrupt_h: jnp.ndarray    # (max_rounds, R, N) corrupted-delivery
+                              # mask (adversary worlds) | token
+    clip_h: jnp.ndarray       # (max_rounds, R, N) norm-clipped mask
+                              # (robust != "none") | token
 
 
 def _make_round_fn(task, use_pallas, interpret, do_refresh, max_rounds,
                    max_events, epochs, batch, steps_max, ref_epochs,
                    ref_steps, spec, mob, n_max, strategy, compress, n_params,
-                   method, fc, cc, n_req, n_lanes, arrays):
+                   method, fc, cc, ac, robust, gamma, n_req, n_lanes, arrays):
     """Build the traced per-round body shared by BOTH fleet programs.
 
     :func:`_fleet_program` (the compiled chunked ``while_loop``) and
@@ -315,6 +321,17 @@ def _make_round_fn(task, use_pallas, interpret, do_refresh, max_rounds,
     resident for them to aggregate as-is (the straggler path).  With
     ``cc=None``, ``max_events == max_rounds`` and every lane ticks every
     step, so the traced program is today's lockstep loop bit for bit.
+
+    ``ac`` is the static :class:`repro.core.adversary.AdversaryConfig`
+    (None = honest world): per-link corruption outcomes derive from the
+    same counter-based fold_in discipline as faults/cadence, keyed on
+    the event step, and corrupt the WIRE image at the transport point —
+    after the stale-delivery substitution, per the Phase.DELIVER
+    ordering pin in ``repro.core.protocol``.  ``robust`` selects the
+    Phase.AGGREGATE statistic (``repro.kernels.robust``) and ``gamma``
+    the staleness decay on the aggregation weights
+    (``protocol.decayed_round_weights``); both default to the plain
+    fedavg path bit for bit.
     """
     model, opt = task.model, task._opt
     R, N = n_req, n_lanes
@@ -326,6 +343,9 @@ def _make_round_fn(task, use_pallas, interpret, do_refresh, max_rounds,
     faults_on = (fc is not None) and (protocol.Phase.DELIVER in phases)
     compress_on = compress == "int8"
     cadence_on = cc is not None
+    adversary_on = (ac is not None) and (protocol.Phase.DELIVER in phases)
+    robust_on = robust != "none"
+    decay_on = float(gamma) != 1.0
 
     def _fit_lane(flat_p, get_xy, idx, w):
         """Identical math to SupervisedTask.fit for one device's shard,
@@ -425,7 +445,7 @@ def _make_round_fn(task, use_pallas, interpret, do_refresh, max_rounds,
         (contrib, cscale, live, live_s, last, level, active, stop_code,
          rounds_done, clevel, acc_h, loss_h, bat_h, exec_h, body_h,
          member_h, prev, prev_s, drop_h, retry_h, stale_h, deliver_h,
-         clock, idle, clock_h, idle_h) = state
+         clock, idle, clock_h, idle_h, corrupt_h, clip_h) = state
         # which lanes execute a protocol round at this event step; under
         # cadence the rest idle in place (their whole ACCOUNT/history
         # update is masked out below)
@@ -503,6 +523,59 @@ def _make_round_fn(task, use_pallas, interpret, do_refresh, max_rounds,
         if compress_on:
             src_s = (jnp.where(stale_sel, prev_s, cscale) if faults_on
                      else cscale)
+        if adversary_on:
+            # Byzantine corruption at the transport point: AFTER the
+            # stale substitution (ordering pin, protocol.Phase.DELIVER),
+            # keyed on the delivering event step, applied to the wire
+            # image itself (int8 codes/scales under compress — never
+            # re-densified).  The mask derivation is the shared
+            # counter-based closed form, so the loop oracle's per-link
+            # draws match bit for bit.
+            cmask = adversary_mod.corruption_mask(
+                ac, rr, arrays["areq_ids"], arrays["acand_ids"])
+            if compress_on:
+                src, src_s = adversary_mod.corrupt_wire_batched(
+                    ac, src, src_s, cmask, rr, arrays["areq_ids"],
+                    arrays["acand_ids"])
+                # the quantization padding tail is not part of the model
+                # update: the loop oracle's dense view slices to P before
+                # any robust statistic, so a noise payload's tail codes
+                # must not leak into the fused q8 clip norms.  Honest
+                # tails are already exact zero codes — this multiply is
+                # the identity for them.
+                if P < src.shape[-1]:
+                    src = src * (jnp.arange(src.shape[-1])
+                                 < P).astype(src.dtype)
+            else:
+                src = adversary_mod.corrupt_dense_batched(
+                    ac, src, cmask, rr, arrays["areq_ids"],
+                    arrays["acand_ids"])
+        if decay_on:
+            # staleness-decayed weights (gamma**lag): the stride lag of
+            # each resident image under cadence, +1 for a fault-stale
+            # delivery — closed form, no new carried state; masks are
+            # exact 0/1 factors so applying decay after them is bitwise
+            # identical to the loop engine's decay-then-mask order
+            lag = (cadence_mod.image_lag(cc, rr, arrays["cad_cand_ids"])
+                   if cadence_on else jnp.zeros((R, N), jnp.int32))
+            if faults_on:
+                lag = lag + (delivered & stale).astype(jnp.int32)
+            round_w = protocol.decayed_round_weights(round_w, lag, gamma)
+        if robust_on:
+            # Phase.AGGREGATE hardened: the robust statistic runs on the
+            # SAME masked lane buffer the fedavg kernel would see —
+            # both engines call the one repro.kernels.robust entry, so
+            # the clipped masks are bitwise identical by construction
+            if compress_on:
+                glob, clipped = robust_aggregate_q8(
+                    src, src_s, round_w, method=robust,
+                    use_pallas=use_pallas, interpret=interpret)
+                glob = glob[:, :P]
+            else:
+                glob, clipped = robust_aggregate(
+                    src, round_w, method=robust,
+                    use_pallas=use_pallas, interpret=interpret)
+        elif compress_on:
             glob = fedavg_flat_batched_q8(
                 src, src_s, round_w,
                 use_pallas=use_pallas, interpret=interpret)[:, :P]
@@ -510,6 +583,12 @@ def _make_round_fn(task, use_pallas, interpret, do_refresh, max_rounds,
             glob = fedavg_flat_batched(src, round_w,
                                        use_pallas=use_pallas,
                                        interpret=interpret)
+        if adversary_on:
+            # the delivered-and-corrupted trace row: a corruption draw
+            # only counts when that link actually fed eq. (14)'s buffer
+            agg_mask = (delivered if faults_on
+                        else (member if mobility_on else arrays["asigned"]))
+            corrupted_r = cmask & agg_mask
         if mobility_on or faults_on:
             # nothing fed eq. (14) this round: fall back to own params,
             # exactly like the loop engine's empty-neighborhood case
@@ -709,6 +788,14 @@ def _make_round_fn(task, use_pallas, interpret, do_refresh, max_rounds,
                 deliver_h = put_lane(
                     deliver_h,
                     (delivered & exec_mask[:, None]).astype(jnp.float32))
+            if adversary_on:
+                corrupt_h = put_lane(
+                    corrupt_h,
+                    (corrupted_r & exec_mask[:, None]).astype(jnp.float32))
+            if robust_on:
+                clip_h = put_lane(
+                    clip_h,
+                    (clipped & exec_mask[:, None]).astype(jnp.float32))
         else:
             acc_h = put(acc_h, acc)
             loss_h = put(loss_h, last_loss)
@@ -726,11 +813,18 @@ def _make_round_fn(task, use_pallas, interpret, do_refresh, max_rounds,
                 deliver_h = put(deliver_h,
                                 (delivered
                                  & active[:, None]).astype(jnp.float32))
+            if adversary_on:
+                corrupt_h = put(
+                    corrupt_h,
+                    (corrupted_r & active[:, None]).astype(jnp.float32))
+            if robust_on:
+                clip_h = put(clip_h,
+                             (clipped & active[:, None]).astype(jnp.float32))
         return FleetCarry(contrib, cscale, live, live_s, last, level,
                           next_active, stop_code, rounds_done, clevel, acc_h,
                           loss_h, bat_h, exec_h, body_h, member_h, prev,
                           prev_s, drop_h, retry_h, stale_h, deliver_h,
-                          clock, idle, clock_h, idle_h)
+                          clock, idle, clock_h, idle_h, corrupt_h, clip_h)
 
     # ---- baseline method variants (dfl / cfl) ------------------------------
     # Same scaffolding — flat (R, N, P) state, batched fedavg kernels,
@@ -761,7 +855,7 @@ def _make_round_fn(task, use_pallas, interpret, do_refresh, max_rounds,
             (contrib, cscale, live, live_s, last, level, active, stop_code,
              rounds_done, clevel, acc_h, loss_h, bat_h, exec_h, body_h,
              member_h, prev, prev_s, drop_h, retry_h, stale_h, deliver_h,
-             clock, idle, clock_h, idle_h) = state
+             clock, idle, clock_h, idle_h, corrupt_h, clip_h) = state
 
             # Phase.FIT at every client lane.  The loop oracles seed each
             # client fit with cfg.seed + stride*r + client_index; the
@@ -832,7 +926,8 @@ def _make_round_fn(task, use_pallas, interpret, do_refresh, max_rounds,
                               next_active, stop_code, rounds_done, clevel,
                               acc_h, loss_h, bat_h, exec_h, body_h, member_h,
                               prev, prev_s, drop_h, retry_h, stale_h,
-                              deliver_h, clock, idle, clock_h, idle_h)
+                              deliver_h, clock, idle, clock_h, idle_h,
+                              corrupt_h, clip_h)
 
     def maybe_round(i, carry):
         r0, state = carry
@@ -866,7 +961,7 @@ def _make_round_fn(task, use_pallas, interpret, do_refresh, max_rounds,
 
 
 def _init_state(method, mob, do_refresh, compress, max_rounds, max_events,
-                n_params, fc, cc, contrib_flat, arrays):
+                n_params, fc, cc, ac, robust, contrib_flat, arrays):
     """The :class:`FleetCarry` at round 0 — built HOST-SIDE (eagerly) so
     the checkpoint path can serialize/restore exactly this pytree at
     chunk boundaries (field-named ``.npz`` keys, dtype-strict); the
@@ -960,14 +1055,18 @@ def _init_state(method, mob, do_refresh, compress, max_rounds, max_events,
         clock_h=jnp.zeros((max_rounds, R) if cadence_on else (1, 1),
                           jnp.int32),
         idle_h=jnp.zeros((max_rounds, R) if cadence_on else (1, 1),
-                         jnp.int32))
+                         jnp.int32),
+        corrupt_h=jnp.zeros((max_rounds, R, N) if ac is not None
+                            else (1, 1, 1), jnp.float32),
+        clip_h=jnp.zeros((max_rounds, R, N) if robust != "none"
+                         else (1, 1, 1), jnp.float32))
 
 
 _FLEET_STATICS = ("task", "use_pallas", "interpret", "do_refresh", "chunk",
                   "max_rounds", "max_events", "epochs", "batch", "steps_max",
                   "ref_epochs", "ref_steps", "spec", "mob", "n_max",
                   "strategy", "compress", "n_params", "method", "fc", "cc",
-                  "n_req", "n_lanes")
+                  "ac", "robust", "gamma", "n_req", "n_lanes")
 
 
 @functools.partial(jax.jit, static_argnames=_FLEET_STATICS,
@@ -975,7 +1074,8 @@ _FLEET_STATICS = ("task", "use_pallas", "interpret", "do_refresh", "chunk",
 def _fleet_program(task, use_pallas, interpret, do_refresh, chunk, max_rounds,
                    max_events, epochs, batch, steps_max, ref_epochs,
                    ref_steps, spec, mob, n_max, strategy, compress, n_params,
-                   method, fc, cc, n_req, n_lanes, state, arrays):
+                   method, fc, cc, ac, robust, gamma, n_req, n_lanes, state,
+                   arrays):
     """The whole fleet's Algorithm 1 as one compiled program.
 
     Module-level so the jit cache is shared across ``run_fleet`` calls:
@@ -1008,7 +1108,8 @@ def _fleet_program(task, use_pallas, interpret, do_refresh, chunk, max_rounds,
     maybe_round = _make_round_fn(
         task, use_pallas, interpret, do_refresh, max_rounds, max_events,
         epochs, batch, steps_max, ref_epochs, ref_steps, spec, mob, n_max,
-        strategy, compress, n_params, method, fc, cc, n_req, n_lanes, arrays)
+        strategy, compress, n_params, method, fc, cc, ac, robust, gamma,
+        n_req, n_lanes, arrays)
 
     def while_cond(carry):
         r0, state = carry
@@ -1029,8 +1130,8 @@ def _fleet_program(task, use_pallas, interpret, do_refresh, chunk, max_rounds,
 def _fleet_chunk_program(task, use_pallas, interpret, do_refresh, chunk,
                          max_rounds, max_events, epochs, batch, steps_max,
                          ref_epochs, ref_steps, spec, mob, n_max, strategy,
-                         compress, n_params, method, fc, cc, n_req, n_lanes,
-                         r0, state, arrays):
+                         compress, n_params, method, fc, cc, ac, robust,
+                         gamma, n_req, n_lanes, r0, state, arrays):
     """ONE ``chunk`` of fleet rounds (event steps under cadence), for
     the host-driven checkpoint loop: ``run_fleet(checkpoint_dir=...)``
     calls this per chunk, serializing the returned carry at checkpoint
@@ -1040,7 +1141,8 @@ def _fleet_chunk_program(task, use_pallas, interpret, do_refresh, chunk,
     maybe_round = _make_round_fn(
         task, use_pallas, interpret, do_refresh, max_rounds, max_events,
         epochs, batch, steps_max, ref_epochs, ref_steps, spec, mob, n_max,
-        strategy, compress, n_params, method, fc, cc, n_req, n_lanes, arrays)
+        strategy, compress, n_params, method, fc, cc, ac, robust, gamma,
+        n_req, n_lanes, arrays)
     _, state = jax.lax.fori_loop(0, chunk, maybe_round, (r0, state))
     return state
 
@@ -1159,6 +1261,14 @@ def run_fleet(task, requesters: Sequence[RequesterSpec],
         raise ValueError(
             f"cadence is enfed-only (got method={method!r}) — the "
             "baselines' loop oracles tick on one global round clock")
+    if method != "enfed" and (
+            getattr(cfg, "adversary", None) is not None
+            or getattr(cfg, "robust", "none") != "none"
+            or float(getattr(cfg, "staleness_gamma", 1.0)) != 1.0):
+        raise ValueError(
+            f"adversary/robust/staleness_gamma are enfed-only (got "
+            f"method={method!r}) — the baselines' loop oracles define "
+            "their aggregation semantics without Phase.DELIVER")
     # observability: spans are host-side wall clocks only and never feed
     # back into the program (the telemetry house rule); ``trace`` is the
     # opt-in TraceConfig selecting the profiler hook / hlo_stats
@@ -1437,6 +1547,23 @@ def run_fleet(task, requesters: Sequence[RequesterSpec],
         arrays.update(cad_req_ids=jnp.asarray(cad_req_ids),
                       cad_cand_ids=jnp.asarray(cad_cand_ids),
                       cad_signed=jnp.asarray(cad_signed))
+    ac = getattr(cfg, "adversary", None)
+    if ac is not None:
+        # adversary staging: lane i rolls corruption dice as requester
+        # ``ac.requester_id + i`` (the api loop path hands requester i a
+        # config with exactly that id); links key on the contributors'
+        # REAL device ids — which devices are Byzantine is a property of
+        # the world, observed identically by every session.  ``asigned``
+        # masks padded lanes out of the corrupted trace rows.
+        areq_ids = np.array([ac.requester_id + i for i in range(R)], np.int32)
+        acand_ids = np.zeros((R, N), np.int32)
+        asigned = np.zeros((R, N), bool)
+        for i, cs in enumerate(lane_devs):
+            acand_ids[i, :len(cs)] = [d.device_id for d in cs]
+            asigned[i, :len(cs)] = True
+        arrays.update(areq_ids=jnp.asarray(areq_ids),
+                      acand_ids=jnp.asarray(acand_ids),
+                      asigned=jnp.asarray(asigned))
     shard_bytes = shard_bytes_dense = 0
     gather_bytes = gather_bytes_dense = 0
     index_bytes = int(n_own.nbytes + 4)
@@ -1507,14 +1634,16 @@ def run_fleet(task, requesters: Sequence[RequesterSpec],
     staged = [contrib_flat] + [v for v in arrays.values() if hasattr(v, "nbytes")]
     staged_bytes = int(sum(int(v.nbytes) for v in staged))
 
+    robust = getattr(cfg, "robust", "none")
+    gamma = float(getattr(cfg, "staleness_gamma", 1.0))
     statics = (task, use_pallas, resolve_interpret(interpret), ref_epochs > 0,
                int(round_chunk), cfg.max_rounds, max_events, cfg.epochs,
                cfg.batch_size, steps_max, ref_epochs, ref_steps, ravel_spec,
                mob, cfg.n_max, cfg.strategy if mob is not None else None,
-               wire_compress, P, "enfed", fc, cc, R, N)
+               wire_compress, P, "enfed", fc, cc, ac, robust, gamma, R, N)
     state = _init_state("enfed", mob, ref_epochs > 0, wire_compress,
-                        cfg.max_rounds, max_events, P, fc, cc, contrib_flat,
-                        arrays)
+                        cfg.max_rounds, max_events, P, fc, cc, ac, robust,
+                        contrib_flat, arrays)
     tl.finish(_sp_stage)
     hlo = None
     if trace is not None and getattr(trace, "hlo_stats", False):
@@ -1578,6 +1707,10 @@ def run_fleet(task, requesters: Sequence[RequesterSpec],
         clock_h = np.asarray(state.clock_h)
         idle_h = np.asarray(state.idle_h)
         idle_fin = np.asarray(state.idle)
+    if ac is not None:
+        corrupt_h = np.asarray(state.corrupt_h)
+    if robust != "none":
+        clip_h = np.asarray(state.clip_h)
     rounds_np = np.asarray(state.rounds_done)
     codes_np = np.asarray(state.stop_code)
     level_np = np.asarray(state.level)
@@ -1637,6 +1770,16 @@ def run_fleet(task, requesters: Sequence[RequesterSpec],
                     idle_steps=total_idle_i, idle_step_s=cc.idle_step_s)
                 report.times.t_com += t_idle
                 report.e_comm += e_idle
+        if robust != "none" and r_i:
+            # robust-screening compute priced post-hoc like retry/idle
+            # windows: one scan of the session's lane buffer per
+            # executed round, into the aggregation time/energy terms —
+            # never the simulated battery (so defended and undefended
+            # runs of the same world keep bitwise-equal battery traces)
+            e_scr, t_scr = cost.screening_energy(
+                n_contrib=len(cs), num_params=num_params)
+            report.times.t_agg += r_i * t_scr
+            report.e_comp += r_i * e_scr
         total_e += report.e_tot
         battery = dataclasses.replace(b0, level=float(level_np[i]))
         history = {"accuracy": [float(a) for a in acc_h[:r_i, i]],
@@ -1657,6 +1800,12 @@ def run_fleet(task, requesters: Sequence[RequesterSpec],
         if cc is not None:
             history["round_clock"] = [int(x) for x in clock_h[:r_i, i]]
             history["idle_steps"] = [int(x) for x in idle_h[:r_i, i]]
+        if ac is not None:
+            history["corrupted_mask"] = [corrupt_h[r, i].copy()
+                                         for r in range(r_i)]
+        if robust != "none":
+            history["clipped_mask"] = [clip_h[r, i].copy()
+                                       for r in range(r_i)]
         sessions.append(SessionResult(
             accuracy=history["accuracy"][-1] if history["accuracy"] else 0.0,
             rounds=r_i, n_contributors=len(cs), report=report, battery=battery,
@@ -1671,6 +1820,10 @@ def run_fleet(task, requesters: Sequence[RequesterSpec],
                           deliver=deliver_h)
     if cc is not None:
         fleet_hist.update(round_clock=clock_h, idle_steps=idle_h)
+    if ac is not None:
+        fleet_hist.update(corrupted=corrupt_h)
+    if robust != "none":
+        fleet_hist.update(clipped=clip_h)
     return FleetResult(
         sessions=sessions, rounds=rounds_np, stop_codes=codes_np,
         accuracy=np.array([s.accuracy for s in sessions], np.float32),
@@ -1810,11 +1963,12 @@ def _run_fleet_baseline(task, requesters: Sequence[RequesterSpec], cfg, cost,
     staged_bytes = int(sum(int(v.nbytes) for v in staged))
 
     state0 = _init_state(method, None, False, None, cfg.max_rounds,
-                         cfg.max_rounds, P, None, None, contrib_flat, arrays)
+                         cfg.max_rounds, P, None, None, None, "none",
+                         contrib_flat, arrays)
     statics = (task, use_pallas, resolve_interpret(interpret), False,
                int(round_chunk), cfg.max_rounds, cfg.max_rounds, cfg.epochs,
                cfg.batch_size, steps_max, 0, 1, ravel_spec, None, cfg.n_max,
-               None, None, P, method, None, None, R, N)
+               None, None, P, method, None, None, None, "none", 1.0, R, N)
     tl.finish(_sp_stage)
     hlo = None
     if trace is not None and getattr(trace, "hlo_stats", False):

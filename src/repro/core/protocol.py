@@ -44,8 +44,21 @@ class Phase(enum.Enum):
     DELIVER = "deliver"        # faults: which collected updates actually
     #   arrived this round (drops / bounded retries / stale images;
     #   repro.core.faults.link_outcomes, identical in both engines) —
-    #   the delivered mask feeds AGGREGATE's existing weight-mask path
-    AGGREGATE = "aggregate"    # eq. (14) masked FedAvg
+    #   the delivered mask feeds AGGREGATE's existing weight-mask path.
+    #   Fault x adversary ordering pin (repro.core.adversary): the
+    #   stale-delivery substitution resolves FIRST, then corruption
+    #   applies to whatever image is actually delivered, with its draw
+    #   keyed on the DELIVERING round — a Byzantine contributor poisons
+    #   the bytes leaving its radio this round, whether those bytes are
+    #   its fresh image or the round-(r-1) snapshot.  Both engines
+    #   corrupt at this exact point (loop: inside _collect_update after
+    #   the stale select; fleet: on the delivered buffer after the
+    #   stale_sel where), so the order cannot diverge — pinned by
+    #   tests/test_adversary.py.
+    AGGREGATE = "aggregate"    # eq. (14) masked FedAvg — or, under
+    #   robust != "none", the Byzantine-robust statistic over the same
+    #   masked lane buffer (repro.kernels.robust), with
+    #   staleness-decayed weights (decayed_round_weights below)
     FIT = "fit"                # requester personalizes on its own shard
     SCORE = "score"            # evaluate against the desired accuracy A_A
     ACCOUNT = "account"        # eq. (4)-(7) cost roll-up + battery discharge
@@ -125,3 +138,23 @@ def round_weights(n_contrib: int, strategy=None) -> np.ndarray:
     if strategy is None:
         return np.ones((n_contrib,), np.float32)
     return contributor_round_mask(n_contrib, strategy)
+
+
+def decayed_round_weights(weights, lag, gamma: float):
+    """Staleness-decayed aggregation weights: ``w * gamma**lag``.
+
+    ``weights`` (..., N) fp32, ``lag`` (..., N) int rounds-behind per
+    contributor image (``repro.core.cadence.image_lag`` for the stride
+    lag, +1 for a fault-stale delivery), ``gamma`` the
+    ``EnFedConfig.staleness_gamma`` knob.  The decay keys on the LANE
+    CLOCK's view of the image — a pure closed form, zero new carried
+    state.  One jnp float32 expression shared verbatim by both engines,
+    so the decayed weights (and everything downstream of eq. (14)) are
+    bit-identical by construction.  ``gamma == 1.0`` is the identity and
+    both engines skip the call entirely.
+    """
+    import jax.numpy as jnp
+
+    w = jnp.asarray(weights, jnp.float32)
+    return w * jnp.power(jnp.float32(gamma),
+                         jnp.asarray(lag, jnp.int32).astype(jnp.float32))

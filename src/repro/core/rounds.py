@@ -39,15 +39,18 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core import adversary as adversary_mod
 from repro.core import aggregation, crypto, faults as faults_mod
 from repro.core import cadence as cadence_mod
 from repro.core import mobility, protocol, topology
+from repro.core.adversary import AdversaryConfig
 from repro.core.battery import BatteryState
 from repro.core.cadence import CadenceConfig
 from repro.core.energy import CostModel, EnergyReport, update_wire_bytes
 from repro.core.faults import FaultConfig
 from repro.kernels.quantize.ops import (compress_update, decompress_update,
                                         resolve_compress)
+from repro.kernels.robust.ops import ROBUST_METHODS, robust_aggregate
 from repro.core.incentive import (Contract, NeighborDevice, candidate_pool,
                                   contracts_from_membership,
                                   select_contributors)
@@ -110,11 +113,43 @@ class EnFedConfig:
     # world state like mobility/faults — both engines derive bit-identical
     # tick sets.  None = today's lockstep loop, bit-for-bit.
     cadence: Optional[CadenceConfig] = None
+    # Byzantine-contributor world (repro.core.adversary): when set, every
+    # (round, requester, contributor) link draws a counter-based
+    # corruption outcome and a corrupted link delivers a poisoned WIRE
+    # payload (signflip / scale / noise / zero) instead of the true
+    # image.  Corruption is transport-level — the contributor's resident
+    # state is never modified — and keys on the DELIVERING round, after
+    # any stale-delivery substitution (the fault x adversary ordering
+    # pin).  Counter-based world state like mobility/faults/cadence —
+    # both engines derive bit-identical attacks.  None = honest fleet.
+    adversary: Optional[AdversaryConfig] = None
+    # Byzantine-robust Phase.AGGREGATE (repro.kernels.robust): "none"
+    # keeps eq. (14) fedavg byte-for-byte; "clip" L2-clips contributions
+    # to the masked median norm (and reports which links clipped);
+    # "trimmed_mean" / "median" swap the per-coordinate statistic.  Both
+    # engines call the ONE robust_aggregate entry, so clip masks agree
+    # bitwise.  The screening pass is priced per round through
+    # CostModel.screening_energy — robustness is never free.
+    robust: str = "none"
+    # staleness-decayed aggregation weights (ROADMAP 1b): a contributor
+    # whose delivered image lags `lag` rounds behind the aggregate
+    # (cadence stride/phase lag, +1 for a fault-stale delivery) weighs
+    # gamma**lag into eq. (14).  1.0 (default) = no decay, bit-for-bit
+    # today's weights; 0.0 = stale images drop out entirely.  Zero new
+    # state: the lag is the closed form cadence.image_lag.
+    staleness_gamma: float = 1.0
 
     def __post_init__(self):
         if self.compress not in (None, "int8", "auto"):
             raise ValueError(
                 f"unknown compress mode {self.compress!r} (None|'int8'|'auto')")
+        if self.robust not in ROBUST_METHODS:
+            raise ValueError(
+                f"robust must be one of {ROBUST_METHODS} (got {self.robust!r})")
+        if not 0.0 <= self.staleness_gamma <= 1.0:
+            raise ValueError(
+                f"staleness_gamma must be within [0, 1] "
+                f"(got {self.staleness_gamma})")
 
 
 @dataclasses.dataclass
@@ -255,12 +290,24 @@ class EnFedSession:
                 int(d): self.contributor_states[int(d)]["params"]
                 for d in device_ids}
 
-    def _collect_update(self, device_id: int, stale: bool = False):
-        """Phase.COLLECT: contributor -> (compress) -> (encrypt) -> wire
-        -> (decrypt) -> (decompress).  ``stale`` substitutes the
-        round-(r-1) image snapshotted by :meth:`_snap_prev` — the wire
-        bytes (and therefore the pricing) are unchanged, only the
-        payload lags."""
+    def _collect_update(self, device_id: int, stale: bool = False,
+                        corrupt: bool = False, step: int = 0):
+        """Phase.COLLECT: contributor -> (compress) -> (corrupt) ->
+        (encrypt) -> wire -> (decrypt) -> (decompress).  ``stale``
+        substitutes the round-(r-1) image snapshotted by
+        :meth:`_snap_prev` — the wire bytes (and therefore the pricing)
+        are unchanged, only the payload lags.
+
+        ``corrupt`` applies the adversary's attack to the OUTGOING
+        payload — in wire format under int8 (codes/scales, never a
+        re-densified fp32 vector), keyed on the delivering event
+        ``step``.  Ordering pin (fault x adversary): the stale
+        substitution above runs FIRST, so a Byzantine contributor
+        poisons whatever bytes actually leave its radio this step —
+        stale image or fresh — and the corruption draw keys on the
+        DELIVERING round, never the round the image was trained.  The
+        resident wire/params caches are never modified."""
+        ac = self.cfg.adversary
         params = self.contributor_states[device_id]["params"]
         if stale and self._compress != "int8":
             params = self._prev_params[device_id]
@@ -270,6 +317,9 @@ class EnFedSession:
             # those bytes (CTR preserves length, so model_bytes is the
             # compressed count either way)
             q, s, n = (self._prev_wire if stale else self._wire)[device_id]
+            if corrupt:
+                q, s = adversary_mod.corrupt_wire(
+                    ac, q, s, True, step, ac.requester_id, device_id)
             if not self.cfg.encrypt:
                 return (unflatten_from_vector(decompress_update(q, s, n),
                                               params),
@@ -286,12 +336,44 @@ class EnFedSession:
             return (unflatten_from_vector(decompress_update(qr, sr, n),
                                           params),
                     int(cipher.shape[0]))
-        if not self.cfg.encrypt:
+        if not self.cfg.encrypt and not corrupt:
             return params, tree_bytes(params)
         vec, _ = flatten_to_vector(params)
+        if corrupt:
+            vec = adversary_mod.corrupt_dense(
+                ac, vec, True, step, ac.requester_id, device_id)
+        if not self.cfg.encrypt:
+            return unflatten_from_vector(vec, params), tree_bytes(params)
         cipher = crypto.encrypt_update(vec, self.keys[device_id], self.nonces[device_id])
         plain = crypto.decrypt_update(cipher, self.keys[device_id], self.nonces[device_id])
         return unflatten_from_vector(plain, params), int(cipher.shape[0])
+
+    def _robust_aggregate_full(self, updates, lanes, w_full, template,
+                               use_pallas, interpret):
+        """Phase.AGGREGATE under ``robust != "none"``: stack the
+        delivered updates into the full-lane (1, N, P) buffer (zero rows
+        for undelivered lanes — their weight is 0, and every robust
+        statistic gates activity on w > 0) and run the ONE
+        :func:`repro.kernels.robust.ops.robust_aggregate` entry the
+        fleet engine also calls, so both engines' clip decisions are
+        bitwise identical by construction.
+
+        Returns ``(aggregated pytree, clipped bool row over the full
+        lane set)``.  An all-zero weight row aggregates to the zero
+        vector; the caller substitutes its own params (the fedavg
+        convention)."""
+        n_lanes = int(np.asarray(w_full).shape[0])
+        num_p = tree_size(template)
+        u = np.zeros((1, n_lanes, num_p), np.float32)
+        for k, j in enumerate(lanes):
+            u[0, int(j)] = np.asarray(flatten_to_vector(updates[k])[0],
+                                      np.float32)
+        agg, clipped = robust_aggregate(
+            jnp.asarray(u), jnp.asarray(w_full, jnp.float32)[None, :],
+            method=self.cfg.robust, use_pallas=use_pallas,
+            interpret=interpret)
+        return (unflatten_from_vector(agg[0], template),
+                np.asarray(clipped[0], bool))
 
     def _refresh_contributors(self, contracts: List[Contract],
                               tick: Optional[Dict[int, bool]] = None):
@@ -382,6 +464,12 @@ class EnFedSession:
             else:
                 pay["prev"] = {str(d): jax.tree_util.tree_map(
                     np.asarray, self._prev_params[d]) for d in ids}
+        if cfg.adversary is not None:   # Byzantine world: corruption trail
+            pay["corrupt_h"] = self._hist_pad(history["corrupted_mask"],
+                                              n_rounds, len(ids))
+        if cfg.robust != "none":        # robust aggregation: clip trail
+            pay["clip_h"] = self._hist_pad(history["clipped_mask"],
+                                           n_rounds, len(ids))
         if util_rows is not None:   # mobility world
             n_cand = len(ids)
             pay["clevel"] = np.asarray(level, np.float32)
@@ -425,7 +513,8 @@ class EnFedSession:
         return pay
 
     @staticmethod
-    def _refill_history(history, pay, rounds, faults, cadence=False):
+    def _refill_history(history, pay, rounds, faults, cadence=False,
+                        adversary=False, robust=False):
         history["accuracy"] = [float(v) for v in pay["acc"][:rounds]]
         history["loss"] = [float(v) for v in pay["loss"][:rounds]]
         history["battery"] = [float(v) for v in pay["bat"][:rounds]]
@@ -435,6 +524,12 @@ class EnFedSession:
         if cadence:
             history["round_clock"] = [int(v) for v in pay["clock_h"][:rounds]]
             history["idle_steps"] = [int(v) for v in pay["idle_h"][:rounds]]
+        if adversary:
+            history["corrupted_mask"] = [row.copy()
+                                         for row in pay["corrupt_h"][:rounds]]
+        if robust:
+            history["clipped_mask"] = [row.copy()
+                                       for row in pay["clip_h"][:rounds]]
         if faults:
             history["drops"] = [float(v) for v in pay["drops"][:rounds]]
             history["retries"] = [float(v) for v in pay["retries"][:rounds]]
@@ -501,7 +596,9 @@ class EnFedSession:
         if self.cfg.mobility is not None:
             return self._run_mobility(checkpoint_dir=checkpoint_dir,
                                       checkpoint_every=checkpoint_every,
-                                      resume_from=resume_from, timeline=tl)
+                                      resume_from=resume_from, timeline=tl,
+                                      use_pallas=use_pallas,
+                                      interpret=interpret)
         from repro.checkpoint import save_checkpoint
 
         cfg = self.cfg
@@ -513,9 +610,16 @@ class EnFedSession:
         n_c = len(contracts)
         round_w = protocol.round_weights(n_c, cfg.strategy)
         ids = np.array([c.device_id for c in contracts], np.int32)
+        ac = cfg.adversary
+        robust = cfg.robust
+        gamma = float(cfg.staleness_gamma)
 
         history = {"accuracy": [], "loss": [], "battery": [],
                    "round_executed": []}
+        if ac is not None:
+            history["corrupted_mask"] = []
+        if robust != "none":
+            history["clipped_mask"] = []
         params = None
         rounds = 0
         stop = protocol.STOP_MAX_ROUNDS
@@ -571,7 +675,9 @@ class EnFedSession:
             retry_windows = float(pay["retry_windows"])
             model_bytes = int(pay["model_bytes"])
             self._refill_history(history, pay, rounds, fc is not None,
-                                 cadence=cc is not None)
+                                 cadence=cc is not None,
+                                 adversary=ac is not None,
+                                 robust=robust != "none")
             if cc is not None:
                 t_start = int(pay["t"])
                 idle_run = int(pay["idle_run"])
@@ -594,6 +700,13 @@ class EnFedSession:
                 ctick = np.asarray(cadence_mod.tick_mask(cc, t, ids), bool)
                 tick_map = {int(ids[j]): bool(ctick[j])
                             for j in range(len(ids))}
+            # Byzantine weather for this step: pure world state — the
+            # draw exists whether or not the link transmitted; whether a
+            # corrupted link COUNTS is the delivered mask below.
+            cmask = (np.asarray(adversary_mod.corruption_mask(
+                ac, t, ac.requester_id, ids), bool)
+                if ac is not None else np.zeros((n_c,), bool))
+            stale = np.zeros((n_c,), bool)
             if fc is not None:
                 # Phase.DELIVER: closed-form link outcomes for this step.
                 delivered, attempts, stale = (
@@ -614,29 +727,58 @@ class EnFedSession:
                 updates = []
                 _sp = tl.begin("transport", round=r)
                 for j in lanes:
-                    upd, nbytes = self._collect_update(int(ids[j]),
-                                                       stale=bool(stale[j]))
+                    # ordering pin: stale selects the image FIRST, the
+                    # corruption draw keys on the delivering step t
+                    upd, nbytes = self._collect_update(
+                        int(ids[j]), stale=bool(stale[j]),
+                        corrupt=bool(cmask[j]), step=t)
                     model_bytes = max(model_bytes, nbytes)
                     updates.append(upd)
                 tl.finish(_sp)
                 dcount = len(updates)
-                if updates:
-                    global_params = aggregation.masked_fedavg(
-                        updates, round_w[lanes])
-                else:
-                    global_params = params   # every link failed this round
             else:
+                delivered = np.ones((n_c,), bool)
+                lanes = np.arange(n_c)
                 updates = []
                 _sp = tl.begin("transport", round=r)
-                for c in contracts:
-                    upd, nbytes = self._collect_update(c.device_id)
+                for j, c in enumerate(contracts):
+                    upd, nbytes = self._collect_update(
+                        c.device_id, corrupt=bool(cmask[j]), step=t)
                     model_bytes = max(model_bytes, nbytes)
                     if params is None and not updates:
                         params = upd  # model init from the first received update
                     updates.append(upd)
                 tl.finish(_sp)
-                # Phase.AGGREGATE (eq. 14) then Phase.FIT on own data
-                global_params = aggregation.masked_fedavg(updates, round_w)
+            if ac is not None:
+                history["corrupted_mask"].append(
+                    (cmask & delivered).astype(np.float32))
+            # staleness-decayed weights (gamma == 1.0: skipped, the
+            # weights below are byte-for-byte today's round_w)
+            w_eff = round_w
+            if gamma < 1.0:
+                lag = (np.asarray(cadence_mod.image_lag(cc, t, ids),
+                                  np.int64)
+                       if cc is not None else np.zeros((n_c,), np.int64))
+                lag = lag + (delivered & stale).astype(np.int64)
+                w_eff = np.asarray(protocol.decayed_round_weights(
+                    round_w, lag, gamma), np.float32)
+            # Phase.AGGREGATE (eq. 14) — or the Byzantine-robust
+            # statistic over the full lane buffer (the ONE entry the
+            # fleet engine also calls, so clip masks agree bitwise)
+            if robust != "none":
+                template = params if params is not None else updates[0]
+                global_params, clipped = self._robust_aggregate_full(
+                    updates, lanes,
+                    w_eff * delivered.astype(np.float32), template,
+                    use_pallas, interpret)
+                history["clipped_mask"].append(clipped.astype(np.float32))
+                if not updates:
+                    global_params = params  # every link failed this round
+            elif updates:
+                global_params = aggregation.masked_fedavg(
+                    updates, w_eff[lanes])
+            else:
+                global_params = params   # every link failed this round
             t0 = time.perf_counter()
             with tl.span("fit", round=r):
                 params, losses = self.task.fit(global_params, self.own_train,
@@ -700,6 +842,15 @@ class EnFedSession:
         if fc is not None and retry_windows:
             report.times.t_com += retry_windows * t_retry
             report.e_comm += retry_windows * e_rx_retry
+        if robust != "none" and rounds:
+            # robustness is never free: every executed round ran one
+            # screening pass over the full N x P lane buffer, priced
+            # through the ONE shared helper (never drains the simulated
+            # battery — see CostModel.screening_energy)
+            e_scr, t_scr = self.cost.screening_energy(
+                n_contrib=n_c, num_params=num_params)
+            report.times.t_agg += rounds * t_scr
+            report.e_comp += rounds * e_scr
         if cc is not None:
             # idle/duty-cycle windows priced through the ONE shared helper
             # (never drains the simulated battery — a sleeping radio costs
@@ -720,7 +871,9 @@ class EnFedSession:
     def _run_mobility(self, checkpoint_dir: Optional[str] = None,
                       checkpoint_every: int = 0,
                       resume_from: Optional[str] = None,
-                      timeline: Optional[Timeline] = None) -> SessionResult:
+                      timeline: Optional[Timeline] = None,
+                      use_pallas: bool = True,
+                      interpret: Optional[bool] = None) -> SessionResult:
         """The churn-aware session loop: Phase.RENEGOTIATE runs every
         round — contributors leave when they walk out of radio range or
         hit the battery floor, in-range arrivals are signed, and a
@@ -786,6 +939,13 @@ class EnFedSession:
         history = {"accuracy": [], "loss": [], "battery": [],
                    "round_executed": [],
                    "members": [], "member_mask": [], "contracts": []}
+        ac = cfg.adversary
+        robust = cfg.robust
+        gamma = float(cfg.staleness_gamma)
+        if ac is not None:
+            history["corrupted_mask"] = []
+        if robust != "none":
+            history["clipped_mask"] = []
         util_rows: List[np.ndarray] = []
         rounds = 0
         stop = protocol.STOP_MAX_ROUNDS
@@ -822,7 +982,9 @@ class EnFedSession:
             retry_windows = float(pay["retry_windows"])
             level = np.asarray(pay["clevel"], np.float32)
             self._refill_history(history, pay, rounds, fc is not None,
-                                 cadence=cc is not None)
+                                 cadence=cc is not None,
+                                 adversary=ac is not None,
+                                 robust=robust != "none")
             if cc is not None:
                 t_start = int(pay["t"])
                 idle_run = int(pay["idle_run"])
@@ -873,6 +1035,12 @@ class EnFedSession:
             # fp32-identical to the fleet kernel's full-lane masked
             # reduction).  Under faults only the DELIVERED members feed
             # eq. (14); drops cost the round without contributing.
+            # Byzantine weather for this step (pure world state; whether
+            # a corrupted link COUNTS is the member/delivered mask below)
+            cmask = (np.asarray(adversary_mod.corruption_mask(
+                ac, t, ac.requester_id, ids), bool)
+                if ac is not None else np.zeros((n_cand,), bool))
+            stale = np.zeros((n_cand,), bool)
             if fc is not None:
                 delivered, attempts, stale = (
                     np.asarray(v) for v in faults_mod.link_outcomes(
@@ -887,16 +1055,37 @@ class EnFedSession:
                 agg_mask = delivered
             else:
                 agg_mask = member
+            if ac is not None:
+                history["corrupted_mask"].append(
+                    (cmask & agg_mask).astype(np.float32))
+            # staleness-decayed weights (gamma == 1.0: skipped)
+            w_eff = round_w
+            if gamma < 1.0:
+                lag = (np.asarray(cadence_mod.image_lag(cc, t, ids),
+                                  np.int64)
+                       if cc is not None else np.zeros((n_cand,), np.int64))
+                lag = lag + (agg_mask & stale).astype(np.int64)
+                w_eff = np.asarray(protocol.decayed_round_weights(
+                    round_w, lag, gamma), np.float32)
             dcount = int(agg_mask.sum())
+            lanes = np.nonzero(agg_mask)[0]
+            updates = []
             if dcount > 0:
-                lanes = np.nonzero(agg_mask)[0]
                 with tl.span("transport", round=r):
                     updates = [self._collect_update(
-                        int(ids[j]),
-                        stale=bool(stale[j]) if fc is not None else False)[0]
+                        int(ids[j]), stale=bool(stale[j]),
+                        corrupt=bool(cmask[j]), step=t)[0]
                         for j in lanes]
+            if robust != "none":
+                global_params, clipped = self._robust_aggregate_full(
+                    updates, lanes, w_eff * agg_mask.astype(np.float32),
+                    params, use_pallas, interpret)
+                history["clipped_mask"].append(clipped.astype(np.float32))
+                if dcount == 0:
+                    global_params = params  # alone this round: keep training
+            elif dcount > 0:
                 global_params = aggregation.masked_fedavg(
-                    updates, round_w[lanes])
+                    updates, w_eff[lanes])
             else:
                 global_params = params   # alone this round: keep training
 
@@ -994,6 +1183,14 @@ class EnFedSession:
         if fc is not None and retry_windows:
             report.times.t_com += retry_windows * float(t_retry)
             report.e_comm += retry_windows * float(e_rx_retry)
+        if robust != "none" and rounds:
+            # one screening pass over the full candidate-lane buffer per
+            # executed round (the robust kernels scan every lane, active
+            # or not) — priced, never free, never battery-draining
+            e_scr, t_scr = self.cost.screening_energy(
+                n_contrib=n_cand, num_params=num_params)
+            report.times.t_agg += rounds * t_scr
+            report.e_comp += rounds * e_scr
         if cc is not None:
             total_idle = int(sum(history["idle_steps"])) + idle_run
             if total_idle:

@@ -1,0 +1,209 @@
+"""Public ops: Byzantine-robust aggregation over the flat round state.
+
+``robust_aggregate`` / ``robust_aggregate_q8`` are the ONE aggregation
+entry both engines call when ``EnFedConfig.robust != "none"`` — the loop
+engine on its (1, N, P) stacked round, the fleet engine on the whole
+(R, N, P) buffer — so every float op and every clip decision runs
+through identical code and the engines' ``clipped`` masks agree bitwise
+by construction (row-wise arithmetic is independent of R-tiling).
+
+Methods:
+
+* ``"trimmed_mean"`` — per-coordinate weighted trimmed mean (drop the
+  extreme active instance at each end); the workhorse defense against
+  signflip/scale poisoning.
+* ``"median"``       — per-coordinate masked median (weights gate
+  activity only); the classic high-breakdown statistic.
+* ``"clip"``         — per-contributor L2 norm clip to the masked
+  median norm ``tau``: contribution ``j`` scales by
+  ``min(1, tau / ||u_j||)``; implemented as the existing fedavg kernel
+  on rescaled weights plus an exact per-requester denominator
+  correction, so only the small (R, N) norm reduction is new work.
+  Returns the ``clipped`` mask (which active contributors exceeded
+  ``tau``) for the history/telemetry trail.
+
+The q8 twins run the SAME post-dequant arithmetic fused over the int8
+wire buffer (never re-densified), so dense-on-dequantized and fused-q8
+paths are bit-identical — the property the loop/fleet parity tests pin.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.fedavg.ops import (fedavg_flat_batched,
+                                      fedavg_flat_batched_q8)
+from repro.kernels.robust.kernel import (median_batched_pallas,
+                                         median_batched_q8_pallas,
+                                         sqnorm_batched_pallas,
+                                         sqnorm_batched_q8_pallas,
+                                         trimmed_mean_batched_pallas,
+                                         trimmed_mean_batched_q8_pallas)
+from repro.kernels.robust.ref import (median_batched_q8_ref,
+                                      median_batched_ref,
+                                      sqnorm_batched_q8_ref,
+                                      sqnorm_batched_ref,
+                                      trimmed_mean_batched_q8_ref,
+                                      trimmed_mean_batched_ref)
+
+# The robust-aggregation vocabulary ("none" = the plain fedavg path,
+# byte-for-byte untouched — engines skip this module entirely).
+ROBUST_METHODS = ("none", "clip", "trimmed_mean", "median")
+
+
+def trimmed_mean_flat_batched(updates, weights, *, use_pallas: bool = True,
+                              interpret=None):
+    """updates: (R, N, L); weights: (R, N) -> (R, L) fp32."""
+    if use_pallas:
+        return trimmed_mean_batched_pallas(updates, weights,
+                                           interpret=interpret)
+    return trimmed_mean_batched_ref(updates, weights)
+
+
+def trimmed_mean_flat_batched_q8(q, scales, weights, *,
+                                 use_pallas: bool = True, interpret=None):
+    """q: (R, N, Lp) int8; scales: (R, N, Lp/TILE); weights: (R, N)."""
+    if use_pallas:
+        return trimmed_mean_batched_q8_pallas(q, scales, weights,
+                                              interpret=interpret)
+    return trimmed_mean_batched_q8_ref(q, scales, weights)
+
+
+def median_flat_batched(updates, weights, *, use_pallas: bool = True,
+                        interpret=None):
+    """updates: (R, N, L); weights: (R, N) -> (R, L) fp32."""
+    if use_pallas:
+        return median_batched_pallas(updates, weights, interpret=interpret)
+    return median_batched_ref(updates, weights)
+
+
+def median_flat_batched_q8(q, scales, weights, *, use_pallas: bool = True,
+                           interpret=None):
+    """q: (R, N, Lp) int8; scales: (R, N, Lp/TILE); weights: (R, N)."""
+    if use_pallas:
+        return median_batched_q8_pallas(q, scales, weights,
+                                        interpret=interpret)
+    return median_batched_q8_ref(q, scales, weights)
+
+
+def l2norm_flat_batched(updates, *, use_pallas: bool = True, interpret=None):
+    """updates: (R, N, L) -> (R, N) fp32 L2 norms (clip screening)."""
+    if use_pallas:
+        sq = sqnorm_batched_pallas(updates, interpret=interpret)
+    else:
+        sq = sqnorm_batched_ref(updates)
+    return jnp.sqrt(sq)
+
+
+def l2norm_flat_batched_q8(q, scales, *, use_pallas: bool = True,
+                           interpret=None):
+    """q: (R, N, Lp) int8; scales: (R, N, Lp/TILE) -> (R, N) fp32 norms."""
+    if use_pallas:
+        sq = sqnorm_batched_q8_pallas(q, scales, interpret=interpret)
+    else:
+        sq = sqnorm_batched_q8_ref(q, scales)
+    return jnp.sqrt(sq)
+
+
+def _masked_median_1d(values, active):
+    """values, active: (R, N) -> (R,) masked median over active entries
+    (inf for empty rows — callers' downstream ``min(1, tau/...)`` then
+    clips nothing, matching the all-masked zero-aggregate convention)."""
+    m = jnp.sum(active.astype(jnp.int32), axis=1)
+    srt = jnp.sort(jnp.where(active, values.astype(jnp.float32), jnp.inf),
+                   axis=1)
+    lo = jnp.maximum((m - 1) // 2, 0)[:, None]
+    hi = jnp.maximum(m // 2, 0)[:, None]
+    vlo = jnp.take_along_axis(srt, lo, axis=1)[:, 0]
+    vhi = jnp.take_along_axis(srt, hi, axis=1)[:, 0]
+    return 0.5 * (vlo + vhi)
+
+
+def clip_factors(norms, weights):
+    """norms, weights: (R, N) -> ``(c, clipped, tau)``.
+
+    ``tau`` (R,) is the masked median norm of the active contributors,
+    ``c`` (R, N) the per-contributor clip factor ``min(1, tau/norm)``
+    (1 where inactive), ``clipped`` (R, N) bool the active contributors
+    whose norm strictly exceeds ``tau``.  The median-norm threshold is
+    self-calibrating — no new magnitude knob — and by construction at
+    most half the active set can be clipped, so an honest majority
+    anchors the scale.
+    """
+    w = jnp.asarray(weights, jnp.float32)
+    norms = jnp.asarray(norms, jnp.float32)
+    active = w > 0.0
+    tau = _masked_median_1d(norms, active)
+    c = jnp.where(active,
+                  jnp.minimum(1.0, tau[:, None]
+                              / jnp.maximum(norms, 1e-12)),
+                  1.0)
+    clipped = active & (norms > tau[:, None])
+    return c, clipped, tau
+
+
+def _clip_combine(raw, weights, c):
+    """Exact denominator correction turning ``fedavg(u, w*c)`` into
+    ``sum(w*c*u) / sum(w)`` — norm-clip rescales contributions, never
+    the normalization mass."""
+    w = jnp.asarray(weights, jnp.float32)
+    s_clip = jnp.maximum(jnp.sum(w * c, axis=1), 1e-9)
+    s_all = jnp.maximum(jnp.sum(w, axis=1), 1e-9)
+    return raw * (s_clip / s_all)[:, None]
+
+
+def robust_aggregate(updates, weights, *, method: str,
+                     use_pallas: bool = True, interpret=None):
+    """updates: (R, N, L); weights: (R, N) -> ``(agg, clipped)``.
+
+    ``agg`` (R, L) fp32 robust aggregate; ``clipped`` (R, N) bool for
+    ``method="clip"``, else an all-false mask (trim/median have no
+    per-contributor verdict — the statistic decides per coordinate).
+    All-zero weight rows return zero vectors (the fedavg convention);
+    callers substitute the session's previous params.
+    """
+    w = jnp.asarray(weights, jnp.float32)
+    if method == "trimmed_mean":
+        agg = trimmed_mean_flat_batched(updates, w, use_pallas=use_pallas,
+                                        interpret=interpret)
+        return agg, jnp.zeros(w.shape, bool)
+    if method == "median":
+        agg = median_flat_batched(updates, w, use_pallas=use_pallas,
+                                  interpret=interpret)
+        return agg, jnp.zeros(w.shape, bool)
+    if method == "clip":
+        norms = l2norm_flat_batched(updates, use_pallas=use_pallas,
+                                    interpret=interpret)
+        c, clipped, _ = clip_factors(norms, w)
+        raw = fedavg_flat_batched(updates, w * c, use_pallas=use_pallas,
+                                  interpret=interpret)
+        return _clip_combine(raw, w, c), clipped
+    raise ValueError(
+        f"robust method must be one of {ROBUST_METHODS[1:]} (got {method!r})")
+
+
+def robust_aggregate_q8(q, scales, weights, *, method: str,
+                        use_pallas: bool = True, interpret=None):
+    """q: (R, N, Lp) int8; scales: (R, N, Lp/TILE); weights: (R, N) ->
+    ``(agg, clipped)`` with ``agg`` (R, Lp) fp32 — the fused-dequant
+    twin of :func:`robust_aggregate`, arithmetic bit-identical to the
+    dense path on the dequantized buffer."""
+    w = jnp.asarray(weights, jnp.float32)
+    if method == "trimmed_mean":
+        agg = trimmed_mean_flat_batched_q8(q, scales, w,
+                                           use_pallas=use_pallas,
+                                           interpret=interpret)
+        return agg, jnp.zeros(w.shape, bool)
+    if method == "median":
+        agg = median_flat_batched_q8(q, scales, w, use_pallas=use_pallas,
+                                     interpret=interpret)
+        return agg, jnp.zeros(w.shape, bool)
+    if method == "clip":
+        norms = l2norm_flat_batched_q8(q, scales, use_pallas=use_pallas,
+                                       interpret=interpret)
+        c, clipped, _ = clip_factors(norms, w)
+        raw = fedavg_flat_batched_q8(q, scales, w * c, use_pallas=use_pallas,
+                                     interpret=interpret)
+        return _clip_combine(raw, w, c), clipped
+    raise ValueError(
+        f"robust method must be one of {ROBUST_METHODS[1:]} (got {method!r})")

@@ -1,0 +1,90 @@
+"""Pure-jnp oracles for the Byzantine-robust aggregation kernels.
+
+Independent formulations of the same statistics — ``jnp.sort`` /
+``argmax`` / ``take_along_axis`` instead of the kernels' comparison
+networks and one-hot selections — so the interpret-equivalence tests in
+``tests/test_robust_kernels.py`` actually cross-check two derivations.
+Tie-break semantics match the kernels exactly: the trimmed mean drops
+the FIRST max/min instance (``jnp.argmax``/``argmin`` return the first
+index on ties, as does the kernels' min-index-of-one-hot trick).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _dequant(q, scales):
+    """Exact wire inverse ``q * scale`` over per-tile scales."""
+    r, n, lp = q.shape
+    tile = lp // scales.shape[-1]
+    return (q.astype(jnp.float32).reshape(r, n, -1, tile)
+            * scales[..., None]).reshape(r, n, lp)
+
+
+def trimmed_mean_batched_ref(updates, weights):
+    """updates: (R, N, L); weights: (R, N) -> (R, L) fp32.
+
+    Per-coordinate weighted trimmed mean over the active (w > 0)
+    contributors: the single largest and single smallest active instance
+    drop out (first instance on value ties), the rest weighted-average;
+    <= 2 active falls back to the plain weighted mean; 0 active -> 0.
+    """
+    u = updates.astype(jnp.float32)
+    w = weights.astype(jnp.float32)
+    n = u.shape[1]
+    act = (w > 0.0)[:, :, None]
+    wb = jnp.where(act, w[:, :, None], 0.0)
+    m3 = jnp.sum(act.astype(jnp.int32), axis=1, keepdims=True)
+    n_idx = jnp.arange(n, dtype=jnp.int32)[None, :, None]
+    amax = jnp.argmax(jnp.where(act, u, -jnp.inf), axis=1, keepdims=True)
+    one_max = n_idx == amax
+    amin = jnp.argmin(jnp.where(act & ~one_max, u, jnp.inf), axis=1,
+                      keepdims=True)
+    one_min = n_idx == amin
+    w_eff = jnp.where(one_max | one_min, 0.0, wb)
+    w_use = jnp.where(m3 > 2, w_eff, wb)
+    num = jnp.sum(w_use * jnp.where(act, u, 0.0), axis=1)
+    den = jnp.maximum(jnp.sum(w_use, axis=1), 1e-9)
+    return num / den
+
+
+def trimmed_mean_batched_q8_ref(q, scales, weights):
+    """Dequantize (exact ``q * scale``) then the dense trimmed mean."""
+    return trimmed_mean_batched_ref(_dequant(q, scales), weights)
+
+
+def median_batched_ref(updates, weights):
+    """updates: (R, N, L); weights: (R, N) -> (R, L) fp32.
+
+    Per-coordinate masked median over the active contributors (weights
+    gate activity only; mean of the two middles for even counts);
+    0 active -> 0.
+    """
+    u = updates.astype(jnp.float32)
+    w = weights.astype(jnp.float32)
+    act = (w > 0.0)[:, :, None]
+    m = jnp.sum((w > 0.0).astype(jnp.int32), axis=1)       # (R,)
+    srt = jnp.sort(jnp.where(act, u, jnp.inf), axis=1)
+    lo = jnp.maximum((m - 1) // 2, 0)[:, None, None]
+    hi = jnp.maximum(m // 2, 0)[:, None, None]
+    vlo = jnp.take_along_axis(srt, lo, axis=1)[:, 0, :]
+    vhi = jnp.take_along_axis(srt, hi, axis=1)[:, 0, :]
+    med = 0.5 * (vlo + vhi)
+    return jnp.where((m > 0)[:, None], med, 0.0)
+
+
+def median_batched_q8_ref(q, scales, weights):
+    """Dequantize (exact ``q * scale``) then the dense median."""
+    return median_batched_ref(_dequant(q, scales), weights)
+
+
+def sqnorm_batched_ref(updates):
+    """updates: (R, N, L) -> (R, N) fp32 squared L2 norms."""
+    u = updates.astype(jnp.float32)
+    return jnp.sum(u * u, axis=-1)
+
+
+def sqnorm_batched_q8_ref(q, scales):
+    """Dequantize (exact ``q * scale``) then the dense squared norms."""
+    return sqnorm_batched_ref(_dequant(q, scales))

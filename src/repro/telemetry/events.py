@@ -68,6 +68,14 @@ class RoundEvent:
     clock: Optional[int] = None   # global event step this round ran at
     idle: Optional[float] = None  # idle event steps since the previous
                                   # executed round
+    # Byzantine observability (repro.core.adversary / kernels.robust;
+    # None = honest world / fedavg aggregation).  Index sets like
+    # member_set/delivered, mapped from the corrupted_mask/clipped_mask
+    # history rows — same house rule, same padding erasure.
+    corrupted: Optional[Tuple[int, ...]] = None  # lanes whose delivered
+                                                 # image was corrupted
+    clipped: Optional[Tuple[int, ...]] = None    # lanes the robust
+                                                 # aggregator norm-clipped
 
 
 # name -> (allowed value types, allows None).  bool before int: a bool IS
@@ -91,6 +99,8 @@ ROUND_EVENT_FIELDS: Dict[str, tuple] = {
     "stop_reason": ((str,), True),
     "clock": ((int,), True),
     "idle": ((float,), True),
+    "corrupted": ((tuple,), True),
+    "clipped": ((tuple,), True),
 }
 
 # Fields compared exactly across engines; the rest are float metrics
@@ -98,7 +108,8 @@ ROUND_EVENT_FIELDS: Dict[str, tuple] = {
 # exact by construction (counter-based cadence), so any drift is a bug.
 _EXACT_FIELDS = ("round", "requester", "phase", "executed", "members",
                  "member_set", "delivered", "drops", "retries", "stale",
-                 "wire_bytes", "stop_reason", "clock")
+                 "wire_bytes", "stop_reason", "clock", "corrupted",
+                 "clipped")
 
 
 def _mask_to_set(row) -> Tuple[int, ...]:
@@ -128,6 +139,8 @@ def session_events(session, *, requester: int = 0) -> List[RoundEvent]:
     stale = history.get("stale")
     clock_h = history.get("round_clock")
     idle_h = history.get("idle_steps")
+    corrupted_mask = history.get("corrupted_mask")
+    clipped_mask = history.get("clipped_mask")
     model_bytes = int(getattr(session, "model_bytes", 0) or 0)
     capacity = (float(session.battery.capacity_j)
                 if getattr(session, "battery", None) is not None else None)
@@ -171,7 +184,11 @@ def session_events(session, *, requester: int = 0) -> List[RoundEvent]:
             wire_bytes=model_bytes * n_recv, energy_j=energy,
             stop_reason=None,
             clock=int(clock_h[r]) if clock_h is not None else None,
-            idle=float(idle_h[r]) if idle_h is not None else None))
+            idle=float(idle_h[r]) if idle_h is not None else None,
+            corrupted=(_mask_to_set(corrupted_mask[r])
+                       if corrupted_mask is not None else None),
+            clipped=(_mask_to_set(clipped_mask[r])
+                     if clipped_mask is not None else None)))
     events.append(RoundEvent(
         round=rounds, requester=requester, phase="stop", executed=True,
         members=None, member_set=None, delivered=None,

@@ -1,0 +1,387 @@
+"""Byzantine-contributor world (repro.core.adversary): engine parity,
+robust aggregation, and the fault x adversary ordering pin.
+
+Corruption is WORLD state — a closed-form function of (seed, round,
+requester, contributor) — so the loop engine (host-side, concrete
+rounds) and the fleet engine (traced rounds inside one jit program)
+must derive bit-identical attacks: the same corrupted links, the same
+garbage payloads, the same robust-clip verdicts, the same screening
+energy through the one CostModel.
+"""
+
+import copy
+
+import numpy as np
+import pytest
+from jax.flatten_util import ravel_pytree
+
+from repro.core import (AdversaryConfig, CadenceConfig, EnFedConfig,
+                        EnFedSession, FaultConfig, MobilityConfig,
+                        RequesterSpec, run_fleet)
+from repro.core import adversary as adversary_mod
+from repro.core.adversary import corruption_mask, corrupt_dense, corrupt_wire
+from repro.core.battery import BatteryState
+from repro.core.protocol import decayed_round_weights
+
+from test_fleet_engine import BATCH, _build
+
+# fires corruptions every round of the tiny 4-round problem without
+# drowning the honest majority (3 contributors)
+AC = AdversaryConfig(p_byzantine=0.5, attack="signflip", seed=7)
+FC = FaultConfig(p_drop=0.6, p_stale=0.4, max_retries=1, release_after=2,
+                 seed=3)
+MOB = MobilityConfig(arena_m=120.0, radio_range_m=60.0, leg_rounds=2, seed=5)
+CAD = CadenceConfig(n_speed_classes=2, seed=5)
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return _build()
+
+
+def _cfg(**kw):
+    base = dict(desired_accuracy=0.99, max_rounds=4, epochs=1,
+                batch_size=BATCH, encrypt=False,
+                contributor_refresh_epochs=1)
+    base.update(kw)
+    return EnFedConfig(**base)
+
+
+def _run_both(problem, cfg):
+    task, own_train, own_test, fleet, states = problem
+    loop = EnFedSession(task, own_train, own_test, fleet,
+                        copy.deepcopy(states), cfg,
+                        battery=BatteryState()).run()
+    spec = RequesterSpec(own_train=own_train, own_test=own_test,
+                         neighborhood=fleet,
+                         contributor_states=copy.deepcopy(states),
+                         battery=BatteryState())
+    fl = run_fleet(task, [spec], cfg).sessions[0]
+    return loop, fl
+
+
+def _assert_mask_parity(loop, fl, key):
+    """Bitwise mask equality across engines, padded fleet lanes all-zero."""
+    lm = np.stack(loop.history_raw[key])
+    fm = np.stack(fl.history_raw[key])
+    np.testing.assert_array_equal(fm[:, :lm.shape[1]], lm, err_msg=key)
+    assert not fm[:, lm.shape[1]:].any(), f"{key}: padded lanes flagged"
+
+
+def _assert_adv_parity(loop, fl, *, robust="none"):
+    assert fl.rounds == loop.rounds
+    assert fl.stop_reason == loop.stop_reason
+    # the corruption trace is exact integer world state: bitwise equality
+    _assert_mask_parity(loop, fl, "corrupted_mask")
+    if robust != "none":
+        _assert_mask_parity(loop, fl, "clipped_mask")
+    np.testing.assert_allclose(fl.history_raw["battery"],
+                               loop.history_raw["battery"],
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(fl.history_raw["accuracy"],
+                               loop.history_raw["accuracy"],
+                               rtol=1e-5, atol=1e-6)
+    lv, _ = ravel_pytree(loop.params)
+    fv, _ = ravel_pytree(fl.params)
+    np.testing.assert_allclose(np.asarray(fv), np.asarray(lv),
+                               rtol=1e-4, atol=1e-5)
+    # screening pricing lands identically in both t_agg roll-ups
+    assert fl.report.times.t_agg == pytest.approx(loop.report.times.t_agg,
+                                                  rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# config validation (fail fast at construction, not as NaNs mid-program)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kw", [
+    dict(p_byzantine=-0.1), dict(p_byzantine=1.5),
+    dict(attack="gradient_ascent"), dict(scale=0.0), dict(scale=-2.0),
+])
+def test_adversary_config_validation(kw):
+    with pytest.raises(ValueError):
+        AdversaryConfig(**kw)
+
+
+def test_robust_vocabulary_rejected_early(problem):
+    with pytest.raises(ValueError):
+        _cfg(robust="krum")
+
+
+# ---------------------------------------------------------------------------
+# world-state semantics
+# ---------------------------------------------------------------------------
+
+
+def test_corruption_mask_deterministic_and_counterbased():
+    ac = AdversaryConfig(p_byzantine=0.5, seed=9)
+    ids = np.arange(64, dtype=np.int32)
+    m1 = np.asarray(corruption_mask(ac, 4, ac.requester_id, ids))
+    m2 = np.asarray(corruption_mask(ac, 4, ac.requester_id, ids))
+    np.testing.assert_array_equal(m1, m2)  # pure function of the counter
+    assert 0 < m1.sum() < len(ids)         # p=0.5 actually splits the links
+    # other rounds and other requesters see independent corruption weather
+    m3 = np.asarray(corruption_mask(ac, 5, ac.requester_id, ids))
+    m4 = np.asarray(corruption_mask(ac, 4, ac.requester_id + 1, ids))
+    assert not np.array_equal(m1, m3)
+    assert not np.array_equal(m1, m4)
+
+
+def test_corruption_mask_probability_bounds():
+    ids = np.arange(16, dtype=np.int32)
+    none = corruption_mask(AdversaryConfig(p_byzantine=0.0), 2, 7, ids)
+    all_ = corruption_mask(AdversaryConfig(p_byzantine=1.0), 2, 7, ids)
+    assert not np.asarray(none).any()
+    assert np.asarray(all_).all()
+
+
+def test_corrupt_dense_attacks():
+    u = np.linspace(-1.0, 1.0, 8).astype(np.float32)
+    for attack, expect in [
+        ("signflip", -u),
+        ("scale", 3.0 * u),
+        ("zero", np.zeros_like(u)),
+    ]:
+        ac = AdversaryConfig(p_byzantine=1.0, attack=attack, scale=3.0)
+        np.testing.assert_allclose(
+            np.asarray(corrupt_dense(ac, u, True, 2, 7, 11)), expect)
+        # corrupt=False is the identity regardless of attack
+        np.testing.assert_array_equal(
+            np.asarray(corrupt_dense(ac, u, False, 2, 7, 11)), u)
+    # noise: counter-keyed garbage — deterministic, payload-independent
+    ac = AdversaryConfig(p_byzantine=1.0, attack="noise", scale=2.0)
+    n1 = np.asarray(corrupt_dense(ac, u, True, 2, 7, 11))
+    n2 = np.asarray(corrupt_dense(ac, np.zeros_like(u), True, 2, 7, 11))
+    np.testing.assert_array_equal(n1, n2)
+    assert not np.array_equal(
+        n1, np.asarray(corrupt_dense(ac, u, True, 3, 7, 11)))
+
+
+def test_corrupt_wire_never_redensifies():
+    q = np.array([-127, -3, 0, 5, 127, 1, -1, 2], np.int8)
+    s = np.array([0.5, 0.25], np.float32)
+    ac = AdversaryConfig(p_byzantine=1.0, attack="signflip")
+    q2, s2 = corrupt_wire(ac, q, s, True, 2, 7, 11)
+    assert np.asarray(q2).dtype == np.int8       # codes stay int8-resident
+    np.testing.assert_array_equal(np.asarray(q2), -q)  # exact negation
+    np.testing.assert_array_equal(np.asarray(s2), s)   # scales untouched
+    ac = AdversaryConfig(p_byzantine=1.0, attack="scale", scale=4.0)
+    q2, s2 = corrupt_wire(ac, q, s, True, 2, 7, 11)
+    np.testing.assert_array_equal(np.asarray(q2), q)   # codes untouched
+    np.testing.assert_allclose(np.asarray(s2), 4.0 * s)
+    ac = AdversaryConfig(p_byzantine=1.0, attack="zero")
+    q2, s2 = corrupt_wire(ac, q, s, True, 2, 7, 11)
+    assert not np.asarray(q2).any() and not np.asarray(s2).any()
+
+
+def test_decayed_round_weights():
+    w = np.array([[1.0, 2.0, 4.0]], np.float32)
+    lag = np.array([[0, 1, 3]], np.int32)
+    out = np.asarray(decayed_round_weights(w, lag, 0.5))
+    np.testing.assert_allclose(out, [[1.0, 1.0, 0.5]])
+    np.testing.assert_allclose(
+        np.asarray(decayed_round_weights(w, lag, 1.0)), w)
+
+
+# ---------------------------------------------------------------------------
+# engine parity under adversaries + robust aggregation
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cfg_kw,robust", [
+    (dict(adversary=AC, robust="trimmed_mean"), "trimmed_mean"),
+    (dict(adversary=AdversaryConfig(p_byzantine=0.5, attack="noise",
+                                    scale=2.0, seed=7),
+          robust="clip", faults=FC, compress="int8"), "clip"),
+    (dict(adversary=AdversaryConfig(p_byzantine=0.5, attack="scale",
+                                    scale=5.0, seed=7),
+          robust="median", faults=FC, staleness_gamma=0.5), "median"),
+    (dict(adversary=AdversaryConfig(p_byzantine=0.5, attack="zero", seed=7),
+          robust="trimmed_mean", compress="int8"), "trimmed_mean"),
+    (dict(adversary=AC, robust="clip", encrypt=True), "clip"),
+    (dict(adversary=AC, robust="trimmed_mean", cadence=CAD,
+          staleness_gamma=0.7), "trimmed_mean"),
+    (dict(adversary=AC, robust="clip", mobility=MOB), "clip"),
+], ids=["signflip-trim", "noise-clip-faults-int8", "scale-median-decay",
+        "zero-trim-int8", "signflip-clip-encrypt", "cadence-trim-decay",
+        "mobility-clip"])
+def test_engines_agree_adversary_worlds(problem, cfg_kw, robust):
+    cfg = _cfg(**cfg_kw)
+    loop, fl = _run_both(problem, cfg)
+    _assert_adv_parity(loop, fl, robust=robust)
+    # the adversary provably fired in this world
+    assert np.stack(loop.history_raw["corrupted_mask"]).sum() > 0
+
+
+def test_engines_agree_five_way_composition(problem):
+    """The full world product: mobility x faults x cadence x int8 wire x
+    adversary x trimmed mean x staleness decay, one jit program vs the
+    host oracle."""
+    cfg = _cfg(adversary=AC, robust="trimmed_mean", staleness_gamma=0.8,
+               faults=FC, cadence=CAD, mobility=MOB, compress="int8")
+    loop, fl = _run_both(problem, cfg)
+    _assert_adv_parity(loop, fl, robust="trimmed_mean")
+    assert np.stack(loop.history_raw["corrupted_mask"]).sum() > 0
+    # satellite: the normalized event streams agree field for field
+    from repro.telemetry.events import compare_event_streams, session_events
+    assert compare_event_streams(session_events(loop),
+                                 session_events(fl)) == []
+
+
+def test_clip_actually_clips(problem):
+    """The scale attack inflates norms past the median -> the clip
+    aggregator flags exactly the corrupted deliveries, in both engines."""
+    ac = AdversaryConfig(p_byzantine=0.5, attack="scale", scale=50.0, seed=7)
+    cfg = _cfg(adversary=ac, robust="clip")
+    loop, fl = _run_both(problem, cfg)
+    _assert_adv_parity(loop, fl, robust="clip")
+    clipped = np.stack(loop.history_raw["clipped_mask"])
+    assert clipped.sum() > 0
+
+
+def test_honest_world_with_adversary_off_is_untouched(problem):
+    """p_byzantine=0 must be bit-identical to adversary=None — the
+    adversary plumbing adds observability, never arithmetic."""
+    loop0, fl0 = _run_both(problem, _cfg())
+    ac0 = AdversaryConfig(p_byzantine=0.0)
+    loop1, fl1 = _run_both(problem, _cfg(adversary=ac0))
+    for a, b in ((loop0, loop1), (fl0, fl1)):
+        av, _ = ravel_pytree(a.params)
+        bv, _ = ravel_pytree(b.params)
+        assert np.array_equal(np.asarray(av), np.asarray(bv))
+        np.testing.assert_array_equal(a.history_raw["battery"],
+                                      b.history_raw["battery"])
+    # the p=0 world still carries the (all-zero) trace; None worlds don't
+    assert "corrupted_mask" not in loop0.history_raw
+    assert not np.stack(loop1.history_raw["corrupted_mask"]).any()
+
+
+# ---------------------------------------------------------------------------
+# the fault x adversary ordering pin (satellite): stale substitution
+# FIRST, corruption keyed on the DELIVERING round
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("compress", [None, "int8"], ids=["dense", "int8"])
+def test_ordering_pin_stale_then_corrupt(problem, compress):
+    """Under the noise attack at p=1, every delivered payload is
+    counter-keyed garbage of the DELIVERING round — so a world where
+    every delivery is stale must train identically to one where none is.
+    Any other ordering (corrupt-then-substitute, or draws keyed on the
+    trained round) would deliver round-(r-1) garbage instead and the
+    params would diverge.  Pinned in both engines."""
+    ac = AdversaryConfig(p_byzantine=1.0, attack="noise", scale=0.5, seed=7)
+    all_stale = FaultConfig(p_drop=0.0, p_stale=1.0, max_retries=0, seed=3)
+    no_stale = FaultConfig(p_drop=0.0, p_stale=0.0, max_retries=0, seed=3)
+    cfg_s = _cfg(adversary=ac, faults=all_stale, compress=compress)
+    cfg_f = _cfg(adversary=ac, faults=no_stale, compress=compress)
+    loop_s, fl_s = _run_both(problem, cfg_s)
+    loop_f, fl_f = _run_both(problem, cfg_f)
+    assert np.stack(loop_s.history_raw["stale"]).sum() > 0  # stale fired
+    for a, b in ((loop_s, loop_f), (fl_s, fl_f)):
+        av, _ = ravel_pytree(a.params)
+        bv, _ = ravel_pytree(b.params)
+        assert np.array_equal(np.asarray(av), np.asarray(bv)), \
+            "corruption keyed/applied before stale substitution"
+
+
+# ---------------------------------------------------------------------------
+# crash-resume with the adversary enabled
+# ---------------------------------------------------------------------------
+
+
+def _adv_cfg(max_rounds=6):
+    return _cfg(max_rounds=max_rounds, adversary=AC, robust="clip",
+                staleness_gamma=0.8, faults=FC)
+
+
+def test_loop_kill_and_resume_with_adversary(problem, tmp_path):
+    from test_checkpoint_resume import _assert_identical, _kill_after, \
+        _run_loop
+    cfg = _adv_cfg()
+    full = _run_loop(problem, cfg)
+    d = str(tmp_path / "ck")
+    _run_loop(problem, cfg, checkpoint_dir=d)
+    _kill_after(d, 3)
+    res = _run_loop(problem, cfg, resume_from=d)
+    _assert_identical(full, res, mask_key="corrupted_mask")
+    np.testing.assert_array_equal(np.stack(full.history_raw["clipped_mask"]),
+                                  np.stack(res.history_raw["clipped_mask"]))
+
+
+def test_fleet_kill_and_resume_with_adversary(problem, tmp_path):
+    from test_checkpoint_resume import _assert_identical, _kill_after, _spec
+    task = problem[0]
+    cfg = _adv_cfg()
+    d_full = str(tmp_path / "full")
+    full = run_fleet(task, [_spec(problem)], cfg, round_chunk=2,
+                     checkpoint_dir=d_full, checkpoint_every=2)
+    d_kill = str(tmp_path / "kill")
+    run_fleet(task, [_spec(problem)], cfg, round_chunk=2,
+              checkpoint_dir=d_kill, checkpoint_every=2)
+    _kill_after(d_kill, 2)
+    res = run_fleet(task, [_spec(problem)], cfg, round_chunk=2,
+                    resume_from=d_kill)
+    _assert_identical(full.sessions[0], res.sessions[0],
+                      mask_key="corrupted_mask")
+
+
+# ---------------------------------------------------------------------------
+# enfed-only enforcement + telemetry surface
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cfg_kw", [
+    dict(adversary=AC), dict(robust="trimmed_mean"),
+    dict(staleness_gamma=0.5),
+], ids=["adversary", "robust", "gamma"])
+def test_fleet_baselines_refuse_adversary(problem, cfg_kw):
+    task = problem[0]
+    from test_checkpoint_resume import _spec
+    with pytest.raises(ValueError, match="enfed-only"):
+        run_fleet(task, [_spec(problem)], _cfg(**cfg_kw), method="dfl")
+
+
+def test_api_baselines_warn_and_strip(problem):
+    from repro.api import Experiment, MethodSpec, WorldSpec
+
+    task, own_train, own_test, fleet, states = problem
+    world = WorldSpec.single(task, own_train, own_test, fleet, states)
+    method = MethodSpec(name="cfl", max_rounds=1, epochs=1,
+                        batch_size=BATCH, encrypt=False, adversary=AC,
+                        robust="trimmed_mean")
+    with pytest.warns(UserWarning, match="enfed-only"):
+        res = Experiment(world, method).run()
+    assert res.rounds >= 1                      # ran honestly, unpoisoned
+    assert res.corruption_summary is None
+
+
+def test_trace_carries_corruption_sets(problem):
+    """RoundEvent.corrupted/clipped: index sets on adversary worlds,
+    identical across engines; None (not empty) on honest worlds."""
+    from repro.api import Experiment, ExecutionSpec, MethodSpec, WorldSpec
+
+    task, own_train, own_test, fleet, states = problem
+    world = WorldSpec.single(task, own_train, own_test, fleet, states)
+    method = MethodSpec(desired_accuracy=0.99, max_rounds=4, epochs=1,
+                        batch_size=BATCH, encrypt=False,
+                        contributor_refresh_epochs=1, adversary=AC,
+                        robust="clip")
+    by_engine = {}
+    for engine in ("loop", "fleet"):
+        res = Experiment(world, method, ExecutionSpec(engine=engine)).run()
+        rounds = [e for e in res.trace if e.phase == "round"]
+        assert all(e.corrupted is not None and e.clipped is not None
+                   for e in rounds)
+        by_engine[engine] = [(e.corrupted, e.clipped) for e in rounds]
+        summary = res.corruption_summary
+        assert summary is not None and summary["corrupted_links"] > 0
+    assert by_engine["loop"] == by_engine["fleet"]
+    # honest world: absence stays distinguishable from an observed zero
+    clean = Experiment(world, MethodSpec(
+        desired_accuracy=0.99, max_rounds=2, epochs=1, batch_size=BATCH,
+        encrypt=False, contributor_refresh_epochs=1)).run()
+    assert all(e.corrupted is None and e.clipped is None
+               for e in clean.trace)
+    assert clean.corruption_summary is None

@@ -1,0 +1,228 @@
+"""Byzantine-robust aggregation kernels (repro.kernels.robust): Pallas
+vs pure-jnp oracles, statistic semantics, and the fused-q8 twins.
+
+The ref module formulates each statistic differently from the kernels
+(sort/argmax/take_along_axis vs comparison networks and one-hot
+selections), so agreement here cross-checks two independent
+derivations; the q8 tests pin the never-re-densify property — fused
+dequant-aggregate equals the dense statistic on the dequantized buffer.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.robust.ops import (clip_factors, l2norm_flat_batched,
+                                      l2norm_flat_batched_q8,
+                                      median_flat_batched,
+                                      median_flat_batched_q8,
+                                      robust_aggregate, robust_aggregate_q8,
+                                      trimmed_mean_flat_batched,
+                                      trimmed_mean_flat_batched_q8)
+from repro.kernels.robust.ref import (median_batched_ref, sqnorm_batched_ref,
+                                      trimmed_mean_batched_ref)
+from repro.kernels.quantize.ops import (dequantize_flat_batched,
+                                        quantize_flat_batched)
+
+RNG = np.random.default_rng(17)
+
+SHAPES = [(1, 3, 17), (4, 5, 2048), (8, 4, 3001), (16, 6, 777)]
+
+
+def _world(r, n, l):
+    u = jnp.asarray(RNG.normal(size=(r, n, l)).astype(np.float32))
+    w = jnp.asarray((RNG.random((r, n)) > 0.3).astype(np.float32)
+                    * RNG.random((r, n)).astype(np.float32))
+    return u, w
+
+
+def _q8_world(r, n, lp):
+    assert lp % 1024 == 0, "q8 shapes must be TILE-padded"
+    dense = jnp.asarray(RNG.normal(size=(r * n, lp)).astype(np.float32))
+    q, s = quantize_flat_batched(dense)
+    w = jnp.asarray((RNG.random((r, n)) > 0.3).astype(np.float32)
+                    * RNG.random((r, n)).astype(np.float32))
+    return (q.reshape(r, n, lp), s.reshape(r, n, -1), w)
+
+
+# ---------------------------------------------------------------------------
+# Pallas vs oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("r,n,l", SHAPES)
+def test_trimmed_mean_matches_ref(r, n, l):
+    u, w = _world(r, n, l)
+    got = trimmed_mean_flat_batched(u, w, use_pallas=True)
+    want = trimmed_mean_flat_batched(u, w, use_pallas=False)
+    assert got.shape == (r, l)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("r,n,l", SHAPES)
+def test_median_matches_ref(r, n, l):
+    u, w = _world(r, n, l)
+    got = median_flat_batched(u, w, use_pallas=True)
+    want = median_flat_batched(u, w, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("r,n,l", SHAPES)
+def test_l2norm_matches_ref(r, n, l):
+    u, _ = _world(r, n, l)
+    got = l2norm_flat_batched(u, use_pallas=True)
+    want = l2norm_flat_batched(u, use_pallas=False)
+    assert got.shape == (r, n)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# statistic semantics (hand-checkable cases)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("use_pallas", [True, False], ids=["pallas", "ref"])
+def test_trimmed_mean_drops_extremes(use_pallas):
+    u = jnp.asarray([[[1.0], [100.0], [3.0], [-50.0], [2.0]]], jnp.float32)
+    w = jnp.ones((1, 5), jnp.float32)
+    out = trimmed_mean_flat_batched(u, w, use_pallas=use_pallas)
+    # 100 and -50 drop; mean(1, 3, 2) = 2
+    np.testing.assert_allclose(np.asarray(out), [[2.0]], atol=1e-6)
+
+
+@pytest.mark.parametrize("use_pallas", [True, False], ids=["pallas", "ref"])
+def test_trimmed_mean_tie_breaks_first_instance(use_pallas):
+    # two equal maxima: only the FIRST instance drops (matches argmax)
+    u = jnp.asarray([[[5.0], [5.0], [0.0], [1.0]]], jnp.float32)
+    w = jnp.ones((1, 4), jnp.float32)
+    out = trimmed_mean_flat_batched(u, w, use_pallas=use_pallas)
+    # drop first 5 (max) and the 0 (min): mean(5, 1) = 3
+    np.testing.assert_allclose(np.asarray(out), [[3.0]], atol=1e-6)
+
+
+@pytest.mark.parametrize("use_pallas", [True, False], ids=["pallas", "ref"])
+def test_trimmed_mean_small_active_falls_back_to_mean(use_pallas):
+    # <= 2 active: nothing to trim, plain weighted mean
+    u = jnp.asarray([[[1.0], [3.0], [99.0]]], jnp.float32)
+    w = jnp.asarray([[1.0, 3.0, 0.0]], jnp.float32)
+    out = trimmed_mean_flat_batched(u, w, use_pallas=use_pallas)
+    np.testing.assert_allclose(np.asarray(out), [[2.5]], atol=1e-6)
+    # 0 active -> 0 (the fedavg convention; caller keeps prior params)
+    out0 = trimmed_mean_flat_batched(u, jnp.zeros((1, 3), jnp.float32),
+                                     use_pallas=use_pallas)
+    np.testing.assert_allclose(np.asarray(out0), [[0.0]], atol=1e-6)
+
+
+@pytest.mark.parametrize("use_pallas", [True, False], ids=["pallas", "ref"])
+def test_median_weights_gate_activity_only(use_pallas):
+    u = jnp.asarray([[[1.0], [9.0], [4.0], [777.0]]], jnp.float32)
+    w = jnp.asarray([[0.1, 5.0, 2.0, 0.0]], jnp.float32)
+    out = median_flat_batched(u, w, use_pallas=use_pallas)
+    # active values {1, 9, 4}: median 4 regardless of weight magnitudes
+    np.testing.assert_allclose(np.asarray(out), [[4.0]], atol=1e-6)
+    # even active count: mean of the two middles
+    w2 = jnp.ones((1, 4), jnp.float32)
+    out2 = median_flat_batched(u, w2, use_pallas=use_pallas)
+    np.testing.assert_allclose(np.asarray(out2), [[6.5]], atol=1e-6)
+
+
+def test_clip_factors_median_threshold():
+    norms = jnp.asarray([[1.0, 2.0, 10.0]], jnp.float32)
+    w = jnp.ones((1, 3), jnp.float32)
+    c, clipped, tau = clip_factors(norms, w)
+    np.testing.assert_allclose(np.asarray(tau), [2.0])
+    np.testing.assert_allclose(np.asarray(c), [[1.0, 1.0, 0.2]], atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(clipped),
+                                  [[False, False, True]])
+    # inactive slots: factor 1, never flagged — even with a huge norm
+    w0 = jnp.asarray([[1.0, 1.0, 0.0]], jnp.float32)
+    c0, clipped0, _ = clip_factors(norms, w0)
+    assert float(c0[0, 2]) == 1.0 and not bool(clipped0[0, 2])
+    # by construction at most half the active set clips
+    r = jnp.asarray(RNG.random((6, 9)).astype(np.float32)) * 10
+    wr = jnp.ones((6, 9), jnp.float32)
+    _, cl, _ = clip_factors(r, wr)
+    assert int(np.asarray(cl).sum(axis=1).max()) <= 4
+
+
+# ---------------------------------------------------------------------------
+# fused q8 twins (never-re-densify)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("r,n,lp", [(2, 3, 1024), (4, 5, 2048), (8, 4, 3072)])
+@pytest.mark.parametrize("use_pallas", [True, False], ids=["pallas", "ref"])
+def test_q8_twins_match_dense_on_dequantized(r, n, lp, use_pallas):
+    q, s, w = _q8_world(r, n, lp)
+    dense = dequantize_flat_batched(q.reshape(r * n, lp),
+                                    s.reshape(r * n, -1)).reshape(r, n, lp)
+    for fused, plain in [
+        (trimmed_mean_flat_batched_q8, trimmed_mean_flat_batched),
+        (median_flat_batched_q8, median_flat_batched),
+    ]:
+        got = fused(q, s, w, use_pallas=use_pallas)
+        want = plain(dense, w, use_pallas=use_pallas)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-6)
+    gn = l2norm_flat_batched_q8(q, s, use_pallas=use_pallas)
+    wn = l2norm_flat_batched(dense, use_pallas=use_pallas)
+    np.testing.assert_allclose(np.asarray(gn), np.asarray(wn),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# the dispatch entry both engines call
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method", ["trimmed_mean", "median", "clip"])
+def test_robust_aggregate_dispatch(method):
+    u, w = _world(4, 5, 777)
+    agg_p, cl_p = robust_aggregate(u, w, method=method, use_pallas=True)
+    agg_r, cl_r = robust_aggregate(u, w, method=method, use_pallas=False)
+    assert agg_p.shape == (4, 777) and cl_p.shape == (4, 5)
+    np.testing.assert_allclose(np.asarray(agg_p), np.asarray(agg_r),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(cl_p), np.asarray(cl_r))
+    if method != "clip":
+        # trim/median carry no per-contributor verdict
+        assert not np.asarray(cl_p).any()
+
+
+def test_robust_aggregate_q8_dispatch():
+    q, s, w = _q8_world(3, 4, 1024)
+    dense = dequantize_flat_batched(q.reshape(12, 1024),
+                                    s.reshape(12, -1)).reshape(3, 4, 1024)
+    for method in ("trimmed_mean", "median", "clip"):
+        agg_q, cl_q = robust_aggregate_q8(q, s, w, method=method)
+        agg_d, cl_d = robust_aggregate(dense, w, method=method)
+        np.testing.assert_allclose(np.asarray(agg_q), np.asarray(agg_d),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(cl_q), np.asarray(cl_d))
+
+
+def test_robust_aggregate_unknown_method():
+    u, w = _world(1, 3, 17)
+    with pytest.raises(ValueError, match="robust method"):
+        robust_aggregate(u, w, method="krum")
+
+
+def test_clip_recovers_from_scale_attack():
+    """End-to-end sanity: one 100x-scaled contributor drags plain fedavg
+    but barely moves the clip/trim aggregates."""
+    from repro.kernels.fedavg.ops import fedavg_flat_batched
+    honest = RNG.normal(size=(1, 5, 256)).astype(np.float32)
+    attacked = honest.copy()
+    attacked[0, 2] *= 100.0
+    u = jnp.asarray(attacked)
+    w = jnp.ones((1, 5), jnp.float32)
+    clean = np.asarray(fedavg_flat_batched(jnp.asarray(honest), w))
+    naive = np.asarray(fedavg_flat_batched(u, w))
+    assert np.linalg.norm(naive - clean) > 10 * np.linalg.norm(clean)
+    for method in ("clip", "trimmed_mean", "median"):
+        rob = np.asarray(robust_aggregate(u, w, method=method)[0])
+        assert (np.linalg.norm(rob - clean)
+                < 0.5 * np.linalg.norm(naive - clean)), method
